@@ -1,0 +1,49 @@
+//! Table 1 — AMAT accuracy (PPL), measured on the trained tiny MoE LM
+//! through the real PJRT path: every scheme requantizes the same trained
+//! expert weights and runs teacher-forced over the held-out corpus.
+//!
+//! ```sh
+//! cargo run --release --offline --example amat_table -- [eval_bytes]
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+use slicemoe::engine::Engine;
+use slicemoe::experiments::{table1, verify_table1_shape, T1Row};
+use slicemoe::quant::MatConfig;
+
+fn main() -> Result<()> {
+    let eval_bytes: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4096);
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("model_meta.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let eng = Engine::load(artifacts, MatConfig::MAT84)?;
+    let eval = std::fs::read(artifacts.join("corpus_eval.bin"))?;
+    let eval = &eval[..eval_bytes.min(eval.len())];
+
+    let mats = [(4u32, 2u32), (6, 3), (8, 4)];
+    let (points, table) = table1(&eng, eval, &mats, &T1Row::all())?;
+    println!("Table 1 — AMAT accuracy (measured PPL, {} eval bytes)", eval.len());
+    print!("{}", table.render());
+
+    let violations = verify_table1_shape(&points);
+    if violations.is_empty() {
+        println!("\nshape check vs paper: OK");
+        println!("  * symmetric truncation collapses (paper: 1e6..1e10 PPL)");
+        println!("  * naive asym truncation collapses (paper: nan..1e9 PPL)");
+        println!("  * AMAT tracks independently-quantized low-bit (paper: ~Base)");
+    } else {
+        println!("\nshape check vs paper: {} violation(s)", violations.len());
+        for v in violations {
+            println!("  - {v}");
+        }
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Regenerate every simulator-based table/figure of the paper in one run
+//! (Fig 2, Fig 3, Fig 7/sysinfo, Fig 8, Fig 9, Fig 10, ablations) for both
+//! evaluated model geometries. This is the "reproduce the evaluation
+//! section" driver; Table 1 lives in `amat_table.rs` (needs artifacts).
+//!
+//! ```sh
+//! cargo run --release --offline --example paper_figures
+//! ```
+
+use slicemoe::experiments as exp;
+use slicemoe::model::ModelDesc;
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let threads = default_threads();
+    println!("== Fig 7: system specification ==");
+    print!("{}", exp::sysinfo().render());
+
+    for desc in [ModelDesc::deepseek_v2_lite(), ModelDesc::qwen15_moe_a27b()] {
+        println!("\n#### model: {} ####", desc.name);
+
+        println!("\n== Fig 2 (right): motivation — high vs low bit under constraints ==");
+        let (_, t) = exp::fig2(&desc, threads);
+        print!("{}", t.render());
+
+        println!("\n== Fig 3: prefill/decode expert-frequency statistics ==");
+        print!("{}", exp::fig3(&desc, 400).render());
+
+        println!("\n== Fig 8: accuracy vs high-bit-normalized miss rate ==");
+        let (points, t) = exp::fig8(&desc, threads);
+        print!("{}", t.render());
+        let (wins, cells) = exp::fig8_pareto_score(&points);
+        println!("dbsc+amat Pareto-dominant in {wins}/{cells} cells");
+
+        println!("\n== Fig 9: energy gain & speed-up (matched accuracy) ==");
+        let (points, t) = exp::fig9(&desc, threads);
+        print!("{}", t.render());
+        let best = points
+            .iter()
+            .filter(|p| p.scheme == "dbsc+amat")
+            .fold((0.0f64, 0.0f64), |a, p| (a.0.max(p.energy_gain), a.1.max(p.speedup)));
+        println!("best dbsc+amat: {:.2}x energy, {:.2}x speed-up", best.0, best.1);
+
+        println!("\n== Fig 10: cache warmup strategies ==");
+        let (_, t) = exp::fig10(&desc, threads);
+        print!("{}", t.render());
+
+        println!("\n== ablations (θ, MAT config) ==");
+        print!("{}", exp::ablations(&desc, threads).render());
+    }
+}

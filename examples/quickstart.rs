@@ -1,0 +1,55 @@
+//! Quickstart: load the AOT artifacts, build a DBSC serving session, and
+//! generate a few tokens through the full stack (PJRT compute + slice
+//! cache + miss budget + PCW).
+//!
+//! Run after `make artifacts`:
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+use slicemoe::engine::{Engine, Session, SessionConfig};
+use slicemoe::quant::MatConfig;
+
+fn main() -> Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("model_meta.json").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // 1. Load the engine: compiles every HLO artifact on the PJRT CPU
+    //    client and uploads the quantized weight planes once.
+    let engine = Engine::load(artifacts, MatConfig::MAT84)?;
+    let desc = engine.desc();
+    println!(
+        "loaded {}: {} layers x {} experts (top-{}), d_model {}",
+        desc.name, desc.n_layers, desc.n_experts, desc.top_k, desc.d_model
+    );
+
+    // 2. Configure a session: DBSC routing + PCW warmup, cache sized to
+    //    half the expert pool, 5% miss-rate constraint.
+    let mut cfg = SessionConfig::dbsc_default(&engine);
+    cfg.constraint = 0.05;
+    let mut session = Session::new(&engine, cfg);
+
+    // 3. Generate.
+    let prompt = b"the cache holds 3 experts and ";
+    let report = session.generate(prompt, 48)?;
+    println!("prompt : {}", String::from_utf8_lossy(prompt));
+    println!("output : {}", String::from_utf8_lossy(&report.tokens));
+    println!(
+        "decode : {:.1} tok/s wall | {:.4} J simulated decode energy | miss-rate {:.4}",
+        report.decode_tokens as f64 / report.decode_wall_s,
+        report.ledger.decode_energy_j(),
+        report.miss_rate,
+    );
+    println!(
+        "experts: {} high-bit, {} low-bit, {} degraded, {} substituted, {} dropped",
+        report.n_high, report.n_low, report.n_degraded, report.n_substituted,
+        report.n_dropped
+    );
+    Ok(())
+}

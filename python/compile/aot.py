@@ -1,0 +1,246 @@
+"""AOT compile path: lower every serving entry point to HLO **text** and
+dump weight/corpus blobs for the Rust coordinator.
+
+HLO text (NOT ``lowered.compiler_ir().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (artifacts/):
+  *.hlo.txt          one per entry point (see MANIFEST below)
+  weights.bin        every trained tensor, SMWB container (see _write_blob)
+  golden_quant.bin   python-side AMAT results for rust cross-validation
+  corpus_eval.bin / corpus_train.bin
+  model_meta.json    geometry + artifact manifest + train log
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, quant
+from .model import (
+    CFG,
+    attn_decode_step,
+    attn_prefill_step,
+    embed_step,
+    expert_fp_step,
+    expert_high_step,
+    expert_low_step,
+    gate_step,
+    logits_step,
+)
+from .train import unflatten_params
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+# MAT(h,l) bit configurations swept by the paper (Table 1); shift = h - l.
+MAT_SHIFTS = (2, 3, 4)  # MAT42, MAT63, MAT84
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entry_points(cfg=CFG):
+    """entry name -> (fn, example arg specs). T axis: S=prefill, 1=decode."""
+    d, f, e, g = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.group
+    s, h, dh, v = cfg.max_seq, cfg.n_heads, cfg.d_head, cfg.vocab
+
+    def expert_quant_specs(t, with_lsb):
+        """Arg specs for one expert call: w1, w3 ([d,f]), then w2 ([f,d])."""
+        out = [spec((t, d))]
+        for din, dout in ((d, f), (d, f), (f, d)):
+            out.append(spec((din, dout), I32))  # msb
+            if with_lsb:
+                out.append(spec((din, dout), I32))  # lsb
+            out.append(spec((din // g, dout)))  # scale
+            out.append(spec((din // g, dout), I32))  # zp
+        return out
+
+    entries = {}
+    for tag, t in (("prefill", s), ("decode", 1)):
+        entries[f"embed_{tag}"] = (
+            lambda tok, p0, emb, pos: (embed_step(tok, p0, emb, pos),),
+            [spec((t,), I32), spec((), I32), spec((v, d)), spec((s, d))],
+        )
+        entries[f"gate_{tag}"] = (
+            gate_step,
+            [spec((t, d)), spec((d,)), spec((d, e))],
+        )
+        entries[f"logits_{tag}"] = (
+            lambda x, lnf, wout: (logits_step(x, lnf, wout),),
+            [spec((t, d)), spec((d,)), spec((d, v))],
+        )
+        entries[f"expert_fp_{tag}"] = (
+            lambda xn, w1, w3, w2: (expert_fp_step(xn, w1, w3, w2),),
+            [spec((t, d)), spec((d, f)), spec((d, f)), spec((f, d))],
+        )
+        entries[f"expert_low_{tag}"] = (
+            lambda xn, *a: (expert_low_step(xn, *a, group=g),),
+            expert_quant_specs(t, with_lsb=False),
+        )
+        for shift in MAT_SHIFTS:
+            entries[f"expert_high_s{shift}_{tag}"] = (
+                functools.partial(
+                    lambda shift_, xn, *a: (
+                        expert_high_step(xn, *a, group=g, shift=shift_),
+                    ),
+                    shift,
+                ),
+                expert_quant_specs(t, with_lsb=True),
+            )
+
+    entries["attn_prefill"] = (
+        attn_prefill_step,
+        [spec((s, d)), spec((), I32)] + [spec(sh) for sh in
+                                         [(d,), (d, d), (d, d), (d, d), (d, d)]],
+    )
+    entries["attn_decode"] = (
+        attn_decode_step,
+        [spec((1, d)), spec((h, s, dh)), spec((h, s, dh)), spec((), I32)]
+        + [spec(sh) for sh in [(d,), (d, d), (d, d), (d, d), (d, d)]],
+    )
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# SMWB tensor container (mirrored by rust/src/model/blob.rs)
+# ---------------------------------------------------------------------------
+
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1, np.dtype(np.uint8): 2}
+
+
+def _write_blob(path: str, tensors: dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as fh:
+        fh.write(b"SMWB0001")
+        fh.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype == np.float64:
+                arr = arr.astype(np.float32)
+            if arr.dtype == np.int64:
+                arr = arr.astype(np.int32)
+            code = _DTYPES[arr.dtype]
+            nb = name.encode()
+            fh.write(struct.pack("<H", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<BB", code, arr.ndim))
+            for dim in arr.shape:
+                fh.write(struct.pack("<I", dim))
+            raw = arr.tobytes()
+            fh.write(struct.pack("<Q", len(raw)))
+            fh.write(raw)
+
+
+def golden_quant_tensors(flat: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+    """Python-side AMAT results on a real trained weight, for the rust
+    cross-check (rust re-derives all of these from weights.bin)."""
+    w = np.asarray(flat["layer0.w1"][0])  # [d, f] trained expert weight
+    out: dict[str, np.ndarray] = {"src": w.astype(np.float32)}
+    for bh, bl in ((4, 2), (6, 3), (8, 4)):
+        q = quant.quantize_asym(w, bh, CFG.group)
+        msb, lsb = quant.split_planes(q, bl)
+        am = quant.truncate_amat(q, bl)
+        sym = quant.quantize_sym(w, bh, CFG.group)
+        symt = quant.truncate_sym(sym, bl)
+        tag = f"mat{bh}{bl}"
+        out[f"{tag}.q"] = q.q
+        out[f"{tag}.scale"] = q.scale
+        out[f"{tag}.zp"] = q.zp
+        out[f"{tag}.msb"] = msb
+        out[f"{tag}.lsb"] = lsb
+        out[f"{tag}.amat_scale"] = am.scale
+        out[f"{tag}.amat_zp"] = am.zp
+        out[f"{tag}.packed_msb"] = quant.pack_bits(msb, bl)
+        out[f"{tag}.sym_q"] = sym.q
+        out[f"{tag}.sym_scale"] = sym.scale
+        out[f"{tag}.symt_q"] = symt.q
+        out[f"{tag}.dequant"] = quant.dequantize_asym(q)
+        out[f"{tag}.dequant_low"] = quant.dequantize_asym(am)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights", default=None, help="default: <out-dir>/weights.npz")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    wpath = args.weights or os.path.join(out, "weights.npz")
+    flat = dict(np.load(wpath))
+
+    # 1. HLO artifacts
+    manifest = {}
+    for name, (fn, specs) in build_entry_points().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as fh:
+            fh.write(text)
+        manifest[name] = {
+            "file": fname,
+            "args": [[list(s.shape), str(s.dtype)] for s in specs],
+        }
+        print(f"lowered {name:28s} {len(text):9d} chars")
+
+    # 2. Weight blob (fp32 master — rust quantizes per configuration)
+    tensors = {k: v for k, v in flat.items() if not k.startswith("_")}
+    _write_blob(os.path.join(out, "weights.bin"), tensors)
+
+    # 3. Golden quant cross-check blob
+    _write_blob(os.path.join(out, "golden_quant.bin"), golden_quant_tensors(flat))
+
+    # 4. Corpus
+    train_b, eval_b = corpus.train_eval_split()
+    with open(os.path.join(out, "corpus_train.bin"), "wb") as fh:
+        fh.write(train_b[: 1 << 18])
+    with open(os.path.join(out, "corpus_eval.bin"), "wb") as fh:
+        fh.write(eval_b)
+
+    # 5. Meta
+    meta = {
+        "model": "tiny-moe-bytelm",
+        "config": {
+            "vocab": CFG.vocab, "d_model": CFG.d_model,
+            "n_layers": CFG.n_layers, "n_heads": CFG.n_heads,
+            "d_head": CFG.d_head, "n_experts": CFG.n_experts,
+            "top_k": CFG.top_k, "d_ff": CFG.d_ff,
+            "max_seq": CFG.max_seq, "group": CFG.group,
+        },
+        "mat_shifts": list(MAT_SHIFTS),
+        "artifacts": manifest,
+        "train_log": {
+            "steps": [int(x) for x in flat.get("_train_log_steps", [])],
+            "nll": [float(x) for x in flat.get("_train_log_nll", [])],
+        },
+    }
+    with open(os.path.join(out, "model_meta.json"), "w") as fh:
+        json.dump(meta, fh, indent=1)
+    print(f"wrote weights.bin golden_quant.bin corpus_*.bin model_meta.json -> {out}")
+
+
+if __name__ == "__main__":
+    main()

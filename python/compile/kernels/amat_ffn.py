@@ -1,0 +1,222 @@
+"""L1 — Pallas kernels for the SliceMoE compute hot-spot.
+
+The hot-spot is the *bit-sliced expert FFN*: dequantize AMAT group-quantized
+weights from their bit-planes and run the SwiGLU expert matmuls. Two
+variants exist so the low-precision path never touches LSB memory (the
+whole point of DBSC — an expert whose LSB slice missed must be computable
+from the MSB plane alone):
+
+* ``amat_ffn_high``  — operands: MSB **and** LSB planes + high-bit group
+  params. In-kernel: ``q = (msb << shift) | lsb``, dequant, SwiGLU.
+* ``amat_ffn_low``   — operands: MSB planes + AMAT-truncated group params
+  (``scale << shift``, ``zp >> shift`` — computed by the caller/weight
+  store). In-kernel: dequant the b_low codes directly, SwiGLU.
+* ``ffn_fp``         — fp32 reference expert (Base configs, Table 1).
+* ``gate_softmax``   — router gate: rmsnorm → x@Wg → softmax (returns both
+  the normed activations and the probabilities; the rust coordinator feeds
+  the normed rows back into the expert kernels).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks d_ff tiles;
+each step holds one (din × BF) slice of w1/w3 and one (BF × dout) slice of
+w2 in VMEM, dequantizes on the VPU and feeds the MXU matmuls, accumulating
+into the output block. The paper's NPU streams experts through a systolic
+array the same way. ``interpret=True`` everywhere — CPU PJRT cannot run
+Mosaic custom-calls; numerics are validated against ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "amat_ffn_high",
+    "amat_ffn_low",
+    "ffn_fp",
+    "gate_softmax",
+    "DEFAULT_BLOCK_F",
+]
+
+# d_ff tile width. Must divide d_ff and be a multiple of the quant group so
+# scale/zp tiles stay aligned. 128 matches the MXU lane dimension.
+DEFAULT_BLOCK_F = 128
+
+
+def _dequant_block(q, scale, zp, group: int):
+    """w = scale * (q - zp) with per-group params expanded over the group.
+
+    q: [din, bf] int32; scale: [din//group, bf] f32; zp: [din//group, bf].
+    """
+    din, bf = q.shape
+    s = jnp.repeat(scale, group, axis=0)
+    z = jnp.repeat(zp, group, axis=0)
+    return s * (q - z).astype(jnp.float32)
+
+
+def _ffn_kernel(
+    x_ref,
+    m1_ref, l1_ref, s1_ref, z1_ref,
+    m3_ref, l3_ref, s3_ref, z3_ref,
+    m2_ref, l2_ref, s2_ref, z2_ref,
+    o_ref,
+    *, group: int, shift: int, with_lsb: bool,
+):
+    """One d_ff tile: partial h = silu(x@w1)*(x@w3); o += h@w2."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def load(m_ref, l_ref, s_ref, z_ref):
+        q = m_ref[...]
+        if with_lsb:
+            q = (q << shift) | l_ref[...]
+        return _dequant_block(q, s_ref[...], z_ref[...], group)
+
+    x = x_ref[...]
+    w1 = load(m1_ref, l1_ref, s1_ref, z1_ref)
+    w3 = load(m3_ref, l3_ref, s3_ref, z3_ref)
+    w2 = load(m2_ref, l2_ref, s2_ref, z2_ref)
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    o_ref[...] += h @ w2
+
+
+def _ffn_call(x, ops, *, group: int, shift: int, with_lsb: bool, block_f: int):
+    """Shared pallas_call wiring for the high/low variants.
+
+    ops = (m1, l1, s1, z1, m3, l3, s3, z3, m2, l2, s2, z2); the l* planes
+    are ignored (still passed, all-zero) when with_lsb=False so both
+    variants share one kernel body — the *compiled* low artifact simply has
+    no LSB operands (see ``amat_ffn_low``).
+    """
+    t, din = x.shape
+    dout = ops[8].shape[1]
+    d_ff = ops[0].shape[1]
+    if d_ff % block_f:
+        raise ValueError(f"d_ff={d_ff} not divisible by block_f={block_f}")
+    if block_f % group:
+        raise ValueError(f"block_f={block_f} not a multiple of group={group}")
+    grid = (d_ff // block_f,)
+    gf = block_f // group
+
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    col_tile = lambda rows: pl.BlockSpec((rows, block_f), lambda i: (0, i))
+    colmeta_tile = lambda rows: pl.BlockSpec((rows, block_f), lambda i: (0, i))
+    row_tile = pl.BlockSpec((block_f, dout), lambda i: (i, 0))
+    rowmeta_tile = pl.BlockSpec((gf, dout), lambda i: (i, 0))
+
+    gdin = din // group
+    in_specs = [
+        full(t, din),
+        # w1: [din, d_ff] planes, groups along din
+        col_tile(din), col_tile(din), colmeta_tile(gdin), colmeta_tile(gdin),
+        # w3: same layout as w1
+        col_tile(din), col_tile(din), colmeta_tile(gdin), colmeta_tile(gdin),
+        # w2: [d_ff, dout] planes, groups along d_ff
+        row_tile, row_tile, rowmeta_tile, rowmeta_tile,
+    ]
+    kernel = functools.partial(_ffn_kernel, group=group, shift=shift, with_lsb=with_lsb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=full(t, dout),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, *ops)
+
+
+def amat_ffn_high(
+    x,
+    m1, l1, s1, z1,
+    m3, l3, s3, z3,
+    m2, l2, s2, z2,
+    *, group: int, shift: int, block_f: int = DEFAULT_BLOCK_F,
+):
+    """Critical-expert path: both slices cached → full b_high precision."""
+    ops = (m1, l1, s1, z1, m3, l3, s3, z3, m2, l2, s2, z2)
+    return _ffn_call(x, ops, group=group, shift=shift, with_lsb=True, block_f=block_f)
+
+
+def amat_ffn_low(
+    x,
+    m1, s1, z1,
+    m3, s3, z3,
+    m2, s2, z2,
+    *, group: int, block_f: int = DEFAULT_BLOCK_F,
+):
+    """Non-critical / LSB-miss path: MSB plane only.
+
+    Callers pass AMAT-truncated params (scale<<shift, zp>>shift). The same
+    entry also serves Table 1's symmetric and naive-truncation baselines:
+    signed codes with zp=0 reproduce symmetric dequant, and unshifted
+    scale/zp reproduce the naive truncation.
+    """
+    zero = lambda m: jnp.zeros_like(m)
+    ops = (m1, zero(m1), s1, z1, m3, zero(m3), s3, z3, m2, zero(m2), s2, z2)
+    return _ffn_call(x, ops, group=group, shift=0, with_lsb=False, block_f=block_f)
+
+
+def _ffn_fp_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = jax.nn.silu(x @ w1_ref[...]) * (x @ w3_ref[...])
+    o_ref[...] += h @ w2_ref[...]
+
+
+def ffn_fp(x, w1, w3, w2, *, block_f: int = DEFAULT_BLOCK_F):
+    """fp32 SwiGLU expert (Base / reference configurations)."""
+    t, din = x.shape
+    d_ff, dout = w2.shape
+    grid = (d_ff // block_f,)
+    return pl.pallas_call(
+        _ffn_fp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, din), lambda i: (0, 0)),
+            pl.BlockSpec((din, block_f), lambda i: (0, i)),
+            pl.BlockSpec((din, block_f), lambda i: (0, i)),
+            pl.BlockSpec((block_f, dout), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, dout), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, dout), jnp.float32),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def _gate_kernel(x_ref, g_ref, wg_ref, xn_ref, p_ref, *, eps: float):
+    x = x_ref[...]
+    v = jnp.mean(x * x, axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(v + eps) * g_ref[...]
+    logits = xn @ wg_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    xn_ref[...] = xn
+    p_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def gate_softmax(x, ln_w, wg, *, eps: float = 1e-6):
+    """Router gate: (rmsnorm(x), softmax(rmsnorm(x) @ wg)).
+
+    Single-block kernel — the gate matmul is tiny ([T,d]×[d,E]) and lives
+    entirely in VMEM.
+    """
+    t, d = x.shape
+    e = wg.shape[1]
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, eps=eps),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, d), jnp.float32),
+            jax.ShapeDtypeStruct((t, e), jnp.float32),
+        ),
+        interpret=True,
+    )(x, ln_w, wg)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in ``amat_ffn.py`` has a reference here written with plain
+``jax.numpy`` ops only — no pallas, no custom calls. pytest asserts
+allclose between kernel and oracle across shape/dtype sweeps; this is the
+core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.nn
+import jax.numpy as jnp
+
+
+def dequant_asym_ref(q, scale, zp, group: int):
+    """Dequantize group-quantized codes.
+
+    q: int32 [din, dout]; scale: f32 [din//group, dout];
+    zp: int32 [din//group, dout]. Groups run along the *input* (contraction)
+    dimension — matching the paper's G32-along-input expert layout.
+    """
+    din, dout = q.shape
+    qg = q.reshape(din // group, group, dout).astype(jnp.float32)
+    w = scale[:, None, :] * (qg - zp[:, None, :].astype(jnp.float32))
+    return w.reshape(din, dout)
+
+
+def merge_planes_ref(msb, lsb, shift: int):
+    """q_high = (msb << shift) | lsb."""
+    return (msb.astype(jnp.int32) << shift) | lsb.astype(jnp.int32)
+
+
+def swiglu_ref(x, w1, w3, w2):
+    """SwiGLU expert FFN: (silu(x @ w1) * (x @ w3)) @ w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def amat_ffn_high_ref(x, planes, scales, zps, group: int, shift: int):
+    """Full-precision expert: merge MSB|LSB planes, dequant at b_high.
+
+    planes: tuple of 3 (msb, lsb) pairs for w1, w3, w2.
+    scales/zps: tuples of 3 high-bit group params.
+    """
+    ws = []
+    for (msb, lsb), s, z in zip(planes, scales, zps):
+        q = merge_planes_ref(msb, lsb, shift)
+        ws.append(dequant_asym_ref(q, s, z, group))
+    return swiglu_ref(x, *ws)
+
+
+def amat_ffn_low_ref(x, msbs, scales_low, zps_low, group: int):
+    """Low-precision expert: MSB plane only with AMAT-truncated params."""
+    ws = [dequant_asym_ref(m, s, z, group) for m, s, z in zip(msbs, scales_low, zps_low)]
+    return swiglu_ref(x, *ws)
+
+
+def gate_ref(x, wg):
+    """Router gate: softmax(x @ wg) over the expert axis."""
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    v = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(v + eps) * w

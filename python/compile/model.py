@@ -1,0 +1,276 @@
+"""L2 — the tiny MoE language model (build-time JAX).
+
+Two faces of the same model:
+
+* **Training face** (`loss_fn`, `forward_dense`): pure-jnp, differentiable,
+  dense top-k routing with a Switch-style load-balancing auxiliary loss
+  (the paper notes modern MoEs apply router regularization that *weakens*
+  locality — we reproduce that property so the cache sees realistic,
+  diverse routing).
+* **Serving face** (`embed_step`, `attn_prefill_step`, `attn_decode_step`,
+  `gate_step`, `expert_*_step`, `logits_step`): per-op entry points that
+  `aot.py` lowers to individual HLO artifacts. The Rust coordinator owns
+  routing/caching *between* these ops — that is exactly where SliceMoE's
+  contribution lives, so the op boundary is the DBSC decision boundary.
+
+Geometry (TinyConfig) is a scaled-down DeepSeek-V2-Lite-shaped MoE:
+byte-level vocab, 4 layers, 8 routed experts, top-2, SwiGLU experts.
+~3.6 M parameters — big enough that AMAT/Trunc/Base orderings are real,
+small enough to train on CPU at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import amat_ffn as kernels
+from .kernels import ref
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff: int = 256
+    max_seq: int = 640  # prefill window + decode budget
+    group: int = 32  # quant group (paper: G32 for experts)
+    aux_coef: float = 0.01
+    eps: float = 1e-6
+
+
+CFG = TinyConfig()
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: TinyConfig, seed: int = 0) -> Params:
+    k = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(k, 8 + cfg.n_layers * 10))
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def dense(key, shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+        return jax.random.normal(key, shape, jnp.float32) * scale
+
+    p: Params = {
+        "embed": dense(next(ks), (cfg.vocab, d), 0.02),
+        "pos": dense(next(ks), (cfg.max_seq, d), 0.02),
+        "ln_f": jnp.ones((d,), jnp.float32),
+        "w_out": dense(next(ks), (d, cfg.vocab)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        lp = {
+            "ln1": jnp.ones((d,), jnp.float32),
+            "wq": dense(next(ks), (d, d)),
+            "wk": dense(next(ks), (d, d)),
+            "wv": dense(next(ks), (d, d)),
+            "wo": dense(next(ks), (d, d)),
+            "ln2": jnp.ones((d,), jnp.float32),
+            "wg": dense(next(ks), (d, e)),
+            "w1": dense(next(ks), (e, d, f)),
+            "w3": dense(next(ks), (e, d, f)),
+            "w2": dense(next(ks), (e, f, d)),
+        }
+        p["layers"].append(lp)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Training face (pure jnp, dense routing)
+# ---------------------------------------------------------------------------
+
+
+def _mha(x, lp, cfg: TinyConfig, mask):
+    """Multi-head attention over a full sequence. x: [S, d]."""
+    s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = ref.rmsnorm_ref(x, lp["ln1"], cfg.eps)
+    q = (xn @ lp["wq"]).reshape(s, h, dh).transpose(1, 0, 2)
+    k = (xn @ lp["wk"]).reshape(s, h, dh).transpose(1, 0, 2)
+    v = (xn @ lp["wv"]).reshape(s, h, dh).transpose(1, 0, 2)
+    att = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(dh)
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", att, v).transpose(1, 0, 2).reshape(s, d)
+    return x + o @ lp["wo"]
+
+
+def _moe_dense(x, lp, cfg: TinyConfig):
+    """Dense differentiable MoE block. Returns (y, aux_loss, probs)."""
+    xn = ref.rmsnorm_ref(x, lp["ln2"], cfg.eps)
+    probs = jax.nn.softmax(xn @ lp["wg"], axis=-1)  # [S, E]
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    gates = topv / (topv.sum(axis=-1, keepdims=True) + 1e-9)  # renormalized
+    # All-expert computation (tiny model: affordable, exactly differentiable)
+    hs = jnp.einsum("sd,edf->sef", xn, lp["w1"])
+    us = jnp.einsum("sd,edf->sef", xn, lp["w3"])
+    ys = jnp.einsum("sef,efd->sed", jax.nn.silu(hs) * us, lp["w2"])  # [S,E,d]
+    sel = jax.nn.one_hot(topi, cfg.n_experts)  # [S,K,E]
+    w_full = jnp.einsum("ske,sk->se", sel, gates)  # [S, E]
+    y = jnp.einsum("se,sed->sd", w_full, ys)
+    # Switch aux loss: fraction routed * mean prob, per expert
+    frac = sel.sum(axis=1).mean(axis=0)  # [E]
+    mean_p = probs.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(frac * mean_p)
+    return x + y, aux, probs
+
+
+def forward_dense(params: Params, tokens, cfg: TinyConfig = CFG, pos0=0):
+    """tokens: int32 [S]; pos0: position offset (training uses random
+    offsets so every row of the position table is trained — the serving
+    path evaluates at arbitrary positions up to max_seq).
+    Returns (logits [S, V], aux)."""
+    s = tokens.shape[0]
+    pe = jax.lax.dynamic_slice_in_dim(params["pos"], pos0, s, axis=0)
+    x = params["embed"][tokens] + pe
+    mask = jnp.tril(jnp.ones((s, s), bool))[None, :, :]
+    aux_total = 0.0
+    for lp in params["layers"]:
+        x = _mha(x, lp, cfg, mask)
+        x, aux, _ = _moe_dense(x, lp, cfg)
+        aux_total = aux_total + aux
+    xf = ref.rmsnorm_ref(x, params["ln_f"], cfg.eps)
+    return xf @ params["w_out"], aux_total / cfg.n_layers
+
+
+def loss_fn(params: Params, tokens, cfg: TinyConfig = CFG, pos0=None):
+    """Next-byte cross-entropy + load-balance aux. tokens: [B, S+1];
+    pos0: optional int32 [B] per-sequence position offsets."""
+    if pos0 is None:
+        pos0 = jnp.zeros((tokens.shape[0],), jnp.int32)
+
+    def one(seq, p0):
+        logits, aux = forward_dense(params, seq[:-1], cfg, p0)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, seq[1:, None], axis=-1).mean()
+        return nll, aux
+
+    nll, aux = jax.vmap(one)(tokens, pos0)
+    return nll.mean() + cfg.aux_coef * aux.mean(), nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# Serving face (per-op entry points, lowered to HLO by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def embed_step(tokens, pos0, embed, pos):
+    """tokens: i32[T]; pos0: i32[] start offset -> x f32[T, d]."""
+    t = tokens.shape[0]
+    pe = jax.lax.dynamic_slice_in_dim(pos, pos0, t, axis=0)
+    return embed[tokens] + pe
+
+
+def attn_prefill_step(x, valid_len, ln1, wq, wk, wv, wo, cfg: TinyConfig = CFG):
+    """Full-sequence attention (residual included).
+
+    x: [S, d] padded to cfg.max_seq; valid_len masks padding.
+    Returns (h [S,d], k [H,S,dh], v [H,S,dh]) — the KV cache for decode.
+    """
+    s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = ref.rmsnorm_ref(x, ln1, cfg.eps)
+    q = (xn @ wq).reshape(s, h, dh).transpose(1, 0, 2)
+    k = (xn @ wk).reshape(s, h, dh).transpose(1, 0, 2)
+    v = (xn @ wv).reshape(s, h, dh).transpose(1, 0, 2)
+    ar = jnp.arange(s)
+    causal = ar[None, :] <= ar[:, None]
+    valid = ar[None, :] < valid_len
+    mask = (causal & valid)[None, :, :]
+    att = jnp.einsum("hqd,hkd->hqk", q, k) / np.sqrt(dh)
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", att, v).transpose(1, 0, 2).reshape(s, d)
+    return x + o @ wo, k, v
+
+
+def attn_decode_step(x, k_cache, v_cache, pos, ln1, wq, wk, wv, wo, cfg: TinyConfig = CFG):
+    """Single-token attention against the KV cache.
+
+    x: [1, d]; k_cache/v_cache: [H, S, dh]; pos: i32[] index of this token.
+    Returns (h [1,d], k_cache', v_cache').
+    """
+    d = x.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    xn = ref.rmsnorm_ref(x, ln1, cfg.eps)
+    q = (xn @ wq).reshape(1, h, dh).transpose(1, 0, 2)  # [H,1,dh]
+    kt = (xn @ wk).reshape(1, h, dh).transpose(1, 0, 2)  # [H,1,dh]
+    vt = (xn @ wv).reshape(1, h, dh).transpose(1, 0, 2)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, kt, (0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, vt, (0, pos, 0))
+    s = k_cache.shape[1]
+    att = jnp.einsum("hqd,hkd->hqk", q, k_cache) / np.sqrt(dh)  # [H,1,S]
+    mask = (jnp.arange(s) <= pos)[None, None, :]
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", att, v_cache).transpose(1, 0, 2).reshape(1, d)
+    return x + o @ wo, k_cache, v_cache
+
+
+def gate_step(x, ln2, wg):
+    """(rmsnorm(x), router probs). Pallas kernel inside."""
+    return kernels.gate_softmax(x, ln2, wg)
+
+
+def expert_high_step(xn, m1, l1, s1, z1, m3, l3, s3, z3, m2, l2, s2, z2,
+                     *, group: int, shift: int):
+    return kernels.amat_ffn_high(xn, m1, l1, s1, z1, m3, l3, s3, z3,
+                                 m2, l2, s2, z2, group=group, shift=shift)
+
+
+def expert_low_step(xn, m1, s1, z1, m3, s3, z3, m2, s2, z2, *, group: int):
+    return kernels.amat_ffn_low(xn, m1, s1, z1, m3, s3, z3, m2, s2, z2, group=group)
+
+
+def expert_fp_step(xn, w1, w3, w2):
+    return kernels.ffn_fp(xn, w1, w3, w2)
+
+
+def logits_step(x, ln_f, w_out, cfg: TinyConfig = CFG):
+    xf = ref.rmsnorm_ref(x, ln_f, cfg.eps)
+    return xf @ w_out
+
+
+# ---------------------------------------------------------------------------
+# Serving-face composition (python-side mirror of the rust engine; used by
+# tests to prove the per-op path reproduces forward_dense exactly)
+# ---------------------------------------------------------------------------
+
+
+def forward_serving_fp(params: Params, tokens, cfg: TinyConfig = CFG):
+    """Compose the serving ops (fp experts) the way the rust engine does.
+
+    Single-sequence teacher-forced pass: prefill-style attention + per-token
+    top-k routing with renormalized gates, experts at fp32.
+    """
+    s = tokens.shape[0]
+    x = embed_step(tokens, jnp.int32(0), params["embed"], params["pos"])
+    for lp in params["layers"]:
+        x, _, _ = attn_prefill_step(x, jnp.int32(s), lp["ln1"], lp["wq"],
+                                    lp["wk"], lp["wv"], lp["wo"], cfg)
+        xn, probs = gate_step(x, lp["ln2"], lp["wg"])
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        gates = topv / (topv.sum(axis=-1, keepdims=True) + 1e-9)
+        y = jnp.zeros_like(x)
+        for e in range(cfg.n_experts):
+            ye = expert_fp_step(xn, lp["w1"][e], lp["w3"][e], lp["w2"][e])
+            w_e = ((topi == e) * gates).sum(axis=-1)  # [S]
+            y = y + w_e[:, None] * ye
+        x = x + y
+    return logits_step(x, params["ln_f"], params["w_out"], cfg)

@@ -1,0 +1,249 @@
+"""AMAT — Calibration-Free Asymmetric Matryoshka Quantization.
+
+Reference implementation of the paper's quantization scheme (SliceMoE §4.2),
+shared by the build path (aot.py packs expert weights with it) and the test
+suite (kernel oracles, golden files for the Rust mirror in
+``rust/src/quant/``).
+
+Semantics
+---------
+Group-wise (G along the *input* dimension, paper uses G32 for experts)
+asymmetric uint quantization:
+
+    scale = (max - min) / (2^b - 1)
+    zp    = clamp(round(-min / scale), 0, 2^b - 1)
+    q     = clamp(round(w / scale) + zp, 0, 2^b - 1)
+    w_hat = scale * (q - zp)
+
+Matryoshka truncation to ``b_low`` (the paper's key equation):
+
+    shift        = b_high - b_low
+    q_low_trunc  = floor(q_high / 2^shift)        (= q_high >> shift)
+    zp_low_trunc = floor(zp_high / 2^shift)       (= zp_high >> shift)
+    scale_low    = scale_high * 2^shift
+
+Bit-sliced storage: ``q_high = (msb << shift) | lsb`` where the MSB plane is
+exactly the truncated low-bit tensor. MSB-only execution therefore *is* the
+AMAT low-bit quantizer — no duplicate weight copies.
+
+The symmetric variant (Table 1's "Sym" rows) uses signed symmetric
+quantization (zp = 0, scale over max|w|); truncating its q values
+arithmetic-shifts negatives toward -inf, producing the catastrophic bias the
+paper reports (PPL ~ 1e6..1e10). We implement it to reproduce those rows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "QuantParams",
+    "quantize_asym",
+    "dequantize_asym",
+    "quantize_sym",
+    "dequantize_sym",
+    "truncate_amat",
+    "truncate_naive_asym",
+    "truncate_sym",
+    "split_planes",
+    "merge_planes",
+    "pack_bits",
+    "unpack_bits",
+    "GROUP_SIZE_DEFAULT",
+]
+
+GROUP_SIZE_DEFAULT = 32
+
+
+@dataclasses.dataclass
+class QuantParams:
+    """Quantized tensor + per-group metadata.
+
+    ``q`` has the source shape ``(rows, cols)``; groups run along the FIRST
+    axis (the matmul contraction axis for a ``x @ w`` weight),
+    ``rows % group == 0``. ``scale``/``zp`` have shape
+    ``(rows // group, cols)`` — matching the kernel/ref layout.
+    """
+
+    q: np.ndarray  # uint (asym) or int (sym) codes, int32 storage
+    scale: np.ndarray  # f32
+    zp: np.ndarray  # int32; all-zero for symmetric
+    bits: int
+    group: int
+    symmetric: bool
+
+    def nbytes_logical(self) -> int:
+        """Packed size in bytes: codes at ``bits`` bits + fp16 scale
+        (+ ``bits``-bit zp for asymmetric), matching the Rust weight store
+        accounting."""
+        n = self.q.size
+        code_bits = n * self.bits
+        ngroups = self.scale.size
+        meta_bits = ngroups * 16 + (0 if self.symmetric else ngroups * self.bits)
+        return (code_bits + meta_bits + 7) // 8
+
+
+def _group_view(w: np.ndarray, group: int) -> np.ndarray:
+    """(rows, cols) -> (rows//group, group, cols); reductions run on axis 1."""
+    rows, cols = w.shape
+    if rows % group != 0:
+        raise ValueError(f"rows={rows} not divisible by group={group}")
+    return w.reshape(rows // group, group, cols)
+
+
+def quantize_asym(w: np.ndarray, bits: int, group: int = GROUP_SIZE_DEFAULT) -> QuantParams:
+    """Asymmetric per-group uint quantization (paper's expert scheme)."""
+    w = np.asarray(w, dtype=np.float64)
+    g = _group_view(w, group)
+    lo = g.min(axis=1)
+    hi = g.max(axis=1)
+    qmax = float(2**bits - 1)
+    scale = (hi - lo) / qmax
+    # Degenerate (constant c) groups: scale=|c| makes the general formula
+    # exact (q-zp = sign(c)); scale=1 when the group is all zero.
+    degenerate = np.where(np.abs(lo) > 0.0, np.abs(lo), 1.0)
+    scale = np.where(scale <= 0.0, degenerate, scale)
+    zp = np.clip(np.round(-lo / scale), 0, qmax).astype(np.int64)
+    q = np.round(g / scale[:, None, :]) + zp[:, None, :]
+    q = np.clip(q, 0, qmax).astype(np.int64)
+    return QuantParams(
+        q=q.reshape(w.shape).astype(np.int32),
+        scale=scale.astype(np.float32),
+        zp=zp.astype(np.int32),
+        bits=bits,
+        group=group,
+        symmetric=False,
+    )
+
+
+def dequantize_asym(p: QuantParams) -> np.ndarray:
+    g = _group_view(p.q.astype(np.float32), p.group)
+    w = p.scale[:, None, :] * (g - p.zp[:, None, :].astype(np.float32))
+    return w.reshape(p.q.shape).astype(np.float32)
+
+
+def quantize_sym(w: np.ndarray, bits: int, group: int = GROUP_SIZE_DEFAULT) -> QuantParams:
+    """Signed symmetric per-group quantization (Table 1 "Sym" rows)."""
+    w = np.asarray(w, dtype=np.float64)
+    g = _group_view(w, group)
+    amax = np.abs(g).max(axis=1)
+    qmax = float(2 ** (bits - 1) - 1)
+    scale = amax / qmax
+    scale = np.where(scale <= 0.0, 1.0, scale)
+    q = np.clip(np.round(g / scale[:, None, :]), -(qmax + 1), qmax).astype(np.int64)
+    return QuantParams(
+        q=q.reshape(w.shape).astype(np.int32),
+        scale=scale.astype(np.float32),
+        zp=np.zeros_like(scale, dtype=np.int32),
+        bits=bits,
+        group=group,
+        symmetric=True,
+    )
+
+
+def dequantize_sym(p: QuantParams) -> np.ndarray:
+    g = _group_view(p.q.astype(np.float32), p.group)
+    w = p.scale[:, None, :] * g
+    return w.reshape(p.q.shape).astype(np.float32)
+
+
+def truncate_amat(p: QuantParams, b_low: int) -> QuantParams:
+    """AMAT truncation: jointly shift codes AND zero-points (paper eq. §4.2)."""
+    if p.symmetric:
+        raise ValueError("AMAT truncation is defined for the asymmetric scheme")
+    if b_low >= p.bits:
+        raise ValueError(f"b_low={b_low} must be < bits={p.bits}")
+    shift = p.bits - b_low
+    return QuantParams(
+        q=(p.q >> shift).astype(np.int32),
+        scale=(p.scale * float(2**shift)).astype(np.float32),
+        zp=(p.zp >> shift).astype(np.int32),
+        bits=b_low,
+        group=p.group,
+        symmetric=False,
+    )
+
+
+def truncate_naive_asym(p: QuantParams, b_low: int) -> QuantParams:
+    """Naive truncation baseline (Table 1 "Trunc"/Asym): RANGE truncation —
+    codes clamp to the low-bit range while scale and zero-point stay at
+    their high-bit values. The zero-point usually exceeds the clamped range
+    entirely, destroying the dequant reference point (the ~1e9/nan rows)."""
+    if p.symmetric:
+        raise ValueError("use truncate_sym for the symmetric scheme")
+    qmax = (1 << b_low) - 1
+    return QuantParams(
+        q=np.clip(p.q, 0, qmax).astype(np.int32),
+        scale=p.scale.copy(),  # neither scale nor zp adjusted
+        zp=p.zp.copy(),
+        bits=b_low,
+        group=p.group,
+        symmetric=False,
+    )
+
+
+def truncate_sym(p: QuantParams, b_low: int) -> QuantParams:
+    """Symmetric truncation baseline (Table 1 "Trunc"/Sym): RANGE truncation
+    — signed codes clamp to the low-bit range at the ORIGINAL scale. Every
+    weight beyond the shrunken range collapses to the boundary ("many
+    values collapse to the truncated boundaries") — catastrophic clipping."""
+    if not p.symmetric:
+        raise ValueError("use truncate_amat/truncate_naive_asym for asym")
+    qmax = (1 << (b_low - 1)) - 1
+    return QuantParams(
+        q=np.clip(p.q, -qmax - 1, qmax).astype(np.int32),
+        scale=p.scale.copy(),
+        zp=p.zp.copy(),
+        bits=b_low,
+        group=p.group,
+        symmetric=True,
+    )
+
+
+def split_planes(p: QuantParams, b_low: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split high-bit codes into (msb, lsb) planes.
+
+    ``msb`` is the b_low-bit plane (== truncate_amat(p, b_low).q) and ``lsb``
+    holds the residual ``shift`` bits: ``q == (msb << shift) | lsb``.
+    """
+    shift = p.bits - b_low
+    msb = (p.q >> shift).astype(np.int32)
+    lsb = (p.q & ((1 << shift) - 1)).astype(np.int32)
+    return msb, lsb
+
+
+def merge_planes(msb: np.ndarray, lsb: np.ndarray, shift: int) -> np.ndarray:
+    return ((msb.astype(np.int64) << shift) | lsb.astype(np.int64)).astype(np.int32)
+
+
+def pack_bits(codes: np.ndarray, bits: int) -> np.ndarray:
+    """Tightly pack non-negative integer codes (< 2^bits) into a u8 stream,
+    little-endian bit order. Mirrors rust `quant::packing::pack_bits`."""
+    flat = codes.reshape(-1).astype(np.uint64)
+    if bits < 1 or bits > 16:
+        raise ValueError("bits must be in 1..=16")
+    if np.any(flat >= (1 << bits)):
+        raise ValueError("code out of range for bits")
+    n = flat.size
+    total_bits = n * bits
+    out = np.zeros((total_bits + 7) // 8, dtype=np.uint8)
+    # Vectorized bit scatter: for each of `bits` bit positions, place bit j
+    # of code i at stream position i*bits + j.
+    for j in range(bits):
+        bit = ((flat >> j) & 1).astype(np.uint8)
+        pos = np.arange(n, dtype=np.int64) * bits + j
+        np.bitwise_or.at(out, pos >> 3, (bit << (pos & 7)).astype(np.uint8))
+    return out
+
+
+def unpack_bits(packed: np.ndarray, bits: int, count: int) -> np.ndarray:
+    """Inverse of pack_bits -> int32 array of length ``count``."""
+    packed = np.asarray(packed, dtype=np.uint8)
+    out = np.zeros(count, dtype=np.int64)
+    for j in range(bits):
+        pos = np.arange(count, dtype=np.int64) * bits + j
+        bit = (packed[pos >> 3] >> (pos & 7)) & 1
+        out |= bit.astype(np.int64) << j
+    return out.astype(np.int32)

@@ -1,0 +1,124 @@
+"""Build-time trainer for the tiny MoE byte-LM.
+
+Runs ONCE from `make artifacts` (skipped when weights.npz already exists).
+Adam + cosine schedule, Switch-style load-balance aux (see model.py).
+CPU-only, a few minutes. Saves a flat .npz checkpoint that aot.py and the
+test-suite consume.
+
+Usage: python -m compile.train --out ../artifacts/weights.npz --steps 400
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import CFG, TinyConfig, init_params, loss_fn
+
+
+def batches(data: np.ndarray, batch: int, seqlen: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(data) - seqlen - 1
+    while True:
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([data[i : i + seqlen + 1] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return z, jax.tree.map(jnp.zeros_like, params)
+
+
+def train(cfg: TinyConfig = CFG, steps: int = 400, batch: int = 8,
+          seqlen: int = 192, lr: float = 3e-3, seed: int = 0,
+          log_every: int = 25) -> tuple[dict, list[tuple[int, float]]]:
+    params = init_params(cfg, seed)
+    m, v = adam_init(params)
+    b1, b2, eps = 0.9, 0.95, 1e-8
+
+    @jax.jit
+    def step_fn(params, m, v, tokens, pos0, step):
+        (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, tokens, cfg, pos0)
+        t = step + 1
+        frac = jnp.minimum(t / steps, 1.0)
+        lr_t = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac)) + 1e-5
+
+        def upd(p, g, m, v):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1**t)
+            vh = v / (1 - b2**t)
+            return p - lr_t * mh / (jnp.sqrt(vh) + eps), m, v
+
+        out = jax.tree.map(upd, params, grads, m, v)
+        params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return params, m, v, loss, nll
+
+    train_data, _ = corpus.train_eval_split()
+    data = np.frombuffer(train_data, dtype=np.uint8)
+    it = batches(data, batch, seqlen, seed + 1)
+    pos_rng = np.random.default_rng(seed + 2)
+    log: list[tuple[int, float]] = []
+    t0 = time.time()
+    for s in range(steps):
+        tok = next(it)
+        # random position offsets: every row of the position table trains
+        pos0 = pos_rng.integers(0, cfg.max_seq - seqlen, size=batch).astype(np.int32)
+        params, m, v, loss, nll = step_fn(params, m, v, tok, pos0, s)
+        if s % log_every == 0 or s == steps - 1:
+            nll_f = float(nll)
+            log.append((s, nll_f))
+            print(f"step {s:4d}  nll/byte {nll_f:.4f}  ppl {np.exp(nll_f):8.3f}  "
+                  f"({time.time()-t0:5.1f}s)", flush=True)
+    return params, log
+
+
+def flatten_params(params) -> dict[str, np.ndarray]:
+    out = {
+        "embed": params["embed"], "pos": params["pos"],
+        "ln_f": params["ln_f"], "w_out": params["w_out"],
+    }
+    for i, lp in enumerate(params["layers"]):
+        for k, val in lp.items():
+            out[f"layer{i}.{k}"] = val
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def unflatten_params(flat: dict, cfg: TinyConfig = CFG) -> dict:
+    p = {"embed": jnp.asarray(flat["embed"]), "pos": jnp.asarray(flat["pos"]),
+         "ln_f": jnp.asarray(flat["ln_f"]), "w_out": jnp.asarray(flat["w_out"]),
+         "layers": []}
+    for i in range(cfg.n_layers):
+        p["layers"].append({k: jnp.asarray(flat[f"layer{i}.{k}"])
+                            for k in ["ln1", "wq", "wk", "wv", "wo",
+                                      "ln2", "wg", "w1", "w3", "w2"]})
+    return p
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/weights.npz")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seqlen", type=int, default=192)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    params, log = train(steps=args.steps, batch=args.batch,
+                        seqlen=args.seqlen, seed=args.seed)
+    flat = flatten_params(params)
+    flat["_train_log_steps"] = np.array([s for s, _ in log], np.int32)
+    flat["_train_log_nll"] = np.array([l for _, l in log], np.float32)
+    np.savez(args.out, **flat)
+    print(f"saved {args.out}")
+
+
+if __name__ == "__main__":
+    main()

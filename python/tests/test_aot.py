@@ -1,0 +1,97 @@
+"""AOT path checks: every entry point lowers to parseable HLO text, the
+manifest matches the entry registry, and the SMWB blob container
+round-trips.
+"""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import CFG
+
+
+def test_entry_registry_complete():
+    entries = aot.build_entry_points()
+    # 2 phases x {embed, gate, logits, expert_fp, expert_low} + high per shift
+    expected = {f"{n}_{t}" for t in ("prefill", "decode")
+                for n in ("embed", "gate", "logits", "expert_fp", "expert_low")}
+    expected |= {f"expert_high_s{s}_{t}" for s in aot.MAT_SHIFTS
+                 for t in ("prefill", "decode")}
+    expected |= {"attn_prefill", "attn_decode"}
+    assert set(entries) == expected
+
+
+@pytest.mark.parametrize("name", ["gate_decode", "logits_decode", "embed_decode"])
+def test_small_entry_lowers_to_hlo_text(name):
+    import jax
+
+    fn, specs = aot.build_entry_points()[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text and "HloModule" in text
+    # must not contain mosaic custom-calls (interpret=True everywhere)
+    assert "tpu_custom_call" not in text
+
+
+def test_expert_low_decode_lowers():
+    import jax
+
+    fn, specs = aot.build_entry_points()["expert_low_decode"]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "ENTRY" in text
+
+
+def test_blob_roundtrip(tmp_path):
+    path = os.path.join(tmp_path, "t.bin")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.c": np.arange(5, dtype=np.int32),
+        "packed": np.frombuffer(b"\x01\x02\xff", dtype=np.uint8),
+    }
+    aot._write_blob(path, tensors)
+    with open(path, "rb") as fh:
+        assert fh.read(8) == b"SMWB0001"
+        (count,) = struct.unpack("<I", fh.read(4))
+        assert count == 3
+        got = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", fh.read(2))
+            name = fh.read(nlen).decode()
+            code, ndim = struct.unpack("<BB", fh.read(2))
+            dims = struct.unpack(f"<{ndim}I", fh.read(4 * ndim))
+            (nbytes,) = struct.unpack("<Q", fh.read(8))
+            raw = fh.read(nbytes)
+            dt = {0: np.float32, 1: np.int32, 2: np.uint8}[code]
+            got[name] = np.frombuffer(raw, dt).reshape(dims)
+    for k, v in tensors.items():
+        np.testing.assert_array_equal(got[k], v)
+
+
+def test_golden_quant_tensors_shapes():
+    rng = np.random.default_rng(0)
+    flat = {"layer0.w1": rng.standard_normal(
+        (CFG.n_experts, CFG.d_model, CFG.d_ff)).astype(np.float32)}
+    g = aot.golden_quant_tensors(flat)
+    for tag in ("mat42", "mat63", "mat84"):
+        assert g[f"{tag}.q"].shape == (CFG.d_model, CFG.d_ff)
+        assert g[f"{tag}.scale"].shape == (CFG.d_model // CFG.group, CFG.d_ff)
+        # msb is exactly the AMAT-truncated code plane
+        bh = int(tag[3]); bl = int(tag[4])
+        assert (g[f"{tag}.msb"] == g[f"{tag}.q"] >> (bh - bl)).all()
+
+
+@pytest.mark.skipif(not os.path.exists(
+    os.path.join(os.path.dirname(__file__), "../../artifacts/model_meta.json")),
+    reason="artifacts not built")
+def test_built_artifacts_manifest_consistent():
+    import json
+
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    meta = json.load(open(os.path.join(root, "model_meta.json")))
+    for name, ent in meta["artifacts"].items():
+        p = os.path.join(root, ent["file"])
+        assert os.path.exists(p), name
+        head = open(p).read(4096)
+        assert "HloModule" in head

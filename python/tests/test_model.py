@@ -1,0 +1,118 @@
+"""L2 model checks: serving-face ops compose to the training-face forward,
+attention decode is consistent with prefill, and shapes are as the AOT
+manifest declares.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    CFG,
+    TinyConfig,
+    attn_decode_step,
+    attn_prefill_step,
+    embed_step,
+    forward_dense,
+    forward_serving_fp,
+    gate_step,
+    init_params,
+    logits_step,
+    loss_fn,
+)
+
+SMALL = TinyConfig(d_model=64, n_layers=2, n_heads=2, d_head=32,
+                   n_experts=4, top_k=2, d_ff=128, max_seq=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(SMALL, seed=1)
+
+
+def toks(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.array(rng.integers(0, 256, n), jnp.int32)
+
+
+def test_serving_composition_matches_dense_forward(params):
+    """Per-op serving path (pallas experts) == dense training forward."""
+    t = toks(12)
+    logits_d, _ = forward_dense(params, t, SMALL)
+    logits_s = forward_serving_fp(params, t, SMALL)
+    np.testing.assert_allclose(logits_s, logits_d, rtol=2e-4, atol=2e-4)
+
+
+def test_attn_decode_matches_prefill_row(params):
+    """Decoding token s against the prefill KV cache reproduces the
+    prefill attention output at row s."""
+    lp = params["layers"][0]
+    s = 10
+    x = jax.random.normal(jax.random.PRNGKey(0), (s, SMALL.d_model))
+    h_pre, k, v = attn_prefill_step(x, jnp.int32(s), lp["ln1"], lp["wq"],
+                                    lp["wk"], lp["wv"], lp["wo"], SMALL)
+    # re-run last token through the decode path with cache holding rows < s-1
+    h_dec, k2, v2 = attn_decode_step(
+        x[s - 1 : s], k, v, jnp.int32(s - 1),
+        lp["ln1"], lp["wq"], lp["wk"], lp["wv"], lp["wo"], SMALL,
+    )
+    np.testing.assert_allclose(h_dec[0], h_pre[s - 1], rtol=1e-4, atol=1e-5)
+    # cache row s-1 must be overwritten with identical values
+    np.testing.assert_allclose(k2[:, s - 1], k[:, s - 1], rtol=1e-5, atol=1e-6)
+
+
+def test_prefill_padding_does_not_change_valid_rows(params):
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, SMALL.d_model))
+    h_full, _, _ = attn_prefill_step(x, jnp.int32(16), lp["ln1"], lp["wq"],
+                                     lp["wk"], lp["wv"], lp["wo"], SMALL)
+    xp = jnp.concatenate([x[:9], jnp.zeros((7, SMALL.d_model))])
+    h_pad, _, _ = attn_prefill_step(xp, jnp.int32(9), lp["ln1"], lp["wq"],
+                                    lp["wk"], lp["wv"], lp["wo"], SMALL)
+    h_ref, _, _ = attn_prefill_step(x[:9], jnp.int32(9), lp["ln1"], lp["wq"],
+                                    lp["wk"], lp["wv"], lp["wo"], SMALL)
+    np.testing.assert_allclose(h_pad[:9], h_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_embed_offset(params):
+    t = toks(4)
+    x0 = embed_step(t, jnp.int32(0), params["embed"], params["pos"])
+    x5 = embed_step(t, jnp.int32(5), params["embed"], params["pos"])
+    np.testing.assert_allclose(
+        np.asarray(x5 - x0),
+        np.asarray(params["pos"][5:9] - params["pos"][0:4]),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_gate_probs_normalized(params):
+    lp = params["layers"][1]
+    x = jax.random.normal(jax.random.PRNGKey(2), (6, SMALL.d_model))
+    xn, p = gate_step(x, lp["ln2"], lp["wg"])
+    assert p.shape == (6, SMALL.n_experts)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_loss_decreases_one_step(params):
+    """Gradient sanity: one SGD step on a batch lowers its loss."""
+    rng = np.random.default_rng(0)
+    tokens = jnp.array(rng.integers(0, 256, (2, 33)), jnp.int32)
+    (l0, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, tokens, SMALL)
+    p2 = jax.tree.map(lambda p, gg: p - 0.05 * gg, params, g)
+    l1, _ = loss_fn(p2, tokens, SMALL)
+    assert float(l1) < float(l0)
+
+
+def test_logits_shape(params):
+    x = jax.random.normal(jax.random.PRNGKey(3), (7, SMALL.d_model))
+    out = logits_step(x, params["ln_f"], params["w_out"], SMALL)
+    assert out.shape == (7, SMALL.vocab)
+
+
+def test_default_config_alignment():
+    """Geometry constraints the kernels/AOT rely on."""
+    assert CFG.d_model % CFG.group == 0
+    assert CFG.d_ff % CFG.group == 0
+    assert CFG.n_heads * CFG.d_head == CFG.d_model
+    assert CFG.d_ff % 128 == 0  # DEFAULT_BLOCK_F

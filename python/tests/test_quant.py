@@ -1,0 +1,163 @@
+"""AMAT quantization properties (hypothesis-driven).
+
+These are the invariants DESIGN.md §Key-algorithms promises; the Rust
+mirror (`rust/src/quant/`) is held to the same ones via golden files.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+
+BITS_PAIRS = [(4, 2), (6, 3), (8, 4)]
+
+
+def rand_w(rows, cols, seed=0, scale=0.1, loc=0.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal((rows, cols)) * scale + loc).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 6, 8]),
+    group=st.sampled_from([16, 32, 64]),
+    rows_g=st.integers(1, 4),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_asym_roundtrip_error_bound(bits, group, rows_g, cols, seed):
+    """|w - dq(q(w))| <= scale/2 elementwise (asymmetric covers the range)."""
+    w = rand_w(rows_g * group, cols, seed)
+    p = quant.quantize_asym(w, bits, group)
+    dq = quant.dequantize_asym(p)
+    err = np.abs(dq - w)
+    bound = np.repeat(p.scale, group, axis=0) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([3, 4, 6, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_asym_codes_in_range(bits, seed):
+    w = rand_w(64, 17, seed)
+    p = quant.quantize_asym(w, bits, 32)
+    assert p.q.min() >= 0 and p.q.max() <= 2**bits - 1
+    assert p.zp.min() >= 0 and p.zp.max() <= 2**bits - 1
+
+
+def test_degenerate_constant_group_is_exact():
+    w = np.full((32, 5), 0.37, np.float32)
+    p = quant.quantize_asym(w, 4, 32)
+    assert np.allclose(quant.dequantize_asym(p), w, atol=1e-6)
+
+
+def test_sym_zero_maps_to_zero():
+    """Symmetric quantization must represent 0 exactly (zp-free)."""
+    w = rand_w(64, 8, 3)
+    w[5, :] = 0.0
+    p = quant.quantize_sym(w, 4, 32)
+    dq = quant.dequantize_sym(p)
+    assert np.abs(dq[5]).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Matryoshka truncation (the paper's core equation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,bl", BITS_PAIRS)
+def test_msb_plane_equals_amat_truncation(bh, bl):
+    """split_planes MSB == truncate_amat codes — MSB-only execution IS the
+    AMAT low-bit quantizer (no duplicate copies, paper §4.2)."""
+    w = rand_w(128, 33, 7)
+    p = quant.quantize_asym(w, bh, 32)
+    msb, lsb = quant.split_planes(p, bl)
+    t = quant.truncate_amat(p, bl)
+    assert (msb == t.q).all()
+    assert np.allclose(t.scale, p.scale * 2 ** (bh - bl))
+    assert (t.zp == (p.zp >> (bh - bl))).all()
+
+
+@pytest.mark.parametrize("bh,bl", BITS_PAIRS)
+def test_plane_merge_roundtrip(bh, bl):
+    w = rand_w(96, 21, 11)
+    p = quant.quantize_asym(w, bh, 32)
+    msb, lsb = quant.split_planes(p, bl)
+    assert (quant.merge_planes(msb, lsb, bh - bl) == p.q).all()
+    assert msb.max() <= 2**bl - 1
+    assert lsb.max() <= 2 ** (bh - bl) - 1
+
+
+@pytest.mark.parametrize("bh,bl", BITS_PAIRS)
+def test_amat_beats_naive_and_sym_truncation(bh, bl):
+    """Table 1's ordering: AMAT error ~ fresh low-bit error, while naive
+    asym truncation (stale zp) and symmetric truncation are far worse."""
+    w = rand_w(512, 64, 5, scale=0.08, loc=0.02)  # asymmetric distribution
+    p = quant.quantize_asym(w, bh, 32)
+
+    def mse(dq):
+        return float(((dq - w) ** 2).mean())
+
+    amat = mse(quant.dequantize_asym(quant.truncate_amat(p, bl)))
+    naive = mse(quant.dequantize_asym(quant.truncate_naive_asym(p, bl)))
+    fresh = mse(quant.dequantize_asym(quant.quantize_asym(w, bl, 32)))
+    sym = quant.quantize_sym(w, bh, 32)
+    symt = mse(quant.dequantize_sym(quant.truncate_sym(sym, bl)))
+    assert amat < naive, (amat, naive)
+    assert amat < symt, (amat, symt)
+    # AMAT stays within a small factor of an independently-quantized low-bit
+    # tensor (Table 1: AMAT ~ Base at low bits).
+    assert amat < 4.0 * fresh, (amat, fresh)
+    # Naive truncation is catastrophically worse than AMAT.
+    assert naive > 10.0 * amat
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_amat_truncation_is_floor_division(seed):
+    """q_low == floor(q_high / 2^shift) exactly (paper's equation)."""
+    w = rand_w(64, 9, seed)
+    p = quant.quantize_asym(w, 8, 32)
+    t = quant.truncate_amat(p, 4)
+    assert (t.q == p.q // 16).all()
+    assert (t.zp == p.zp // 16).all()
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.integers(1, 12),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**16),
+)
+def test_pack_unpack_roundtrip(bits, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 2**bits, size=n)
+    packed = quant.pack_bits(codes, bits)
+    assert packed.size == (n * bits + 7) // 8
+    assert (quant.unpack_bits(packed, bits, n) == codes).all()
+
+
+def test_pack_rejects_out_of_range():
+    with pytest.raises(ValueError):
+        quant.pack_bits(np.array([4]), 2)
+
+
+def test_nbytes_logical():
+    w = rand_w(64, 32, 0)
+    p = quant.quantize_asym(w, 4, 32)
+    # 2048 codes * 4b = 1024B; 64 groups * (16b scale + 4b zp) = 160B
+    assert p.nbytes_logical() == 1024 + 160

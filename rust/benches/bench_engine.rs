@@ -1,0 +1,62 @@
+//! Engine (PJRT execution path) benchmarks: per-op latency and end-to-end
+//! decode throughput of the tiny LM. The L3 perf target is that the
+//! coordinator adds <10% over raw PJRT compute — the per-op numbers here
+//! are the denominators for that check (EXPERIMENTS.md §Perf).
+
+use std::path::Path;
+
+use slicemoe::engine::{Engine, Session, SessionConfig};
+use slicemoe::quant::MatConfig;
+use slicemoe::router::Precision;
+use slicemoe::runtime::DeviceTensor;
+use slicemoe::util::bench::{bench_units, runner};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("model_meta.json").exists() {
+        println!("bench_engine: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let eng = Engine::load(artifacts, MatConfig::MAT84).expect("load engine");
+    let mut report = runner("engine (PJRT) benchmarks");
+    let m = &eng.ws.meta;
+
+    // single expert FFN at each precision (decode shape, T=1)
+    {
+        let x = vec![0.1f32; m.d_model];
+        let x_b = DeviceTensor::from_f32(&eng.rt, &x, &[1, m.d_model]).unwrap();
+        for (name, prec) in [
+            ("expert fp32", Precision::Full),
+            ("expert high (8b planes)", Precision::High),
+            ("expert low (4b msb)", Precision::Low),
+        ] {
+            report(bench_units(&format!("op/{name} T=1"), 3, 30, 1.0, || {
+                let y = eng.run_expert(0, 0, prec, &x_b.buffer, false).unwrap();
+                std::hint::black_box(y);
+            }));
+        }
+    }
+
+    // full decode step through a session (generate 1 token at a time)
+    {
+        let mut cfg = SessionConfig::dbsc_default(&eng);
+        cfg.constraint = 0.05;
+        let mut sess = Session::new(&eng, cfg);
+        let eval = std::fs::read(artifacts.join("corpus_eval.bin")).unwrap();
+        sess.prefill(&eval[..256]).unwrap();
+        let mut cur = eval[255];
+        report(bench_units("session/decode_step (4 layers, top-2)", 2, 48, 1.0, || {
+            let (next, _) = sess.decode_step(cur).unwrap();
+            cur = next;
+        }));
+    }
+
+    // prefill throughput
+    {
+        let eval = std::fs::read(artifacts.join("corpus_eval.bin")).unwrap();
+        report(bench_units("session/prefill 384 tokens", 0, 3, 384.0, || {
+            let mut sess = Session::new(&eng, SessionConfig::dbsc_default(&eng));
+            sess.prefill(&eval[..384]).unwrap();
+        }));
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: Fig 10 regeneration — cache warmup strategies (Empty /
+//! Last-layer / Random / PCW) on a single 512+128-token request.
+
+use slicemoe::experiments::fig10;
+use slicemoe::model::ModelDesc;
+use slicemoe::util::bench::{bench, runner};
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let mut report = runner("Fig 10 — cache warmup strategies");
+    let threads = default_threads();
+    for desc in [ModelDesc::deepseek_v2_lite(), ModelDesc::qwen15_moe_a27b()] {
+        let mut last = None;
+        let r = bench(&format!("fig10/{}", desc.name), 0, 3, || {
+            last = Some(fig10(&desc, threads));
+        });
+        report(r);
+        if let Some((_, table)) = last {
+            print!("{}", table.render());
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Bench: Fig 2 (right) regeneration — high- vs low-bit accuracy across
+//! miss-rate constraints. Prints the figure's rows and times the sweep.
+
+use slicemoe::experiments::fig2;
+use slicemoe::model::ModelDesc;
+use slicemoe::util::bench::{bench, runner};
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let mut report = runner("Fig 2 — motivation sweep");
+    let threads = default_threads();
+    for desc in [ModelDesc::deepseek_v2_lite(), ModelDesc::qwen15_moe_a27b()] {
+        let mut last = None;
+        let r = bench(&format!("fig2/{}", desc.name), 0, 3, || {
+            last = Some(fig2(&desc, threads));
+        });
+        report(r);
+        if let Some((_, table)) = last {
+            print!("{}", table.render());
+        }
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: Fig 8 regeneration — the full accuracy-vs-miss-rate grid
+//! (4 configs x 3 cache sizes x 7 constraints) for both models, plus the
+//! Pareto-dominance check.
+
+use slicemoe::experiments::{fig8, fig8_pareto_score};
+use slicemoe::model::ModelDesc;
+use slicemoe::util::bench::{bench, runner};
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let mut report = runner("Fig 8 — accuracy vs high-bit-normalized miss rate");
+    let threads = default_threads();
+    for desc in [ModelDesc::deepseek_v2_lite(), ModelDesc::qwen15_moe_a27b()] {
+        let mut last = None;
+        let r = bench(&format!("fig8/{}", desc.name), 0, 2, || {
+            last = Some(fig8(&desc, threads));
+        });
+        report(r);
+        if let Some((points, table)) = last {
+            print!("{}", table.render());
+            let (wins, cells) = fig8_pareto_score(&points);
+            println!("dbsc+amat Pareto-dominant in {wins}/{cells} cells\n");
+        }
+    }
+}

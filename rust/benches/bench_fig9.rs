@@ -1,0 +1,32 @@
+//! Bench: Fig 9 regeneration — decode energy gain & speed-up across
+//! routing schemes and cache sizes (matched-accuracy operating points).
+
+use slicemoe::experiments::fig9;
+use slicemoe::model::ModelDesc;
+use slicemoe::util::bench::{bench, runner};
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let mut report = runner("Fig 9 — energy gain & speed-up");
+    let threads = default_threads();
+    for desc in [ModelDesc::deepseek_v2_lite(), ModelDesc::qwen15_moe_a27b()] {
+        let mut last = None;
+        let r = bench(&format!("fig9/{}", desc.name), 0, 2, || {
+            last = Some(fig9(&desc, threads));
+        });
+        report(r);
+        if let Some((points, table)) = last {
+            print!("{}", table.render());
+            let best = points
+                .iter()
+                .filter(|p| p.scheme == "dbsc+amat")
+                .fold((0.0f64, 0.0f64), |a, p| {
+                    (a.0.max(p.energy_gain), a.1.max(p.speedup))
+                });
+            println!(
+                "best dbsc+amat vs high-bit Cache-Prior: {:.2}x energy, {:.2}x speed-up\n",
+                best.0, best.1
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Bench: Table 1 regeneration — AMAT PPL measured on the trained tiny LM
+//! through the PJRT path. Skips gracefully when artifacts are missing
+//! (simulator benches don't need them; this one does).
+
+use std::path::Path;
+
+use slicemoe::engine::Engine;
+use slicemoe::experiments::{table1, verify_table1_shape, T1Row};
+use slicemoe::quant::MatConfig;
+use slicemoe::util::bench::{bench, runner};
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("model_meta.json").exists() {
+        println!("bench_table1: artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    }
+    let eng = Engine::load(artifacts, MatConfig::MAT84).expect("load engine");
+    let eval_full = std::fs::read(artifacts.join("corpus_eval.bin")).expect("eval corpus");
+    let eval = &eval_full[..2048.min(eval_full.len())];
+
+    let mut report = runner("Table 1 — AMAT PPL (measured)");
+    let mats = [(4u32, 2u32), (6, 3), (8, 4)];
+    let mut last = None;
+    let r = bench("table1/tiny-moe-bytelm", 0, 1, || {
+        last = Some(table1(&eng, eval, &mats, &T1Row::all()).expect("table1"));
+    });
+    report(r);
+    if let Some((points, table)) = last {
+        print!("{}", table.render());
+        let v = verify_table1_shape(&points);
+        println!("shape check: {}", if v.is_empty() { "OK".into() } else { format!("{v:?}") });
+    }
+}

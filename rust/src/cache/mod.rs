@@ -1,0 +1,7 @@
+//! Slice-level expert caching (DBSC's storage side) + predictive warmup.
+
+pub mod slice_cache;
+pub mod warmup;
+
+pub use slice_cache::{CacheStats, Ensure, SliceCache};
+pub use warmup::{apply as apply_warmup, HotnessTable, WarmupStrategy};

@@ -1,0 +1,533 @@
+//! Slice-granular unified expert cache (paper §4.1, DBSC).
+//!
+//! One cache is shared across all layers (paper §6.1-3). Entries are
+//! *slices*, not experts: the MSB plane (low-bit codes + group metadata)
+//! and the LSB plane (residual bits) of each expert hit/miss independently.
+//!
+//! Heterogeneous replacement (§4.1): one recency list, two priority
+//! classes. MSB slices follow standard LRU; LSB slices — inherently weaker
+//! temporal locality (critical experts fluctuate token-to-token) — form
+//! the lowest-priority class: under capacity pressure ALL evictable LSBs
+//! go (LRU-first) before any MSB is touched. A hot critical expert keeps
+//! its LSB while slack exists ("after initial access" it is the first to
+//! go), and MSB coverage always wins the capacity fight.
+//!
+//! Implementation: index-arena doubly-linked list + hash index; O(1)
+//! lookup/insert/evict, zero allocation in the steady state.
+
+use std::collections::HashMap;
+
+use crate::model::descriptor::{Plane, SliceKey};
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Entry {
+    key: SliceKey,
+    bytes: u64,
+    prev: u32,
+    next: u32,
+    pinned: bool,
+    /// Accesses since insertion (PCW reads this).
+    freq: u32,
+}
+
+/// Cache statistics, split by plane.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub msb_hits: u64,
+    pub msb_misses: u64,
+    pub lsb_hits: u64,
+    pub lsb_misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let h = (self.msb_hits + self.lsb_hits) as f64;
+        let t = h + (self.msb_misses + self.lsb_misses) as f64;
+        if t == 0.0 {
+            1.0
+        } else {
+            h / t
+        }
+    }
+}
+
+/// Outcome of `ensure`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Ensure {
+    /// Already resident (a hit).
+    Hit,
+    /// Inserted after evicting these slices (a miss + fill).
+    Inserted { evicted: Vec<SliceKey> },
+    /// Larger than the whole cache — cannot ever be resident.
+    TooLarge,
+}
+
+#[derive(Clone, Debug)]
+pub struct SliceCache {
+    capacity: u64,
+    used: u64,
+    entries: Vec<Entry>,
+    free: Vec<u32>,
+    index: HashMap<SliceKey, u32>,
+    head: u32, // MRU
+    tail: u32, // LRU victim side
+    pub stats: CacheStats,
+    /// When false, LSB slices are treated exactly like MSB (ablation knob
+    /// for the heterogeneous-policy experiment).
+    pub heterogeneous: bool,
+}
+
+impl SliceCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        SliceCache {
+            capacity: capacity_bytes,
+            used: 0,
+            entries: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            head: NIL,
+            tail: NIL,
+            stats: CacheStats::default(),
+            heterogeneous: true,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, key: SliceKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    // -- intrusive list plumbing ------------------------------------------
+
+    fn unlink(&mut self, i: u32) {
+        let (p, n) = (self.entries[i as usize].prev, self.entries[i as usize].next);
+        if p == NIL {
+            self.head = n;
+        } else {
+            self.entries[p as usize].next = n;
+        }
+        if n == NIL {
+            self.tail = p;
+        } else {
+            self.entries[n as usize].prev = p;
+        }
+        self.entries[i as usize].prev = NIL;
+        self.entries[i as usize].next = NIL;
+    }
+
+    fn push_front(&mut self, i: u32) {
+        self.entries[i as usize].prev = NIL;
+        self.entries[i as usize].next = self.head;
+        if self.head != NIL {
+            self.entries[self.head as usize].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn push_back(&mut self, i: u32) {
+        self.entries[i as usize].next = NIL;
+        self.entries[i as usize].prev = self.tail;
+        if self.tail != NIL {
+            self.entries[self.tail as usize].next = i;
+        }
+        self.tail = i;
+        if self.head == NIL {
+            self.head = i;
+        }
+    }
+
+    fn alloc(&mut self, e: Entry) -> u32 {
+        if let Some(i) = self.free.pop() {
+            self.entries[i as usize] = e;
+            i
+        } else {
+            self.entries.push(e);
+            (self.entries.len() - 1) as u32
+        }
+    }
+
+    // -- cache operations --------------------------------------------------
+
+    /// Probe for `key`, updating stats, hotness, and LRU position per the
+    /// plane policy. Returns true on hit.
+    pub fn lookup(&mut self, key: SliceKey) -> bool {
+        match self.index.get(&key).copied() {
+            Some(i) => {
+                match key.plane {
+                    Plane::Msb => self.stats.msb_hits += 1,
+                    Plane::Lsb => self.stats.lsb_hits += 1,
+                }
+                self.entries[i as usize].freq += 1;
+                self.unlink(i);
+                self.push_front(i);
+                true
+            }
+            None => {
+                match key.plane {
+                    Plane::Msb => self.stats.msb_misses += 1,
+                    Plane::Lsb => self.stats.lsb_misses += 1,
+                }
+                false
+            }
+        }
+    }
+
+    /// Probe without any side effects (no stats, no reordering).
+    pub fn peek(&self, key: SliceKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Make `key` resident (after a miss was decided to be filled).
+    pub fn ensure(&mut self, key: SliceKey, bytes: u64) -> Ensure {
+        if self.index.contains_key(&key) {
+            return Ensure::Hit;
+        }
+        if bytes > self.capacity {
+            return Ensure::TooLarge;
+        }
+        let evicted = self.evict_until(self.capacity - bytes);
+        if self.used + bytes > self.capacity {
+            // pinned entries blocked eviction: cannot make room
+            for key in &evicted {
+                // (already removed; re-inserting would falsify LRU order —
+                // accept the evictions, refuse the insert)
+                let _ = key;
+            }
+            return Ensure::TooLarge;
+        }
+        let i = self.alloc(Entry {
+            key,
+            bytes,
+            prev: NIL,
+            next: NIL,
+            pinned: false,
+            freq: 1,
+        });
+        self.push_front(i);
+        self.index.insert(key, i);
+        self.used += bytes;
+        self.stats.insertions += 1;
+        Ensure::Inserted { evicted }
+    }
+
+    /// Evict entries (skipping pinned) until `used <= target`.
+    ///
+    /// Heterogeneous policy (paper §4.1): LSB slices hold the lowest
+    /// priority class — ALL evictable LSBs go (LRU-first) before any MSB
+    /// is considered. This is what lets critical experts keep their LSB
+    /// while there is any slack, yet guarantees MSBs (and thus expert
+    /// coverage) always win the capacity fight.
+    pub fn evict_until(&mut self, target: u64) -> Vec<SliceKey> {
+        let mut evicted = Vec::new();
+        if self.heterogeneous {
+            let mut cursor = self.tail;
+            while self.used > target && cursor != NIL {
+                let i = cursor;
+                cursor = self.entries[i as usize].prev;
+                let e = &self.entries[i as usize];
+                if e.pinned || e.key.plane != Plane::Lsb {
+                    continue;
+                }
+                evicted.push(self.remove_idx(i));
+            }
+        }
+        let mut cursor = self.tail;
+        while self.used > target && cursor != NIL {
+            let i = cursor;
+            cursor = self.entries[i as usize].prev;
+            if self.entries[i as usize].pinned {
+                continue;
+            }
+            evicted.push(self.remove_idx(i));
+        }
+        evicted
+    }
+
+    fn remove_idx(&mut self, i: u32) -> SliceKey {
+        let key = self.entries[i as usize].key;
+        let bytes = self.entries[i as usize].bytes;
+        self.unlink(i);
+        self.index.remove(&key);
+        self.free.push(i);
+        self.used -= bytes;
+        self.stats.evictions += 1;
+        key
+    }
+
+    pub fn remove(&mut self, key: SliceKey) -> bool {
+        match self.index.get(&key).copied() {
+            Some(i) => {
+                self.remove_idx(i);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn pin(&mut self, key: SliceKey, pinned: bool) -> bool {
+        match self.index.get(&key).copied() {
+            Some(i) => {
+                self.entries[i as usize].pinned = pinned;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Resident keys from MRU to LRU.
+    pub fn keys_mru(&self) -> Vec<SliceKey> {
+        let mut out = Vec::with_capacity(self.index.len());
+        let mut i = self.head;
+        while i != NIL {
+            out.push(self.entries[i as usize].key);
+            i = self.entries[i as usize].next;
+        }
+        out
+    }
+
+    pub fn freq(&self, key: SliceKey) -> u32 {
+        self.index
+            .get(&key)
+            .map(|&i| self.entries[i as usize].freq)
+            .unwrap_or(0)
+    }
+
+    /// Flush everything (Empty warmup baseline).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.free.clear();
+        self.index.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.used = 0;
+    }
+
+    /// Rebuild the recency order so that iteration from MRU matches
+    /// descending `score` (PCW's final re-ordering step). Entries absent
+    /// from `score` rank lowest.
+    pub fn reorder_by<F: Fn(SliceKey) -> f64>(&mut self, score: F) {
+        let mut keys = self.keys_mru();
+        keys.sort_by(|&a, &b| {
+            score(b)
+                .partial_cmp(&score(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        // relink: walk sorted keys, push to back so first key ends at head
+        let idxs: Vec<u32> = keys.iter().map(|k| self.index[k]).collect();
+        self.head = NIL;
+        self.tail = NIL;
+        for &i in &idxs {
+            self.entries[i as usize].prev = NIL;
+            self.entries[i as usize].next = NIL;
+        }
+        for &i in &idxs {
+            self.push_back(i);
+        }
+    }
+
+    /// Reset per-entry hotness counters (phase boundary).
+    pub fn reset_freq(&mut self) {
+        for e in &mut self.entries {
+            e.freq = 0;
+        }
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = 0u64;
+        let mut count = 0usize;
+        let mut i = self.head;
+        let mut prev = NIL;
+        while i != NIL {
+            let e = &self.entries[i as usize];
+            if e.prev != prev {
+                return Err(format!("broken prev link at {i}"));
+            }
+            if self.index.get(&e.key) != Some(&i) {
+                return Err(format!("index mismatch for {:?}", e.key));
+            }
+            seen += e.bytes;
+            count += 1;
+            prev = i;
+            i = e.next;
+        }
+        if prev != self.tail {
+            return Err("tail mismatch".into());
+        }
+        if seen != self.used {
+            return Err(format!("used {} != sum {}", self.used, seen));
+        }
+        if count != self.index.len() {
+            return Err(format!("count {} != index {}", count, self.index.len()));
+        }
+        if self.used > self.capacity {
+            return Err(format!("over capacity: {} > {}", self.used, self.capacity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(l: usize, e: usize, msb: bool) -> SliceKey {
+        if msb {
+            SliceKey::msb(l, e)
+        } else {
+            SliceKey::lsb(l, e)
+        }
+    }
+
+    #[test]
+    fn basic_hit_miss_insert() {
+        let mut c = SliceCache::new(100);
+        assert!(!c.lookup(k(0, 0, true)));
+        assert_eq!(c.ensure(k(0, 0, true), 40), Ensure::Inserted { evicted: vec![] });
+        assert!(c.lookup(k(0, 0, true)));
+        assert_eq!(c.stats.msb_hits, 1);
+        assert_eq!(c.stats.msb_misses, 1);
+        assert_eq!(c.used_bytes(), 40);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_msb() {
+        let mut c = SliceCache::new(100);
+        c.ensure(k(0, 0, true), 40);
+        c.ensure(k(0, 1, true), 40);
+        c.lookup(k(0, 0, true)); // 0 becomes MRU
+        let out = c.ensure(k(0, 2, true), 40);
+        match out {
+            Ensure::Inserted { evicted } => assert_eq!(evicted, vec![k(0, 1, true)]),
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 0, true)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lsb_class_is_evicted_before_any_msb() {
+        let mut c = SliceCache::new(100);
+        c.ensure(k(0, 0, false), 30); // LSB
+        c.ensure(k(0, 1, true), 30); // MSB (older than the touch below)
+        c.ensure(k(0, 2, true), 30);
+        // touching the LSB does NOT rescue it from class-priority eviction
+        c.lookup(k(0, 0, false));
+        let out = c.ensure(k(0, 3, true), 30);
+        match out {
+            Ensure::Inserted { evicted } => assert_eq!(evicted, vec![k(0, 0, false)]),
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 1, true)));
+    }
+
+    #[test]
+    fn lsbs_evict_lru_first_within_class() {
+        let mut c = SliceCache::new(60);
+        c.ensure(k(0, 0, false), 30);
+        c.ensure(k(0, 1, false), 30);
+        c.lookup(k(0, 0, false)); // 0 is now the hotter LSB
+        let out = c.ensure(k(0, 2, true), 30);
+        match out {
+            Ensure::Inserted { evicted } => assert_eq!(evicted, vec![k(0, 1, false)]),
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 0, false)));
+    }
+
+    #[test]
+    fn homogeneous_ablation_treats_lsb_as_lru() {
+        let mut c = SliceCache::new(90);
+        c.heterogeneous = false;
+        c.ensure(k(0, 0, false), 30);
+        c.ensure(k(0, 1, true), 30);
+        c.lookup(k(0, 0, false)); // promotes; expert 1's MSB is now LRU
+        c.ensure(k(0, 2, true), 30);
+        let out = c.ensure(k(0, 3, true), 30);
+        match out {
+            Ensure::Inserted { evicted } => assert_eq!(evicted, vec![k(0, 1, true)]),
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 0, false)));
+    }
+
+    #[test]
+    fn pinned_entries_survive() {
+        let mut c = SliceCache::new(60);
+        c.ensure(k(0, 0, true), 30);
+        c.pin(k(0, 0, true), true);
+        c.ensure(k(0, 1, true), 30);
+        let out = c.ensure(k(0, 2, true), 30);
+        match out {
+            Ensure::Inserted { evicted } => assert_eq!(evicted, vec![k(0, 1, true)]),
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 0, true)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn too_large_rejected() {
+        let mut c = SliceCache::new(10);
+        assert_eq!(c.ensure(k(0, 0, true), 11), Ensure::TooLarge);
+    }
+
+    #[test]
+    fn reorder_by_freq() {
+        let mut c = SliceCache::new(300);
+        for e in 0..5 {
+            c.ensure(k(0, e, true), 10);
+        }
+        // access expert 3 a lot, expert 1 a little
+        for _ in 0..9 {
+            c.lookup(k(0, 3, true));
+        }
+        c.lookup(k(0, 1, true));
+        let freqs: std::collections::HashMap<SliceKey, f64> = c
+            .keys_mru()
+            .into_iter()
+            .map(|key| (key, c.freq(key) as f64))
+            .collect();
+        c.reorder_by(|key| freqs.get(&key).copied().unwrap_or(0.0));
+        let order = c.keys_mru();
+        assert_eq!(order[0], k(0, 3, true));
+        assert_eq!(order[1], k(0, 1, true));
+        c.check_invariants().unwrap();
+        // LRU victim is now a freq-0 entry
+        let out = c.evict_until(c.used_bytes() - 1);
+        assert!(out[0] != k(0, 3, true) && out[0] != k(0, 1, true));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = SliceCache::new(50);
+        c.ensure(k(0, 0, true), 20);
+        c.clear();
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.used_bytes(), 0);
+        c.check_invariants().unwrap();
+        assert_eq!(c.ensure(k(1, 1, true), 20), Ensure::Inserted { evicted: vec![] });
+    }
+}

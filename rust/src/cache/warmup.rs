@@ -1,0 +1,384 @@
+//! Predictive Cache Warmup — PCW (paper §4.3).
+//!
+//! During prefill the engine accumulates per-slice access frequencies in a
+//! `HotnessTable`. At the prefill→decode transition `apply` reshapes the
+//! unified cache:
+//!
+//! 1. **LSB slices with low prefill hotness are discarded first** (they
+//!    contribute least to accuracy);
+//! 2. **MSB slices are evicted in ascending hotness** until the decode
+//!    capacity target is met, keeping the high-bit (MSB+LSB-resident)
+//!    expert ratio ≤ ~1 per layer on average (single-head guided);
+//! 3. the surviving entries are **re-ordered by accumulated frequency** so
+//!    the decode-phase LRU starts hotness-aligned.
+//!
+//! Baselines reproduced for Fig 10: `Empty` (flush), `LastLayer` (keep only
+//! the deepest layers' slices — what a naive layer-wise prefill leaves
+//! behind), `Random` retention, and `Pcw`.
+
+use std::collections::HashMap;
+
+use crate::model::descriptor::{Plane, SliceKey};
+use crate::util::rng::Rng;
+
+use super::slice_cache::SliceCache;
+
+/// Per-slice access frequency accumulated over prefill (survives eviction —
+/// the paper reorders on *accumulated* statistics, not just on residency).
+#[derive(Clone, Debug, Default)]
+pub struct HotnessTable {
+    counts: HashMap<SliceKey, u32>,
+    /// Gate-mass accumulated per expert (layer, expert) — used to rank MSBs
+    /// with equal counts and to pick high-precision survivors.
+    gate_mass: HashMap<(u16, u16), f64>,
+}
+
+impl HotnessTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn touch(&mut self, key: SliceKey) {
+        *self.counts.entry(key).or_insert(0) += 1;
+    }
+
+    pub fn add_gate_mass(&mut self, layer: usize, expert: usize, mass: f64) {
+        *self
+            .gate_mass
+            .entry((layer as u16, expert as u16))
+            .or_insert(0.0) += mass;
+    }
+
+    pub fn count(&self, key: SliceKey) -> u32 {
+        self.counts.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Composite hotness score: access count dominates, gate mass breaks
+    /// ties; LSB slices rank strictly below MSB slices at equal stats
+    /// (eviction order of §4.3).
+    pub fn score(&self, key: SliceKey) -> f64 {
+        let base = self.count(key) as f64;
+        let mass = self
+            .gate_mass
+            .get(&(key.layer, key.expert))
+            .copied()
+            .unwrap_or(0.0);
+        let plane_bias = match key.plane {
+            Plane::Msb => 0.0,
+            Plane::Lsb => -0.5,
+        };
+        base + 1e-3 * mass + plane_bias
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.clear();
+        self.gate_mass.clear();
+    }
+
+    /// Iterate over every slice touched during prefill with its count.
+    pub fn iter(&self) -> impl Iterator<Item = (SliceKey, u32)> + '_ {
+        self.counts.iter().map(|(&k, &c)| (k, c))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+}
+
+/// Cache initial-state strategy at the prefill→decode transition (Fig 10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WarmupStrategy {
+    /// Flush everything — every early-decode access cold-misses.
+    Empty,
+    /// Keep only slices of the last `keep_layers` layers (naive leftover of
+    /// layer-wise prefill streaming).
+    LastLayer { keep_layers: usize },
+    /// Keep a uniformly random subset that fits the target.
+    Random { seed: u64 },
+    /// Predictive Cache Warmup (the paper's strategy).
+    Pcw,
+}
+
+impl WarmupStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WarmupStrategy::Empty => "empty",
+            WarmupStrategy::LastLayer { .. } => "last-layer",
+            WarmupStrategy::Random { .. } => "random",
+            WarmupStrategy::Pcw => "pcw",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WarmupStrategy> {
+        match s {
+            "empty" => Some(WarmupStrategy::Empty),
+            "last-layer" | "lastlayer" => Some(WarmupStrategy::LastLayer { keep_layers: 1 }),
+            "random" => Some(WarmupStrategy::Random { seed: 0xC0FFEE }),
+            "pcw" | "hot" => Some(WarmupStrategy::Pcw),
+            _ => None,
+        }
+    }
+}
+
+/// Reshape `cache` for decode according to `strategy`.
+///
+/// `target_bytes` is the decode-phase working budget (usually the full
+/// capacity); `n_layers` parameterizes the LastLayer baseline;
+/// `slice_bytes(key)` reports a slice's size (PCW re-materializes hot
+/// slices the LRU leftovers dropped — the paper's *progressive* prefill
+/// reshaping (§4.3) retains them in-flight, so at the transition they are
+/// resident without extra Flash traffic; we reconstruct that end state).
+pub fn apply<S: Fn(SliceKey) -> u64>(
+    cache: &mut SliceCache,
+    strategy: WarmupStrategy,
+    hot: &HotnessTable,
+    target_bytes: u64,
+    n_layers: usize,
+    slice_bytes: S,
+) {
+    apply_ex(cache, strategy, hot, target_bytes, n_layers, slice_bytes, true)
+}
+
+/// `apply` with explicit LSB retention policy: `single_head_lsb = true`
+/// keeps ~1 LSB per layer (DBSC mode); `false` keeps the LSB of every
+/// admitted MSB (uniform high-bit configurations execute everything at
+/// b_high, so dropping LSBs would force refetches).
+pub fn apply_ex<S: Fn(SliceKey) -> u64>(
+    cache: &mut SliceCache,
+    strategy: WarmupStrategy,
+    hot: &HotnessTable,
+    target_bytes: u64,
+    n_layers: usize,
+    slice_bytes: S,
+    single_head_lsb: bool,
+) {
+    match strategy {
+        WarmupStrategy::Empty => cache.clear(),
+        WarmupStrategy::LastLayer { keep_layers } => {
+            let cutoff = n_layers.saturating_sub(keep_layers) as u16;
+            for key in cache.keys_mru() {
+                if key.layer < cutoff {
+                    cache.remove(key);
+                }
+            }
+            cache.evict_until(target_bytes);
+        }
+        WarmupStrategy::Random { seed } => {
+            let mut rng = Rng::new(seed);
+            let mut keys = cache.keys_mru();
+            rng.shuffle(&mut keys);
+            // remove random entries until within target
+            for key in keys {
+                if cache.used_bytes() <= target_bytes {
+                    break;
+                }
+                cache.remove(key);
+            }
+            // randomize the recency order too (no information retained)
+            let mut order = cache.keys_mru();
+            rng.shuffle(&mut order);
+            let rank: HashMap<SliceKey, usize> =
+                order.iter().enumerate().map(|(i, k)| (*k, i)).collect();
+            cache.reorder_by(|k| -(rank[&k] as f64));
+        }
+        WarmupStrategy::Pcw => {
+            // The paper's PCW reshapes the cache *during* prefill so that
+            // at the transition it holds the prefill-hot slices of ALL
+            // layers, not the layer-streaming leftovers (deepest layers
+            // only). We reconstruct that end state from the accumulated
+            // hotness table:
+            //
+            // 1. LSB retention is single-head-guided: only ~1 expert per
+            //    layer (its hottest) keeps the LSB slice — "the ratio of
+            //    experts that retain their MSB [high-bit] form stays below
+            //    one per layer on average";
+            // 2. MSB slices are admitted in descending prefill hotness
+            //    until the capacity target, never-accessed slices are
+            //    discarded ("consistently low gating scores first");
+            // 3. the final recency order is hotness-aligned (reorder step).
+            let stats = cache.stats;
+            cache.clear();
+            cache.stats = stats;
+            // hottest LSB per layer
+            let mut best_lsb: HashMap<u16, (SliceKey, u32)> = HashMap::new();
+            let mut msbs: Vec<(SliceKey, f64)> = Vec::new();
+            for (key, count) in hot.iter() {
+                if count == 0 {
+                    continue;
+                }
+                match key.plane {
+                    Plane::Lsb => {
+                        let e = best_lsb.entry(key.layer).or_insert((key, count));
+                        if count > e.1 {
+                            *e = (key, count);
+                        }
+                    }
+                    Plane::Msb => msbs.push((key, hot.score(key))),
+                }
+            }
+            msbs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            // admit MSBs (paired with their LSB in uniform-high mode) until
+            // the target; hottest ends at MRU
+            let mut lsb_keep: Vec<SliceKey> = Vec::new();
+            let mut used: u64 = 0;
+            if single_head_lsb {
+                // hottest first, within the capacity target
+                let mut cands: Vec<(SliceKey, u32)> =
+                    best_lsb.values().copied().collect();
+                cands.sort_by(|a, b| b.1.cmp(&a.1));
+                for (k, _) in cands {
+                    let b = slice_bytes(k);
+                    if used + b <= target_bytes {
+                        used += b;
+                        lsb_keep.push(k);
+                    }
+                }
+            }
+            let mut admitted = Vec::new();
+            for (key, _) in msbs {
+                let lsb_key = SliceKey { plane: Plane::Lsb, ..key };
+                let b = slice_bytes(key)
+                    + if single_head_lsb { 0 } else { slice_bytes(lsb_key) };
+                if used + b > target_bytes {
+                    break;
+                }
+                used += b;
+                admitted.push(key);
+                if !single_head_lsb {
+                    admitted.push(lsb_key);
+                }
+            }
+            for &key in admitted.iter().rev() {
+                let _ = cache.ensure(key, slice_bytes(key));
+            }
+            for &key in &lsb_keep {
+                let _ = cache.ensure(key, slice_bytes(key));
+            }
+            // hotness-aligned recency; decode stats start clean
+            cache.reorder_by(|k| hot.score(k));
+            cache.reset_freq();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::slice_cache::SliceCache;
+
+    const MSB_B: u64 = 40;
+    const LSB_B: u64 = 20;
+
+    fn sz(k: SliceKey) -> u64 {
+        match k.plane {
+            Plane::Msb => MSB_B,
+            Plane::Lsb => LSB_B,
+        }
+    }
+
+    fn filled_cache() -> (SliceCache, HotnessTable) {
+        let mut c = SliceCache::new(1000);
+        let mut h = HotnessTable::new();
+        for l in 0..4 {
+            for e in 0..4 {
+                c.ensure(SliceKey::msb(l, e), MSB_B);
+                if e < 2 {
+                    c.ensure(SliceKey::lsb(l, e), LSB_B);
+                }
+            }
+        }
+        // hot experts: (0,0) very hot, (1,1) warm; LSB (0,0) accessed
+        for _ in 0..10 {
+            h.touch(SliceKey::msb(0, 0));
+        }
+        h.touch(SliceKey::lsb(0, 0));
+        for _ in 0..5 {
+            h.touch(SliceKey::msb(1, 1));
+        }
+        // a couple of mildly-warm slices in other layers
+        h.touch(SliceKey::msb(2, 3));
+        h.touch(SliceKey::msb(3, 2));
+        h.add_gate_mass(0, 0, 3.0);
+        (c, h)
+    }
+
+    #[test]
+    fn empty_flushes() {
+        let (mut c, h) = filled_cache();
+        apply(&mut c, WarmupStrategy::Empty, &h, 1000, 4, sz);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn last_layer_keeps_only_deep_layers() {
+        let (mut c, h) = filled_cache();
+        apply(&mut c, WarmupStrategy::LastLayer { keep_layers: 1 }, &h, 1000, 4, sz);
+        assert!(c.keys_mru().iter().all(|k| k.layer == 3));
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn pcw_rebuilds_from_hotness() {
+        let (mut c, h) = filled_cache();
+        apply(&mut c, WarmupStrategy::Pcw, &h, 1000, 4, sz);
+        // never-accessed slices are gone, accessed ones are resident
+        assert!(!c.contains(SliceKey::lsb(2, 0)));
+        assert!(!c.contains(SliceKey::msb(0, 3)));
+        assert!(c.contains(SliceKey::msb(0, 0)));
+        assert!(c.contains(SliceKey::msb(1, 1)));
+        assert!(c.contains(SliceKey::msb(2, 3)));
+        // accessed LSB survives (single-head retention: hottest per layer)
+        assert!(c.contains(SliceKey::lsb(0, 0)));
+        // hottest MSB is at MRU
+        assert_eq!(c.keys_mru()[0], SliceKey::msb(0, 0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pcw_leaves_slack_for_early_decode() {
+        let (mut c, h) = filled_cache();
+        let before = c.used_bytes();
+        apply(&mut c, WarmupStrategy::Pcw, &h, 1000, 4, sz);
+        // only the hot subset is retained: plenty of free capacity remains
+        assert!(c.used_bytes() < before);
+        assert!(c.used_bytes() <= 5 * MSB_B + LSB_B);
+    }
+
+    #[test]
+    fn pcw_respects_capacity_target() {
+        let (mut c, h) = filled_cache();
+        let target = 2 * MSB_B + LSB_B; // room for the two hottest + the LSB
+        apply(&mut c, WarmupStrategy::Pcw, &h, target, 4, sz);
+        assert!(c.used_bytes() <= target);
+        assert!(c.contains(SliceKey::msb(0, 0)));
+        assert!(c.contains(SliceKey::msb(1, 1)));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn random_fits_target_and_keeps_subset() {
+        let (mut c, h) = filled_cache();
+        let before: Vec<_> = c.keys_mru();
+        apply(&mut c, WarmupStrategy::Random { seed: 7 }, &h, 300, 4, sz);
+        assert!(c.used_bytes() <= 300);
+        for k in c.keys_mru() {
+            assert!(before.contains(&k));
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in ["empty", "last-layer", "random", "pcw"] {
+            assert_eq!(WarmupStrategy::parse(s).unwrap().name(), s);
+        }
+    }
+
+    #[test]
+    fn hotness_lsb_ranks_below_equal_msb() {
+        let mut h = HotnessTable::new();
+        h.touch(SliceKey::msb(0, 0));
+        h.touch(SliceKey::lsb(0, 0));
+        assert!(h.score(SliceKey::msb(0, 0)) > h.score(SliceKey::lsb(0, 0)));
+    }
+}

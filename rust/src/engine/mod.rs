@@ -1,0 +1,227 @@
+//! PJRT-backed MoE serving engine (the tiny-LM execution path).
+//!
+//! Mirrors the full-geometry simulator's control flow, but every compute
+//! step is a real compiled-HLO execution: embed → per-layer (attention →
+//! gate → DBSC-routed expert FFNs) → logits. Routing, caching, precision
+//! selection, and the memory-hierarchy ledger use exactly the same code
+//! (`router::access_layer`, `cache::SliceCache`, `memhier::Ledger`) as the
+//! simulator — the engine swaps the synthetic gate for the real one and
+//! the cost-model "execute" for PJRT calls.
+//!
+//! Weight operands are uploaded to the device once at load; per-step
+//! traffic is activations only.
+
+pub mod session;
+
+pub use session::{GenerateReport, Session, SessionConfig, StepStats};
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::weights::{QuantPlanes, WeightStore};
+use crate::model::ModelDesc;
+use crate::quant::{MatConfig, QuantTensor};
+use crate::router::Precision;
+use crate::runtime::{DeviceTensor, Executor, Runtime};
+
+/// Device-resident operands for one quantized weight matrix.
+pub struct DevicePlanes {
+    pub msb: DeviceTensor,
+    pub lsb: DeviceTensor,
+    pub scale_hi: DeviceTensor,
+    pub zp_hi: DeviceTensor,
+    pub scale_lo: DeviceTensor,
+    pub zp_lo: DeviceTensor,
+}
+
+impl DevicePlanes {
+    fn upload(rt: &Runtime, p: &QuantPlanes, group: usize) -> Result<DevicePlanes> {
+        let (r, c) = (p.rows, p.cols);
+        let gmeta = [r / group, c];
+        Ok(DevicePlanes {
+            msb: DeviceTensor::from_i32(rt, &p.msb, &[r, c])?,
+            lsb: DeviceTensor::from_i32(rt, &p.lsb, &[r, c])?,
+            scale_hi: DeviceTensor::from_f32(rt, &p.scale_hi, &gmeta)?,
+            zp_hi: DeviceTensor::from_i32(rt, &p.zp_hi, &gmeta)?,
+            scale_lo: DeviceTensor::from_f32(rt, &p.scale_lo, &gmeta)?,
+            zp_lo: DeviceTensor::from_i32(rt, &p.zp_lo, &gmeta)?,
+        })
+    }
+}
+
+/// Device-resident weights for one expert.
+pub struct DeviceExpert {
+    pub planes: [DevicePlanes; 3],
+    pub fp: [DeviceTensor; 3],
+}
+
+/// Device-resident dense weights for one layer.
+pub struct DeviceLayer {
+    pub ln1: DeviceTensor,
+    pub wq: DeviceTensor,
+    pub wk: DeviceTensor,
+    pub wv: DeviceTensor,
+    pub wo: DeviceTensor,
+    pub ln2: DeviceTensor,
+    pub wg: DeviceTensor,
+}
+
+/// The engine: runtime + weight store + device-resident operands.
+pub struct Engine {
+    pub rt: Runtime,
+    pub ws: WeightStore,
+    pub embed: DeviceTensor,
+    pub pos: DeviceTensor,
+    pub ln_f: DeviceTensor,
+    pub w_out: DeviceTensor,
+    pub layers: Vec<DeviceLayer>,
+    pub experts: Vec<Vec<DeviceExpert>>,
+}
+
+impl Engine {
+    pub fn load(artifacts_dir: &Path, mat: MatConfig) -> Result<Engine> {
+        let ws = WeightStore::load(artifacts_dir, mat).context("load weight store")?;
+        let rt = Runtime::load(artifacts_dir, crate::runtime::ENTRY_POINTS)
+            .context("load runtime")?;
+        Self::assemble(rt, ws)
+    }
+
+    pub fn assemble(rt: Runtime, ws: WeightStore) -> Result<Engine> {
+        let m = &ws.meta;
+        let (d, f, v, s, e, g) = (m.d_model, m.d_ff, m.vocab, m.max_seq, m.n_experts, m.group);
+        let embed = DeviceTensor::from_f32(&rt, &ws.embed, &[v, d])?;
+        let pos = DeviceTensor::from_f32(&rt, &ws.pos, &[s, d])?;
+        let ln_f = DeviceTensor::from_f32(&rt, &ws.ln_f, &[d])?;
+        let w_out = DeviceTensor::from_f32(&rt, &ws.w_out, &[d, v])?;
+        let mut layers = Vec::with_capacity(m.n_layers);
+        let mut experts = Vec::with_capacity(m.n_layers);
+        for l in 0..m.n_layers {
+            let lw = &ws.layers[l];
+            layers.push(DeviceLayer {
+                ln1: DeviceTensor::from_f32(&rt, &lw.ln1, &[d])?,
+                wq: DeviceTensor::from_f32(&rt, &lw.wq, &[d, d])?,
+                wk: DeviceTensor::from_f32(&rt, &lw.wk, &[d, d])?,
+                wv: DeviceTensor::from_f32(&rt, &lw.wv, &[d, d])?,
+                wo: DeviceTensor::from_f32(&rt, &lw.wo, &[d, d])?,
+                ln2: DeviceTensor::from_f32(&rt, &lw.ln2, &[d])?,
+                wg: DeviceTensor::from_f32(&rt, &lw.wg, &[d, e])?,
+            });
+            let mut row = Vec::with_capacity(e);
+            for ei in 0..e {
+                let ew = &ws.experts[l][ei];
+                let dims = [[d, f], [d, f], [f, d]];
+                let planes = [
+                    DevicePlanes::upload(&rt, &ew.planes[0], g)?,
+                    DevicePlanes::upload(&rt, &ew.planes[1], g)?,
+                    DevicePlanes::upload(&rt, &ew.planes[2], g)?,
+                ];
+                let fp = [
+                    DeviceTensor::from_f32(&rt, &ew.fp[0], &dims[0])?,
+                    DeviceTensor::from_f32(&rt, &ew.fp[1], &dims[1])?,
+                    DeviceTensor::from_f32(&rt, &ew.fp[2], &dims[2])?,
+                ];
+                row.push(DeviceExpert { planes, fp });
+            }
+            experts.push(row);
+        }
+        Ok(Engine { rt, ws, embed, pos, ln_f, w_out, layers, experts })
+    }
+
+    pub fn desc(&self) -> ModelDesc {
+        self.ws.desc()
+    }
+
+    pub fn mat(&self) -> MatConfig {
+        self.ws.mat
+    }
+
+    fn phase_tag(prefill: bool) -> &'static str {
+        if prefill {
+            "prefill"
+        } else {
+            "decode"
+        }
+    }
+
+    /// Execute one expert FFN at `precision` over activations `xn`
+    /// ([t, d_model] device buffer). Returns host f32 of shape [t, d_model].
+    pub fn run_expert(
+        &self,
+        layer: usize,
+        expert: usize,
+        precision: Precision,
+        xn: &xla::PjRtBuffer,
+        prefill: bool,
+    ) -> Result<Vec<f32>> {
+        let tag = Self::phase_tag(prefill);
+        let de = &self.experts[layer][expert];
+        let out = match precision {
+            Precision::Full => {
+                let exe = Executor::new(&self.rt, &format!("expert_fp_{tag}"))?;
+                exe.run_f32(&[
+                    xn,
+                    &de.fp[0].buffer,
+                    &de.fp[1].buffer,
+                    &de.fp[2].buffer,
+                ])?
+            }
+            Precision::High => {
+                let shift = self.ws.mat.shift();
+                let exe = Executor::new(&self.rt, &format!("expert_high_s{shift}_{tag}"))?;
+                let p = &de.planes;
+                exe.run_f32(&[
+                    xn,
+                    &p[0].msb.buffer, &p[0].lsb.buffer, &p[0].scale_hi.buffer, &p[0].zp_hi.buffer,
+                    &p[1].msb.buffer, &p[1].lsb.buffer, &p[1].scale_hi.buffer, &p[1].zp_hi.buffer,
+                    &p[2].msb.buffer, &p[2].lsb.buffer, &p[2].scale_hi.buffer, &p[2].zp_hi.buffer,
+                ])?
+            }
+            Precision::Low => {
+                let exe = Executor::new(&self.rt, &format!("expert_low_{tag}"))?;
+                let p = &de.planes;
+                exe.run_f32(&[
+                    xn,
+                    &p[0].msb.buffer, &p[0].scale_lo.buffer, &p[0].zp_lo.buffer,
+                    &p[1].msb.buffer, &p[1].scale_lo.buffer, &p[1].zp_lo.buffer,
+                    &p[2].msb.buffer, &p[2].scale_lo.buffer, &p[2].zp_lo.buffer,
+                ])?
+            }
+        };
+        untuple1(out)
+    }
+
+    /// Execute one expert with externally supplied quantization (Table 1
+    /// sweeps): arbitrary (codes, scale, zp) through the `expert_low` path
+    /// (signed codes + zp=0 reproduce symmetric dequant).
+    pub fn run_expert_custom(
+        &self,
+        q: &[QuantTensor; 3],
+        xn: &xla::PjRtBuffer,
+        prefill: bool,
+    ) -> Result<Vec<f32>> {
+        let tag = Self::phase_tag(prefill);
+        let exe = Executor::new(&self.rt, &format!("expert_low_{tag}"))?;
+        let mut bufs = Vec::with_capacity(9);
+        for t in q.iter() {
+            let (r, c) = (t.rows, t.cols);
+            bufs.push(DeviceTensor::from_i32(&self.rt, &t.q, &[r, c])?);
+            bufs.push(DeviceTensor::from_f32(&self.rt, &t.scale, &[r / t.group, c])?);
+            bufs.push(DeviceTensor::from_i32(&self.rt, &t.zp, &[r / t.group, c])?);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = std::iter::once(xn)
+            .chain(bufs.iter().map(|b| &b.buffer))
+            .collect();
+        untuple1(exe.run_f32(&refs)?)
+    }
+}
+
+/// Entry points return 1-tuples for single outputs; PJRT may surface them
+/// as one tuple literal or as already-untupled leaves. Normalize to the
+/// single payload.
+pub fn untuple1(mut outs: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+    if outs.is_empty() {
+        bail!("no outputs");
+    }
+    Ok(outs.swap_remove(0))
+}

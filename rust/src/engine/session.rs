@@ -1,0 +1,552 @@
+//! Serving session: prefill / decode over the PJRT engine with the full
+//! SliceMoE machinery (slice cache, DBSC routing, miss budget, PCW, and the
+//! Fig 7 cost ledger) in the loop.
+
+use anyhow::{bail, Result};
+
+use crate::cache::{warmup::apply_ex, HotnessTable, SliceCache, WarmupStrategy};
+use crate::memhier::{HwSpec, Ledger, Phase};
+use crate::model::descriptor::SliceKey;
+use crate::quant::QuantTensor;
+use crate::router::{access_layer, MissBudget, Precision, RouterConfig};
+use crate::runtime::{DeviceTensor, Executor};
+use crate::util::rng::Rng;
+
+use super::Engine;
+
+/// Session-level configuration (mirrors `sim::EpisodeConfig`).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub router: RouterConfig,
+    /// High-bit-normalized miss-rate constraint (INFINITY = off).
+    pub constraint: f64,
+    /// Expert-cache budget in bytes (tiny-model scale).
+    pub cache_bytes: u64,
+    pub warmup: WarmupStrategy,
+    pub hw: HwSpec,
+    /// Greedy when None; otherwise softmax temperature sampling.
+    pub temperature: Option<f64>,
+    pub seed: u64,
+}
+
+impl SessionConfig {
+    pub fn dbsc_default(eng: &Engine) -> SessionConfig {
+        let desc = eng.desc();
+        let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
+        SessionConfig {
+            router: RouterConfig::dbsc(desc.top_k),
+            constraint: f64::INFINITY,
+            // default: half the expert pool fits
+            cache_bytes: unit * (desc.total_experts() as u64) / 2,
+            warmup: WarmupStrategy::Pcw,
+            hw: HwSpec::paper(),
+            temperature: None,
+            seed: 7,
+        }
+    }
+}
+
+/// Per-step statistics returned by `decode_step`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub flash_bytes: u64,
+    pub n_high: usize,
+    pub n_low: usize,
+    pub n_dropped: usize,
+    pub n_substituted: usize,
+    pub n_degraded: usize,
+    pub wall_s: f64,
+}
+
+/// End-of-generation report.
+#[derive(Clone, Debug)]
+pub struct GenerateReport {
+    pub tokens: Vec<u8>,
+    pub prefill_wall_s: f64,
+    pub decode_wall_s: f64,
+    pub decode_tokens: usize,
+    pub ledger: Ledger,
+    pub msb_hit_rate: f64,
+    pub lsb_hit_rate: f64,
+    pub miss_rate: f64,
+    pub n_high: u64,
+    pub n_low: u64,
+    pub n_dropped: u64,
+    pub n_substituted: u64,
+    pub n_degraded: u64,
+}
+
+/// One live request (single-batch, as in the paper's deployment).
+pub struct Session<'e> {
+    pub eng: &'e Engine,
+    pub cfg: SessionConfig,
+    pub cache: SliceCache,
+    pub budget: MissBudget,
+    pub hot: HotnessTable,
+    pub ledger: Ledger,
+    /// Host KV-cache mirrors per layer: (k, v), each [H * max_seq * d_head].
+    kv: Vec<(Vec<f32>, Vec<f32>)>,
+    pub pos: usize,
+    rng: Rng,
+    steady_accesses: u64,
+    steady_flash: u64,
+    stats_high: u64,
+    stats_low: u64,
+    stats_dropped: u64,
+    stats_substituted: u64,
+    stats_degraded: u64,
+}
+
+impl<'e> Session<'e> {
+    pub fn new(eng: &'e Engine, cfg: SessionConfig) -> Session<'e> {
+        let m = &eng.ws.meta;
+        let desc = eng.desc();
+        let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
+        let kv = (0..m.n_layers)
+            .map(|_| {
+                (
+                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
+                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
+                )
+            })
+            .collect();
+        Session {
+            eng,
+            cache: SliceCache::new(cfg.cache_bytes),
+            budget: MissBudget::new(cfg.constraint, unit),
+            hot: HotnessTable::new(),
+            ledger: Ledger::new(),
+            kv,
+            pos: 0,
+            rng: Rng::new(cfg.seed),
+            cfg,
+            steady_accesses: 0,
+            steady_flash: 0,
+            stats_high: 0,
+            stats_low: 0,
+            stats_dropped: 0,
+            stats_substituted: 0,
+            stats_degraded: 0,
+        }
+    }
+
+    fn exec(&self, name: &str) -> Result<Executor<'_>> {
+        Executor::new(&self.eng.rt, name)
+    }
+
+    /// Run prefill over `prompt` (<= max_seq - decode budget tokens).
+    /// Real HLO compute; the cache/ledger see layer-wise expert streaming.
+    pub fn prefill(&mut self, prompt: &[u8]) -> Result<Vec<f32>> {
+        let m = &self.eng.ws.meta;
+        let desc = self.eng.desc();
+        let mat = self.eng.mat();
+        let s = m.max_seq;
+        if prompt.is_empty() || prompt.len() > s {
+            bail!("prompt length {} out of range 1..={s}", prompt.len());
+        }
+        let valid = prompt.len();
+        let mut tok = vec![0i32; s];
+        for (i, &b) in prompt.iter().enumerate() {
+            tok[i] = b as i32;
+        }
+        let rt = &self.eng.rt;
+        let tok_b = DeviceTensor::from_i32(rt, &tok, &[s])?;
+        let zero = DeviceTensor::scalar_i32(rt, 0)?;
+        let emb = self.exec("embed_prefill")?;
+        let mut x = emb.run_f32(&[&tok_b.buffer, &zero.buffer, &self.eng.embed.buffer,
+                                  &self.eng.pos.buffer])?
+            .swap_remove(0);
+        let valid_b = DeviceTensor::scalar_i32(rt, valid as i32)?;
+        let msb_b = desc.msb_slice_bytes(mat);
+        let lsb_b = desc.lsb_slice_bytes(mat);
+
+        for l in 0..m.n_layers {
+            let dl = &self.eng.layers[l];
+            let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
+            let attn = self.exec("attn_prefill")?;
+            let outs = attn.run_literals(&[
+                &x_b.buffer, &valid_b.buffer, &dl.ln1.buffer, &dl.wq.buffer,
+                &dl.wk.buffer, &dl.wv.buffer, &dl.wo.buffer,
+            ])?;
+            if outs.len() != 3 {
+                bail!("attn_prefill returned {} outputs", outs.len());
+            }
+            let h = outs[0].to_vec::<f32>()?;
+            self.kv[l].0 = outs[1].to_vec::<f32>()?;
+            self.kv[l].1 = outs[2].to_vec::<f32>()?;
+
+            let h_b = DeviceTensor::from_f32(rt, &h, &[s, m.d_model])?;
+            let gate = self.exec("gate_prefill")?;
+            let gouts = gate.run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
+            let xn = gouts[0].to_vec::<f32>()?;
+            let probs = gouts[1].to_vec::<f32>()?;
+            let xn_b = DeviceTensor::from_f32(rt, &xn, &[s, m.d_model])?;
+
+            // per-token top-k routing + hotness accumulation
+            let e_n = m.n_experts;
+            let mut weights = vec![0f32; s * e_n]; // combine weights [S, E]
+            for t in 0..valid {
+                let p = &probs[t * e_n..(t + 1) * e_n];
+                let mut idx: Vec<usize> = (0..e_n).collect();
+                idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+                let mass: f32 = idx.iter().take(m.top_k).map(|&e| p[e]).sum();
+                let pmax = p[idx[0]];
+                for &e in idx.iter().take(m.top_k) {
+                    weights[t * e_n + e] = p[e] / mass.max(1e-9);
+                    self.hot.touch(SliceKey::msb(l, e));
+                    self.hot.add_gate_mass(l, e, p[e] as f64);
+                    if p[e] >= 0.5 * pmax {
+                        self.hot.touch(SliceKey::lsb(l, e));
+                    }
+                }
+            }
+
+            // stream every expert (prefill = high precision), fill cache,
+            // charge the ledger with the real packed sizes
+            let mut flash = 0u64;
+            let mut fetches = 0u64;
+            let mut dram = 0u64;
+            let mut y = vec![0f32; s * m.d_model];
+            for e in 0..e_n {
+                for (key, bytes) in
+                    [(SliceKey::msb(l, e), msb_b), (SliceKey::lsb(l, e), lsb_b)]
+                {
+                    if !self.cache.lookup(key) {
+                        flash += bytes;
+                        fetches += 1;
+                        let _ = self.cache.ensure(key, bytes);
+                    }
+                }
+                dram += msb_b + lsb_b;
+                let ye = self.eng.run_expert(l, e, Precision::High, &xn_b.buffer, true)?;
+                for t in 0..valid {
+                    let w = weights[t * e_n + e];
+                    if w != 0.0 {
+                        for dd in 0..m.d_model {
+                            y[t * m.d_model + dd] += w * ye[t * m.d_model + dd];
+                        }
+                    }
+                }
+            }
+            let ops = desc.expert_ops(valid) * m.top_k as f64;
+            self.ledger
+                .record(Phase::Prefill, &self.cfg.hw, ops, dram, flash, fetches);
+            for t in 0..valid {
+                for dd in 0..m.d_model {
+                    x[t * m.d_model + dd] = h[t * m.d_model + dd] + y[t * m.d_model + dd];
+                }
+            }
+        }
+        self.pos = valid;
+        // prefill -> decode transition (PCW or baseline)
+        apply_ex(
+            &mut self.cache,
+            self.cfg.warmup,
+            &self.hot,
+            self.cfg.cache_bytes,
+            m.n_layers,
+            |k| desc.slice_bytes(k.plane, mat),
+            self.cfg.router.dbsc.is_some(),
+        );
+        Ok(x)
+    }
+
+    /// Decode one token (the previous token id goes in, the next comes out).
+    pub fn decode_step(&mut self, token: u8) -> Result<(u8, StepStats)> {
+        let t0 = std::time::Instant::now();
+        let m = &self.eng.ws.meta;
+        let desc = self.eng.desc();
+        let mat = self.eng.mat();
+        if self.pos >= m.max_seq {
+            bail!("context window exhausted at {}", self.pos);
+        }
+        let rt = &self.eng.rt;
+        self.budget.tick();
+        let mut stats = StepStats::default();
+
+        let tok_b = DeviceTensor::from_i32(rt, &[token as i32], &[1])?;
+        let pos_b = DeviceTensor::scalar_i32(rt, self.pos as i32)?;
+        let emb = self.exec("embed_decode")?;
+        let mut x = emb
+            .run_f32(&[&tok_b.buffer, &pos_b.buffer, &self.eng.embed.buffer,
+                       &self.eng.pos.buffer])?
+            .swap_remove(0);
+
+        for l in 0..m.n_layers {
+            let dl = &self.eng.layers[l];
+            let x_b = DeviceTensor::from_f32(rt, &x, &[1, m.d_model])?;
+            let kvdim = [m.n_heads, m.max_seq, m.d_head];
+            let k_b = DeviceTensor::from_f32(rt, &self.kv[l].0, &kvdim)?;
+            let v_b = DeviceTensor::from_f32(rt, &self.kv[l].1, &kvdim)?;
+            let attn = self.exec("attn_decode")?;
+            let outs = attn.run_literals(&[
+                &x_b.buffer, &k_b.buffer, &v_b.buffer, &pos_b.buffer,
+                &dl.ln1.buffer, &dl.wq.buffer, &dl.wk.buffer, &dl.wv.buffer,
+                &dl.wo.buffer,
+            ])?;
+            let h = outs[0].to_vec::<f32>()?;
+            self.kv[l].0 = outs[1].to_vec::<f32>()?;
+            self.kv[l].1 = outs[2].to_vec::<f32>()?;
+
+            let h_b = DeviceTensor::from_f32(rt, &h, &[1, m.d_model])?;
+            let gate = self.exec("gate_decode")?;
+            let gouts = gate.run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
+            let xn = gouts[0].to_vec::<f32>()?;
+            let probs_f = gouts[1].to_vec::<f32>()?;
+            let probs: Vec<f64> = probs_f.iter().map(|&p| p as f64).collect();
+            let xn_b = DeviceTensor::from_f32(rt, &xn, &[1, m.d_model])?;
+
+            let out = access_layer(
+                &self.cfg.router, &probs, l, &desc, mat, &mut self.cache,
+                &mut self.budget, Some(&mut self.hot),
+            );
+            stats.flash_bytes += out.flash_bytes;
+            stats.n_dropped += out.n_dropped;
+            stats.n_substituted += out.n_substituted;
+            stats.n_degraded += out.n_degraded;
+            if self.ledger.decode_steps >= self.budget.warmup_steps {
+                self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
+                self.steady_flash += out.flash_bytes;
+            }
+
+            let mut y = vec![0f32; m.d_model];
+            for ex in &out.execs {
+                match ex.precision {
+                    Precision::High | Precision::Full => stats.n_high += 1,
+                    Precision::Low => stats.n_low += 1,
+                }
+                let ye =
+                    self.eng
+                        .run_expert(l, ex.expert, ex.precision, &xn_b.buffer, false)?;
+                for dd in 0..m.d_model {
+                    y[dd] += ex.gate as f32 * ye[dd];
+                }
+            }
+            let ops = desc.expert_ops(1) * out.execs.len() as f64;
+            self.ledger.record(
+                Phase::Decode, &self.cfg.hw, ops, out.dram_bytes, out.flash_bytes,
+                out.flash_fetches,
+            );
+            for dd in 0..m.d_model {
+                x[dd] = h[dd] + y[dd];
+            }
+        }
+        self.ledger.bump_decode_steps();
+        self.stats_high += stats.n_high as u64;
+        self.stats_low += stats.n_low as u64;
+        self.stats_dropped += stats.n_dropped as u64;
+        self.stats_substituted += stats.n_substituted as u64;
+        self.stats_degraded += stats.n_degraded as u64;
+
+        let x_b = DeviceTensor::from_f32(rt, &x, &[1, m.d_model])?;
+        let logits_exe = self.exec("logits_decode")?;
+        let logits = logits_exe
+            .run_f32(&[&x_b.buffer, &self.eng.ln_f.buffer, &self.eng.w_out.buffer])?
+            .swap_remove(0);
+        let next = match self.cfg.temperature {
+            None => argmax(&logits) as u8,
+            Some(t) => sample(&logits, t, &mut self.rng) as u8,
+        };
+        self.pos += 1;
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        Ok((next, stats))
+    }
+
+    /// Prefill `prompt` then decode `n` tokens autoregressively.
+    pub fn generate(&mut self, prompt: &[u8], n: usize) -> Result<GenerateReport> {
+        let t0 = std::time::Instant::now();
+        self.prefill(prompt)?;
+        let prefill_wall_s = t0.elapsed().as_secs_f64();
+        let mut tokens = Vec::with_capacity(n);
+        let mut cur = *prompt.last().unwrap();
+        let t1 = std::time::Instant::now();
+        for _ in 0..n {
+            if self.pos >= self.eng.ws.meta.max_seq {
+                break;
+            }
+            let (next, _) = self.decode_step(cur)?;
+            tokens.push(next);
+            cur = next;
+        }
+        let decode_wall_s = t1.elapsed().as_secs_f64();
+        let st = self.cache.stats;
+        let unit = self.budget.unit_bytes;
+        Ok(GenerateReport {
+            decode_tokens: tokens.len(),
+            tokens,
+            prefill_wall_s,
+            decode_wall_s,
+            ledger: self.ledger.clone(),
+            msb_hit_rate: ratio(st.msb_hits, st.msb_misses),
+            lsb_hit_rate: ratio(st.lsb_hits, st.lsb_misses),
+            miss_rate: if self.steady_accesses == 0 {
+                0.0
+            } else {
+                self.steady_flash as f64 / (self.steady_accesses as f64 * unit as f64)
+            },
+            n_high: self.stats_high,
+            n_low: self.stats_low,
+            n_dropped: self.stats_dropped,
+            n_substituted: self.stats_substituted,
+            n_degraded: self.stats_degraded,
+        })
+    }
+
+    /// Teacher-forced NLL/byte over `text` through the prefill path with a
+    /// caller-supplied expert runner (Table 1 sweeps / calibration).
+    ///
+    /// `expert_fn(layer, expert, xn_buffer, rows) -> [rows * d_model]`.
+    pub fn eval_nll_with<F>(&mut self, text: &[u8], mut expert_fn: F) -> Result<f64>
+    where
+        F: FnMut(&Engine, usize, usize, &xla::PjRtBuffer) -> Result<Vec<f32>>,
+    {
+        let m = &self.eng.ws.meta;
+        let s = m.max_seq;
+        if text.len() < 2 {
+            bail!("need at least 2 bytes");
+        }
+        let rt = &self.eng.rt;
+        let mut total_nll = 0.0f64;
+        let mut count = 0usize;
+        for window in text.chunks(s) {
+            if window.len() < 2 {
+                break;
+            }
+            let valid = window.len();
+            let mut tok = vec![0i32; s];
+            for (i, &b) in window.iter().enumerate() {
+                tok[i] = b as i32;
+            }
+            let tok_b = DeviceTensor::from_i32(rt, &tok, &[s])?;
+            let zero = DeviceTensor::scalar_i32(rt, 0)?;
+            let mut x = self
+                .exec("embed_prefill")?
+                .run_f32(&[&tok_b.buffer, &zero.buffer, &self.eng.embed.buffer,
+                           &self.eng.pos.buffer])?
+                .swap_remove(0);
+            let valid_b = DeviceTensor::scalar_i32(rt, valid as i32)?;
+            for l in 0..m.n_layers {
+                let dl = &self.eng.layers[l];
+                let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
+                let outs = self.exec("attn_prefill")?.run_literals(&[
+                    &x_b.buffer, &valid_b.buffer, &dl.ln1.buffer, &dl.wq.buffer,
+                    &dl.wk.buffer, &dl.wv.buffer, &dl.wo.buffer,
+                ])?;
+                let h = outs[0].to_vec::<f32>()?;
+                let h_b = DeviceTensor::from_f32(rt, &h, &[s, m.d_model])?;
+                let gouts = self
+                    .exec("gate_prefill")?
+                    .run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
+                let xn = gouts[0].to_vec::<f32>()?;
+                let probs = gouts[1].to_vec::<f32>()?;
+                let xn_b = DeviceTensor::from_f32(rt, &xn, &[s, m.d_model])?;
+                let e_n = m.n_experts;
+                let mut y = vec![0f32; s * m.d_model];
+                // expert outputs once per expert, combined per-token top-k
+                for e in 0..e_n {
+                    let ye = expert_fn(self.eng, l, e, &xn_b.buffer)?;
+                    for t in 0..valid {
+                        let p = &probs[t * e_n..(t + 1) * e_n];
+                        let mut idx: Vec<usize> = (0..e_n).collect();
+                        idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+                        if !idx[..m.top_k].contains(&e) {
+                            continue;
+                        }
+                        let mass: f32 = idx.iter().take(m.top_k).map(|&i| p[i]).sum();
+                        let w = p[e] / mass.max(1e-9);
+                        for dd in 0..m.d_model {
+                            y[t * m.d_model + dd] += w * ye[t * m.d_model + dd];
+                        }
+                    }
+                }
+                for i in 0..s * m.d_model {
+                    x[i] = h[i] + y[i];
+                }
+            }
+            let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
+            let logits = self
+                .exec("logits_prefill")?
+                .run_f32(&[&x_b.buffer, &self.eng.ln_f.buffer, &self.eng.w_out.buffer])?
+                .swap_remove(0);
+            for t in 0..valid - 1 {
+                let row = &logits[t * m.vocab..(t + 1) * m.vocab];
+                total_nll += nll_of(row, window[t + 1] as usize);
+                count += 1;
+            }
+        }
+        Ok(total_nll / count as f64)
+    }
+
+    /// NLL/byte with all experts at a uniform precision from the store.
+    pub fn eval_nll_uniform(&mut self, text: &[u8], precision: Precision) -> Result<f64> {
+        self.eval_nll_with(text, |eng, l, e, xn| {
+            eng.run_expert(l, e, precision, xn, true)
+        })
+    }
+
+    /// NLL/byte with a custom quantization per expert (Table 1 schemes).
+    pub fn eval_nll_custom(
+        &mut self,
+        text: &[u8],
+        quants: &[Vec<[QuantTensor; 3]>],
+    ) -> Result<f64> {
+        self.eval_nll_with(text, |eng, l, e, xn| {
+            eng.run_expert_custom(&quants[l][e], xn, true)
+        })
+    }
+}
+
+fn ratio(h: u64, m: u64) -> f64 {
+    if h + m == 0 {
+        1.0
+    } else {
+        h as f64 / (h + m) as f64
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+fn sample(logits: &[f32], temp: f64, rng: &mut Rng) -> usize {
+    let scaled: Vec<f64> = logits.iter().map(|&l| l as f64 / temp).collect();
+    let m = scaled.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let weights: Vec<f64> = scaled.iter().map(|&l| (l - m).exp()).collect();
+    rng.categorical(&weights)
+}
+
+fn nll_of(logits: &[f32], target: usize) -> f64 {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse: f64 = logits.iter().map(|&l| ((l as f64) - m).exp()).sum::<f64>().ln() + m;
+    lse - logits[target] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_nll() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        // uniform logits -> nll = ln(n)
+        let l = vec![0f32; 8];
+        assert!((nll_of(&l, 3) - (8f64).ln()).abs() < 1e-9);
+        // confident correct prediction -> near zero
+        let mut c = vec![-20f32; 8];
+        c[2] = 10.0;
+        assert!(nll_of(&c, 2) < 1e-6);
+    }
+
+    #[test]
+    fn sampling_respects_temperature() {
+        let mut rng = Rng::new(1);
+        let logits = vec![10.0f32, 0.0, 0.0];
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, 0.1, &mut rng), 0);
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! Figure drivers: Fig 2 (motivation), Fig 3 (phase statistics),
+//! Fig 8 (accuracy vs miss rate), Fig 9 (energy gain & speed-up),
+//! Fig 10 (cache warmup) — full-geometry simulator sweeps.
+
+use crate::cache::WarmupStrategy;
+use crate::memhier::Phase;
+use crate::model::ModelDesc;
+use crate::quant::MatConfig;
+use crate::router::{Policy, Precision, RouterConfig};
+use crate::sim::{
+    correlation, run_episode, run_episodes_avg, selection_frequency, EpisodeConfig,
+    TraceGenerator, TraceParams,
+};
+use crate::util::threadpool::par_map;
+use crate::util::Table;
+
+use super::gib;
+
+/// The paper's MAT configuration per model (§6.1-4: Qwen is less
+/// precision-sensitive → slightly lower bits are viable; we keep MAT84 for
+/// DeepSeek and MAT63 for Qwen).
+pub fn mat_for(desc: &ModelDesc) -> MatConfig {
+    if desc.name.contains("qwen") {
+        MatConfig::MAT63
+    } else {
+        MatConfig::MAT84
+    }
+}
+
+fn base_episode(desc: &ModelDesc, prefill: usize, decode: usize) -> EpisodeConfig {
+    let mut cfg = EpisodeConfig::gsm8k_default(desc.clone());
+    cfg.mat = mat_for(desc);
+    cfg.prefill_tokens = prefill;
+    cfg.decode_tokens = decode;
+    cfg
+}
+
+/// One named router/precision configuration of Fig 8/9.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SliceConfig {
+    /// Uniform b_high experts, Cache-Prior routing (the SOTA baseline).
+    HighBit,
+    /// Uniform b_low experts (aggressive low-bit caching).
+    LowBit,
+    /// AMAT mixed by phase: high-bit prefill, uniform low-bit decode.
+    AmatMixed,
+    /// The proposal: DBSC dynamic precision + AMAT (+ Cache-Prior).
+    DbscAmat,
+    /// Cumsum routing at b_high (accuracy-first, cost-blind).
+    Cumsum,
+}
+
+impl SliceConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SliceConfig::HighBit => "high-bit",
+            SliceConfig::LowBit => "low-bit",
+            SliceConfig::AmatMixed => "amat-mixed",
+            SliceConfig::DbscAmat => "dbsc+amat",
+            SliceConfig::Cumsum => "cumsum",
+        }
+    }
+
+    pub fn apply(&self, cfg: &mut EpisodeConfig) {
+        let k = cfg.desc.top_k;
+        match self {
+            SliceConfig::HighBit => cfg.router = RouterConfig::cache_prior_high(k),
+            SliceConfig::LowBit => {
+                cfg.router = RouterConfig {
+                    policy: Policy::CachePrior { boost: 2.0 },
+                    top_k: k,
+                    dbsc: None,
+                    uniform_precision: Precision::Low,
+                }
+            }
+            SliceConfig::AmatMixed => {
+                // same storage as DBSC but no dynamic split: decode all-low
+                cfg.router = RouterConfig {
+                    policy: Policy::CachePrior { boost: 2.0 },
+                    top_k: k,
+                    dbsc: None,
+                    uniform_precision: Precision::Low,
+                }
+            }
+            SliceConfig::DbscAmat => cfg.router = RouterConfig::dbsc(k),
+            SliceConfig::Cumsum => {
+                cfg.router = RouterConfig {
+                    policy: Policy::Cumsum { tau: 0.9 },
+                    top_k: k,
+                    dbsc: None,
+                    uniform_precision: Precision::High,
+                }
+            }
+        }
+    }
+}
+
+/// One measured point of Fig 8 / Fig 2.
+#[derive(Clone, Debug)]
+pub struct AccuracyPoint {
+    pub config: &'static str,
+    pub cache_gib: f64,
+    pub constraint: f64,
+    pub miss_rate: f64,
+    pub accuracy: f64,
+    pub decode_energy_j: f64,
+    pub decode_latency_s: f64,
+}
+
+/// Fig 2 (right): high-bit vs low-bit accuracy across miss-rate constraints
+/// under Cache-Prior — the motivation crossover.
+pub fn fig2(desc: &ModelDesc, threads: usize) -> (Vec<AccuracyPoint>, Table) {
+    let constraints = [0.30, 0.20, 0.10, 0.05, 0.02, 0.01];
+    let cache_gib = 1.8;
+    let mut jobs = Vec::new();
+    for cfg_kind in [SliceConfig::HighBit, SliceConfig::LowBit] {
+        for &c in &constraints {
+            jobs.push((cfg_kind, c));
+        }
+    }
+    let desc2 = desc.clone();
+    let points = par_map(jobs, threads, move |(kind, c)| {
+        let mut cfg = base_episode(&desc2, 500, 128);
+        cfg.cache_bytes = gib(cache_gib);
+        cfg.constraint = c;
+        kind.apply(&mut cfg);
+        let r = run_episodes_avg(&cfg, 3);
+        AccuracyPoint {
+            config: kind.name(),
+            cache_gib,
+            constraint: c,
+            miss_rate: r.miss_rate,
+            accuracy: r.accuracy,
+            decode_energy_j: r.decode_energy_j,
+            decode_latency_s: r.decode_latency_s,
+        }
+    });
+    let mut t = Table::new(["config", "constraint", "miss-rate", "accuracy"]);
+    for p in &points {
+        t.row([
+            p.config.to_string(),
+            format!("{:.2}", p.constraint),
+            format!("{:.4}", p.miss_rate),
+            format!("{:.3}", p.accuracy),
+        ]);
+    }
+    (points, t)
+}
+
+/// Fig 3: prefill vs early-decode expert-selection frequency statistics.
+pub fn fig3(desc: &ModelDesc, tokens: usize) -> Table {
+    let mut t = Table::new(["layer", "corr(prefill, decode)", "top8 prefill mass", "top8 decode mass"]);
+    let mut gen = TraceGenerator::new(desc, TraceParams::default(), 0xF16_3);
+    let layers = [0, desc.n_layers / 2, desc.n_layers - 1];
+    for &l in &layers {
+        let pre = selection_frequency(&mut gen, Phase::Prefill, l, tokens, desc.top_k);
+        let dec = selection_frequency(&mut gen, Phase::Decode, l, tokens, desc.top_k);
+        let c = correlation(&pre, &dec);
+        let mass = |f: &[f64]| {
+            let mut v = f.to_vec();
+            v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            v[..8.min(v.len())].iter().sum::<f64>()
+        };
+        t.row([
+            l.to_string(),
+            format!("{:.3}", c),
+            format!("{:.3}", mass(&pre)),
+            format!("{:.3}", mass(&dec)),
+        ]);
+    }
+    t
+}
+
+/// Fig 8: accuracy vs high-bit-normalized miss rate for the four
+/// configurations, swept over miss-rate constraints and cache sizes.
+pub fn fig8(desc: &ModelDesc, threads: usize) -> (Vec<AccuracyPoint>, Table) {
+    let constraints = [0.5, 0.2, 0.1, 0.05, 0.02, 0.01, 0.005];
+    let caches = [1.8, 2.4, 3.6];
+    let kinds = [
+        SliceConfig::HighBit,
+        SliceConfig::LowBit,
+        SliceConfig::AmatMixed,
+        SliceConfig::DbscAmat,
+    ];
+    let mut jobs = Vec::new();
+    for kind in kinds {
+        for &cg in &caches {
+            for &c in &constraints {
+                jobs.push((kind, cg, c));
+            }
+        }
+    }
+    let desc2 = desc.clone();
+    let points = par_map(jobs, threads, move |(kind, cg, c)| {
+        let mut cfg = base_episode(&desc2, 500, 128);
+        cfg.cache_bytes = gib(cg);
+        cfg.constraint = c;
+        kind.apply(&mut cfg);
+        let r = run_episodes_avg(&cfg, 2);
+        AccuracyPoint {
+            config: kind.name(),
+            cache_gib: cg,
+            constraint: c,
+            miss_rate: r.miss_rate,
+            accuracy: r.accuracy,
+            decode_energy_j: r.decode_energy_j,
+            decode_latency_s: r.decode_latency_s,
+        }
+    });
+    let mut t = Table::new([
+        "config", "cache(GiB)", "constraint", "miss-rate", "accuracy",
+    ]);
+    for p in &points {
+        t.row([
+            p.config.to_string(),
+            format!("{:.1}", p.cache_gib),
+            format!("{:.3}", p.constraint),
+            format!("{:.4}", p.miss_rate),
+            format!("{:.3}", p.accuracy),
+        ]);
+    }
+    (points, t)
+}
+
+/// Check whether dbsc+amat Pareto-dominates the BASELINES (uniform
+/// high-bit and uniform low-bit): for each (cache, constraint) cell, is
+/// its accuracy >= theirs at comparable miss rate? (amat-mixed is the
+/// proposal minus the DBSC component — the paper's "AMAT-only sits
+/// between the extremes" variant — so it is not a dominance competitor;
+/// DBSC's value over it is accuracy, checked separately.)
+pub fn fig8_pareto_score(points: &[AccuracyPoint]) -> (usize, usize) {
+    let mut wins = 0;
+    let mut cells = 0;
+    let cells_of = |cfg: &str| -> Vec<&AccuracyPoint> {
+        points.iter().filter(|p| p.config == cfg).collect()
+    };
+    for d in cells_of("dbsc+amat") {
+        cells += 1;
+        let dominated = points.iter().any(|p| {
+            (p.config == "high-bit" || p.config == "low-bit")
+                && (p.cache_gib - d.cache_gib).abs() < 1e-9
+                && (p.constraint - d.constraint).abs() < 1e-9
+                && p.accuracy > d.accuracy + 0.015
+                && p.miss_rate <= d.miss_rate + 0.005
+        });
+        if !dominated {
+            wins += 1;
+        }
+    }
+    (wins, cells)
+}
+
+/// DBSC's edge over AMAT-only (uniform-low decode): mean accuracy across
+/// all (cache, constraint) cells — dynamic precision should recover
+/// accuracy the uniform-low ceiling loses.
+pub fn fig8_dbsc_accuracy_edge(points: &[AccuracyPoint]) -> (f64, f64) {
+    let mean = |cfg: &str| {
+        let xs: Vec<f64> = points
+            .iter()
+            .filter(|p| p.config == cfg)
+            .map(|p| p.accuracy)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len().max(1) as f64
+    };
+    (mean("dbsc+amat"), mean("amat-mixed"))
+}
+
+/// One row of Fig 9.
+#[derive(Clone, Debug)]
+pub struct EfficiencyPoint {
+    pub scheme: &'static str,
+    pub cache_gib: f64,
+    pub decode_energy_j: f64,
+    pub decode_latency_s: f64,
+    pub accuracy: f64,
+    /// Relative to the high-bit Cache-Prior baseline at the same cache.
+    pub energy_gain: f64,
+    pub speedup: f64,
+}
+
+/// Fig 9: decode energy gain and speed-up under matched-accuracy operating
+/// points, across cache sizes, vs the high-bit Cache-Prior baseline.
+///
+/// Matched-accuracy selection (the paper's "matched-accuracy conditions"):
+/// the high-bit Cache-Prior baseline sets the accuracy bar per cache size;
+/// every scheme then runs at the *cheapest* constraint that still meets
+/// the bar. Schemes that cannot reach it report their best-accuracy point
+/// — how the paper can call Cumsum "never competitive".
+pub fn fig9(desc: &ModelDesc, threads: usize) -> (Vec<EfficiencyPoint>, Table) {
+    let caches = [1.8, 2.4, 3.6];
+    let constraints = [0.3, 0.2, 0.1, 0.05, 0.02, 0.01];
+    let schemes = [
+        SliceConfig::HighBit,
+        SliceConfig::Cumsum,
+        SliceConfig::AmatMixed,
+        SliceConfig::DbscAmat,
+    ];
+    let acc_tol = 0.015;
+
+    let mut jobs = Vec::new();
+    for s in schemes {
+        for &cg in &caches {
+            jobs.push((s, cg));
+        }
+    }
+    let desc2 = desc.clone();
+    let sweeps = par_map(jobs, threads, move |(scheme, cg)| {
+        let mut candidates = Vec::new();
+        for &c in &constraints {
+            let mut cfg = base_episode(&desc2, 500, 128);
+            cfg.cache_bytes = gib(cg);
+            cfg.constraint = c;
+            cfg.warmup = WarmupStrategy::Pcw;
+            scheme.apply(&mut cfg);
+            candidates.push(run_episodes_avg(&cfg, 3));
+        }
+        (scheme, cg, candidates)
+    });
+    // accuracy bar per cache size = high-bit baseline's best accuracy
+    let bar_of = |cg: f64| -> f64 {
+        sweeps
+            .iter()
+            .find(|(s, c, _)| *s == SliceConfig::HighBit && (*c - cg).abs() < 1e-9)
+            .map(|(_, _, cands)| cands.iter().map(|r| r.accuracy).fold(0.0f64, f64::max))
+            .unwrap()
+    };
+    let results: Vec<(SliceConfig, f64, f64, f64, f64)> = sweeps
+        .iter()
+        .map(|(scheme, cg, cands)| {
+            let bar = bar_of(*cg) - acc_tol;
+            let meeting: Vec<_> = cands.iter().filter(|r| r.accuracy >= bar).collect();
+            let pick = if meeting.is_empty() {
+                cands
+                    .iter()
+                    .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+                    .unwrap()
+            } else {
+                meeting
+                    .into_iter()
+                    .min_by(|a, b| {
+                        a.decode_energy_j.partial_cmp(&b.decode_energy_j).unwrap()
+                    })
+                    .unwrap()
+            };
+            (*scheme, *cg, pick.decode_energy_j, pick.decode_latency_s, pick.accuracy)
+        })
+        .collect();
+
+    // normalize against high-bit cache-prior at same cache size
+    let baseline = |cg: f64| -> (f64, f64) {
+        results
+            .iter()
+            .find(|(s, c, ..)| *s == SliceConfig::HighBit && (*c - cg).abs() < 1e-9)
+            .map(|(_, _, e, l, _)| (*e, *l))
+            .unwrap()
+    };
+    let points: Vec<EfficiencyPoint> = results
+        .iter()
+        .map(|(s, cg, e, l, a)| {
+            let (be, bl) = baseline(*cg);
+            EfficiencyPoint {
+                scheme: s.name(),
+                cache_gib: *cg,
+                decode_energy_j: *e,
+                decode_latency_s: *l,
+                accuracy: *a,
+                energy_gain: be / e,
+                speedup: bl / l,
+            }
+        })
+        .collect();
+    let mut t = Table::new([
+        "scheme", "cache(GiB)", "energy(J)", "latency(s)", "acc", "energy-gain", "speedup",
+    ]);
+    for p in &points {
+        t.row([
+            p.scheme.to_string(),
+            format!("{:.1}", p.cache_gib),
+            format!("{:.3}", p.decode_energy_j),
+            format!("{:.3}", p.decode_latency_s),
+            format!("{:.3}", p.accuracy),
+            format!("{:.2}x", p.energy_gain),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    (points, t)
+}
+
+/// One row of Fig 10.
+#[derive(Clone, Debug)]
+pub struct WarmupPoint {
+    pub strategy: &'static str,
+    pub early_decode_energy_j: f64,
+    pub decode_energy_j: f64,
+    pub decode_latency_s: f64,
+    pub accuracy: f64,
+    pub energy_gain_vs_empty: f64,
+    pub speedup_vs_empty: f64,
+}
+
+/// Fig 10: cache initial-state comparison (Empty / Last-layer / Random /
+/// PCW) on a single request.
+pub fn fig10(desc: &ModelDesc, threads: usize) -> (Vec<WarmupPoint>, Table) {
+    let strategies = [
+        WarmupStrategy::Empty,
+        WarmupStrategy::LastLayer { keep_layers: 1 },
+        WarmupStrategy::Random { seed: 0xC0FFEE },
+        WarmupStrategy::Pcw,
+    ];
+    // Fig 10 isolates the prefill->decode transition: a tight steady-state
+    // constraint (1%) keeps post-grace Flash small, so the measured
+    // difference is the cold-miss volume each initial state causes during
+    // the unconstrained grace window — the cost PCW is designed to remove.
+    let desc2 = desc.clone();
+    let rows = par_map(strategies.to_vec(), threads, move |w| {
+        let mut cfg = base_episode(&desc2, 512, 96);
+        cfg.cache_bytes = gib(2.4);
+        cfg.constraint = 0.01;
+        SliceConfig::DbscAmat.apply(&mut cfg);
+        cfg.warmup = w;
+        let r = run_episodes_avg(&cfg, 3);
+        (w, r)
+    });
+    let empty = rows
+        .iter()
+        .find(|(w, _)| matches!(w, WarmupStrategy::Empty))
+        .map(|(_, r)| (r.decode_energy_j, r.decode_latency_s))
+        .unwrap();
+    let points: Vec<WarmupPoint> = rows
+        .iter()
+        .map(|(w, r)| WarmupPoint {
+            strategy: w.name(),
+            early_decode_energy_j: r.early_decode_energy_j,
+            decode_energy_j: r.decode_energy_j,
+            decode_latency_s: r.decode_latency_s,
+            accuracy: r.accuracy,
+            energy_gain_vs_empty: empty.0 / r.decode_energy_j,
+            speedup_vs_empty: empty.1 / r.decode_latency_s,
+        })
+        .collect();
+    let mut t = Table::new([
+        "init-state", "early-energy(J)", "energy(J)", "latency(s)", "acc",
+        "energy-gain", "speedup",
+    ]);
+    for p in &points {
+        t.row([
+            p.strategy.to_string(),
+            format!("{:.3}", p.early_decode_energy_j),
+            format!("{:.3}", p.decode_energy_j),
+            format!("{:.3}", p.decode_latency_s),
+            format!("{:.3}", p.accuracy),
+            format!("{:.2}x", p.energy_gain_vs_empty),
+            format!("{:.2}x", p.speedup_vs_empty),
+        ]);
+    }
+    (points, t)
+}
+
+/// Ablation: heterogeneous vs homogeneous slice replacement, θ sweep,
+/// group-size sweep — the design choices DESIGN.md calls out.
+pub fn ablations(desc: &ModelDesc, threads: usize) -> Table {
+    use crate::router::DbscConfig;
+    let mut t = Table::new(["ablation", "setting", "miss-rate", "accuracy", "energy(J)"]);
+    // θ sweep
+    let thetas = [0.25, 0.5, 0.75, 1.0];
+    let desc2 = desc.clone();
+    let theta_rows = par_map(thetas.to_vec(), threads, move |th| {
+        let mut cfg = base_episode(&desc2, 400, 96);
+        cfg.cache_bytes = gib(2.4);
+        cfg.constraint = 0.05;
+        SliceConfig::DbscAmat.apply(&mut cfg);
+        cfg.router.dbsc = Some(DbscConfig { theta: th, max_critical: 2 });
+        (th, run_episode(&cfg))
+    });
+    for (th, r) in &theta_rows {
+        t.row([
+            "single-head θ".to_string(),
+            format!("{th:.2}"),
+            format!("{:.4}", r.miss_rate),
+            format!("{:.3}", r.accuracy),
+            format!("{:.3}", r.decode_energy_j),
+        ]);
+    }
+    // heterogeneous vs homogeneous slice replacement
+    let desc4 = desc.clone();
+    let het_rows = par_map(vec![true, false], threads, move |het| {
+        let mut cfg = base_episode(&desc4, 400, 96);
+        cfg.cache_bytes = gib(2.4);
+        cfg.constraint = 0.05;
+        SliceConfig::DbscAmat.apply(&mut cfg);
+        cfg.heterogeneous_lsb = het;
+        (het, run_episode(&cfg))
+    });
+    for (het, r) in &het_rows {
+        t.row([
+            "slice policy".to_string(),
+            if *het { "heterogeneous (paper)" } else { "uniform LRU" }.to_string(),
+            format!("{:.4}", r.miss_rate),
+            format!("{:.3}", r.accuracy),
+            format!("{:.3}", r.decode_energy_j),
+        ]);
+    }
+    // MAT config sweep
+    let desc3 = desc.clone();
+    let mats = MatConfig::all().to_vec();
+    let mat_rows = par_map(mats, threads, move |mat| {
+        let mut cfg = base_episode(&desc3, 400, 96);
+        cfg.cache_bytes = gib(2.4);
+        cfg.constraint = 0.05;
+        cfg.mat = mat;
+        SliceConfig::DbscAmat.apply(&mut cfg);
+        (mat, run_episode(&cfg))
+    });
+    for (mat, r) in &mat_rows {
+        t.row([
+            "MAT config".to_string(),
+            mat.name(),
+            format!("{:.4}", r.miss_rate),
+            format!("{:.3}", r.accuracy),
+            format!("{:.3}", r.decode_energy_j),
+        ]);
+    }
+    t
+}

@@ -1,0 +1,39 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md index).
+//!
+//! Each driver returns machine-readable rows plus a rendered text table so
+//! the CLI, the examples, and the benches regenerate identical artifacts.
+
+pub mod figures;
+pub mod table1;
+
+pub use figures::*;
+pub use table1::*;
+
+use crate::memhier::HwSpec;
+use crate::util::Table;
+
+/// Fig 7 — system specification table.
+pub fn sysinfo() -> Table {
+    let hw = HwSpec::paper();
+    let mut t = Table::new(["component", "spec", "value"]);
+    t.row(["XPU", "throughput", &format!("{:.1} TOPS (8-bit)", hw.xpu_ops_per_s / 1e12)]);
+    t.row(["XPU", "efficiency", &format!("{:.2} TOPS/W", hw.xpu_ops_per_j / 1e12)]);
+    t.row(["DRAM (LPDDR4)", "bandwidth", &format!("{:.0} Gbps", hw.dram_bits_per_s / 1e9)]);
+    t.row(["DRAM (LPDDR4)", "energy", &format!("{:.1} pJ/bit", hw.dram_j_per_bit * 1e12)]);
+    t.row(["DRAM (LPDDR4)", "capacity", "8 GB"]);
+    t.row(["Flash (UFS 3.1)", "bandwidth", &format!("{:.0} Gbps", hw.flash_bits_per_s / 1e9)]);
+    t.row(["Flash (UFS 3.1)", "energy", &format!("{:.0} pJ/bit", hw.flash_j_per_bit * 1e12)]);
+    t.row(["Flash (UFS 3.1)", "capacity", "128 GB"]);
+    t.row([
+        "Flash:DRAM",
+        "energy ratio",
+        &format!("{:.0}x", hw.flash_dram_energy_ratio()),
+    ]);
+    t
+}
+
+pub const GIB: f64 = (1u64 << 30) as f64;
+
+pub fn gib(x: f64) -> u64 {
+    (x * GIB) as u64
+}

@@ -1,0 +1,168 @@
+//! Table 1 — AMAT accuracy (PPL): Base vs Trunc vs AMAT under Sym/Asym at
+//! MAT42 / MAT63 / MAT84.
+//!
+//! Unlike the figure sweeps, this experiment runs on the REAL trained tiny
+//! LM through the full PJRT path: each scheme requantizes the same trained
+//! expert weights, executes the model teacher-forced over the held-out
+//! corpus, and reports measured perplexity. The paper's qualitative
+//! pattern — Trunc catastrophically bad, AMAT ≈ Base — is therefore
+//! measured, not asserted.
+
+use anyhow::Result;
+
+use crate::engine::{Engine, Session, SessionConfig};
+use crate::model::weights::Table1Scheme;
+use crate::quant::QuantTensor;
+use crate::util::Table;
+
+/// (scheme label, sym?, high-or-low, constructor)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum T1Row {
+    SymBaseHigh,
+    SymBaseLow,
+    SymTrunc,
+    AsymBaseHigh,
+    AsymBaseLow,
+    AsymTruncNaive,
+    Amat,
+}
+
+impl T1Row {
+    pub fn all() -> [T1Row; 7] {
+        [
+            T1Row::SymBaseHigh,
+            T1Row::SymBaseLow,
+            T1Row::SymTrunc,
+            T1Row::AsymBaseHigh,
+            T1Row::AsymBaseLow,
+            T1Row::AsymTruncNaive,
+            T1Row::Amat,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            T1Row::SymBaseHigh => "sym/base/high",
+            T1Row::SymBaseLow => "sym/base/low",
+            T1Row::SymTrunc => "sym/trunc/low",
+            T1Row::AsymBaseHigh => "asym/base/high",
+            T1Row::AsymBaseLow => "asym/base/low",
+            T1Row::AsymTruncNaive => "asym/trunc/low",
+            T1Row::Amat => "asym/AMAT/low",
+        }
+    }
+
+    pub fn scheme(&self) -> Table1Scheme {
+        match self {
+            T1Row::SymBaseHigh => Table1Scheme::BaseSym { low: false },
+            T1Row::SymBaseLow => Table1Scheme::BaseSym { low: true },
+            T1Row::SymTrunc => Table1Scheme::TruncSym,
+            T1Row::AsymBaseHigh => Table1Scheme::BaseAsym { low: false },
+            T1Row::AsymBaseLow => Table1Scheme::BaseAsym { low: true },
+            T1Row::AsymTruncNaive => Table1Scheme::TruncAsymNaive,
+            T1Row::Amat => Table1Scheme::Amat,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Table1Point {
+    pub mat: (u32, u32),
+    pub row: &'static str,
+    pub ppl: f64,
+    pub nll: f64,
+}
+
+/// Requantize every expert under `scheme` at MAT(bh, bl).
+fn quantize_all(
+    eng: &Engine,
+    scheme: Table1Scheme,
+    bh: u32,
+    bl: u32,
+) -> Vec<Vec<[QuantTensor; 3]>> {
+    let m = &eng.ws.meta;
+    (0..m.n_layers)
+        .map(|l| {
+            (0..m.n_experts)
+                .map(|e| eng.ws.requantize_expert(l, e, scheme, bh, bl))
+                .collect()
+        })
+        .collect()
+}
+
+/// Run Table 1 on the engine: measured PPL per scheme per MAT config.
+/// `eval_bytes` bounds the eval-corpus slice (runtime control).
+pub fn table1(
+    eng: &Engine,
+    eval_text: &[u8],
+    mats: &[(u32, u32)],
+    rows: &[T1Row],
+) -> Result<(Vec<Table1Point>, Table)> {
+    let mut points = Vec::new();
+    for &(bh, bl) in mats {
+        for &row in rows {
+            let quants = quantize_all(eng, row.scheme(), bh, bl);
+            let mut sess = Session::new(eng, SessionConfig::dbsc_default(eng));
+            let nll = sess.eval_nll_custom(eval_text, &quants)?;
+            let ppl = nll.exp();
+            points.push(Table1Point { mat: (bh, bl), row: row.label(), ppl, nll });
+        }
+    }
+    let mut t = Table::new(["MAT(h,l)", "scheme", "NLL/byte", "PPL"]);
+    for p in &points {
+        t.row([
+            format!("MAT{}{}", p.mat.0, p.mat.1),
+            p.row.to_string(),
+            format!("{:.4}", p.nll),
+            if p.ppl > 1e4 {
+                format!("{:.2e}", p.ppl)
+            } else {
+                format!("{:.4}", p.ppl)
+            },
+        ]);
+    }
+    Ok((points, t))
+}
+
+/// Table-1 shape assertions (used by the integration test and EXPERIMENTS
+/// recording): Trunc blows up, AMAT stays near Base.
+pub fn verify_table1_shape(points: &[Table1Point]) -> Vec<String> {
+    let mut violations = Vec::new();
+    for &(bh, bl) in &[(4u32, 2u32), (6, 3), (8, 4)] {
+        let get = |label: &str| {
+            points
+                .iter()
+                .find(|p| p.mat == (bh, bl) && p.row == label)
+                .map(|p| p.ppl)
+        };
+        let (base_h, base_l, amat, sym_t, asym_t) = match (
+            get("asym/base/high"),
+            get("asym/base/low"),
+            get("asym/AMAT/low"),
+            get("sym/trunc/low"),
+            get("asym/trunc/low"),
+        ) {
+            (Some(a), Some(b), Some(c), Some(d), Some(e)) => (a, b, c, d, e),
+            _ => continue,
+        };
+        if sym_t < 5.0 * base_h {
+            violations.push(format!(
+                "MAT{bh}{bl}: sym truncation should collapse (got {sym_t:.2} vs base {base_h:.2})"
+            ));
+        }
+        if asym_t < 2.0 * base_l {
+            violations.push(format!(
+                "MAT{bh}{bl}: naive asym truncation should degrade (got {asym_t:.2})"
+            ));
+        }
+        if amat > 2.5 * base_l {
+            violations.push(format!(
+                "MAT{bh}{bl}: AMAT should track base-low ({amat:.2} vs {base_l:.2})"
+            ));
+        }
+        if amat > 100.0 * base_h {
+            violations.push(format!("MAT{bh}{bl}: AMAT unusable ({amat:.2})"));
+        }
+    }
+    violations
+}

@@ -1,0 +1,33 @@
+//! SliceMoE — bit-sliced expert caching under miss-rate constraints.
+//!
+//! Reproduction of Choi et al., "SliceMoE: Bit-Sliced Expert Caching under
+//! Miss-Rate Constraints for Efficient MoE Inference" (CS.AR 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the serving coordinator: slice-granular expert
+//!   cache (DBSC), cache-aware routing under miss budgets, predictive
+//!   cache warmup (PCW), the Fig 7 memory-hierarchy cost model, a
+//!   full-geometry trace simulator, and a PJRT-backed execution engine
+//!   serving a real (tiny) MoE LM.
+//! * **L2** — `python/compile/model.py`: the JAX model, AOT-lowered once
+//!   to HLO text artifacts.
+//! * **L1** — `python/compile/kernels/amat_ffn.py`: Pallas bit-sliced
+//!   dequant + expert-FFN kernels (interpret mode), oracled by `ref.py`.
+//!
+//! Python never runs on the request path; `artifacts/` makes the binary
+//! self-contained.
+
+pub mod cache;
+pub mod engine;
+pub mod experiments;
+pub mod memhier;
+pub mod model;
+pub mod quant;
+pub mod router;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+
+/// Crate version reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

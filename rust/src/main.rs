@@ -1,0 +1,407 @@
+//! SliceMoE CLI — leader entrypoint.
+//!
+//! Simulator experiments (full paper geometry, no artifacts needed):
+//!   slicemoe sysinfo | fig2 | fig3 | fig8 | fig9 | fig10 | ablations | sim
+//! Engine experiments (need `make artifacts`):
+//!   slicemoe table1 | generate | serve | calibrate
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use slicemoe::cache::WarmupStrategy;
+use slicemoe::engine::{Engine, Session, SessionConfig};
+use slicemoe::experiments as exp;
+use slicemoe::model::ModelDesc;
+use slicemoe::quant::MatConfig;
+use slicemoe::router::{Policy, Precision, RouterConfig};
+use slicemoe::sim::{run_episode, EpisodeConfig};
+use slicemoe::util::cli::Args;
+use slicemoe::util::threadpool::default_threads;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    }
+    let cmd = argv[0].clone();
+    let rest = &argv[1..];
+    if let Err(e) = dispatch(&cmd, rest) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    format!(
+        "slicemoe {} — bit-sliced expert caching under miss-rate constraints
+
+simulator commands (paper-scale geometry):
+  sysinfo               print the Fig 7 system specification
+  fig2                  motivation: high- vs low-bit accuracy under constraints
+  fig3                  prefill/decode expert-frequency statistics
+  fig8                  accuracy vs high-bit-normalized miss rate (4 configs)
+  fig9                  decode energy gain & speed-up vs Cache-Prior baseline
+  fig10                 cache warmup strategies (Empty/Last/Random/PCW)
+  ablations             θ sweep, MAT sweep, policy ablations
+  sim                   one configurable episode (all knobs exposed)
+
+engine commands (require `make artifacts`):
+  table1                AMAT PPL table on the trained tiny LM (measured)
+  generate              generate text through the DBSC serving path
+  serve                 run the single-batch server over a request stream
+  calibrate             measured tiny-LM anchors for the accuracy proxy
+
+common flags: --model deepseek|qwen  --threads N  --artifacts DIR
+run `slicemoe <cmd> --help` for per-command flags",
+        slicemoe::VERSION
+    )
+}
+
+fn model_flag(a: &Args) -> Result<ModelDesc> {
+    let name = a.str("model");
+    ModelDesc::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))
+}
+
+fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+    match cmd {
+        "sysinfo" => {
+            print!("{}", exp::sysinfo().render());
+            Ok(())
+        }
+        "fig2" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("threads", "0", "worker threads (0 = all cores)")
+                .parse(rest, cmd)?;
+            let (_, table) = exp::fig2(&model_flag(&a)?, threads(&a)?);
+            println!("Fig 2 (right) — accuracy vs miss-rate constraint, 1.8 GiB cache");
+            print!("{}", table.render());
+            Ok(())
+        }
+        "fig3" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("tokens", "400", "tokens per phase")
+                .parse(rest, cmd)?;
+            println!("Fig 3 — phase-wise expert-selection statistics");
+            print!("{}", exp::fig3(&model_flag(&a)?, a.usize("tokens")?).render());
+            Ok(())
+        }
+        "fig8" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("threads", "0", "worker threads")
+                .parse(rest, cmd)?;
+            let desc = model_flag(&a)?;
+            let (points, table) = exp::fig8(&desc, threads(&a)?);
+            println!("Fig 8 — GSM8K-proxy accuracy vs high-bit-normalized miss rate ({})", desc.name);
+            print!("{}", table.render());
+            let (wins, cells) = exp::fig8_pareto_score(&points);
+            println!("\ndbsc+amat Pareto-dominant in {wins}/{cells} (cache, constraint) cells");
+            Ok(())
+        }
+        "fig9" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("threads", "0", "worker threads")
+                .parse(rest, cmd)?;
+            let desc = model_flag(&a)?;
+            let (points, table) = exp::fig9(&desc, threads(&a)?);
+            println!("Fig 9 — decode energy gain & speed-up vs high-bit Cache-Prior ({})", desc.name);
+            print!("{}", table.render());
+            let best = points
+                .iter()
+                .filter(|p| p.scheme == "dbsc+amat")
+                .map(|p| (p.energy_gain, p.speedup))
+                .fold((0.0f64, 0.0f64), |acc, (e, s)| (acc.0.max(e), acc.1.max(s)));
+            println!("\nbest dbsc+amat: {:.2}x energy, {:.2}x speed-up", best.0, best.1);
+            Ok(())
+        }
+        "fig10" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("threads", "0", "worker threads")
+                .parse(rest, cmd)?;
+            let desc = model_flag(&a)?;
+            let (_, table) = exp::fig10(&desc, threads(&a)?);
+            println!("Fig 10 — cache warmup strategies ({})", desc.name);
+            print!("{}", table.render());
+            Ok(())
+        }
+        "ablations" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("threads", "0", "worker threads")
+                .parse(rest, cmd)?;
+            print!("{}", exp::ablations(&model_flag(&a)?, threads(&a)?).render());
+            Ok(())
+        }
+        "sim" => {
+            let a = Args::new()
+                .opt("model", "deepseek", "model geometry")
+                .opt("mat", "mat84", "MAT config (mat42|mat63|mat84)")
+                .opt("cache-gib", "2.4", "expert cache capacity in GiB")
+                .opt("constraint", "inf", "miss-rate constraint (or 'inf')")
+                .opt("policy", "cache-prior", "topk|cumsum|cache-prior")
+                .opt("precision", "dbsc", "dbsc|high|low")
+                .opt("warmup", "pcw", "empty|last-layer|random|pcw")
+                .opt("prefill", "500", "prefill tokens")
+                .opt("decode", "128", "decode tokens")
+                .opt("seed", "53084", "episode seed")
+                .parse(rest, cmd)?;
+            let desc = model_flag(&a)?;
+            let mut cfg = EpisodeConfig::gsm8k_default(desc.clone());
+            cfg.mat = MatConfig::parse(&a.str("mat"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mat"))?;
+            cfg.cache_bytes = exp::gib(a.f64("cache-gib")?);
+            cfg.constraint = parse_constraint(&a.str("constraint"))?;
+            cfg.prefill_tokens = a.usize("prefill")?;
+            cfg.decode_tokens = a.usize("decode")?;
+            cfg.seed = a.usize("seed")? as u64;
+            cfg.warmup = WarmupStrategy::parse(&a.str("warmup"))
+                .ok_or_else(|| anyhow::anyhow!("bad --warmup"))?;
+            let policy = Policy::parse(&a.str("policy"))
+                .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+            cfg.router = match a.str("precision").as_str() {
+                "dbsc" => RouterConfig { policy, ..RouterConfig::dbsc(desc.top_k) },
+                "high" => RouterConfig {
+                    policy,
+                    top_k: desc.top_k,
+                    dbsc: None,
+                    uniform_precision: Precision::High,
+                },
+                "low" => RouterConfig {
+                    policy,
+                    top_k: desc.top_k,
+                    dbsc: None,
+                    uniform_precision: Precision::Low,
+                },
+                p => bail!("bad --precision '{p}'"),
+            };
+            let r = run_episode(&cfg);
+            println!("model           {}", desc.name);
+            println!("miss-rate       {:.4} (high-bit-normalized, post-warmup)", r.miss_rate);
+            println!("accuracy-proxy  {:.3}", r.accuracy);
+            println!("decode energy   {:.3} J   latency {:.3} s ({:.1} ms/token)",
+                r.decode_energy_j, r.decode_latency_s,
+                1e3 * r.decode_latency_s / cfg.decode_tokens as f64);
+            println!("prefill energy  {:.3} J   wall {:.3} s",
+                r.ledger.prefill_energy_j(), r.ledger.prefill_wall_s);
+            println!("msb hit-rate    {:.3}   lsb hit-rate {:.3}", r.msb_hit_rate, r.lsb_hit_rate);
+            println!("dropped {}  substituted {}  degraded {}  critical {}",
+                r.n_dropped, r.n_substituted, r.n_degraded, r.n_critical);
+            Ok(())
+        }
+        "table1" => {
+            let a = Args::new()
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("eval-bytes", "4096", "eval corpus bytes")
+                .parse(rest, cmd)?;
+            let eng = load_engine(&a, MatConfig::MAT84)?;
+            let eval = eval_corpus(&a, a.usize("eval-bytes")?)?;
+            let mats = [(4u32, 2u32), (6, 3), (8, 4)];
+            let (points, table) = exp::table1(&eng, &eval, &mats, &exp::T1Row::all())?;
+            println!("Table 1 — AMAT accuracy (measured PPL, trained tiny LM)");
+            print!("{}", table.render());
+            let violations = exp::verify_table1_shape(&points);
+            if violations.is_empty() {
+                println!("\nshape check: OK (Trunc collapses, AMAT ~ Base)");
+            } else {
+                for v in &violations {
+                    println!("shape violation: {v}");
+                }
+            }
+            Ok(())
+        }
+        "generate" => {
+            let a = Args::new()
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("mat", "mat84", "MAT config")
+                .opt("prompt", "the cache holds 3 experts and ", "prompt text")
+                .opt("tokens", "64", "decode tokens")
+                .opt("cache-experts", "16", "cache capacity in experts")
+                .opt("constraint", "inf", "miss-rate constraint")
+                .opt("warmup", "pcw", "warmup strategy")
+                .parse(rest, cmd)?;
+            let mat = MatConfig::parse(&a.str("mat"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mat"))?;
+            let eng = load_engine(&a, mat)?;
+            let desc = eng.desc();
+            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+            let mut cfg = SessionConfig::dbsc_default(&eng);
+            cfg.cache_bytes = unit * a.usize("cache-experts")? as u64;
+            cfg.constraint = parse_constraint(&a.str("constraint"))?;
+            cfg.warmup = WarmupStrategy::parse(&a.str("warmup"))
+                .ok_or_else(|| anyhow::anyhow!("bad --warmup"))?;
+            let mut sess = Session::new(&eng, cfg);
+            let prompt = a.str("prompt").into_bytes();
+            let rep = sess.generate(&prompt, a.usize("tokens")?)?;
+            println!("prompt: {}", String::from_utf8_lossy(&prompt));
+            println!("output: {}", String::from_utf8_lossy(&rep.tokens));
+            println!(
+                "prefill {:.2}s | decode {:.2}s ({:.1} ms/token, {:.1} tok/s)",
+                rep.prefill_wall_s,
+                rep.decode_wall_s,
+                1e3 * rep.decode_wall_s / rep.decode_tokens.max(1) as f64,
+                rep.decode_tokens as f64 / rep.decode_wall_s
+            );
+            println!(
+                "sim decode energy {:.4} J | miss-rate {:.4} | msb-hit {:.3} lsb-hit {:.3}",
+                rep.ledger.decode_energy_j(), rep.miss_rate, rep.msb_hit_rate, rep.lsb_hit_rate
+            );
+            println!(
+                "high {} low {} dropped {} substituted {} degraded {}",
+                rep.n_high, rep.n_low, rep.n_dropped, rep.n_substituted, rep.n_degraded
+            );
+            Ok(())
+        }
+        "serve" => {
+            let a = Args::new()
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("requests", "8", "number of requests")
+                .opt("queue", "4", "admission queue depth")
+                .opt("cache-experts", "16", "cache capacity in experts")
+                .parse(rest, cmd)?;
+            serve_cmd(&a)
+        }
+        "calibrate" => {
+            let a = Args::new()
+                .opt("artifacts", "artifacts", "artifacts directory")
+                .opt("eval-bytes", "4096", "eval corpus bytes")
+                .parse(rest, cmd)?;
+            calibrate_cmd(&a)
+        }
+        "help" | "--help" | "-h" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+fn threads(a: &Args) -> Result<usize> {
+    let t = a.usize("threads")?;
+    Ok(if t == 0 { default_threads() } else { t })
+}
+
+fn parse_constraint(s: &str) -> Result<f64> {
+    if s == "inf" || s == "none" {
+        Ok(f64::INFINITY)
+    } else {
+        Ok(s.parse()?)
+    }
+}
+
+fn load_engine(a: &Args, mat: MatConfig) -> Result<Engine> {
+    let dir = PathBuf::from(a.str("artifacts"));
+    if !dir.join("model_meta.json").exists() {
+        bail!(
+            "artifacts not found in {} — run `make artifacts` first",
+            dir.display()
+        );
+    }
+    Engine::load(&dir, mat)
+}
+
+fn eval_corpus(a: &Args, n: usize) -> Result<Vec<u8>> {
+    let path = PathBuf::from(a.str("artifacts")).join("corpus_eval.bin");
+    let data = std::fs::read(&path)?;
+    Ok(data[..n.min(data.len())].to_vec())
+}
+
+fn serve_cmd(a: &Args) -> Result<()> {
+    use slicemoe::server::{percentiles, Backend, Request, Response, ServerHandle};
+    use slicemoe::sim::{generate_workload, WorkloadParams};
+
+    let artifacts = PathBuf::from(a.str("artifacts"));
+    let cache_experts = a.usize("cache-experts")? as u64;
+    let n_requests = a.usize("requests")?;
+    let queue = a.usize("queue")?;
+    let eval = std::fs::read(artifacts.join("corpus_eval.bin"))?;
+
+    struct EngineBackend {
+        eng: Engine,
+        cache_experts: u64,
+    }
+    impl Backend for EngineBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            let mat = self.eng.mat();
+            let desc = self.eng.desc();
+            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+            let mut cfg = SessionConfig::dbsc_default(&self.eng);
+            cfg.cache_bytes = unit * self.cache_experts;
+            let mut sess = Session::new(&self.eng, cfg);
+            let rep = sess.generate(&req.prompt, req.decode_tokens)?;
+            Ok(Response {
+                id: req.id,
+                output: rep.tokens.clone(),
+                prefill_wall_s: rep.prefill_wall_s,
+                decode_wall_s: rep.decode_wall_s,
+                decode_tokens: rep.decode_tokens,
+                decode_energy_j: rep.ledger.decode_energy_j(),
+                miss_rate: rep.miss_rate,
+                queue_wall_s: 0.0,
+            })
+        }
+    }
+
+    let handle = ServerHandle::start(queue, move || {
+        Ok(EngineBackend {
+            eng: Engine::load(&artifacts, MatConfig::MAT84)?,
+            cache_experts,
+        })
+    });
+    let reqs = generate_workload(&WorkloadParams::tiny(), n_requests, 0x5E4E);
+    let t0 = std::time::Instant::now();
+    for (i, r) in reqs.iter().enumerate() {
+        let off = (i * 4099) % (eval.len() - r.prefill_tokens - 1);
+        handle.submit(Request {
+            id: i as u64,
+            prompt: eval[off..off + r.prefill_tokens].to_vec(),
+            decode_tokens: r.decode_tokens,
+        })?;
+    }
+    let mut lat = Vec::new();
+    let mut toks = 0usize;
+    let mut energy = 0.0;
+    for _ in 0..n_requests {
+        let r = handle.recv()?;
+        println!(
+            "req {:>3}: prefill {:.2}s decode {:.2}s ({:5.1} tok/s) queue {:.2}s miss {:.4}",
+            r.id, r.prefill_wall_s, r.decode_wall_s, r.tokens_per_s(), r.queue_wall_s,
+            r.miss_rate
+        );
+        toks += r.decode_tokens;
+        energy += r.decode_energy_j;
+        lat.push(r.decode_wall_s / r.decode_tokens.max(1) as f64);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (p50, p90, p99) = percentiles(lat);
+    println!("\n{n_requests} requests, {toks} decode tokens in {wall:.1}s ({:.2} tok/s end-to-end)",
+        toks as f64 / wall);
+    println!("per-token decode latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+        p50 * 1e3, p90 * 1e3, p99 * 1e3);
+    println!("simulated decode energy total {energy:.3} J");
+    handle.shutdown();
+    Ok(())
+}
+
+fn calibrate_cmd(a: &Args) -> Result<()> {
+    let eng = load_engine(a, MatConfig::MAT84)?;
+    let eval = eval_corpus(a, a.usize("eval-bytes")?)?;
+    println!("calibration anchors (trained tiny LM, measured through PJRT):");
+    let mut sess = Session::new(&eng, SessionConfig::dbsc_default(&eng));
+    let fp = sess.eval_nll_uniform(&eval, Precision::Full)?;
+    println!("  fp32      : nll/byte {:.4}  ppl {:.4}", fp, fp.exp());
+    for (label, prec) in [("high(8b)", Precision::High), ("low(4b) ", Precision::Low)] {
+        let mut s = Session::new(&eng, SessionConfig::dbsc_default(&eng));
+        let nll = s.eval_nll_uniform(&eval, prec)?;
+        println!(
+            "  {label}: nll/byte {:.4}  ppl {:.4}  (Δnll vs fp {:+.4})",
+            nll, nll.exp(), nll - fp
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! SMWB tensor container reader (mirror of `aot.py::_write_blob`).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SMWB0001" | u32 count | count x {
+//!   u16 name_len | name | u8 dtype | u8 ndim | u32 dims[ndim] |
+//!   u64 nbytes | raw data
+//! }
+//! dtype: 0 = f32, 1 = i32, 2 = u8
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U8 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Tensor::U8 { data, .. } => Ok(data),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Blob {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Blob {
+    pub fn load(path: &Path) -> Result<Blob> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open blob {}", path.display()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parse blob {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<Blob> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+            if *pos + n > buf.len() {
+                bail!("truncated blob at byte {}", *pos);
+            }
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        if take(&mut pos, 8)? != b"SMWB0001" {
+            bail!("bad magic");
+        }
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+            let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())?;
+            let dtype = take(&mut pos, 1)?[0];
+            let ndim = take(&mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize);
+            }
+            let nbytes = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?) as usize;
+            let raw = take(&mut pos, nbytes)?;
+            let n: usize = shape.iter().product::<usize>().max(if ndim == 0 { 1 } else { 0 });
+            let tensor = match dtype {
+                0 => {
+                    if nbytes != n * 4 {
+                        bail!("f32 tensor '{name}': {nbytes} bytes for {n} elems");
+                    }
+                    Tensor::F32 {
+                        shape,
+                        data: raw
+                            .chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    }
+                }
+                1 => {
+                    if nbytes != n * 4 {
+                        bail!("i32 tensor '{name}': size mismatch");
+                    }
+                    Tensor::I32 {
+                        shape,
+                        data: raw
+                            .chunks_exact(4)
+                            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    }
+                }
+                2 => Tensor::U8 { shape, data: raw.to_vec() },
+                d => bail!("unknown dtype code {d}"),
+            };
+            tensors.insert(name, tensor);
+        }
+        if pos != buf.len() {
+            bail!("trailing {} bytes after last tensor", buf.len() - pos);
+        }
+        Ok(Blob { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in blob"))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        self.get(name)?.as_f32()
+    }
+
+    pub fn i32(&self, name: &str) -> Result<&[i32]> {
+        self.get(name)?.as_i32()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_blob() -> Vec<u8> {
+        // hand-rolled writer for tests (mirrors the python writer)
+        let mut out: Vec<u8> = b"SMWB0001".to_vec();
+        out.extend((2u32).to_le_bytes());
+        // "a": f32 [2,2]
+        out.extend((1u16).to_le_bytes());
+        out.extend(b"a");
+        out.push(0);
+        out.push(2);
+        out.extend((2u32).to_le_bytes());
+        out.extend((2u32).to_le_bytes());
+        let data: Vec<u8> = [1f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|f| f.to_le_bytes())
+            .collect();
+        out.extend((data.len() as u64).to_le_bytes());
+        out.extend(&data);
+        // "b": i32 [3]
+        out.extend((1u16).to_le_bytes());
+        out.extend(b"b");
+        out.push(1);
+        out.push(1);
+        out.extend((3u32).to_le_bytes());
+        let data: Vec<u8> = [7i32, -8, 9].iter().flat_map(|v| v.to_le_bytes()).collect();
+        out.extend((data.len() as u64).to_le_bytes());
+        out.extend(&data);
+        out
+    }
+
+    #[test]
+    fn parses_tensors() {
+        let b = Blob::parse(&sample_blob()).unwrap();
+        assert_eq!(b.f32("a").unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b.get("a").unwrap().shape(), &[2, 2]);
+        assert_eq!(b.i32("b").unwrap(), &[7, -8, 9]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let mut buf = sample_blob();
+        buf[0] = b'X';
+        assert!(Blob::parse(&buf).is_err());
+        let buf2 = sample_blob();
+        assert!(Blob::parse(&buf2[..buf2.len() - 2]).is_err());
+        assert!(Blob::parse(&sample_blob()[..12]).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let b = Blob::parse(&sample_blob()).unwrap();
+        assert!(b.f32("nope").is_err());
+        assert!(b.get("a").unwrap().as_i32().is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Model geometry descriptors.
+//!
+//! The cache/energy simulator needs only the *geometry* of the paper's
+//! models (expert count, dims, top-k) — not their weights. Geometries below
+//! follow the released configs of DeepSeek-V2-Lite and Qwen1.5-MoE-A2.7B;
+//! the `tiny` descriptor matches the trained byte-LM that the real
+//! execution path serves (python/compile/model.py::TinyConfig).
+
+use crate::quant::MatConfig;
+
+/// Which bit-plane of an expert a cache slice holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Plane {
+    /// The b_low-bit most-significant plane (+ group metadata). Sufficient
+    /// for low-precision execution on its own (AMAT property).
+    Msb,
+    /// The residual (b_high - b_low)-bit plane; only useful with the MSB.
+    Lsb,
+}
+
+/// Geometry of one MoE model.
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: &'static str,
+    /// Number of MoE layers (dense layers don't participate in caching).
+    pub n_layers: usize,
+    /// Routed experts per layer.
+    pub n_experts: usize,
+    /// Experts activated per token.
+    pub top_k: usize,
+    pub d_model: usize,
+    /// Expert FFN intermediate dim.
+    pub d_ff: usize,
+    /// Quant group size (paper: G32 for experts).
+    pub group: usize,
+}
+
+impl ModelDesc {
+    /// DeepSeek-V2-Lite: 26 MoE layers, 64 routed experts, top-6,
+    /// d_model 2048, expert intermediate 1408 (~14.4 B routed-expert
+    /// params of the ~16 B total).
+    pub fn deepseek_v2_lite() -> Self {
+        ModelDesc {
+            name: "deepseek-v2-lite",
+            n_layers: 26,
+            n_experts: 64,
+            top_k: 6,
+            d_model: 2048,
+            d_ff: 1408,
+            group: 32,
+        }
+    }
+
+    /// Qwen1.5-MoE-A2.7B: 24 layers, 60 experts, top-4, d_model 2048,
+    /// expert intermediate 1408.
+    pub fn qwen15_moe_a27b() -> Self {
+        ModelDesc {
+            name: "qwen1.5-moe-a2.7b",
+            n_layers: 24,
+            n_experts: 60,
+            top_k: 4,
+            d_model: 2048,
+            d_ff: 1408,
+            group: 32,
+        }
+    }
+
+    /// The trained tiny byte-LM actually executed through PJRT.
+    pub fn tiny() -> Self {
+        ModelDesc {
+            name: "tiny-moe-bytelm",
+            n_layers: 4,
+            n_experts: 8,
+            top_k: 2,
+            d_model: 128,
+            d_ff: 256,
+            group: 32,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "deepseek-v2-lite" | "deepseek" | "dsv2l" => Some(Self::deepseek_v2_lite()),
+            "qwen1.5-moe-a2.7b" | "qwen" | "qwen15" => Some(Self::qwen15_moe_a27b()),
+            "tiny" | "tiny-moe-bytelm" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Parameters in one expert (SwiGLU: w1 [d,f], w3 [d,f], w2 [f,d]).
+    pub fn expert_params(&self) -> usize {
+        3 * self.d_model * self.d_ff
+    }
+
+    /// Total routed experts across layers.
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.n_experts
+    }
+
+    fn groups_per_expert(&self) -> usize {
+        // w1/w3 group along d_model, w2 along d_ff
+        2 * (self.d_model / self.group) * self.d_ff
+            + (self.d_ff / self.group) * self.d_model
+    }
+
+    /// Bytes of the MSB slice under `mat`: b_low-bit codes + full group
+    /// metadata (fp16 scale + b_high-bit zp — the high path's zp lives with
+    /// the MSB so either precision can be reconstructed from what's cached).
+    pub fn msb_slice_bytes(&self, mat: MatConfig) -> u64 {
+        let code_bits = self.expert_params() * mat.low_bits as usize;
+        let meta_bits = self.groups_per_expert() * (16 + mat.high_bits as usize);
+        ((code_bits + meta_bits) as u64).div_ceil(8)
+    }
+
+    /// Bytes of the LSB slice: the residual plane only (metadata is on MSB).
+    pub fn lsb_slice_bytes(&self, mat: MatConfig) -> u64 {
+        ((self.expert_params() * mat.shift() as usize) as u64).div_ceil(8)
+    }
+
+    /// Bytes of a monolithic expert at `bits` (uniform precision baselines).
+    pub fn uniform_expert_bytes(&self, bits: u32) -> u64 {
+        let code_bits = self.expert_params() * bits as usize;
+        let meta_bits = self.groups_per_expert() * (16 + bits as usize);
+        ((code_bits + meta_bits) as u64).div_ceil(8)
+    }
+
+    pub fn slice_bytes(&self, plane: Plane, mat: MatConfig) -> u64 {
+        match plane {
+            Plane::Msb => self.msb_slice_bytes(mat),
+            Plane::Lsb => self.lsb_slice_bytes(mat),
+        }
+    }
+
+    /// MAC-ops for one expert over `tokens` tokens (2 ops per MAC).
+    pub fn expert_ops(&self, tokens: usize) -> f64 {
+        2.0 * self.expert_params() as f64 * tokens as f64
+    }
+
+    /// Full expert pool size at b_high (what Flash stores).
+    pub fn pool_bytes(&self, mat: MatConfig) -> u64 {
+        self.total_experts() as u64
+            * (self.msb_slice_bytes(mat) + self.lsb_slice_bytes(mat))
+    }
+}
+
+/// Identity of one cacheable slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SliceKey {
+    pub layer: u16,
+    pub expert: u16,
+    pub plane: Plane,
+}
+
+impl SliceKey {
+    pub fn msb(layer: usize, expert: usize) -> Self {
+        SliceKey { layer: layer as u16, expert: expert as u16, plane: Plane::Msb }
+    }
+
+    pub fn lsb(layer: usize, expert: usize) -> Self {
+        SliceKey { layer: layer as u16, expert: expert as u16, plane: Plane::Lsb }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_design_points_hold() {
+        // §6.1-4: at 1.8 GB at least one high-bit expert per layer fits;
+        // at 3.6 GB fewer than half of all high-bit experts fit.
+        let m = ModelDesc::deepseek_v2_lite();
+        let mat = MatConfig::MAT84;
+        let expert_high = m.msb_slice_bytes(mat) + m.lsb_slice_bytes(mat);
+        let at_18 = (1.8 * (1u64 << 30) as f64) as u64 / expert_high;
+        let at_36 = (3.6 * (1u64 << 30) as f64) as u64 / expert_high;
+        assert!(at_18 as usize >= m.n_layers, "1.8GB fits {} experts", at_18);
+        assert!((at_36 as usize) < m.total_experts() / 2);
+    }
+
+    #[test]
+    fn slice_sizes_sum_to_uniform_high() {
+        let m = ModelDesc::qwen15_moe_a27b();
+        for mat in MatConfig::all() {
+            let split = m.msb_slice_bytes(mat) + m.lsb_slice_bytes(mat);
+            let uniform = m.uniform_expert_bytes(mat.high_bits);
+            // bit-sliced storage duplicates nothing: same total ±1 byte rounding
+            assert!(split.abs_diff(uniform) <= 2, "{} vs {}", split, uniform);
+        }
+    }
+
+    #[test]
+    fn msb_smaller_than_lsb_plus_meta_relation() {
+        let m = ModelDesc::deepseek_v2_lite();
+        let mat = MatConfig::MAT84;
+        // 4-bit codes + meta vs 4-bit residual: MSB is bigger (carries meta)
+        assert!(m.msb_slice_bytes(mat) > m.lsb_slice_bytes(mat));
+    }
+
+    #[test]
+    fn expert_pool_scale_matches_model_card() {
+        // DeepSeek-V2-Lite routed experts ≈ 14.4 B params
+        let m = ModelDesc::deepseek_v2_lite();
+        let total = m.total_experts() * m.expert_params();
+        assert!((14.0e9..15.0e9).contains(&(total as f64)));
+        // Qwen1.5-MoE ≈ 12.5 B routed params
+        let q = ModelDesc::qwen15_moe_a27b();
+        let tq = q.total_experts() * q.expert_params();
+        assert!((12.0e9..13.0e9).contains(&(tq as f64)));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["deepseek-v2-lite", "qwen1.5-moe-a2.7b", "tiny-moe-bytelm"] {
+            assert_eq!(ModelDesc::by_name(n).unwrap().name, n);
+        }
+        assert_eq!(ModelDesc::by_name("tiny").unwrap().name, "tiny-moe-bytelm");
+        assert!(ModelDesc::by_name("gpt-7").is_none());
+    }
+}

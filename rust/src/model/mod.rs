@@ -1,0 +1,8 @@
+//! Model geometry, the SMWB weight container, and the quantized weight
+//! store feeding the PJRT execution path.
+
+pub mod blob;
+pub mod descriptor;
+pub mod weights;
+
+pub use descriptor::{ModelDesc, Plane, SliceKey};

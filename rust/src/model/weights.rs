@@ -1,0 +1,418 @@
+//! Quantized weight store for the PJRT execution path.
+//!
+//! Loads the fp32 master weights from `artifacts/weights.bin` (SMWB) and
+//! materializes, per expert, the AMAT bit-planes + group metadata that the
+//! compiled expert kernels take as runtime operands:
+//!
+//! * MSB planes (b_low-bit codes), LSB planes (residual bits) — int32
+//!   operand layout expected by `expert_high_*`/`expert_low_*`;
+//! * high-bit group params (scale, zp) and their AMAT truncations;
+//! * tightly packed MSB/LSB byte images (what "Flash" stores; the packed
+//!   size drives the cache's byte accounting);
+//! * the fp32 originals (Base / reference configurations).
+//!
+//! Quantization happens HERE (not in aot.py) so Table-1-style sweeps can
+//! requantize the same trained weights under any scheme without new
+//! artifacts; equality with the python quantizer is enforced against
+//! `golden_quant.bin`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::{self, packing, MatConfig, QuantTensor};
+use crate::util::json::Json;
+
+use super::blob::Blob;
+use super::descriptor::ModelDesc;
+
+/// Geometry parsed from `model_meta.json` (the tiny model's TinyConfig).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub group: usize,
+}
+
+impl ModelMeta {
+    pub fn parse(meta: &Json) -> Result<ModelMeta> {
+        let c = meta.at(&["config"])?;
+        let get = |k: &str| -> Result<usize> {
+            c.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("meta config missing '{k}'"))
+        };
+        Ok(ModelMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            d_head: get("d_head")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            group: get("group")?,
+        })
+    }
+
+    pub fn to_desc(&self) -> ModelDesc {
+        ModelDesc {
+            name: "tiny-moe-bytelm",
+            n_layers: self.n_layers,
+            n_experts: self.n_experts,
+            top_k: self.top_k,
+            d_model: self.d_model,
+            d_ff: self.d_ff,
+            group: self.group,
+        }
+    }
+}
+
+/// One quantized weight matrix as kernel operands.
+#[derive(Clone, Debug)]
+pub struct QuantPlanes {
+    pub rows: usize,
+    pub cols: usize,
+    /// b_low-bit MSB plane, `[rows*cols]` i32.
+    pub msb: Vec<i32>,
+    /// residual LSB plane.
+    pub lsb: Vec<i32>,
+    /// High-bit group scale/zp `[rows/group * cols]`.
+    pub scale_hi: Vec<f32>,
+    pub zp_hi: Vec<i32>,
+    /// AMAT-truncated params for MSB-only execution.
+    pub scale_lo: Vec<f32>,
+    pub zp_lo: Vec<i32>,
+    /// Packed byte images (the Flash-resident representation).
+    pub packed_msb_bytes: usize,
+    pub packed_lsb_bytes: usize,
+}
+
+impl QuantPlanes {
+    fn build(w: &[f32], rows: usize, cols: usize, mat: MatConfig, group: usize) -> Self {
+        let t = quant::quantize_asym(w, rows, cols, mat.high_bits, group);
+        let (msb, lsb) = quant::split_planes(&t, mat.low_bits);
+        let lo = quant::truncate_amat(&t, mat.low_bits);
+        let packed_msb = packing::packed_len(msb.len(), mat.low_bits)
+            + t.scale.len() * 2
+            + packing::packed_len(t.zp.len(), mat.high_bits);
+        let packed_lsb = packing::packed_len(lsb.len(), mat.shift());
+        QuantPlanes {
+            rows,
+            cols,
+            msb,
+            lsb,
+            scale_hi: t.scale,
+            zp_hi: t.zp,
+            scale_lo: lo.scale,
+            zp_lo: lo.zp,
+            packed_msb_bytes: packed_msb,
+            packed_lsb_bytes: packed_lsb,
+        }
+    }
+}
+
+/// One expert: fp masters + quantized planes for w1, w3, w2.
+#[derive(Clone, Debug)]
+pub struct ExpertWeights {
+    pub fp: [Vec<f32>; 3],
+    pub planes: [QuantPlanes; 3],
+}
+
+impl ExpertWeights {
+    /// Bytes of this expert's MSB slice (packed codes + metadata).
+    pub fn msb_bytes(&self) -> u64 {
+        self.planes.iter().map(|p| p.packed_msb_bytes as u64).sum()
+    }
+
+    pub fn lsb_bytes(&self) -> u64 {
+        self.planes.iter().map(|p| p.packed_lsb_bytes as u64).sum()
+    }
+}
+
+/// Per-layer dense (non-expert) weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub ln1: Vec<f32>,
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub ln2: Vec<f32>,
+    pub wg: Vec<f32>,
+}
+
+/// The full weight store.
+pub struct WeightStore {
+    pub meta: ModelMeta,
+    pub mat: MatConfig,
+    pub embed: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub ln_f: Vec<f32>,
+    pub w_out: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// `experts[layer][expert]`.
+    pub experts: Vec<Vec<ExpertWeights>>,
+}
+
+impl WeightStore {
+    pub fn load(artifacts_dir: &Path, mat: MatConfig) -> Result<WeightStore> {
+        let meta_text = std::fs::read_to_string(artifacts_dir.join("model_meta.json"))
+            .context("read model_meta.json")?;
+        let meta = ModelMeta::parse(&Json::parse(&meta_text)?)?;
+        let blob = Blob::load(&artifacts_dir.join("weights.bin"))?;
+        Self::from_blob(&blob, meta, mat)
+    }
+
+    pub fn from_blob(blob: &Blob, meta: ModelMeta, mat: MatConfig) -> Result<WeightStore> {
+        let (d, f, e, g) = (meta.d_model, meta.d_ff, meta.n_experts, meta.group);
+        if d % g != 0 || f % g != 0 {
+            bail!("dims not aligned to group {g}");
+        }
+        let mut layers = Vec::with_capacity(meta.n_layers);
+        let mut experts = Vec::with_capacity(meta.n_layers);
+        for l in 0..meta.n_layers {
+            let t = |name: &str| -> Result<Vec<f32>> {
+                Ok(blob.f32(&format!("layer{l}.{name}"))?.to_vec())
+            };
+            layers.push(LayerWeights {
+                ln1: t("ln1")?,
+                wq: t("wq")?,
+                wk: t("wk")?,
+                wv: t("wv")?,
+                wo: t("wo")?,
+                ln2: t("ln2")?,
+                wg: t("wg")?,
+            });
+            // expert tensors are [E, din, dout] row-major
+            let w1 = blob.f32(&format!("layer{l}.w1"))?;
+            let w3 = blob.f32(&format!("layer{l}.w3"))?;
+            let w2 = blob.f32(&format!("layer{l}.w2"))?;
+            if w1.len() != e * d * f || w2.len() != e * f * d {
+                bail!("layer {l} expert tensor size mismatch");
+            }
+            let mut row = Vec::with_capacity(e);
+            for ei in 0..e {
+                let s1 = &w1[ei * d * f..(ei + 1) * d * f];
+                let s3 = &w3[ei * d * f..(ei + 1) * d * f];
+                let s2 = &w2[ei * f * d..(ei + 1) * f * d];
+                row.push(ExpertWeights {
+                    fp: [s1.to_vec(), s3.to_vec(), s2.to_vec()],
+                    planes: [
+                        QuantPlanes::build(s1, d, f, mat, g),
+                        QuantPlanes::build(s3, d, f, mat, g),
+                        QuantPlanes::build(s2, f, d, mat, g),
+                    ],
+                });
+            }
+            experts.push(row);
+        }
+        Ok(WeightStore {
+            meta,
+            mat,
+            embed: blob.f32("embed")?.to_vec(),
+            pos: blob.f32("pos")?.to_vec(),
+            ln_f: blob.f32("ln_f")?.to_vec(),
+            w_out: blob.f32("w_out")?.to_vec(),
+            layers,
+            experts,
+        })
+    }
+
+    pub fn desc(&self) -> ModelDesc {
+        self.meta.to_desc()
+    }
+
+    /// Re-quantize one expert's three matrices under an arbitrary scheme
+    /// (Table 1 sweeps). Returns per-matrix (codes, scale, zp) usable as
+    /// `expert_low` operands (signed codes reproduce symmetric dequant).
+    pub fn requantize_expert(
+        &self,
+        layer: usize,
+        expert: usize,
+        scheme: Table1Scheme,
+        bits_high: u32,
+        bits_low: u32,
+    ) -> [QuantTensor; 3] {
+        let ew = &self.experts[layer][expert];
+        let g = self.meta.group;
+        let dims = [
+            (self.meta.d_model, self.meta.d_ff),
+            (self.meta.d_model, self.meta.d_ff),
+            (self.meta.d_ff, self.meta.d_model),
+        ];
+        std::array::from_fn(|i| {
+            let (r, c) = dims[i];
+            let w = &ew.fp[i];
+            match scheme {
+                Table1Scheme::BaseAsym { low } => {
+                    quant::quantize_asym(w, r, c, if low { bits_low } else { bits_high }, g)
+                }
+                Table1Scheme::BaseSym { low } => {
+                    quant::quantize_sym(w, r, c, if low { bits_low } else { bits_high }, g)
+                }
+                Table1Scheme::TruncSym => {
+                    let t = quant::quantize_sym(w, r, c, bits_high, g);
+                    quant::truncate_sym(&t, bits_low)
+                }
+                Table1Scheme::TruncAsymNaive => {
+                    let t = quant::quantize_asym(w, r, c, bits_high, g);
+                    quant::truncate_naive_asym(&t, bits_low)
+                }
+                Table1Scheme::Amat => {
+                    let t = quant::quantize_asym(w, r, c, bits_high, g);
+                    quant::truncate_amat(&t, bits_low)
+                }
+            }
+        })
+    }
+}
+
+/// Table 1 quantization schemes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Table1Scheme {
+    /// Independent quantization at high or low bits.
+    BaseAsym { low: bool },
+    BaseSym { low: bool },
+    /// Truncation baselines.
+    TruncSym,
+    TruncAsymNaive,
+    /// The paper's scheme.
+    Amat,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Synthesize a minimal in-memory blob for store tests.
+    pub fn fake_blob(meta: &ModelMeta, seed: u64) -> Blob {
+        use super::super::blob::Tensor;
+        let mut rng = Rng::new(seed);
+        let mut blob = Blob::default();
+        let mut put = |name: String, shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.gauss() as f32 * 0.1).collect();
+            blob.tensors.insert(name, Tensor::F32 { shape, data });
+        };
+        let (d, f, e, v, s) = (meta.d_model, meta.d_ff, meta.n_experts, meta.vocab, meta.max_seq);
+        put("embed".into(), vec![v, d]);
+        put("pos".into(), vec![s, d]);
+        put("ln_f".into(), vec![d]);
+        put("w_out".into(), vec![d, v]);
+        for l in 0..meta.n_layers {
+            for (n, sh) in [
+                ("ln1", vec![d]),
+                ("wq", vec![d, d]),
+                ("wk", vec![d, d]),
+                ("wv", vec![d, d]),
+                ("wo", vec![d, d]),
+                ("ln2", vec![d]),
+                ("wg", vec![d, e]),
+                ("w1", vec![e, d, f]),
+                ("w3", vec![e, d, f]),
+                ("w2", vec![e, f, d]),
+            ] {
+                put(format!("layer{l}.{n}"), sh);
+            }
+        }
+        blob
+    }
+
+    pub fn small_meta() -> ModelMeta {
+        ModelMeta {
+            vocab: 32,
+            d_model: 64,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 32,
+            n_experts: 4,
+            top_k: 2,
+            d_ff: 64,
+            max_seq: 32,
+            group: 32,
+        }
+    }
+
+    #[test]
+    fn store_builds_planes() {
+        let meta = small_meta();
+        let blob = fake_blob(&meta, 1);
+        let ws = WeightStore::from_blob(&blob, meta, MatConfig::MAT84).unwrap();
+        assert_eq!(ws.experts.len(), 2);
+        assert_eq!(ws.experts[0].len(), 4);
+        let p = &ws.experts[0][0].planes[0];
+        assert_eq!(p.msb.len(), 64 * 64);
+        assert!(p.msb.iter().all(|&m| (0..16).contains(&m)));
+        assert!(p.lsb.iter().all(|&l| (0..16).contains(&l)));
+        // merged planes dequantize close to fp master
+        let merged = quant::merge_planes(&p.msb, &p.lsb, 4);
+        let t = QuantTensor {
+            q: merged,
+            scale: p.scale_hi.clone(),
+            zp: p.zp_hi.clone(),
+            rows: 64,
+            cols: 64,
+            bits: 8,
+            group: 32,
+            symmetric: false,
+        };
+        let dq = quant::dequantize(&t);
+        let w = &ws.experts[0][0].fp[0];
+        let maxerr = dq
+            .iter()
+            .zip(w)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(maxerr < 0.02, "maxerr {maxerr}");
+    }
+
+    #[test]
+    fn amat_low_params_relate_to_high() {
+        let meta = small_meta();
+        let blob = fake_blob(&meta, 2);
+        let ws = WeightStore::from_blob(&blob, meta, MatConfig::MAT63).unwrap();
+        let p = &ws.experts[1][2].planes[1];
+        for (lo, hi) in p.scale_lo.iter().zip(&p.scale_hi) {
+            assert!((lo - hi * 8.0).abs() < 1e-6); // shift 3 -> x8
+        }
+        for (lo, hi) in p.zp_lo.iter().zip(&p.zp_hi) {
+            assert_eq!(*lo, hi >> 3);
+        }
+    }
+
+    #[test]
+    fn packed_sizes_smaller_than_fp() {
+        let meta = small_meta();
+        let blob = fake_blob(&meta, 3);
+        let ws = WeightStore::from_blob(&blob, meta, MatConfig::MAT84).unwrap();
+        let e = &ws.experts[0][0];
+        let fp_bytes: usize = e.fp.iter().map(|w| w.len() * 4).sum();
+        assert!(e.msb_bytes() + e.lsb_bytes() < fp_bytes as u64 / 3);
+        assert!(e.msb_bytes() > e.lsb_bytes()); // MSB carries metadata
+    }
+
+    #[test]
+    fn requantize_schemes_order_as_table1() {
+        let meta = small_meta();
+        let blob = fake_blob(&meta, 4);
+        let ws = WeightStore::from_blob(&blob, meta, MatConfig::MAT84).unwrap();
+        let w = &ws.experts[0][1].fp[0];
+        let amat = ws.requantize_expert(0, 1, Table1Scheme::Amat, 8, 4);
+        let naive = ws.requantize_expert(0, 1, Table1Scheme::TruncAsymNaive, 8, 4);
+        let symt = ws.requantize_expert(0, 1, Table1Scheme::TruncSym, 8, 4);
+        let e_amat = quant::mse(&amat[0], w);
+        let e_naive = quant::mse(&naive[0], w);
+        let e_symt = quant::mse(&symt[0], w);
+        assert!(e_amat < e_naive && e_amat < e_symt);
+    }
+}

@@ -1,0 +1,59 @@
+//! Quantization layer: AMAT (asymmetric Matryoshka) + bit-plane packing.
+//!
+//! Mirrors `python/compile/quant.py` bit-for-bit (cross-validated against
+//! `artifacts/golden_quant.bin` in `tests/golden_quant.rs`).
+
+pub mod amat;
+pub mod packing;
+
+pub use amat::{
+    dequantize, merge_planes, mse, quantize_asym, quantize_sym, split_planes,
+    truncate_amat, truncate_naive_asym, truncate_sym, QuantTensor,
+};
+pub use packing::{pack_bits, packed_len, unpack_bits};
+
+/// A MAT(h,l) Matryoshka bit configuration (paper Table 1: MAT42/63/84).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatConfig {
+    pub high_bits: u32,
+    pub low_bits: u32,
+}
+
+impl MatConfig {
+    pub const MAT42: MatConfig = MatConfig { high_bits: 4, low_bits: 2 };
+    pub const MAT63: MatConfig = MatConfig { high_bits: 6, low_bits: 3 };
+    pub const MAT84: MatConfig = MatConfig { high_bits: 8, low_bits: 4 };
+
+    pub fn shift(&self) -> u32 {
+        self.high_bits - self.low_bits
+    }
+
+    pub fn name(&self) -> String {
+        format!("MAT{}{}", self.high_bits, self.low_bits)
+    }
+
+    pub fn parse(s: &str) -> Option<MatConfig> {
+        match s.to_ascii_lowercase().as_str() {
+            "mat42" => Some(Self::MAT42),
+            "mat63" => Some(Self::MAT63),
+            "mat84" => Some(Self::MAT84),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [MatConfig; 3] {
+        [Self::MAT42, Self::MAT63, Self::MAT84]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_parsing() {
+        assert_eq!(MatConfig::parse("MAT84"), Some(MatConfig::MAT84));
+        assert_eq!(MatConfig::parse("mat42").unwrap().shift(), 2);
+        assert!(MatConfig::parse("mat99").is_none());
+    }
+}

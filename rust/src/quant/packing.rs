@@ -1,0 +1,108 @@
+//! Tight bit-plane packing — the cache stores slices at their *logical*
+//! size (a 4-bit MSB plane really occupies 4 bits/weight), so byte
+//! accounting in `cache/` is real, not simulated.
+//!
+//! Little-endian bit order, mirroring `python/compile/quant.py::pack_bits`.
+
+/// Pack non-negative codes (< 2^bits) into a dense little-endian bitstream.
+pub fn pack_bits(codes: &[i32], bits: u32) -> Vec<u8> {
+    assert!((1..=16).contains(&bits), "bits must be 1..=16");
+    let mask = (1u64 << bits) - 1;
+    let total_bits = codes.len() as u64 * bits as u64;
+    let mut out = vec![0u8; total_bits.div_ceil(8) as usize];
+    let mut pos: u64 = 0;
+    for &c in codes {
+        debug_assert!(c >= 0 && (c as u64) <= mask, "code {c} out of range");
+        let v = c as u64 & mask;
+        let byte = (pos >> 3) as usize;
+        let off = (pos & 7) as u32;
+        // a code spans at most 3 bytes for bits<=16
+        out[byte] |= (v << off) as u8;
+        if off + bits > 8 {
+            out[byte + 1] |= (v >> (8 - off)) as u8;
+        }
+        if off + bits > 16 {
+            out[byte + 2] |= (v >> (16 - off)) as u8;
+        }
+        pos += bits as u64;
+    }
+    out
+}
+
+/// Inverse of `pack_bits`.
+pub fn unpack_bits(packed: &[u8], bits: u32, count: usize) -> Vec<i32> {
+    assert!((1..=16).contains(&bits));
+    let mask = (1u64 << bits) - 1;
+    let mut out = Vec::with_capacity(count);
+    let mut pos: u64 = 0;
+    for _ in 0..count {
+        let byte = (pos >> 3) as usize;
+        let off = (pos & 7) as u32;
+        let mut v = (packed[byte] as u64) >> off;
+        if off + bits > 8 {
+            v |= (packed[byte + 1] as u64) << (8 - off);
+        }
+        if off + bits > 16 {
+            v |= (packed[byte + 2] as u64) << (16 - off);
+        }
+        out.push((v & mask) as i32);
+        pos += bits as u64;
+    }
+    out
+}
+
+/// Packed size in bytes for `count` codes of `bits` bits.
+pub fn packed_len(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        check(
+            "pack-roundtrip",
+            100,
+            0xBEEF,
+            |r| {
+                let bits = r.range(1, 13) as u32;
+                let n = r.range(1, 400);
+                let codes: Vec<i32> =
+                    (0..n).map(|_| r.below(1usize << bits) as i32).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let packed = pack_bits(codes, *bits);
+                if packed.len() != packed_len(codes.len(), *bits) {
+                    return Err("packed length mismatch".into());
+                }
+                let back = unpack_bits(&packed, *bits, codes.len());
+                if &back != codes {
+                    return Err("roundtrip mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn matches_python_layout() {
+        // python: pack_bits([1,2,3], 4) -> bytes [0x21, 0x03]
+        assert_eq!(pack_bits(&[1, 2, 3], 4), vec![0x21, 0x03]);
+        // 2-bit: [3,0,1,2] -> 0b10_01_00_11 = 0x93
+        assert_eq!(pack_bits(&[3, 0, 1, 2], 2), vec![0x93]);
+    }
+
+    #[test]
+    fn cross_byte_boundary() {
+        let mut r = Rng::new(5);
+        let codes: Vec<i32> = (0..777).map(|_| r.below(8) as i32).collect();
+        let p = pack_bits(&codes, 3);
+        assert_eq!(p.len(), (777 * 3 + 7) / 8);
+        assert_eq!(unpack_bits(&p, 3, 777), codes);
+    }
+}

@@ -1,0 +1,202 @@
+//! Miss-rate constraint controller (paper Fig 1(b), §6.1-3).
+//!
+//! The deployment regime is *miss-rate-constrained*: Flash traffic per
+//! decode step must stay under a budget or latency/energy explode. The
+//! controller is a byte-denominated leaky bucket:
+//!
+//! * every expert activation accrues `constraint × unit_bytes` of credit,
+//!   where `unit_bytes` is the size of one **high-bit expert** — so the
+//!   measured quantity is exactly the paper's "high-bit-normalized miss
+//!   rate" (a 4-bit MSB fetch costs half a high-bit miss);
+//! * a fetch of `b` bytes is admitted iff `credit >= b` and then deducts;
+//! * the constraint activates only after the first `warmup_steps` decode
+//!   steps (cold-start grace window, §6.1-3); prefill is never constrained
+//!   (prefill streams the full expert set by design).
+
+#[derive(Clone, Debug)]
+pub struct MissBudget {
+    /// Target high-bit-normalized miss rate (e.g. 0.05). >= 1.0 disables.
+    pub constraint: f64,
+    /// Decode steps before the constraint activates.
+    pub warmup_steps: u64,
+    /// Bytes of one high-bit expert (the normalization unit).
+    pub unit_bytes: u64,
+    credit: f64,
+    decode_step: u64,
+    pub accesses: u64,
+    pub fetched_bytes: u64,
+    pub denied: u64,
+}
+
+impl MissBudget {
+    pub fn new(constraint: f64, unit_bytes: u64) -> Self {
+        MissBudget {
+            constraint,
+            warmup_steps: 10,
+            unit_bytes,
+            credit: 0.0,
+            decode_step: 0,
+            accesses: 0,
+            fetched_bytes: 0,
+            denied: 0,
+        }
+    }
+
+    pub fn unconstrained(unit_bytes: u64) -> Self {
+        Self::new(f64::INFINITY, unit_bytes)
+    }
+
+    /// Advance to the next decode step.
+    pub fn tick(&mut self) {
+        self.decode_step += 1;
+    }
+
+    pub fn active(&self) -> bool {
+        self.constraint.is_finite() && self.decode_step >= self.warmup_steps
+    }
+
+    /// Register one expert activation (accrues credit).
+    pub fn on_access(&mut self) {
+        self.accesses += 1;
+        if self.constraint.is_finite() {
+            self.credit += self.constraint * self.unit_bytes as f64;
+            // bound accumulation: at most one full high-bit expert of slack,
+            // so a long hit streak can't bankroll a burst of misses far
+            // beyond the steady-state rate.
+            self.credit = self.credit.min(self.unit_bytes as f64);
+        }
+    }
+
+    /// Low-priority fetch (LSB slices): admitted only when a full
+    /// high-bit expert of credit remains as headroom AFTER the fetch —
+    /// precision upgrades never starve MSB coverage (§4.1: LSB slices
+    /// hold the lowest priority).
+    pub fn try_fetch_low_priority(&mut self, bytes: u64) -> bool {
+        if !self.active() {
+            self.fetched_bytes += bytes;
+            return true;
+        }
+        if self.credit >= bytes as f64 + 0.5 * self.unit_bytes as f64 {
+            self.credit -= bytes as f64;
+            self.fetched_bytes += bytes;
+            true
+        } else {
+            self.denied += 1;
+            false
+        }
+    }
+
+    /// Ask to fetch `bytes` from Flash. Deducts and returns true if allowed.
+    pub fn try_fetch(&mut self, bytes: u64) -> bool {
+        if !self.active() {
+            self.fetched_bytes += bytes;
+            return true;
+        }
+        if self.credit >= bytes as f64 {
+            self.credit -= bytes as f64;
+            self.fetched_bytes += bytes;
+            true
+        } else {
+            self.denied += 1;
+            false
+        }
+    }
+
+    /// Measured high-bit-normalized miss rate so far.
+    pub fn measured_miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.fetched_bytes as f64 / (self.accesses as f64 * self.unit_bytes as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_window_is_unconstrained() {
+        let mut b = MissBudget::new(0.01, 1000);
+        for _ in 0..9 {
+            b.tick();
+        }
+        assert!(!b.active());
+        assert!(b.try_fetch(10_000)); // anything goes during warmup
+        b.tick();
+        assert!(b.active());
+    }
+
+    #[test]
+    fn steady_state_rate_respects_constraint() {
+        let unit = 1000u64;
+        let mut b = MissBudget::new(0.05, unit);
+        for _ in 0..10 {
+            b.tick();
+        }
+        let mut fetched = 0u64;
+        let accesses = 10_000;
+        for _ in 0..accesses {
+            b.on_access();
+            // always try to fetch a full high-bit expert
+            if b.try_fetch(unit) {
+                fetched += unit;
+            }
+        }
+        let rate = fetched as f64 / (accesses as f64 * unit as f64);
+        assert!(rate <= 0.055, "rate {rate}");
+        assert!(rate >= 0.040, "rate {rate} suspiciously low");
+    }
+
+    #[test]
+    fn slice_fetches_cost_proportionally() {
+        let unit = 1000u64;
+        let mut b = MissBudget::new(0.1, unit);
+        for _ in 0..10 {
+            b.tick();
+        }
+        // MSB-only fetches at half the unit: twice as many fit the budget
+        let mut count = 0;
+        for _ in 0..1000 {
+            b.on_access();
+            if b.try_fetch(unit / 2) {
+                count += 1;
+            }
+        }
+        assert!((150..=250).contains(&count), "count {count}");
+        assert!(b.measured_miss_rate() <= 0.11);
+    }
+
+    #[test]
+    fn infinite_constraint_always_allows() {
+        let mut b = MissBudget::unconstrained(10);
+        for _ in 0..100 {
+            b.tick();
+            b.on_access();
+            assert!(b.try_fetch(1 << 20));
+        }
+    }
+
+    #[test]
+    fn credit_cap_limits_bursts() {
+        let unit = 1000u64;
+        let mut b = MissBudget::new(0.5, unit);
+        for _ in 0..10 {
+            b.tick();
+        }
+        // accrue lots of credit via hits
+        for _ in 0..1000 {
+            b.on_access();
+        }
+        // burst: only ~1 unit of credit may have accumulated
+        let mut burst = 0;
+        while b.try_fetch(unit) {
+            burst += 1;
+            if burst > 10 {
+                break;
+            }
+        }
+        assert!(burst <= 1, "burst {burst}");
+    }
+}

@@ -1,0 +1,127 @@
+//! DBSC precision assignment (paper §4.1).
+//!
+//! Gating distributions exhibit *single-head sharpness* [31]: the number of
+//! truly critical experts fluctuates token-to-token (typically 0–2). A
+//! fixed "top-k at high precision" wastes high-bit bandwidth; DBSC instead
+//! marks an expert critical iff its raw probability is within a factor θ of
+//! the token's max probability, and only critical experts request the LSB
+//! slice (b_high execution). Everyone else runs from the MSB plane alone.
+
+use super::{Precision, Routed};
+
+#[derive(Clone, Copy, Debug)]
+pub struct DbscConfig {
+    /// Single-head threshold θ: expert critical iff prob >= θ * max_prob.
+    pub theta: f64,
+    /// Hard cap on critical experts per token (paper observes 0–2).
+    pub max_critical: usize,
+}
+
+impl Default for DbscConfig {
+    fn default() -> Self {
+        DbscConfig { theta: 0.5, max_critical: 2 }
+    }
+}
+
+/// Assign per-expert precision in place. Returns the number of critical
+/// (High) experts.
+pub fn split_precision(routed: &mut [Routed], cfg: DbscConfig) -> usize {
+    let pmax = routed
+        .iter()
+        .map(|r| r.prob)
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !pmax.is_finite() || pmax <= 0.0 {
+        for r in routed.iter_mut() {
+            r.precision = Precision::Low;
+        }
+        return 0;
+    }
+    // candidates in descending prob order, capped
+    let mut order: Vec<usize> = (0..routed.len()).collect();
+    order.sort_by(|&a, &b| {
+        routed[b]
+            .prob
+            .partial_cmp(&routed[a].prob)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut n_critical = 0;
+    for (rank, &i) in order.iter().enumerate() {
+        let critical = routed[i].prob >= cfg.theta * pmax && rank < cfg.max_critical;
+        routed[i].precision = if critical { Precision::High } else { Precision::Low };
+        if critical {
+            n_critical += 1;
+        }
+    }
+    n_critical
+}
+
+/// Uniform precision assignment (non-DBSC baselines).
+pub fn uniform_precision(routed: &mut [Routed], p: Precision) {
+    for r in routed.iter_mut() {
+        r.precision = p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routed(probs: &[f64]) -> Vec<Routed> {
+        probs
+            .iter()
+            .map(|&p| Routed { expert: 0, gate: p, prob: p, precision: Precision::Low })
+            .collect()
+    }
+
+    #[test]
+    fn sharp_head_gets_single_high() {
+        // one dominant expert: only it is critical
+        let mut r = routed(&[0.7, 0.2, 0.1]);
+        let n = split_precision(&mut r, DbscConfig::default());
+        assert_eq!(n, 1);
+        assert_eq!(r[0].precision, Precision::High);
+        assert_eq!(r[1].precision, Precision::Low);
+    }
+
+    #[test]
+    fn flat_head_gets_two_high_capped() {
+        let mut r = routed(&[0.3, 0.28, 0.26, 0.16]);
+        let n = split_precision(&mut r, DbscConfig::default());
+        // 3 experts pass θ·max but cap = 2
+        assert_eq!(n, 2);
+        assert_eq!(r[0].precision, Precision::High);
+        assert_eq!(r[1].precision, Precision::High);
+        assert_eq!(r[2].precision, Precision::Low);
+    }
+
+    #[test]
+    fn theta_one_means_only_exact_max() {
+        let mut r = routed(&[0.5, 0.3, 0.2]);
+        let n = split_precision(&mut r, DbscConfig { theta: 1.0, max_critical: 2 });
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn order_independent_of_input_position() {
+        // max prob NOT in slot 0
+        let mut r = routed(&[0.1, 0.6, 0.3]);
+        split_precision(&mut r, DbscConfig::default());
+        assert_eq!(r[1].precision, Precision::High);
+        assert_eq!(r[0].precision, Precision::Low);
+    }
+
+    #[test]
+    fn degenerate_all_zero() {
+        let mut r = routed(&[0.0, 0.0]);
+        let n = split_precision(&mut r, DbscConfig::default());
+        assert_eq!(n, 0);
+        assert!(r.iter().all(|x| x.precision == Precision::Low));
+    }
+
+    #[test]
+    fn uniform_assignment() {
+        let mut r = routed(&[0.6, 0.4]);
+        uniform_precision(&mut r, Precision::Full);
+        assert!(r.iter().all(|x| x.precision == Precision::Full));
+    }
+}

@@ -1,0 +1,81 @@
+//! Cache-aware routing (paper §2.1, §4.1).
+//!
+//! The router sits between the gate (softmax scores) and the expert
+//! executor. It owns three decisions per (token, layer):
+//!
+//! 1. **Which experts run** — `policies`: plain top-k, Cumsum [14],
+//!    Cache-Prior [14] (score boosting toward cached experts);
+//! 2. **At what precision** — `dbsc`: the single-head-threshold dynamic
+//!    precision split (critical experts get MSB+LSB, the rest MSB only);
+//! 3. **Whether a miss may fetch** — `constraint`: the byte-denominated
+//!    miss-rate budget controller (activates after a 10-step decode
+//!    warmup window, §6.1-3).
+//!
+//! `access` combines them against the `SliceCache` and reports exactly
+//! what the memory hierarchy must do (flash fetches, DRAM reads, drops,
+//! degradations) — consumed identically by the trace simulator and the
+//! real PJRT engine.
+
+pub mod access;
+pub mod constraint;
+pub mod dbsc;
+pub mod policies;
+
+pub use access::{access_layer, AccessOutcome, ExpertExec};
+pub use constraint::MissBudget;
+pub use dbsc::{split_precision, DbscConfig};
+pub use policies::{select_experts, Policy};
+
+/// Precision at which an expert executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// b_high — requires MSB + LSB slices.
+    High,
+    /// b_low — MSB slice only (the AMAT low-bit quantizer).
+    Low,
+    /// fp32 reference (Base configurations / unquantized baselines).
+    Full,
+}
+
+/// One expert selected by the routing policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Routed {
+    pub expert: usize,
+    /// Renormalized gate weight used to combine expert outputs.
+    pub gate: f64,
+    /// Raw (pre-boost) probability — used for criticality decisions.
+    pub prob: f64,
+    pub precision: Precision,
+}
+
+/// Full router configuration for one run.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    pub policy: Policy,
+    pub top_k: usize,
+    /// Precision split: None = uniform `uniform_precision` for all experts.
+    pub dbsc: Option<DbscConfig>,
+    pub uniform_precision: Precision,
+}
+
+impl RouterConfig {
+    /// Paper's high-bit Cache-Prior baseline.
+    pub fn cache_prior_high(top_k: usize) -> Self {
+        RouterConfig {
+            policy: Policy::CachePrior { boost: 2.0 },
+            top_k,
+            dbsc: None,
+            uniform_precision: Precision::High,
+        }
+    }
+
+    /// The proposed configuration: Cache-Prior routing + DBSC precision.
+    pub fn dbsc(top_k: usize) -> Self {
+        RouterConfig {
+            policy: Policy::CachePrior { boost: 2.0 },
+            top_k,
+            dbsc: Some(DbscConfig::default()),
+            uniform_precision: Precision::Low,
+        }
+    }
+}

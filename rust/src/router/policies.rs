@@ -1,0 +1,173 @@
+//! Expert-selection policies (paper §2.1).
+//!
+//! * `TopK` — vanilla gating: highest-probability experts, locality-blind.
+//! * `Cumsum` [14] — cumulative-threshold candidate set (experts whose
+//!   probabilities sum to τ), then cached candidates are preferred; models
+//!   the "locality-insensitive, accuracy-first" end of the spectrum.
+//! * `CachePrior` [14] — the SOTA cache-aware baseline: gating scores of
+//!   DRAM-resident experts are multiplicatively boosted before top-k,
+//!   pulling selection toward the cache while keeping relative order among
+//!   cached/uncached groups.
+//!
+//! Selection returns renormalized gate weights over the chosen experts
+//! (matching the model's top-k renormalization) but keeps the raw
+//! probabilities for DBSC's criticality decision.
+
+use super::{Precision, Routed};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    TopK,
+    /// Select the smallest prefix of descending probs whose mass reaches
+    /// tau — VARIABLE expert count (often > top_k on flat tokens), which is
+    /// exactly why the paper finds it "prohibitively expensive".
+    Cumsum { tau: f64 },
+    /// Multiply cached experts' scores by `boost` (>= 1) before top-k.
+    CachePrior { boost: f64 },
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::TopK => "topk",
+            Policy::Cumsum { .. } => "cumsum",
+            Policy::CachePrior { .. } => "cache-prior",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "topk" => Some(Policy::TopK),
+            "cumsum" => Some(Policy::Cumsum { tau: 0.9 }),
+            "cache-prior" | "cacheprior" => Some(Policy::CachePrior { boost: 2.0 }),
+            _ => None,
+        }
+    }
+}
+
+fn argsort_desc(xs: &[f64]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Select `top_k` experts from `probs` under `policy`.
+/// `cached(e)` reports whether expert e's MSB slice is DRAM-resident.
+pub fn select_experts<F: Fn(usize) -> bool>(
+    policy: Policy,
+    probs: &[f64],
+    top_k: usize,
+    cached: F,
+) -> Vec<Routed> {
+    let k = top_k.min(probs.len());
+    let chosen: Vec<usize> = match policy {
+        Policy::TopK => argsort_desc(probs).into_iter().take(k).collect(),
+        Policy::CachePrior { boost } => {
+            let boosted: Vec<f64> = probs
+                .iter()
+                .enumerate()
+                .map(|(e, &p)| if cached(e) { p * boost } else { p })
+                .collect();
+            argsort_desc(&boosted).into_iter().take(k).collect()
+        }
+        Policy::Cumsum { tau } => {
+            // variable-count prefix: keep adding experts until the selected
+            // mass reaches tau (bounded at 3k as a sanity cap). Cached
+            // candidates are taken first among equals via a stable
+            // cached-first ordering inside the prefix.
+            let order = argsort_desc(probs);
+            let mut sel = Vec::new();
+            let mut cum = 0.0;
+            for &e in &order {
+                if cum >= tau || sel.len() >= 3 * k {
+                    break;
+                }
+                cum += probs[e];
+                sel.push(e);
+            }
+            // prioritize cached members (fetch-order preference, [14])
+            sel.sort_by_key(|&e| !cached(e));
+            sel
+        }
+    };
+    let mass: f64 = chosen.iter().map(|&e| probs[e]).sum();
+    let mass = if mass <= 0.0 { 1.0 } else { mass };
+    chosen
+        .into_iter()
+        .map(|e| Routed {
+            expert: e,
+            gate: probs[e] / mass,
+            prob: probs[e],
+            precision: Precision::High, // assigned later by dbsc/uniform
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probs() -> Vec<f64> {
+        // experts 0..5 with steep descending distribution
+        vec![0.45, 0.25, 0.12, 0.08, 0.06, 0.04]
+    }
+
+    #[test]
+    fn topk_picks_highest() {
+        let r = select_experts(Policy::TopK, &probs(), 2, |_| false);
+        assert_eq!(r[0].expert, 0);
+        assert_eq!(r[1].expert, 1);
+        let gsum: f64 = r.iter().map(|x| x.gate).sum();
+        assert!((gsum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_prior_pulls_toward_cached() {
+        // expert 2 cached with boost 4: 0.12*4 = 0.48 > 0.45
+        let r = select_experts(Policy::CachePrior { boost: 4.0 }, &probs(), 2, |e| e == 2);
+        let experts: Vec<usize> = r.iter().map(|x| x.expert).collect();
+        assert!(experts.contains(&2));
+        assert!(experts.contains(&0));
+        // gates renormalize over RAW probs, not boosted ones
+        let total: f64 = r.iter().map(|x| x.gate).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_prior_with_boost_one_is_topk() {
+        let a = select_experts(Policy::CachePrior { boost: 1.0 }, &probs(), 3, |e| e == 5);
+        let b = select_experts(Policy::TopK, &probs(), 3, |_| false);
+        assert_eq!(
+            a.iter().map(|x| x.expert).collect::<Vec<_>>(),
+            b.iter().map(|x| x.expert).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn cumsum_selects_variable_count() {
+        // tau=0.9 needs experts 0,1,2,3 (0.45+0.25+0.12+0.08=0.90) — MORE
+        // than top_k=2: the expensive behavior the paper reports
+        let r = select_experts(Policy::Cumsum { tau: 0.89 }, &probs(), 2, |_| false);
+        assert_eq!(r.len(), 4);
+        // sharp tau selects fewer
+        let r2 = select_experts(Policy::Cumsum { tau: 0.4 }, &probs(), 2, |_| false);
+        assert_eq!(r2.len(), 1);
+    }
+
+    #[test]
+    fn cumsum_orders_cached_first() {
+        let r = select_experts(Policy::Cumsum { tau: 0.89 }, &probs(), 2, |e| e == 3);
+        let experts: Vec<usize> = r.iter().map(|x| x.expert).collect();
+        assert_eq!(experts[0], 3); // cached candidate first
+        assert_eq!(experts.len(), 4);
+        // expert 5 outside the prefix is never selected even if cached
+        let r2 = select_experts(Policy::Cumsum { tau: 0.5 }, &probs(), 2, |e| e == 5);
+        assert!(r2.iter().all(|x| x.expert != 5));
+    }
+
+    #[test]
+    fn k_larger_than_experts_is_clamped() {
+        let r = select_experts(Policy::TopK, &[0.6, 0.4], 5, |_| false);
+        assert_eq!(r.len(), 2);
+    }
+}

@@ -1,0 +1,96 @@
+//! Typed execution helpers over PJRT buffers.
+//!
+//! `DeviceTensor` pairs a device-resident buffer with its host shape;
+//! `Executor` wraps one compiled entry point and runs it over device
+//! buffers (weights stay resident; only activations are re-uploaded).
+
+use anyhow::{bail, Context, Result};
+
+use super::Runtime;
+
+/// A device-resident tensor (PJRT buffer + shape bookkeeping).
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    pub dims: Vec<usize>,
+}
+
+impl DeviceTensor {
+    pub fn from_f32(rt: &Runtime, data: &[f32], dims: &[usize]) -> Result<DeviceTensor> {
+        let buffer = rt
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload f32 tensor")?;
+        Ok(DeviceTensor { buffer, dims: dims.to_vec() })
+    }
+
+    pub fn from_i32(rt: &Runtime, data: &[i32], dims: &[usize]) -> Result<DeviceTensor> {
+        let buffer = rt
+            .client
+            .buffer_from_host_buffer(data, dims, None)
+            .context("upload i32 tensor")?;
+        Ok(DeviceTensor { buffer, dims: dims.to_vec() })
+    }
+
+    pub fn scalar_i32(rt: &Runtime, v: i32) -> Result<DeviceTensor> {
+        let buffer = rt
+            .client
+            .buffer_from_host_buffer(&[v], &[], None)
+            .context("upload i32 scalar")?;
+        Ok(DeviceTensor { buffer, dims: vec![] })
+    }
+
+    pub fn to_vec_f32(&self) -> Result<Vec<f32>> {
+        Ok(self.buffer.to_literal_sync()?.to_vec::<f32>()?)
+    }
+}
+
+/// One compiled entry point.
+pub struct Executor<'rt> {
+    rt: &'rt Runtime,
+    name: String,
+}
+
+impl<'rt> Executor<'rt> {
+    pub fn new(rt: &'rt Runtime, name: &str) -> Result<Executor<'rt>> {
+        rt.get(name)?; // validate now
+        Ok(Executor { rt, name: name.to_string() })
+    }
+
+    /// Execute over device buffers; returns the raw result buffers of the
+    /// default replica. All entry points are lowered with
+    /// `return_tuple=True`, so this is a single tuple buffer.
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let exe = self.rt.get(&self.name)?;
+        let mut rows = exe
+            .execute_b(args)
+            .with_context(|| format!("execute {}", self.name))?;
+        if rows.is_empty() || rows[0].is_empty() {
+            bail!("{}: empty execution result", self.name);
+        }
+        Ok(rows.swap_remove(0))
+    }
+
+    /// Execute and read the outputs back as host literals, decomposing the
+    /// result tuple into one literal per entry-point output.
+    pub fn run_literals(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.run(args)?;
+        if bufs.len() == 1 {
+            let lit = bufs[0]
+                .to_literal_sync()
+                .with_context(|| format!("readback {}", self.name))?;
+            // return_tuple=True => always a tuple (possibly a 1-tuple)
+            Ok(lit.to_tuple()?)
+        } else {
+            // some PJRT builds untuple at the buffer level already
+            bufs.iter().map(|b| Ok(b.to_literal_sync()?)).collect()
+        }
+    }
+
+    /// Execute and read back every output as an f32 host vector.
+    pub fn run_f32(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        self.run_literals(args)?
+            .iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}

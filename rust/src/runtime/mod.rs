@@ -1,0 +1,104 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts and executes them on
+//! the CPU PJRT client from the L3 hot path.
+//!
+//! One `Runtime` owns the client and a registry of compiled executables
+//! (one per entry point in `model_meta.json`). Weight operands are
+//! uploaded once as device-resident `PjRtBuffer`s and reused across calls
+//! (`execute_b`) — only activations move per step, which is what keeps the
+//! coordinator off the critical path (§Perf).
+
+pub mod executor;
+
+pub use executor::{DeviceTensor, Executor};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Entry-point names as emitted by `aot.py`.
+pub const ENTRY_POINTS: &[&str] = &[
+    "embed_prefill",
+    "embed_decode",
+    "attn_prefill",
+    "attn_decode",
+    "gate_prefill",
+    "gate_decode",
+    "logits_prefill",
+    "logits_decode",
+    "expert_fp_prefill",
+    "expert_fp_decode",
+    "expert_low_prefill",
+    "expert_low_decode",
+    "expert_high_s2_prefill",
+    "expert_high_s2_decode",
+    "expert_high_s3_prefill",
+    "expert_high_s3_decode",
+    "expert_high_s4_prefill",
+    "expert_high_s4_decode",
+];
+
+/// Compiled-executable registry over the artifacts directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client and compile every artifact in `names`
+    /// (use `ENTRY_POINTS` for all; compiling lazily is supported via
+    /// `ensure_compiled`).
+    pub fn load(artifacts_dir: &Path, names: &[&str]) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut rt = Runtime {
+            client,
+            executables: HashMap::new(),
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        };
+        for name in names {
+            rt.ensure_compiled(name)?;
+        }
+        Ok(rt)
+    }
+
+    /// Compile (idempotently) the artifact `<name>.hlo.txt`.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.executables
+            .get(name)
+            .with_context(|| format!("executable '{name}' not loaded"))
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.executables.keys().map(String::as_str).collect()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Read the artifact manifest (model_meta.json).
+    pub fn read_meta(artifacts_dir: &Path) -> Result<Json> {
+        let text = std::fs::read_to_string(artifacts_dir.join("model_meta.json"))
+            .context("read model_meta.json")?;
+        Json::parse(&text)
+    }
+}

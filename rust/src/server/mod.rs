@@ -1,0 +1,201 @@
+//! Single-batch request server (paper Fig 1(a): on-premises, one request
+//! at a time, the regime all three contributions target).
+//!
+//! No tokio in the offline vendor set, so this is a thread + mpsc design:
+//! the engine (PJRT client holds raw pointers and stays on one thread)
+//! lives inside the worker; clients submit `Request`s through a channel
+//! and receive `Response`s with latency/energy metrics. Backpressure is
+//! the bounded queue.
+
+use std::sync::mpsc;
+use std::thread;
+
+use anyhow::Result;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub decode_tokens: usize,
+}
+
+/// Completed response with serving metrics.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<u8>,
+    pub prefill_wall_s: f64,
+    pub decode_wall_s: f64,
+    pub decode_tokens: usize,
+    /// Simulated decode energy from the Fig 7 cost model.
+    pub decode_energy_j: f64,
+    pub miss_rate: f64,
+    /// Queueing delay before execution started.
+    pub queue_wall_s: f64,
+}
+
+impl Response {
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.decode_wall_s <= 0.0 {
+            0.0
+        } else {
+            self.decode_tokens as f64 / self.decode_wall_s
+        }
+    }
+}
+
+/// Anything that can serve one request (the PJRT engine in production, a
+/// mock in queueing tests).
+pub trait Backend {
+    fn serve(&mut self, req: &Request) -> Result<Response>;
+}
+
+/// Client handle to a running server.
+pub struct ServerHandle {
+    tx: Option<mpsc::SyncSender<(Request, std::time::Instant)>>,
+    rx: mpsc::Receiver<Result<Response>>,
+    worker: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Start the worker. `make_backend` runs ON the worker thread (the
+    /// engine is not Send). `queue_depth` bounds admission (backpressure).
+    pub fn start<F, B>(queue_depth: usize, make_backend: F) -> ServerHandle
+    where
+        F: FnOnce() -> Result<B> + Send + 'static,
+        B: Backend,
+    {
+        let (tx, rx_req) = mpsc::sync_channel::<(Request, std::time::Instant)>(queue_depth);
+        let (tx_resp, rx) = mpsc::channel();
+        let worker = thread::Builder::new()
+            .name("slicemoe-server".into())
+            .spawn(move || {
+                let mut backend = match make_backend() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = tx_resp.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok((req, enqueued)) = rx_req.recv() {
+                    let queued = enqueued.elapsed().as_secs_f64();
+                    let result = backend.serve(&req).map(|mut r| {
+                        r.queue_wall_s = queued;
+                        r
+                    });
+                    if tx_resp.send(result).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn server worker");
+        ServerHandle { tx: Some(tx), rx, worker: Some(worker) }
+    }
+
+    /// Submit a request (blocks when the queue is full — backpressure).
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("server closed")
+            .send((req, std::time::Instant::now()))
+            .map_err(|_| anyhow::anyhow!("server worker gone"))
+    }
+
+    /// Receive the next completed response (in submission order —
+    /// single-batch serving is FIFO).
+    pub fn recv(&self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker gone"))?
+    }
+
+    /// Close the queue and join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Latency percentile summary for a batch of responses.
+pub fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |p: f64| xs[((xs.len() - 1) as f64 * p).floor() as usize];
+    (pick(0.5), pick(0.9), pick(0.99))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct MockBackend {
+        delay_ms: u64,
+    }
+
+    impl Backend for MockBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            std::thread::sleep(std::time::Duration::from_millis(self.delay_ms));
+            Ok(Response {
+                id: req.id,
+                output: req.prompt.iter().rev().copied().collect(),
+                prefill_wall_s: 0.001,
+                decode_wall_s: 0.002,
+                decode_tokens: req.decode_tokens,
+                decode_energy_j: 0.1,
+                miss_rate: 0.01,
+                queue_wall_s: 0.0,
+            })
+        }
+    }
+
+    #[test]
+    fn serves_fifo() {
+        let h = ServerHandle::start(4, || Ok(MockBackend { delay_ms: 1 }));
+        for id in 0..5 {
+            h.submit(Request { id, prompt: vec![1, 2, 3], decode_tokens: 4 }).unwrap();
+        }
+        for id in 0..5 {
+            let r = h.recv().unwrap();
+            assert_eq!(r.id, id);
+            assert_eq!(r.output, vec![3, 2, 1]);
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn later_requests_accumulate_queue_delay() {
+        let h = ServerHandle::start(8, || Ok(MockBackend { delay_ms: 20 }));
+        for id in 0..3 {
+            h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).unwrap();
+        }
+        let r0 = h.recv().unwrap();
+        let r2 = {
+            let _ = h.recv().unwrap();
+            h.recv().unwrap()
+        };
+        assert!(r2.queue_wall_s > r0.queue_wall_s);
+        h.shutdown();
+    }
+
+    #[test]
+    fn percentile_math() {
+        let (p50, p90, p99) = percentiles((1..=100).map(|x| x as f64).collect());
+        assert_eq!(p50, 50.0);
+        assert_eq!(p90, 90.0);
+        assert_eq!(p99, 99.0);
+    }
+}

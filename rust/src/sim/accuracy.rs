@@ -1,0 +1,211 @@
+//! Task-accuracy proxy for full-geometry sweeps.
+//!
+//! We cannot run GSM8K through DeepSeek-V2-Lite on this substrate, so the
+//! simulator maps per-token routing damage to a task-accuracy estimate via
+//! an explicit, documented error model — and the model's *constants are
+//! calibrated against measured numbers from the tiny LM* served through the
+//! real quantized pipeline (see EXPERIMENTS.md §Calibration): relative PPL
+//! degradation of MAT84/63/42 low/high paths anchors `quant_err`, and
+//! drop/substitution penalties anchor on teacher-forced agreement when
+//! experts are masked.
+//!
+//! Damage per (token, layer):
+//! ```text
+//! D = Σ_exec gate_e · q_err(bits_e) · sens     (quantization noise)
+//!   + w_bias · (ideal_mass - realized_mass)    (routing bias: cache-aware
+//!                                               selection of lower-prob
+//!                                               experts, incl. denied-miss
+//!                                               substitutions)
+//!   + w_drop · dropped_raw_mass                (expert output lost outright)
+//! ```
+//! Accuracy = `base_acc · logistic((d50 - mean D) / slope)` — a saturating
+//! map: tiny damage ≈ base accuracy (high-bit plateau of Fig 8), large
+//! damage collapses toward zero (the high-bit cliff), intermediate damage
+//! gives the low-bit ceiling.
+
+use crate::router::Precision;
+
+/// Relative per-expert output error of G32 asymmetric quantization at a
+/// given bitwidth. Anchored on the tiny-LM measurements (quantization MSE
+/// roughly quarters per extra bit; see EXPERIMENTS.md §Calibration).
+pub fn quant_err(bits: u32) -> f64 {
+    match bits {
+        0..=2 => 0.26,
+        3 => 0.13,
+        4 => 0.062,
+        5 => 0.030,
+        6 => 0.015,
+        7 => 0.0075,
+        _ => 0.0038,
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct AccuracyModel {
+    /// Task accuracy of the fp/high-bit unconstrained model.
+    pub base_acc: f64,
+    /// Damage level at which accuracy halves.
+    pub d50: f64,
+    /// Logistic slope.
+    pub slope: f64,
+    /// Penalty weight for routing-bias mass (ideal - realized top-k mass).
+    pub w_bias: f64,
+    /// Extra penalty for hard-dropped probability mass (on top of its
+    /// contribution to bias).
+    pub w_drop: f64,
+    /// Scale on quantization error (paper §6.1-4: Qwen1.5-MoE is less
+    /// precision-sensitive than DeepSeek-V2-Lite, which is why it tolerates
+    /// lower-bit experts at comparable accuracy).
+    pub precision_sensitivity: f64,
+}
+
+impl AccuracyModel {
+    /// DeepSeek-V2-Lite GSM8K-5shot anchor (paper Fig 8 top ~0.6).
+    pub fn deepseek() -> Self {
+        AccuracyModel { base_acc: 0.62, d50: 0.16, slope: 0.05, w_bias: 1.5, w_drop: 0.8, precision_sensitivity: 1.0 }
+    }
+
+    /// Qwen1.5-MoE-A2.7B anchor (less precision-sensitive, §6.1-4).
+    pub fn qwen() -> Self {
+        AccuracyModel { base_acc: 0.48, d50: 0.20, slope: 0.06, w_bias: 1.3, w_drop: 0.7, precision_sensitivity: 0.45 }
+    }
+
+    pub fn for_model(name: &str) -> Self {
+        if name.contains("qwen") {
+            Self::qwen()
+        } else {
+            Self::deepseek()
+        }
+    }
+
+    pub fn accuracy(&self, mean_damage: f64) -> f64 {
+        let x = (self.d50 - mean_damage) / self.slope;
+        self.base_acc / (1.0 + (-x).exp())
+    }
+}
+
+/// Accumulates routing damage over an episode.
+#[derive(Clone, Debug, Default)]
+pub struct DamageAccumulator {
+    total: f64,
+    token_layers: u64,
+}
+
+impl DamageAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one (token, layer) outcome. `bias_mass` is
+    /// `max(0, ideal_mass - realized_mass)` from the access controller;
+    /// `dropped_mass` is the raw-probability mass of hard drops.
+    pub fn record(
+        &mut self,
+        model: &AccuracyModel,
+        execs: &[(f64, Precision)],
+        high_bits: u32,
+        low_bits: u32,
+        bias_mass: f64,
+        dropped_mass: f64,
+    ) {
+        let mut d = 0.0;
+        for &(gate, prec) in execs {
+            let bits_err = match prec {
+                Precision::Full => 0.0,
+                Precision::High => quant_err(high_bits),
+                Precision::Low => quant_err(low_bits),
+            };
+            d += gate * bits_err * model.precision_sensitivity;
+        }
+        d += model.w_bias * bias_mass + model.w_drop * dropped_mass;
+        self.total += d;
+        self.token_layers += 1;
+    }
+
+    pub fn mean_damage(&self) -> f64 {
+        if self.token_layers == 0 {
+            0.0
+        } else {
+            self.total / self.token_layers as f64
+        }
+    }
+
+    pub fn accuracy(&self, model: &AccuracyModel) -> f64 {
+        model.accuracy(self.mean_damage())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_err_monotone_in_bits() {
+        for b in 2..8 {
+            assert!(quant_err(b) > quant_err(b + 1));
+        }
+    }
+
+    #[test]
+    fn clean_high_bit_run_keeps_base_accuracy() {
+        let m = AccuracyModel::deepseek();
+        let mut acc = DamageAccumulator::new();
+        for _ in 0..1000 {
+            acc.record(&m, &[(0.6, Precision::High), (0.4, Precision::High)], 8, 4, 0.0, 0.0);
+        }
+        let a = acc.accuracy(&m);
+        assert!(a > 0.95 * m.base_acc, "a={a}");
+    }
+
+    #[test]
+    fn uniform_low_bit_has_a_ceiling_below_base() {
+        let m = AccuracyModel::deepseek();
+        let mut hi = DamageAccumulator::new();
+        let mut lo = DamageAccumulator::new();
+        for _ in 0..1000 {
+            hi.record(&m, &[(1.0, Precision::High)], 8, 4, 0.0, 0.0);
+            lo.record(&m, &[(1.0, Precision::Low)], 8, 4, 0.0, 0.0);
+        }
+        assert!(lo.accuracy(&m) < hi.accuracy(&m));
+        // but the 4-bit low path is a usable ceiling (Fig 8 green curve)
+        assert!(lo.accuracy(&m) > 0.5 * m.base_acc);
+    }
+
+    #[test]
+    fn drops_collapse_accuracy() {
+        let m = AccuracyModel::deepseek();
+        let mut acc = DamageAccumulator::new();
+        for _ in 0..1000 {
+            // 30% of gate mass dropped every token-layer
+            acc.record(&m, &[(0.7, Precision::High)], 8, 4, 0.0, 0.3);
+        }
+        assert!(acc.accuracy(&m) < 0.2 * m.base_acc);
+    }
+
+    #[test]
+    fn bias_hurts_less_than_dropping() {
+        // same missing mass: as pure routing bias (substituted with a
+        // lesser expert) vs as a hard drop (bias + drop extra)
+        let m = AccuracyModel::deepseek();
+        let mut sub = DamageAccumulator::new();
+        let mut drop = DamageAccumulator::new();
+        for _ in 0..100 {
+            sub.record(&m, &[(0.7, Precision::High)], 8, 4, 0.3, 0.0);
+            drop.record(&m, &[(0.7, Precision::High)], 8, 4, 0.3, 0.3);
+        }
+        assert!(sub.accuracy(&m) > drop.accuracy(&m));
+    }
+
+    #[test]
+    fn dbsc_mix_beats_uniform_low_at_same_bits() {
+        // critical expert at high precision recovers most of the accuracy
+        let m = AccuracyModel::deepseek();
+        let mut mix = DamageAccumulator::new();
+        let mut low = DamageAccumulator::new();
+        for _ in 0..1000 {
+            mix.record(&m, &[(0.7, Precision::High), (0.3, Precision::Low)], 8, 4, 0.0, 0.0);
+            low.record(&m, &[(0.7, Precision::Low), (0.3, Precision::Low)], 8, 4, 0.0, 0.0);
+        }
+        assert!(mix.accuracy(&m) > low.accuracy(&m));
+    }
+}

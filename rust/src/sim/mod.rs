@@ -1,0 +1,13 @@
+//! Full-geometry simulation: synthetic gating traces, the episode runner
+//! (cache + routing + memory-hierarchy cost model at paper scale), the
+//! calibrated accuracy proxy, and GSM8K-shaped workload generation.
+
+pub mod accuracy;
+pub mod runner;
+pub mod trace;
+pub mod workload;
+
+pub use accuracy::{quant_err, AccuracyModel, DamageAccumulator};
+pub use runner::{run_episode, run_episodes_avg, EpisodeConfig, EpisodeReport};
+pub use trace::{correlation, selection_frequency, softmax, TraceGenerator, TraceParams};
+pub use workload::{generate as generate_workload, RequestSpec, WorkloadParams};

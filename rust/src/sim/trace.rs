@@ -1,0 +1,335 @@
+//! Synthetic gating-trace generator (full-geometry simulator input).
+//!
+//! The paper's three mechanisms all act on gating *statistics*, so the
+//! generator reproduces the statistics its motivation sections document:
+//!
+//! * **steep descending score distributions** (§4.1) — per-layer expert
+//!   affinities with Zipf-like popularity, softmax with per-layer
+//!   sharpness;
+//! * **single-head sharpness fluctuation** [31] — per-token temperature
+//!   jitter so the number of critical experts varies 0–2;
+//! * **weak locality from router regularization** (§1) — a per-token noise
+//!   component that dominates the static popularity (prefetch-hostile,
+//!   as the paper argues for modern MoEs);
+//! * **prefill→early-decode hotness correlation** (Fig 3) — decode-phase
+//!   affinities are a ρ-mix of the prefill affinities and fresh noise;
+//! * **layer-depth sharpening** [31] — deeper layers get sharper
+//!   distributions (wide usage early, focused usage late, §6.1-3).
+//!
+//! The same interface replays *real* traces recorded from the tiny-LM
+//! engine, which is how the generator is cross-validated (fig3 driver).
+
+use crate::memhier::Phase;
+use crate::model::descriptor::ModelDesc;
+use crate::util::rng::Rng;
+
+/// Statistical knobs (defaults follow the paper's qualitative description).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceParams {
+    /// Zipf exponent of static expert popularity (higher = steeper).
+    pub popularity_alpha: f64,
+    /// Weight of static popularity vs per-token noise in the logits.
+    /// Low values model strong router regularization (weak locality).
+    pub popularity_weight: f64,
+    /// Base softmax sharpness (inverse temperature).
+    pub sharpness: f64,
+    /// Extra sharpening per unit of relative depth (layer L-1 gets
+    /// `sharpness * (1 + depth_sharpen)`).
+    pub depth_sharpen: f64,
+    /// Std-dev of per-token log-sharpness jitter (single-head fluctuation).
+    pub sharpness_jitter: f64,
+    /// Correlation between prefill and decode affinity fields (Fig 3).
+    pub phase_correlation: f64,
+    /// Extra popularity weight in EARLY decode (Fig 3: experts hot in
+    /// prefill stay important in early decode; the effect decays as the
+    /// generated continuation drifts from the prompt context).
+    pub early_decode_boost: f64,
+    /// Decay constant (tokens) of the early-decode locality boost.
+    pub early_decode_tau: f64,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams {
+            popularity_alpha: 0.8,
+            popularity_weight: 0.32,
+            sharpness: 1.7,
+            depth_sharpen: 0.8,
+            sharpness_jitter: 0.45,
+            phase_correlation: 0.8,
+            early_decode_boost: 0.45,
+            early_decode_tau: 24.0,
+        }
+    }
+}
+
+/// Streaming gating-score source: one call per token, yielding per-layer
+/// probability vectors.
+pub struct TraceGenerator {
+    n_layers: usize,
+    n_experts: usize,
+    params: TraceParams,
+    /// Static affinity fields per layer: prefill and decode variants.
+    prefill_affinity: Vec<Vec<f64>>,
+    decode_affinity: Vec<Vec<f64>>,
+    rng: Rng,
+    scratch: Vec<f64>,
+    /// Decode tokens generated so far (drives early-decode locality decay).
+    decode_tokens: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(desc: &ModelDesc, params: TraceParams, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let (e, l) = (desc.n_experts, desc.n_layers);
+        // popularity magnitudes: zipf-ranked, randomly permuted per layer
+        let mut prefill_affinity = Vec::with_capacity(l);
+        let mut decode_affinity = Vec::with_capacity(l);
+        for _ in 0..l {
+            let mut ranks: Vec<usize> = (0..e).collect();
+            rng.shuffle(&mut ranks);
+            // zipf-shaped magnitudes, standardized to zero mean / unit std so
+            // the popularity_weight knob has a consistent meaning
+            let raw: Vec<f64> = (0..e)
+                .map(|i| 1.0 / ((ranks[i] + 1) as f64).powf(params.popularity_alpha))
+                .collect();
+            let mean = raw.iter().sum::<f64>() / e as f64;
+            let var = raw.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / e as f64;
+            let std = var.sqrt().max(1e-9);
+            let aff: Vec<f64> = raw.iter().map(|x| (x - mean) / std).collect();
+            // decode field: ρ-correlated mixture with fresh unit noise
+            let rho = params.phase_correlation;
+            let dec: Vec<f64> = aff
+                .iter()
+                .map(|&a| rho * a + (1.0 - rho * rho).sqrt() * rng.gauss())
+                .collect();
+            prefill_affinity.push(aff);
+            decode_affinity.push(dec);
+        }
+        TraceGenerator {
+            n_layers: l,
+            n_experts: e,
+            params,
+            prefill_affinity,
+            decode_affinity,
+            rng,
+            scratch: vec![0.0; e],
+            decode_tokens: 0,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Gate probabilities for the next token at `layer` in `phase`.
+    pub fn gate_probs(&mut self, phase: Phase, layer: usize) -> Vec<f64> {
+        let p = self.params;
+        let aff = match phase {
+            Phase::Prefill => &self.prefill_affinity[layer],
+            Phase::Decode => &self.decode_affinity[layer],
+        };
+        // per-token sharpness: log-normal jitter + depth sharpening
+        let depth = layer as f64 / self.n_layers.max(1) as f64;
+        let kappa = p.sharpness
+            * (1.0 + p.depth_sharpen * depth)
+            * (p.sharpness_jitter * self.rng.gauss()).exp();
+        // early-decode locality boost (Fig 3), decaying over the generation
+        let mut w = p.popularity_weight;
+        if phase == Phase::Decode {
+            if layer == 0 {
+                self.decode_tokens += 1;
+            }
+            let t = self.decode_tokens.saturating_sub(1) as f64;
+            w = (w + p.early_decode_boost * (-t / p.early_decode_tau).exp()).min(0.95);
+        }
+        // logits: popularity + dominant fresh noise
+        for i in 0..self.n_experts {
+            self.scratch[i] = kappa * (w * aff[i] + (1.0 - w) * self.rng.gauss());
+        }
+        softmax(&self.scratch)
+    }
+
+    /// Probabilities for all layers of one token (layer-major).
+    pub fn token_probs(&mut self, phase: Phase) -> Vec<Vec<f64>> {
+        (0..self.n_layers)
+            .map(|l| self.gate_probs(phase, l))
+            .collect()
+    }
+}
+
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    let m = logits.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&x| (x - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.into_iter().map(|x| x / s).collect()
+}
+
+/// Rank-frequency statistics used by the fig3 driver and tests.
+pub fn selection_frequency(
+    gen: &mut TraceGenerator,
+    phase: Phase,
+    layer: usize,
+    tokens: usize,
+    top_k: usize,
+) -> Vec<f64> {
+    let mut counts = vec![0f64; gen.n_experts];
+    for _ in 0..tokens {
+        let probs = gen.gate_probs(phase, layer);
+        let mut idx: Vec<usize> = (0..probs.len()).collect();
+        idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        for &e in idx.iter().take(top_k) {
+            counts[e] += 1.0;
+        }
+    }
+    let total: f64 = counts.iter().sum();
+    counts.into_iter().map(|c| c / total).collect()
+}
+
+/// Pearson correlation between two frequency vectors.
+pub fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    let (ma, mb) = (a.iter().sum::<f64>() / n, b.iter().sum::<f64>() / n);
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x - ma) * (y - mb);
+        da += (x - ma) * (x - ma);
+        db += (y - mb) * (y - mb);
+    }
+    if da == 0.0 || db == 0.0 {
+        0.0
+    } else {
+        num / (da * db).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> TraceGenerator {
+        TraceGenerator::new(&ModelDesc::deepseek_v2_lite(), TraceParams::default(), 42)
+    }
+
+    #[test]
+    fn probs_are_distributions() {
+        let mut g = gen();
+        for phase in [Phase::Prefill, Phase::Decode] {
+            for l in [0, 12, 25] {
+                let p = g.gate_probs(phase, l);
+                assert_eq!(p.len(), 64);
+                assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+                assert!(p.iter().all(|&x| x >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_is_steep() {
+        // top-6 of 64 experts should carry most of the mass on average
+        let mut g = gen();
+        let mut top6_mass = 0.0;
+        let n = 200;
+        for _ in 0..n {
+            let mut p = g.gate_probs(Phase::Decode, 10);
+            p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            top6_mass += p[..6].iter().sum::<f64>();
+        }
+        let avg = top6_mass / n as f64;
+        assert!(avg > 0.5, "top-6 mass {avg}");
+    }
+
+    #[test]
+    fn deeper_layers_are_sharper() {
+        let mut g = gen();
+        let sharp = |g: &mut TraceGenerator, l: usize| {
+            let mut m = 0.0;
+            for _ in 0..300 {
+                let p = g.gate_probs(Phase::Decode, l);
+                m += p.iter().copied().fold(0.0, f64::max);
+            }
+            m / 300.0
+        };
+        let early = sharp(&mut g, 0);
+        let late = sharp(&mut g, 25);
+        assert!(late > early, "late {late} <= early {early}");
+    }
+
+    #[test]
+    fn single_head_count_fluctuates() {
+        // with θ=0.5: tokens should have varying numbers of critical
+        // experts (paper observes 0-2; deep layers are sharper)
+        let mut g = gen();
+        // advance past the early-decode locality boost (full tokens so the
+        // decode counter moves), then measure steady-state sharpness
+        for _ in 0..60 {
+            let _ = g.token_probs(Phase::Decode);
+        }
+        let mut histogram = [0usize; 3]; // 1, 2, >2 (max always critical)
+        for _ in 0..500 {
+            let probs = g.token_probs(Phase::Decode);
+            let p = &probs[12];
+            let pmax = p.iter().copied().fold(0.0, f64::max);
+            let ncrit = p.iter().filter(|&&x| x >= 0.5 * pmax).count();
+            histogram[(ncrit - 1).min(2)] += 1;
+        }
+        assert!(histogram[0] > 20, "always multi-head? {histogram:?}");
+        assert!(histogram[1] + histogram[2] > 20, "always single-head? {histogram:?}");
+    }
+
+    #[test]
+    fn prefill_decode_hotness_correlated_but_not_identical() {
+        let mut g = gen();
+        let pre = selection_frequency(&mut g, Phase::Prefill, 5, 400, 6);
+        let dec = selection_frequency(&mut g, Phase::Decode, 5, 400, 6);
+        let c = correlation(&pre, &dec);
+        assert!(c > 0.4, "phase correlation too weak: {c}");
+        assert!(c < 0.999, "phases identical: {c}");
+    }
+
+    #[test]
+    fn early_decode_is_more_predictable_than_late() {
+        let desc = ModelDesc::deepseek_v2_lite();
+        let mut g = TraceGenerator::new(&desc, TraceParams::default(), 21);
+        // hit-rate proxy: probability mass on the 12 hottest prefill experts
+        let pre = selection_frequency(&mut g, Phase::Prefill, 3, 300, 6);
+        let mut hot: Vec<usize> = (0..pre.len()).collect();
+        hot.sort_by(|&a, &b| pre[b].partial_cmp(&pre[a]).unwrap());
+        let hot: std::collections::HashSet<usize> = hot.into_iter().take(12).collect();
+        let mass_on_hot = |g: &mut TraceGenerator, reps: usize| {
+            let mut m = 0.0;
+            for _ in 0..reps {
+                // one full token so the decode counter advances once
+                let probs = g.token_probs(Phase::Decode);
+                m += hot.iter().map(|&e| probs[3][e]).sum::<f64>();
+            }
+            m / reps as f64
+        };
+        let early = mass_on_hot(&mut g, 8);
+        for _ in 0..120 {
+            let _ = g.token_probs(Phase::Decode);
+        }
+        let late = mass_on_hot(&mut g, 40);
+        assert!(early > late + 0.05, "early {early:.3} vs late {late:.3}");
+    }
+
+    #[test]
+    fn zero_phase_correlation_decorrelates() {
+        let desc = ModelDesc::deepseek_v2_lite();
+        let params = TraceParams { phase_correlation: 0.0, early_decode_boost: 0.0,
+                                   ..Default::default() };
+        let mut g = TraceGenerator::new(&desc, params, 7);
+        let pre = selection_frequency(&mut g, Phase::Prefill, 5, 400, 6);
+        let dec = selection_frequency(&mut g, Phase::Decode, 5, 400, 6);
+        let c = correlation(&pre, &dec);
+        assert!(c.abs() < 0.45, "should be weakly correlated: {c}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let desc = ModelDesc::tiny();
+        let mut a = TraceGenerator::new(&desc, TraceParams::default(), 9);
+        let mut b = TraceGenerator::new(&desc, TraceParams::default(), 9);
+        assert_eq!(a.gate_probs(Phase::Decode, 1), b.gate_probs(Phase::Decode, 1));
+    }
+}

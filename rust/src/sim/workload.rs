@@ -1,0 +1,105 @@
+//! GSM8K-shaped workload generator (paper §6.1-1: 5-shot prompts give
+//! prefill ≈ 500 tokens, decode > 100 tokens) + request stream shaping for
+//! the serving examples.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestSpec {
+    pub prefill_tokens: usize,
+    pub decode_tokens: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadParams {
+    pub prefill_mean: f64,
+    pub prefill_std: f64,
+    pub prefill_min: usize,
+    pub prefill_max: usize,
+    pub decode_mean: f64,
+    pub decode_std: f64,
+    pub decode_min: usize,
+    pub decode_max: usize,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        // GSM8K 5-shot shape
+        WorkloadParams {
+            prefill_mean: 500.0,
+            prefill_std: 60.0,
+            prefill_min: 320,
+            prefill_max: 620,
+            decode_mean: 160.0,
+            decode_std: 40.0,
+            decode_min: 100,
+            decode_max: 256,
+        }
+    }
+}
+
+impl WorkloadParams {
+    /// Scaled down to the tiny model's max_seq window (prefill+decode<=640).
+    pub fn tiny() -> Self {
+        WorkloadParams {
+            prefill_mean: 384.0,
+            prefill_std: 48.0,
+            prefill_min: 256,
+            prefill_max: 480,
+            decode_mean: 112.0,
+            decode_std: 24.0,
+            decode_min: 64,
+            decode_max: 150,
+        }
+    }
+}
+
+pub fn generate(params: &WorkloadParams, n: usize, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let p = (params.prefill_mean + params.prefill_std * rng.gauss())
+                .round()
+                .clamp(params.prefill_min as f64, params.prefill_max as f64)
+                as usize;
+            let d = (params.decode_mean + params.decode_std * rng.gauss())
+                .round()
+                .clamp(params.decode_min as f64, params.decode_max as f64)
+                as usize;
+            RequestSpec { prefill_tokens: p, decode_tokens: d }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn respects_bounds_and_shape() {
+        let p = WorkloadParams::default();
+        let reqs = generate(&p, 500, 1);
+        assert_eq!(reqs.len(), 500);
+        for r in &reqs {
+            assert!((p.prefill_min..=p.prefill_max).contains(&r.prefill_tokens));
+            assert!((p.decode_min..=p.decode_max).contains(&r.decode_tokens));
+        }
+        let mean_p: f64 =
+            reqs.iter().map(|r| r.prefill_tokens as f64).sum::<f64>() / 500.0;
+        assert!((mean_p - 500.0).abs() < 20.0, "mean prefill {mean_p}");
+        // long decodes: the property the paper picked GSM8K for
+        assert!(reqs.iter().all(|r| r.decode_tokens >= 100));
+    }
+
+    #[test]
+    fn tiny_fits_window() {
+        let reqs = generate(&WorkloadParams::tiny(), 200, 2);
+        assert!(reqs.iter().all(|r| r.prefill_tokens + r.decode_tokens <= 640));
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = WorkloadParams::default();
+        assert_eq!(generate(&p, 10, 3), generate(&p, 10, 3));
+    }
+}

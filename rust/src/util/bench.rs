@@ -1,0 +1,124 @@
+//! Micro/driver benchmark harness substrate (no criterion in the offline
+//! vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and call into this module:
+//! warmup iterations, then timed samples, reported as median / MAD / mean
+//! with throughput when a unit count is supplied. Results can also be
+//! appended to a machine-readable lines file for EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} median {:>12} mad {:>10} mean {:>12}",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            fmt_time(self.mean_s),
+        );
+        if let Some(u) = self.units_per_iter {
+            s.push_str(&format!("  ({:.1} units/s)", u / self.median_s));
+        }
+        s
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+fn median_of(mut xs: Vec<f64>) -> (f64, f64) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = xs[xs.len() / 2];
+    let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, dev[dev.len() / 2])
+}
+
+/// Run `f` for `warmup` + `samples` iterations, timing each sample.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (median_s, mad_s) = median_of(times.clone());
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        samples: times,
+        median_s,
+        mad_s,
+        mean_s,
+        units_per_iter: None,
+    }
+}
+
+/// `bench` with a throughput unit count (e.g. tokens per iteration).
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    units: f64,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, warmup, samples, f);
+    r.units_per_iter = Some(units);
+    r
+}
+
+/// Standard bench-binary prologue: prints a header and returns a printer.
+pub fn runner(title: &str) -> impl FnMut(BenchResult) {
+    println!("== {title} ==");
+    move |r: BenchResult| println!("{}", r.report())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median_s > 0.0);
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.mad_s <= r.median_s);
+    }
+
+    #[test]
+    fn formats_scales() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Declarative CLI flag parser substrate (no `clap` in the vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean switches, typed
+//! accessors with defaults, required flags, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_switch: bool,
+}
+
+/// Flag schema + parsed values for one (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a value flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+        });
+        self
+    }
+
+    /// Declare a required value flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: None, is_switch: false });
+        self
+    }
+
+    /// Declare a boolean switch (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            help,
+            default: Some("false".to_string()),
+            is_switch: true,
+        });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut out = format!("usage: slicemoe {cmd} [flags]\n");
+        for sp in &self.specs {
+            let d = sp
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_else(|| " (required)".into());
+            out.push_str(&format!("  --{:<22} {}{}\n", sp.name, sp.help, d));
+        }
+        out
+    }
+
+    /// Parse raw argv (after the subcommand). Fails on unknown flags.
+    pub fn parse(mut self, argv: &[String], cmd: &str) -> Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage(cmd));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow!("unknown flag --{name}\n{}", self.usage(cmd)))?
+                    .clone();
+                let value = if spec.is_switch {
+                    inline.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .ok_or_else(|| anyhow!("flag --{name} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for sp in &self.specs {
+            if sp.default.is_none() && !self.values.contains_key(sp.name) {
+                bail!("missing required flag --{}\n{}", sp.name, self.usage(cmd));
+            }
+        }
+        Ok(self)
+    }
+
+    fn raw(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.raw(name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize> {
+        self.raw(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64> {
+        self.raw(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.raw(name).as_str(), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of f64 ("0.01,0.05,0.1").
+    pub fn f64_list(&self, name: &str) -> Result<Vec<f64>> {
+        self.raw(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|e| anyhow!("--{name}: {e}")))
+            .collect()
+    }
+
+    pub fn str_list(&self, name: &str) -> Vec<String> {
+        self.raw(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = Args::new()
+            .opt("steps", "100", "steps")
+            .opt("name", "x", "name")
+            .switch("fast", "go fast")
+            .parse(&argv(&["--steps", "7", "--fast"]), "t")
+            .unwrap();
+        assert_eq!(a.usize("steps").unwrap(), 7);
+        assert_eq!(a.str("name"), "x");
+        assert!(a.bool("fast"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new()
+            .opt("cap", "1.0", "cap")
+            .parse(&argv(&["--cap=2.5"]), "t")
+            .unwrap();
+        assert_eq!(a.f64("cap").unwrap(), 2.5);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(Args::new().parse(&argv(&["--nope"]), "t").is_err());
+        assert!(Args::new().req("need", "x").parse(&argv(&[]), "t").is_err());
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::new()
+            .opt("caps", "1.8,2.4,3.6", "caps")
+            .parse(&argv(&[]), "t")
+            .unwrap();
+        assert_eq!(a.f64_list("caps").unwrap(), vec![1.8, 2.4, 3.6]);
+    }
+}

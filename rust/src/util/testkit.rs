@@ -1,0 +1,120 @@
+//! Property-testing substrate (no proptest in the vendor set).
+//!
+//! Seeded case generation with failure reporting and first-level shrinking:
+//! on failure, the harness retries with "smaller" inputs produced by the
+//! case's `shrink` hook and reports the smallest failing seed/case found.
+//!
+//! Used by the L3 invariant tests: cache routing/batching/state invariants
+//! run a few hundred randomized cases each.
+
+use super::rng::Rng;
+
+/// Run `cases` randomized property checks. `gen` builds a case from an RNG,
+/// `prop` returns Err(description) when the invariant is violated.
+pub fn check<T, G, P>(name: &str, cases: usize, base_seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}):\n  {msg}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but with a shrink hook: candidates must be strictly
+/// "smaller"; the harness greedily descends to a minimal failing case.
+pub fn check_shrink<T, G, P, S>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    gen: G,
+    prop: P,
+    shrink: S,
+) where
+    T: std::fmt::Debug + Clone,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(first_msg) = prop(&case) {
+            // greedy shrink
+            let mut best = case.clone();
+            let mut best_msg = first_msg;
+            let mut progress = true;
+            let mut rounds = 0;
+            while progress && rounds < 200 {
+                progress = false;
+                rounds += 1;
+                for cand in shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}):\n  {best_msg}\n  minimal case: {best:?}"
+            );
+        }
+    }
+}
+
+/// Approximate float comparison helper for tests.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("sum-commutes", 200, 1, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_case() {
+        check("always-fails", 10, 2, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal case: 0")]
+    fn shrink_finds_minimal() {
+        check_shrink(
+            "shrinks-to-zero",
+            5,
+            3,
+            |r| r.range(1, 1000),
+            |_| Err("fails everywhere".into()),
+            |&n| if n > 0 { vec![n / 2, n - 1] } else { vec![] },
+        );
+    }
+
+    #[test]
+    fn close_tolerates() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9));
+        assert!(!close(1.0, 2.0, 1e-9));
+    }
+}

@@ -1,0 +1,144 @@
+//! Engine integration tests over the real artifacts (skipped gracefully
+//! when `make artifacts` has not run): PJRT round-trips, session decode
+//! consistency, quantized-vs-fp quality ordering, warmup effects.
+
+use std::path::PathBuf;
+
+use slicemoe::cache::WarmupStrategy;
+use slicemoe::engine::{Engine, Session, SessionConfig};
+use slicemoe::quant::MatConfig;
+use slicemoe::router::{Precision, RouterConfig};
+
+// The PJRT client holds raw pointers (not Send/Sync), so each test loads
+// its own engine on its own thread. Tiny-model artifact compilation is
+// cheap (~1 s).
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("model_meta.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("artifacts missing — run `make artifacts`; skipping engine tests");
+        None
+    }
+}
+
+fn load_engine() -> Option<Engine> {
+    let dir = artifacts()?;
+    Some(Engine::load(&dir, MatConfig::MAT84).expect("load engine"))
+}
+
+fn eval_corpus(n: usize) -> Vec<u8> {
+    let dir = artifacts().unwrap();
+    let data = std::fs::read(dir.join("corpus_eval.bin")).unwrap();
+    data[..n.min(data.len())].to_vec()
+}
+
+#[test]
+fn generates_deterministically_greedy() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let prompt = b"the cache holds 3 experts and ";
+    let run = || {
+        let mut sess = Session::new(eng, SessionConfig::dbsc_default(eng));
+        sess.generate(prompt, 16).unwrap().tokens
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "greedy decoding must be deterministic");
+    assert_eq!(a.len(), 16);
+    // trained byte-LM emits printable ASCII
+    assert!(a.iter().all(|&t| (9..=126).contains(&t)), "{a:?}");
+}
+
+#[test]
+fn trained_model_beats_uniform_random_by_far() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let eval = eval_corpus(1536);
+    let mut sess = Session::new(eng, SessionConfig::dbsc_default(eng));
+    let nll = sess.eval_nll_uniform(&eval, Precision::Full).unwrap();
+    // uniform over 256 bytes would be ln(256) = 5.55; the trained LM must
+    // be far below (training reaches ~0.6 nll/byte)
+    assert!(nll < 2.0, "nll/byte {nll} too high — model untrained?");
+}
+
+#[test]
+fn quantization_quality_ordering_holds_on_real_model() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let eval = eval_corpus(1024);
+    let nll_of = |prec: Precision| {
+        let mut s = Session::new(eng, SessionConfig::dbsc_default(eng));
+        s.eval_nll_uniform(&eval, prec).unwrap()
+    };
+    let fp = nll_of(Precision::Full);
+    let high = nll_of(Precision::High);
+    let low = nll_of(Precision::Low);
+    // 8-bit ~ fp; 4-bit within a modest margin (Table-1 regime)
+    assert!((high - fp).abs() < 0.05, "high {high} vs fp {fp}");
+    assert!(low < fp + 0.5, "low {low} vs fp {fp}");
+}
+
+#[test]
+fn decode_respects_miss_constraint() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let eval = eval_corpus(400);
+    let desc = eng.desc();
+    let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
+    let mut cfg = SessionConfig::dbsc_default(eng);
+    cfg.cache_bytes = unit * 8; // 8 of 32 experts
+    cfg.constraint = 0.10;
+    let mut sess = Session::new(eng, cfg);
+    let rep = sess.generate(&eval[..256], 40).unwrap();
+    assert!(
+        rep.miss_rate <= 0.16,
+        "measured miss rate {} far above constraint",
+        rep.miss_rate
+    );
+}
+
+#[test]
+fn pcw_outperforms_empty_on_the_real_engine() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let eval = eval_corpus(400);
+    let run = |w: WarmupStrategy| {
+        let desc = eng.desc();
+        let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
+        let mut cfg = SessionConfig::dbsc_default(eng);
+        cfg.cache_bytes = unit * 12;
+        cfg.warmup = w;
+        let mut sess = Session::new(eng, cfg);
+        let rep = sess.generate(&eval[..256], 32).unwrap();
+        rep.ledger.decode_energy_j()
+    };
+    let pcw = run(WarmupStrategy::Pcw);
+    let empty = run(WarmupStrategy::Empty);
+    assert!(
+        pcw <= empty * 1.05,
+        "pcw decode energy {pcw} should not exceed empty {empty}"
+    );
+}
+
+#[test]
+fn uniform_high_baseline_runs() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let eval = eval_corpus(300);
+    let mut cfg = SessionConfig::dbsc_default(eng);
+    cfg.router = RouterConfig::cache_prior_high(eng.desc().top_k);
+    let mut sess = Session::new(eng, cfg);
+    let rep = sess.generate(&eval[..200], 16).unwrap();
+    assert_eq!(rep.n_low, 0, "uniform high must never run low-bit");
+    assert!(rep.n_high > 0);
+}
+
+#[test]
+fn session_rejects_overlong_prompt() {
+    let Some(eng) = load_engine() else { return };
+    let eng = &eng;
+    let mut sess = Session::new(eng, SessionConfig::dbsc_default(eng));
+    let too_long = vec![65u8; eng.ws.meta.max_seq + 1];
+    assert!(sess.prefill(&too_long).is_err());
+}

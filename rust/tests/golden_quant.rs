@@ -1,0 +1,98 @@
+//! Cross-language golden test: the Rust AMAT implementation must agree
+//! bit-for-bit with the python quantizer that authored the golden blob
+//! (`aot.py::golden_quant_tensors` over a REAL trained expert weight).
+
+use std::path::Path;
+
+use slicemoe::model::blob::Blob;
+use slicemoe::quant;
+
+fn golden() -> Option<Blob> {
+    let p = Path::new("artifacts/golden_quant.bin");
+    if !p.exists() {
+        eprintln!("golden_quant.bin missing — run `make artifacts`; skipping");
+        return None;
+    }
+    Some(Blob::load(p).expect("parse golden blob"))
+}
+
+fn dims(b: &Blob) -> (usize, usize) {
+    let s = b.get("src").unwrap().shape();
+    (s[0], s[1])
+}
+
+#[test]
+fn asym_codes_match_python_exactly() {
+    let Some(b) = golden() else { return };
+    let (r, c) = dims(&b);
+    let src = b.f32("src").unwrap();
+    for (bh, bl) in [(4u32, 2u32), (6, 3), (8, 4)] {
+        let tag = format!("mat{bh}{bl}");
+        let t = quant::quantize_asym(src, r, c, bh, 32);
+        assert_eq!(t.q, b.i32(&format!("{tag}.q")).unwrap(), "{tag} codes");
+        assert_eq!(t.zp, b.i32(&format!("{tag}.zp")).unwrap(), "{tag} zp");
+        let py_scale = b.f32(&format!("{tag}.scale")).unwrap();
+        for (i, (a, p)) in t.scale.iter().zip(py_scale).enumerate() {
+            assert!((a - p).abs() <= 1e-6 * p.abs().max(1e-12), "{tag} scale[{i}]: {a} vs {p}");
+        }
+    }
+}
+
+#[test]
+fn planes_and_amat_match_python() {
+    let Some(b) = golden() else { return };
+    let (r, c) = dims(&b);
+    let src = b.f32("src").unwrap();
+    for (bh, bl) in [(4u32, 2u32), (6, 3), (8, 4)] {
+        let tag = format!("mat{bh}{bl}");
+        let t = quant::quantize_asym(src, r, c, bh, 32);
+        let (msb, lsb) = quant::split_planes(&t, bl);
+        assert_eq!(msb, b.i32(&format!("{tag}.msb")).unwrap(), "{tag} msb");
+        assert_eq!(lsb, b.i32(&format!("{tag}.lsb")).unwrap(), "{tag} lsb");
+        let am = quant::truncate_amat(&t, bl);
+        assert_eq!(am.zp, b.i32(&format!("{tag}.amat_zp")).unwrap(), "{tag} amat zp");
+        // packed byte stream identical
+        let packed = quant::pack_bits(&msb, bl);
+        assert_eq!(
+            packed.as_slice(),
+            b.get(&format!("{tag}.packed_msb")).unwrap().as_u8().unwrap(),
+            "{tag} packed msb"
+        );
+    }
+}
+
+#[test]
+fn sym_codes_match_python() {
+    let Some(b) = golden() else { return };
+    let (r, c) = dims(&b);
+    let src = b.f32("src").unwrap();
+    for (bh, bl) in [(4u32, 2u32), (6, 3), (8, 4)] {
+        let tag = format!("mat{bh}{bl}");
+        let t = quant::quantize_sym(src, r, c, bh, 32);
+        assert_eq!(t.q, b.i32(&format!("{tag}.sym_q")).unwrap(), "{tag} sym codes");
+        let tt = quant::truncate_sym(&t, bl);
+        assert_eq!(tt.q, b.i32(&format!("{tag}.symt_q")).unwrap(), "{tag} sym trunc");
+    }
+}
+
+#[test]
+fn dequant_matches_python() {
+    let Some(b) = golden() else { return };
+    let (r, c) = dims(&b);
+    let src = b.f32("src").unwrap();
+    for (bh, bl) in [(4u32, 2u32), (8, 4)] {
+        let tag = format!("mat{bh}{bl}");
+        let t = quant::quantize_asym(src, r, c, bh, 32);
+        let dq = quant::dequantize(&t);
+        let py = b.f32(&format!("{tag}.dequant")).unwrap();
+        for (i, (a, p)) in dq.iter().zip(py).enumerate() {
+            assert!((a - p).abs() <= 1e-5, "{tag} dequant[{i}]: {a} vs {p}");
+        }
+        let lo = quant::truncate_amat(&t, bl);
+        let dql = quant::dequantize(&lo);
+        let pyl = b.f32(&format!("{tag}.dequant_low")).unwrap();
+        for (i, (a, p)) in dql.iter().zip(pyl).enumerate() {
+            assert!((a - p).abs() <= 1e-5, "{tag} dequant_low[{i}]: {a} vs {p}");
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! L3 property tests (testkit substrate, proptest-style): randomized
+//! operation sequences against the coordinator invariants — cache state,
+//! routing, precision split, miss budget, warmup.
+
+use slicemoe::cache::{warmup::apply_ex, Ensure, HotnessTable, SliceCache, WarmupStrategy};
+use slicemoe::model::descriptor::{Plane, SliceKey};
+use slicemoe::model::ModelDesc;
+use slicemoe::quant::MatConfig;
+use slicemoe::router::{
+    access_layer, dbsc, select_experts, DbscConfig, MissBudget, Policy, Precision,
+    RouterConfig,
+};
+use slicemoe::util::rng::Rng;
+use slicemoe::util::testkit::check;
+
+fn random_probs(rng: &mut Rng, n: usize) -> Vec<f64> {
+    let logits: Vec<f64> = (0..n).map(|_| rng.gauss() * 2.0).collect();
+    slicemoe::sim::softmax(&logits)
+}
+
+#[test]
+fn cache_invariants_hold_under_random_ops() {
+    check(
+        "cache-invariants",
+        150,
+        0xCAFE,
+        |rng| {
+            let cap = 50 + rng.below(500) as u64;
+            let ops: Vec<(u8, usize, usize, u64)> = (0..200)
+                .map(|_| {
+                    (
+                        rng.below(5) as u8,
+                        rng.below(6),
+                        rng.below(10),
+                        1 + rng.below(60) as u64,
+                    )
+                })
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let mut c = SliceCache::new(*cap);
+            for &(op, layer, expert, bytes) in ops {
+                let key = if expert % 2 == 0 {
+                    SliceKey::msb(layer, expert)
+                } else {
+                    SliceKey::lsb(layer, expert)
+                };
+                match op {
+                    0 => {
+                        c.lookup(key);
+                    }
+                    1 => {
+                        if bytes <= *cap {
+                            let _ = c.ensure(key, bytes);
+                        }
+                    }
+                    2 => {
+                        c.remove(key);
+                    }
+                    3 => {
+                        c.pin(key, true);
+                    }
+                    _ => {
+                        c.pin(key, false);
+                    }
+                }
+                c.check_invariants()?;
+                if c.used_bytes() > *cap {
+                    return Err(format!("over capacity {} > {}", c.used_bytes(), cap));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn ensure_never_evicts_more_than_needed() {
+    check(
+        "minimal-eviction",
+        100,
+        0xBEE,
+        |rng| {
+            let n = 3 + rng.below(20);
+            let sizes: Vec<u64> = (0..n).map(|_| 5 + rng.below(30) as u64).collect();
+            (200u64, sizes)
+        },
+        |(cap, sizes)| {
+            let mut c = SliceCache::new(*cap);
+            for (i, &b) in sizes.iter().enumerate() {
+                match c.ensure(SliceKey::msb(0, i), b) {
+                    Ensure::Inserted { evicted } => {
+                        // after insert we must be within capacity but we must
+                        // not have evicted past (cap - b) + smallest entry
+                        if c.used_bytes() > *cap {
+                            return Err("over capacity".into());
+                        }
+                        let _ = evicted;
+                    }
+                    Ensure::Hit => return Err("unexpected hit".into()),
+                    Ensure::TooLarge => {
+                        if b <= *cap {
+                            return Err("spurious TooLarge".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn router_gates_renormalized_and_unique() {
+    check(
+        "router-selection",
+        300,
+        0x17E,
+        |rng| {
+            let e = 4 + rng.below(64);
+            let k = 1 + rng.below(8).min(e - 1);
+            let probs = random_probs(rng, e);
+            let policy = match rng.below(3) {
+                0 => Policy::TopK,
+                1 => Policy::CachePrior { boost: 1.0 + rng.f64() * 4.0 },
+                _ => Policy::Cumsum { tau: 0.3 + rng.f64() * 0.6 },
+            };
+            let cached_mod = 1 + rng.below(5);
+            (probs, k, policy, cached_mod)
+        },
+        |(probs, k, policy, cached_mod)| {
+            let m = *cached_mod;
+            let r = select_experts(*policy, probs, *k, |e| e % m == 0);
+            if r.is_empty() {
+                return Err("empty selection".into());
+            }
+            let mut seen = std::collections::HashSet::new();
+            for x in &r {
+                if !seen.insert(x.expert) {
+                    return Err(format!("duplicate expert {}", x.expert));
+                }
+                if x.expert >= probs.len() {
+                    return Err("expert out of range".into());
+                }
+            }
+            let gsum: f64 = r.iter().map(|x| x.gate).sum();
+            if (gsum - 1.0).abs() > 1e-9 {
+                return Err(format!("gates sum to {gsum}"));
+            }
+            match policy {
+                Policy::Cumsum { .. } => {}
+                _ => {
+                    if r.len() != (*k).min(probs.len()) {
+                        return Err(format!("expected {} experts, got {}", k, r.len()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dbsc_critical_count_bounded() {
+    check(
+        "dbsc-split",
+        300,
+        0xD85C,
+        |rng| {
+            let k = 2 + rng.below(8);
+            let probs = random_probs(rng, k);
+            let theta = 0.1 + rng.f64() * 0.9;
+            let cap = 1 + rng.below(3);
+            (probs, theta, cap)
+        },
+        |(probs, theta, cap)| {
+            let mut routed: Vec<_> = probs
+                .iter()
+                .map(|&p| slicemoe::router::Routed {
+                    expert: 0,
+                    gate: p,
+                    prob: p,
+                    precision: Precision::Low,
+                })
+                .collect();
+            let n = dbsc::split_precision(
+                &mut routed,
+                DbscConfig { theta: *theta, max_critical: *cap },
+            );
+            if n > *cap {
+                return Err(format!("{n} critical > cap {cap}"));
+            }
+            let count_high = routed.iter().filter(|r| r.precision == Precision::High).count();
+            if count_high != n {
+                return Err("count mismatch".into());
+            }
+            // the argmax must always be critical (it trivially passes θ)
+            let imax = (0..routed.len())
+                .max_by(|&a, &b| probs[a].partial_cmp(&probs[b]).unwrap())
+                .unwrap();
+            if probs[imax] > 0.0 && routed[imax].precision != Precision::High {
+                return Err("argmax not critical".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn miss_budget_never_exceeds_constraint_after_warmup() {
+    check(
+        "budget-rate",
+        60,
+        0xB06,
+        |rng| {
+            let constraint = [0.01, 0.05, 0.1, 0.3][rng.below(4)];
+            let unit = 100 + rng.below(10_000) as u64;
+            let fetch_fraction = rng.f64(); // how often a fetch is attempted
+            (constraint, unit, fetch_fraction, rng.next_u64())
+        },
+        |(constraint, unit, fetch_fraction, seed)| {
+            let mut b = MissBudget::new(*constraint, *unit);
+            let mut rng = Rng::new(*seed);
+            for _ in 0..11 {
+                b.tick();
+            }
+            let mut accesses = 0u64;
+            let mut fetched = 0u64;
+            for _ in 0..5000 {
+                b.on_access();
+                accesses += 1;
+                if rng.f64() < *fetch_fraction {
+                    let bytes = *unit / [1, 2, 4][rng.below(3)];
+                    if b.try_fetch(bytes) {
+                        fetched += bytes;
+                    }
+                }
+            }
+            let rate = fetched as f64 / (accesses as f64 * *unit as f64);
+            // one unit of slack allowed on top of the steady-state rate
+            let bound = constraint + (*unit as f64) / (accesses as f64 * *unit as f64) + 1e-9;
+            if rate > bound {
+                return Err(format!("rate {rate} > constraint {constraint}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn access_layer_conservation_properties() {
+    // selected experts = executed + dropped; flash bytes only on misses;
+    // executed experts' MSBs are cached afterwards (unconstrained case)
+    check(
+        "access-conservation",
+        80,
+        0xACC,
+        |rng| {
+            let cache_experts = 3 + rng.below(6); // >= top_k + 1
+            let constrained = rng.bool(0.5);
+            (cache_experts as u64, constrained, rng.next_u64())
+        },
+        |(cache_experts, constrained, seed)| {
+            let desc = ModelDesc::tiny();
+            let mat = MatConfig::MAT84;
+            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+            let mut cache = SliceCache::new(unit * *cache_experts);
+            let mut budget = if *constrained {
+                let mut b = MissBudget::new(0.05, unit);
+                for _ in 0..11 {
+                    b.tick();
+                }
+                b
+            } else {
+                MissBudget::unconstrained(unit)
+            };
+            let mut rng = Rng::new(*seed);
+            let cfg = RouterConfig::dbsc(2);
+            for layer in 0..desc.n_layers {
+                let probs = random_probs(&mut rng, desc.n_experts);
+                let out = access_layer(&cfg, &probs, layer, &desc, mat, &mut cache,
+                                       &mut budget, None);
+                if out.execs.len() + out.n_dropped != 2 {
+                    return Err(format!(
+                        "execs {} + dropped {} != top_k 2",
+                        out.execs.len(),
+                        out.n_dropped
+                    ));
+                }
+                if !*constrained {
+                    if out.n_dropped != 0 || out.n_substituted != 0 || out.n_degraded != 0 {
+                        return Err("unconstrained run dropped/degraded".into());
+                    }
+                    for ex in &out.execs {
+                        if !cache.peek(SliceKey::msb(layer, ex.expert)) {
+                            return Err("executed expert not cached after fill".into());
+                        }
+                    }
+                }
+                cache.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pcw_only_contains_hot_slices_and_respects_target() {
+    check(
+        "pcw-content",
+        80,
+        0x9C3,
+        |rng| {
+            let touches: Vec<(usize, usize, bool)> = (0..rng.range(1, 120))
+                .map(|_| (rng.below(4), rng.below(8), rng.bool(0.3)))
+                .collect();
+            let target_slices = 1 + rng.below(20) as u64;
+            (touches, target_slices, rng.bool(0.5))
+        },
+        |(touches, target_slices, single_head)| {
+            let msb_b = 10u64;
+            let lsb_b = 5u64;
+            let sz = |k: SliceKey| match k.plane {
+                Plane::Msb => msb_b,
+                Plane::Lsb => lsb_b,
+            };
+            let mut cache = SliceCache::new(10_000);
+            let mut hot = HotnessTable::new();
+            for &(l, e, lsb) in touches {
+                let key = if lsb { SliceKey::lsb(l, e) } else { SliceKey::msb(l, e) };
+                let _ = cache.ensure(key, sz(key));
+                hot.touch(key);
+            }
+            let target = target_slices * msb_b;
+            apply_ex(&mut cache, WarmupStrategy::Pcw, &hot, target, 4, sz, *single_head);
+            if cache.used_bytes() > target {
+                return Err(format!("used {} > target {}", cache.used_bytes(), target));
+            }
+            for key in cache.keys_mru() {
+                if hot.count(key) == 0 && key.plane == Plane::Msb && *single_head {
+                    return Err(format!("cold slice {key:?} retained"));
+                }
+            }
+            cache.check_invariants()?;
+            Ok(())
+        },
+    );
+}
