@@ -1,58 +1,40 @@
 //! End-to-end serving driver (the repo's E2E validation run).
 //!
-//! Loads the trained tiny MoE byte-LM, starts the single-batch server, and
-//! pushes a GSM8K-shaped request stream (long prefill, >100-token decodes)
-//! through the full SliceMoE stack: DBSC slice cache, Cache-Prior routing
-//! under a 5% miss-rate constraint, PCW at each prefill→decode transition,
-//! real PJRT compute per op, and the Fig 7 energy ledger.
+//! Loads the trained tiny MoE byte-LM, starts the multi-lane server (each
+//! lane loads its own engine — the PJRT client is not Send), and pushes a
+//! GSM8K-shaped request stream (long prefill, >100-token decodes) through
+//! the full SliceMoE stack: DBSC slice cache, Cache-Prior routing under a
+//! 5% miss-rate constraint, PCW at each prefill→decode transition, real
+//! PJRT compute per op, and the Fig 7 energy ledger.
 //!
 //! Reports wall-clock latency/throughput percentiles plus simulated
 //! decode energy + measured model quality (teacher-forced NLL of the
 //! serving path vs the fp32 reference). Recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```sh
-//! cargo run --release --offline --example serve_e2e -- [n_requests]
+//! cargo run --release --offline --features pjrt --example serve_e2e -- [n_requests] [lanes]
 //! ```
 
 use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 use slicemoe::cache::WarmupStrategy;
-use slicemoe::engine::{Engine, Session, SessionConfig};
+use slicemoe::engine::{Engine, EngineBackend, Session, SessionConfig};
 use slicemoe::quant::MatConfig;
 use slicemoe::router::Precision;
-use slicemoe::server::{percentiles, Backend, Request, Response, ServerHandle};
+use slicemoe::server::{summarize, Request, ServerHandle};
 use slicemoe::sim::{generate_workload, WorkloadParams};
-
-struct EngineBackend {
-    eng: Engine,
-}
-
-impl Backend for EngineBackend {
-    fn serve(&mut self, req: &Request) -> Result<Response> {
-        let mut cfg = SessionConfig::dbsc_default(&self.eng);
-        cfg.constraint = 0.05;
-        cfg.warmup = WarmupStrategy::Pcw;
-        let mut sess = Session::new(&self.eng, cfg);
-        let rep = sess.generate(&req.prompt, req.decode_tokens)?;
-        Ok(Response {
-            id: req.id,
-            output: rep.tokens.clone(),
-            prefill_wall_s: rep.prefill_wall_s,
-            decode_wall_s: rep.decode_wall_s,
-            decode_tokens: rep.decode_tokens,
-            decode_energy_j: rep.ledger.decode_energy_j(),
-            miss_rate: rep.miss_rate,
-            queue_wall_s: 0.0,
-        })
-    }
-}
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(6);
+    let lanes: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1);
     let artifacts = PathBuf::from("artifacts");
     if !artifacts.join("model_meta.json").exists() {
         eprintln!("artifacts/ missing — run `make artifacts` first");
@@ -76,10 +58,18 @@ fn main() -> Result<()> {
         }
     }
 
-    println!("\n== serving {n_requests} GSM8K-shaped requests ==");
+    println!("\n== serving {n_requests} GSM8K-shaped requests over {lanes} lane(s) ==");
     let art2 = artifacts.clone();
-    let handle = ServerHandle::start(4, move || {
-        Ok(EngineBackend { eng: Engine::load(&art2, MatConfig::MAT84)? })
+    let handle = ServerHandle::start(lanes, 4, move |_lane| {
+        Ok(EngineBackend {
+            eng: Engine::load(&art2, MatConfig::MAT84)?,
+            config: |eng: &Engine| {
+                let mut cfg = SessionConfig::dbsc_default(eng);
+                cfg.constraint = 0.05;
+                cfg.warmup = WarmupStrategy::Pcw;
+                cfg
+            },
+        })
     });
     let reqs = generate_workload(&WorkloadParams::tiny(), n_requests, 0xE2E);
     let t0 = std::time::Instant::now();
@@ -91,15 +81,14 @@ fn main() -> Result<()> {
             decode_tokens: r.decode_tokens,
         })?;
     }
-    let mut tok_lat = Vec::new();
-    let mut total_tokens = 0usize;
-    let mut total_energy = 0.0;
+    let mut responses = Vec::new();
     for _ in 0..n_requests {
         let r = handle.recv()?;
         println!(
-            "req {:>2}: prefill({:>3} tok) {:>5.2}s | decode({:>3} tok) {:>5.2}s \
+            "req {:>2} lane {}: prefill({:>3} tok) {:>5.2}s | decode({:>3} tok) {:>5.2}s \
              ({:>5.1} tok/s) | queue {:>5.2}s | miss {:.4} | energy {:.4} J",
             r.id,
+            r.lane,
             reqs[r.id as usize].prefill_tokens,
             r.prefill_wall_s,
             r.decode_tokens,
@@ -109,18 +98,22 @@ fn main() -> Result<()> {
             r.miss_rate,
             r.decode_energy_j,
         );
-        total_tokens += r.decode_tokens;
-        total_energy += r.decode_energy_j;
-        tok_lat.push(r.decode_wall_s / r.decode_tokens.max(1) as f64 * 1e3);
+        responses.push(r);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (p50, p90, p99) = percentiles(tok_lat);
+    let s = summarize(&responses);
     println!("\n== summary ==");
-    println!("requests            {n_requests}");
-    println!("decode tokens       {total_tokens}");
-    println!("end-to-end wall     {wall:.1} s ({:.2} decode tok/s)", total_tokens as f64 / wall);
-    println!("per-token latency   p50 {p50:.1} ms  p90 {p90:.1} ms  p99 {p99:.1} ms");
-    println!("simulated energy    {total_energy:.4} J decode total");
+    println!("requests            {} over {lanes} lane(s)", s.requests);
+    println!("decode tokens       {}", s.decode_tokens);
+    println!("end-to-end wall     {wall:.1} s ({:.2} decode tok/s)", s.decode_tokens as f64 / wall);
+    println!(
+        "per-token latency   p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+        s.latency_p50_s * 1e3,
+        s.latency_p90_s * 1e3,
+        s.latency_p99_s * 1e3
+    );
+    println!("simulated energy    {:.4} J decode total", s.decode_energy_j);
+    println!("combined miss rate  {:.4}", s.combined_miss_rate);
     handle.shutdown();
     Ok(())
 }

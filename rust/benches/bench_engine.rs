@@ -1,7 +1,9 @@
 //! Engine (PJRT execution path) benchmarks: per-op latency and end-to-end
 //! decode throughput of the tiny LM. The L3 perf target is that the
 //! coordinator adds <10% over raw PJRT compute — the per-op numbers here
-//! are the denominators for that check (EXPERIMENTS.md §Perf).
+//! are the denominators for that check (EXPERIMENTS.md §Perf). Results
+//! print to stdout AND land in `BENCH_engine.json` (median/MAD per case)
+//! so the perf trajectory is tracked across PRs.
 
 use std::path::Path;
 
@@ -9,7 +11,7 @@ use slicemoe::engine::{Engine, Session, SessionConfig};
 use slicemoe::quant::MatConfig;
 use slicemoe::router::Precision;
 use slicemoe::runtime::DeviceTensor;
-use slicemoe::util::bench::{bench_units, runner};
+use slicemoe::util::bench::{bench_units, Reporter};
 
 fn main() {
     let artifacts = Path::new("artifacts");
@@ -18,7 +20,7 @@ fn main() {
         return;
     }
     let eng = Engine::load(artifacts, MatConfig::MAT84).expect("load engine");
-    let mut report = runner("engine (PJRT) benchmarks");
+    let mut report = Reporter::new("engine (PJRT) benchmarks");
     let m = &eng.ws.meta;
 
     // single expert FFN at each precision (decode shape, T=1)
@@ -30,7 +32,7 @@ fn main() {
             ("expert high (8b planes)", Precision::High),
             ("expert low (4b msb)", Precision::Low),
         ] {
-            report(bench_units(&format!("op/{name} T=1"), 3, 30, 1.0, || {
+            report.record(bench_units(&format!("op/{name} T=1"), 3, 30, 1.0, || {
                 let y = eng.run_expert(0, 0, prec, &x_b.buffer, false).unwrap();
                 std::hint::black_box(y);
             }));
@@ -45,7 +47,7 @@ fn main() {
         let eval = std::fs::read(artifacts.join("corpus_eval.bin")).unwrap();
         sess.prefill(&eval[..256]).unwrap();
         let mut cur = eval[255];
-        report(bench_units("session/decode_step (4 layers, top-2)", 2, 48, 1.0, || {
+        report.record(bench_units("session/decode_step (4 layers, top-2)", 2, 48, 1.0, || {
             let (next, _) = sess.decode_step(cur).unwrap();
             cur = next;
         }));
@@ -54,9 +56,13 @@ fn main() {
     // prefill throughput
     {
         let eval = std::fs::read(artifacts.join("corpus_eval.bin")).unwrap();
-        report(bench_units("session/prefill 384 tokens", 0, 3, 384.0, || {
+        report.record(bench_units("session/prefill 384 tokens", 0, 3, 384.0, || {
             let mut sess = Session::new(&eng, SessionConfig::dbsc_default(&eng));
             sess.prefill(&eval[..384]).unwrap();
         }));
     }
+
+    report
+        .write_json("BENCH_engine.json")
+        .expect("write BENCH_engine.json");
 }

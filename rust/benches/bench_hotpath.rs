@@ -1,20 +1,21 @@
 //! Hot-path microbenchmarks (L3 perf deliverable): the operations inside
 //! the per-token decode loop. Targets from DESIGN.md §Perf: cache ops O(1)
 //! amortized, routing O(E log E) worst case, zero steady-state allocation
-//! in the cache. Results are tracked in EXPERIMENTS.md §Perf.
+//! in the cache. Results print to stdout AND land in `BENCH_hotpath.json`
+//! (median/MAD per case) so the perf trajectory is tracked across PRs.
 
 use slicemoe::cache::SliceCache;
+use slicemoe::memhier::Phase;
 use slicemoe::model::descriptor::SliceKey;
 use slicemoe::model::ModelDesc;
 use slicemoe::quant::{self, MatConfig};
 use slicemoe::router::{access_layer, MissBudget, Policy, RouterConfig};
 use slicemoe::sim::{run_episode, EpisodeConfig, TraceGenerator, TraceParams};
-use slicemoe::memhier::Phase;
-use slicemoe::util::bench::{bench_units, runner};
+use slicemoe::util::bench::{bench_units, Reporter};
 use slicemoe::util::rng::Rng;
 
 fn main() {
-    let mut report = runner("hot-path microbenchmarks");
+    let mut report = Reporter::new("hot-path microbenchmarks");
 
     // cache lookup/insert/evict churn at paper scale
     {
@@ -24,7 +25,7 @@ fn main() {
         let mut cache = SliceCache::new(msb * 300);
         let mut rng = Rng::new(1);
         let n = 100_000usize;
-        report(bench_units("cache/lookup+fill churn (100k ops)", 1, 10, n as f64, || {
+        report.record(bench_units("cache/lookup+fill churn (100k ops)", 1, 10, n as f64, || {
             for _ in 0..n {
                 let key = SliceKey::msb(rng.below(26), rng.below(64));
                 if !cache.lookup(key) {
@@ -45,7 +46,7 @@ fn main() {
             Policy::Cumsum { tau: 0.9 },
         ] {
             let name = format!("router/select 512 tokens ({})", policy.name());
-            report(bench_units(&name, 1, 20, 512.0, || {
+            report.record(bench_units(&name, 1, 20, 512.0, || {
                 for p in &probs {
                     let r = slicemoe::router::select_experts(policy, p, 6, |e| e % 3 == 0);
                     std::hint::black_box(r);
@@ -67,7 +68,7 @@ fn main() {
         let cfg = RouterConfig::dbsc(6);
         let mut gen = TraceGenerator::new(&desc, TraceParams::default(), 3);
         let probs: Vec<Vec<f64>> = (0..512).map(|_| gen.gate_probs(Phase::Decode, 8)).collect();
-        report(bench_units("access_layer/512 token-layers (dbsc)", 1, 20, 512.0, || {
+        report.record(bench_units("access_layer/512 token-layers (dbsc)", 1, 20, 512.0, || {
             for (i, p) in probs.iter().enumerate() {
                 let out = access_layer(&cfg, p, i % 26, &desc, mat, &mut cache,
                                        &mut budget, None);
@@ -80,13 +81,13 @@ fn main() {
     {
         let mut rng = Rng::new(4);
         let w: Vec<f32> = (0..2048 * 256).map(|_| rng.gauss() as f32 * 0.1).collect();
-        report(bench_units("quant/asym G32 2048x256 (0.5M weights)", 1, 10,
-                           (2048 * 256) as f64, || {
+        report.record(bench_units("quant/asym G32 2048x256 (0.5M weights)", 1, 10,
+                                  (2048 * 256) as f64, || {
             let t = quant::quantize_asym(&w, 2048, 256, 8, 32);
             std::hint::black_box(t);
         }));
         let t = quant::quantize_asym(&w, 2048, 256, 8, 32);
-        report(bench_units("quant/pack 8b codes (0.5M)", 1, 10, (2048 * 256) as f64, || {
+        report.record(bench_units("quant/pack 8b codes (0.5M)", 1, 10, (2048 * 256) as f64, || {
             std::hint::black_box(quant::pack_bits(&t.q, 8));
         }));
     }
@@ -96,10 +97,14 @@ fn main() {
         let mut cfg = EpisodeConfig::gsm8k_default(ModelDesc::deepseek_v2_lite());
         cfg.prefill_tokens = 500;
         cfg.decode_tokens = 128;
-        cfg.constraint = 0.05;
-        report(bench_units("sim/episode 500+128 tokens (deepseek)", 1, 5,
-                           128.0, || {
+        cfg.serve.constraint = 0.05;
+        report.record(bench_units("sim/episode 500+128 tokens (deepseek)", 1, 5,
+                                  128.0, || {
             std::hint::black_box(run_episode(&cfg));
         }));
     }
+
+    report
+        .write_json("BENCH_hotpath.json")
+        .expect("write BENCH_hotpath.json");
 }

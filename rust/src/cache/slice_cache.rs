@@ -296,6 +296,14 @@ impl SliceCache {
         }
     }
 
+    /// Whether `key` is resident AND pinned.
+    pub fn is_pinned(&self, key: SliceKey) -> bool {
+        self.index
+            .get(&key)
+            .map(|&i| self.entries[i as usize].pinned)
+            .unwrap_or(false)
+    }
+
     /// Resident keys from MRU to LRU.
     pub fn keys_mru(&self) -> Vec<SliceKey> {
         let mut out = Vec::with_capacity(self.index.len());

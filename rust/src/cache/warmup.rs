@@ -208,15 +208,22 @@ pub fn apply_ex<S: Fn(SliceKey) -> u64>(
                 }
                 match key.plane {
                     Plane::Lsb => {
+                        // deterministic tie-break on the key: the hotness
+                        // table iterates in hash order, which must never
+                        // leak into the retained set
                         let e = best_lsb.entry(key.layer).or_insert((key, count));
-                        if count > e.1 {
+                        if count > e.1 || (count == e.1 && key < e.0) {
                             *e = (key, count);
                         }
                     }
                     Plane::Msb => msbs.push((key, hot.score(key))),
                 }
             }
-            msbs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+            msbs.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| a.0.cmp(&b.0))
+            });
             // admit MSBs (paired with their LSB in uniform-high mode) until
             // the target; hottest ends at MRU
             let mut lsb_keep: Vec<SliceKey> = Vec::new();
@@ -225,7 +232,7 @@ pub fn apply_ex<S: Fn(SliceKey) -> u64>(
                 // hottest first, within the capacity target
                 let mut cands: Vec<(SliceKey, u32)> =
                     best_lsb.values().copied().collect();
-                cands.sort_by(|a, b| b.1.cmp(&a.1));
+                cands.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
                 for (k, _) in cands {
                     let b = slice_bytes(k);
                     if used + b <= target_bytes {

@@ -1,0 +1,253 @@
+//! PJRT execution backend for the unified serving pipeline.
+//!
+//! Implements `serve::ExpertBackend` with real compiled-HLO compute:
+//! `gate` runs the layer's attention + gate entry points (stashing the
+//! attention output and the normalized activations for the expert step),
+//! `run_experts` executes the planned expert FFNs and folds the residual
+//! back into the activations. Embedding, logits, KV-cache mirrors, and
+//! token sampling are backend-internal state driven by the `Session`
+//! adapter around the loop (`begin_prefill` / `begin_decode` /
+//! `finish_decode`).
+
+use anyhow::{bail, Result};
+
+use crate::memhier::Phase;
+use crate::runtime::{DeviceTensor, Executor};
+use crate::serve::{ExecPlan, ExpertBackend};
+use crate::util::rng::Rng;
+
+use super::session::{argmax, sample};
+use super::Engine;
+
+/// One request's execution state on the PJRT engine.
+pub struct PjrtBackend<'e> {
+    pub eng: &'e Engine,
+    /// Host KV-cache mirrors per layer: (k, v), each [H * max_seq * d_head].
+    kv: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Tokens processed so far (prompt + generated).
+    pub pos: usize,
+    rng: Rng,
+    temperature: Option<f64>,
+    /// Valid rows in `x` (prompt length during prefill, 1 during decode).
+    valid: usize,
+    /// Activations for the current phase, row-major [rows * d_model]
+    /// (prefill rows are padded to max_seq; only `valid` rows are live).
+    x: Vec<f32>,
+    /// Attention output of the layer currently in flight.
+    h: Vec<f32>,
+    /// Normalized activations (expert input), device-resident.
+    xn: Option<DeviceTensor>,
+}
+
+impl<'e> PjrtBackend<'e> {
+    pub fn new(eng: &'e Engine, temperature: Option<f64>, seed: u64) -> PjrtBackend<'e> {
+        let m = &eng.ws.meta;
+        let kv = (0..m.n_layers)
+            .map(|_| {
+                (
+                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
+                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
+                )
+            })
+            .collect();
+        PjrtBackend {
+            eng,
+            kv,
+            pos: 0,
+            rng: Rng::new(seed),
+            temperature,
+            valid: 0,
+            x: Vec::new(),
+            h: Vec::new(),
+            xn: None,
+        }
+    }
+
+    fn exec(&self, name: &str) -> Result<Executor<'_>> {
+        Executor::new(&self.eng.rt, name)
+    }
+
+    /// Embed the prompt and prime the prefill activations. Call before
+    /// `ServeLoop::prefill`.
+    pub fn begin_prefill(&mut self, prompt: &[u8]) -> Result<()> {
+        let m = &self.eng.ws.meta;
+        let s = m.max_seq;
+        if prompt.is_empty() || prompt.len() > s {
+            bail!("prompt length {} out of range 1..={s}", prompt.len());
+        }
+        let mut tok = vec![0i32; s];
+        for (i, &b) in prompt.iter().enumerate() {
+            tok[i] = b as i32;
+        }
+        let rt = &self.eng.rt;
+        let tok_b = DeviceTensor::from_i32(rt, &tok, &[s])?;
+        let zero = DeviceTensor::scalar_i32(rt, 0)?;
+        self.x = self
+            .exec("embed_prefill")?
+            .run_f32(&[&tok_b.buffer, &zero.buffer, &self.eng.embed.buffer,
+                       &self.eng.pos.buffer])?
+            .swap_remove(0);
+        self.valid = prompt.len();
+        self.pos = prompt.len();
+        Ok(())
+    }
+
+    /// Embed one decode token at the current position. Call before each
+    /// `ServeLoop::decode_token`.
+    pub fn begin_decode(&mut self, token: u8) -> Result<()> {
+        let m = &self.eng.ws.meta;
+        if self.pos >= m.max_seq {
+            bail!("context window exhausted at {}", self.pos);
+        }
+        let rt = &self.eng.rt;
+        let tok_b = DeviceTensor::from_i32(rt, &[token as i32], &[1])?;
+        let pos_b = DeviceTensor::scalar_i32(rt, self.pos as i32)?;
+        self.x = self
+            .exec("embed_decode")?
+            .run_f32(&[&tok_b.buffer, &pos_b.buffer, &self.eng.embed.buffer,
+                       &self.eng.pos.buffer])?
+            .swap_remove(0);
+        self.valid = 1;
+        Ok(())
+    }
+
+    /// Project logits from the decoded activations and sample the next
+    /// token (greedy unless a temperature is configured). Call after
+    /// `ServeLoop::decode_token`.
+    pub fn finish_decode(&mut self) -> Result<u8> {
+        let rt = &self.eng.rt;
+        let m = &self.eng.ws.meta;
+        let x_b = DeviceTensor::from_f32(rt, &self.x, &[1, m.d_model])?;
+        let logits = self
+            .exec("logits_decode")?
+            .run_f32(&[&x_b.buffer, &self.eng.ln_f.buffer, &self.eng.w_out.buffer])?
+            .swap_remove(0);
+        let next = match self.temperature {
+            None => argmax(&logits) as u8,
+            Some(t) => sample(&logits, t, &mut self.rng) as u8,
+        };
+        self.pos += 1;
+        Ok(next)
+    }
+
+    fn gate_prefill(&mut self, layer: usize) -> Result<Vec<Vec<f64>>> {
+        let m = &self.eng.ws.meta;
+        let (s, d, e_n) = (m.max_seq, m.d_model, m.n_experts);
+        let rt = &self.eng.rt;
+        let dl = &self.eng.layers[layer];
+        let x_b = DeviceTensor::from_f32(rt, &self.x, &[s, d])?;
+        let valid_b = DeviceTensor::scalar_i32(rt, self.valid as i32)?;
+        let outs = self.exec("attn_prefill")?.run_literals(&[
+            &x_b.buffer, &valid_b.buffer, &dl.ln1.buffer, &dl.wq.buffer,
+            &dl.wk.buffer, &dl.wv.buffer, &dl.wo.buffer,
+        ])?;
+        if outs.len() != 3 {
+            bail!("attn_prefill returned {} outputs", outs.len());
+        }
+        self.h = outs[0].to_vec::<f32>()?;
+        self.kv[layer].0 = outs[1].to_vec::<f32>()?;
+        self.kv[layer].1 = outs[2].to_vec::<f32>()?;
+
+        let h_b = DeviceTensor::from_f32(rt, &self.h, &[s, d])?;
+        let gouts = self
+            .exec("gate_prefill")?
+            .run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
+        let xn = gouts[0].to_vec::<f32>()?;
+        let probs = gouts[1].to_vec::<f32>()?;
+        self.xn = Some(DeviceTensor::from_f32(rt, &xn, &[s, d])?);
+        Ok((0..self.valid)
+            .map(|t| probs[t * e_n..(t + 1) * e_n].iter().map(|&p| p as f64).collect())
+            .collect())
+    }
+
+    fn gate_decode(&mut self, layer: usize) -> Result<Vec<Vec<f64>>> {
+        let m = &self.eng.ws.meta;
+        let (d, h_n) = (m.d_model, m.n_heads);
+        let rt = &self.eng.rt;
+        let dl = &self.eng.layers[layer];
+        let x_b = DeviceTensor::from_f32(rt, &self.x, &[1, d])?;
+        let kvdim = [h_n, m.max_seq, m.d_head];
+        let k_b = DeviceTensor::from_f32(rt, &self.kv[layer].0, &kvdim)?;
+        let v_b = DeviceTensor::from_f32(rt, &self.kv[layer].1, &kvdim)?;
+        let pos_b = DeviceTensor::scalar_i32(rt, self.pos as i32)?;
+        let outs = self.exec("attn_decode")?.run_literals(&[
+            &x_b.buffer, &k_b.buffer, &v_b.buffer, &pos_b.buffer,
+            &dl.ln1.buffer, &dl.wq.buffer, &dl.wk.buffer, &dl.wv.buffer,
+            &dl.wo.buffer,
+        ])?;
+        self.h = outs[0].to_vec::<f32>()?;
+        self.kv[layer].0 = outs[1].to_vec::<f32>()?;
+        self.kv[layer].1 = outs[2].to_vec::<f32>()?;
+
+        let h_b = DeviceTensor::from_f32(rt, &self.h, &[1, d])?;
+        let gouts = self
+            .exec("gate_decode")?
+            .run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
+        let xn = gouts[0].to_vec::<f32>()?;
+        let probs = gouts[1].to_vec::<f32>()?;
+        self.xn = Some(DeviceTensor::from_f32(rt, &xn, &[1, d])?);
+        Ok(vec![probs.iter().map(|&p| p as f64).collect()])
+    }
+}
+
+impl ExpertBackend for PjrtBackend<'_> {
+    fn gate(&mut self, phase: Phase, layer: usize) -> Result<Vec<Vec<f64>>> {
+        match phase {
+            Phase::Prefill => self.gate_prefill(layer),
+            Phase::Decode => self.gate_decode(layer),
+        }
+    }
+
+    fn run_experts(&mut self, phase: Phase, layer: usize, plan: &ExecPlan) -> Result<()> {
+        let m = &self.eng.ws.meta;
+        let d = m.d_model;
+        let xn = match &self.xn {
+            Some(t) => t,
+            None => bail!("run_experts before gate at layer {layer}"),
+        };
+        match (phase, plan) {
+            (Phase::Prefill, ExecPlan::Prefill { combine }) => {
+                let e_n = m.n_experts;
+                let mut y = vec![0f32; m.max_seq * d];
+                for e in 0..e_n {
+                    let ye = self.eng.run_expert(
+                        layer,
+                        e,
+                        crate::router::Precision::High,
+                        &xn.buffer,
+                        true,
+                    )?;
+                    for t in 0..self.valid {
+                        let w = combine[t * e_n + e] as f32;
+                        if w != 0.0 {
+                            for dd in 0..d {
+                                y[t * d + dd] += w * ye[t * d + dd];
+                            }
+                        }
+                    }
+                }
+                for t in 0..self.valid {
+                    for dd in 0..d {
+                        self.x[t * d + dd] = self.h[t * d + dd] + y[t * d + dd];
+                    }
+                }
+            }
+            (Phase::Decode, ExecPlan::Decode { execs }) => {
+                let mut y = vec![0f32; d];
+                for ex in execs.iter() {
+                    let ye =
+                        self.eng
+                            .run_expert(layer, ex.expert, ex.precision, &xn.buffer, false)?;
+                    for dd in 0..d {
+                        y[dd] += ex.gate as f32 * ye[dd];
+                    }
+                }
+                for dd in 0..d {
+                    self.x[dd] = self.h[dd] + y[dd];
+                }
+            }
+            _ => bail!("phase/plan mismatch at layer {layer}"),
+        }
+        Ok(())
+    }
+}

@@ -1,19 +1,34 @@
 //! PJRT-backed MoE serving engine (the tiny-LM execution path).
 //!
-//! Mirrors the full-geometry simulator's control flow, but every compute
-//! step is a real compiled-HLO execution: embed → per-layer (attention →
-//! gate → DBSC-routed expert FFNs) → logits. Routing, caching, precision
-//! selection, and the memory-hierarchy ledger use exactly the same code
-//! (`router::access_layer`, `cache::SliceCache`, `memhier::Ledger`) as the
-//! simulator — the engine swaps the synthetic gate for the real one and
-//! the cost-model "execute" for PJRT calls.
+//! Runs the SAME control flow as the full-geometry simulator — both are
+//! thin adapters over `serve::ServeLoop` — but every compute step is a
+//! real compiled-HLO execution: embed → per-layer (attention → gate →
+//! DBSC-routed expert FFNs) → logits. `engine::PjrtBackend` implements
+//! `serve::ExpertBackend`; routing, caching, precision selection, and the
+//! memory-hierarchy ledger live once in the serving core.
 //!
 //! Weight operands are uploaded to the device once at load; per-step
 //! traffic is activations only.
 
+pub mod backend;
 pub mod session;
 
-pub use session::{GenerateReport, Session, SessionConfig, StepStats};
+pub use backend::PjrtBackend;
+pub use session::{EngineBackend, GenerateReport, Session};
+
+pub use crate::serve::StepStats;
+
+/// Back-compat alias: session configuration is the unified
+/// [`ServeConfig`](crate::serve::ServeConfig).
+pub type SessionConfig = crate::serve::ServeConfig;
+
+impl crate::serve::ServeConfig {
+    /// DBSC serving defaults for a loaded engine (its geometry + MAT
+    /// config, cache sized to half the expert pool).
+    pub fn dbsc_default(eng: &Engine) -> SessionConfig {
+        crate::serve::ServeConfig::engine_default(eng.desc(), eng.mat())
+    }
+}
 
 use std::path::Path;
 

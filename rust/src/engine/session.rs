@@ -1,62 +1,24 @@
-//! Serving session: prefill / decode over the PJRT engine with the full
-//! SliceMoE machinery (slice cache, DBSC routing, miss budget, PCW, and the
-//! Fig 7 cost ledger) in the loop.
+//! Serving session: prefill / decode over the PJRT engine — a thin
+//! adapter over the unified serving core.
+//!
+//! All policy work (slice cache, DBSC routing, miss budget, PCW, the
+//! Fig 7 cost ledger) lives in `serve::ServeLoop`; execution lives in
+//! `engine::PjrtBackend`. The session glues them together per request and
+//! adds what only the real engine has: token sampling, wall-clock
+//! measurement, and the teacher-forced NLL evaluation helpers (which
+//! bypass the cache machinery on purpose — they measure model quality,
+//! not serving behavior).
 
 use anyhow::{bail, Result};
 
-use crate::cache::{warmup::apply_ex, HotnessTable, SliceCache, WarmupStrategy};
-use crate::memhier::{HwSpec, Ledger, Phase};
-use crate::model::descriptor::SliceKey;
+use crate::memhier::Ledger;
 use crate::quant::QuantTensor;
-use crate::router::{access_layer, MissBudget, Precision, RouterConfig};
 use crate::runtime::{DeviceTensor, Executor};
+use crate::serve::{ServeLoop, StepStats};
 use crate::util::rng::Rng;
 
-use super::Engine;
-
-/// Session-level configuration (mirrors `sim::EpisodeConfig`).
-#[derive(Clone, Debug)]
-pub struct SessionConfig {
-    pub router: RouterConfig,
-    /// High-bit-normalized miss-rate constraint (INFINITY = off).
-    pub constraint: f64,
-    /// Expert-cache budget in bytes (tiny-model scale).
-    pub cache_bytes: u64,
-    pub warmup: WarmupStrategy,
-    pub hw: HwSpec,
-    /// Greedy when None; otherwise softmax temperature sampling.
-    pub temperature: Option<f64>,
-    pub seed: u64,
-}
-
-impl SessionConfig {
-    pub fn dbsc_default(eng: &Engine) -> SessionConfig {
-        let desc = eng.desc();
-        let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
-        SessionConfig {
-            router: RouterConfig::dbsc(desc.top_k),
-            constraint: f64::INFINITY,
-            // default: half the expert pool fits
-            cache_bytes: unit * (desc.total_experts() as u64) / 2,
-            warmup: WarmupStrategy::Pcw,
-            hw: HwSpec::paper(),
-            temperature: None,
-            seed: 7,
-        }
-    }
-}
-
-/// Per-step statistics returned by `decode_step`.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct StepStats {
-    pub flash_bytes: u64,
-    pub n_high: usize,
-    pub n_low: usize,
-    pub n_dropped: usize,
-    pub n_substituted: usize,
-    pub n_degraded: usize,
-    pub wall_s: f64,
-}
+use super::backend::PjrtBackend;
+use super::{Engine, SessionConfig};
 
 /// End-of-generation report.
 #[derive(Clone, Debug)]
@@ -74,280 +36,69 @@ pub struct GenerateReport {
     pub n_dropped: u64,
     pub n_substituted: u64,
     pub n_degraded: u64,
+    /// Steady-state flash traffic / normalization denominator, for
+    /// fleet-level aggregation (`server::combined_miss_rate`).
+    pub steady_flash_bytes: u64,
+    pub steady_norm_bytes: f64,
 }
 
-/// One live request (single-batch, as in the paper's deployment).
+/// `server::Backend` adapter over a loaded engine: one fresh `Session`
+/// per request, configured by `config` (called with the engine so callers
+/// can derive cache sizes etc. from its geometry). Response metrics come
+/// from `server::Response::from_lane` — the single home of the
+/// pipeline→Response translation.
+pub struct EngineBackend<F: FnMut(&Engine) -> super::SessionConfig> {
+    pub eng: Engine,
+    pub config: F,
+}
+
+impl<F: FnMut(&Engine) -> super::SessionConfig> crate::server::Backend for EngineBackend<F> {
+    fn serve(&mut self, req: &crate::server::Request) -> Result<crate::server::Response> {
+        let cfg = (self.config)(&self.eng);
+        let mut sess = Session::new(&self.eng, cfg);
+        let rep = sess.generate(&req.prompt, req.decode_tokens)?;
+        Ok(crate::server::Response::from_lane(
+            &sess.lane,
+            req.id,
+            rep.tokens,
+            rep.prefill_wall_s,
+            rep.decode_wall_s,
+            rep.decode_tokens,
+        ))
+    }
+}
+
+/// One live request: the unified pipeline over the PJRT backend.
 pub struct Session<'e> {
-    pub eng: &'e Engine,
-    pub cfg: SessionConfig,
-    pub cache: SliceCache,
-    pub budget: MissBudget,
-    pub hot: HotnessTable,
-    pub ledger: Ledger,
-    /// Host KV-cache mirrors per layer: (k, v), each [H * max_seq * d_head].
-    kv: Vec<(Vec<f32>, Vec<f32>)>,
-    pub pos: usize,
-    rng: Rng,
-    steady_accesses: u64,
-    steady_flash: u64,
-    stats_high: u64,
-    stats_low: u64,
-    stats_dropped: u64,
-    stats_substituted: u64,
-    stats_degraded: u64,
+    pub lane: ServeLoop,
+    pub backend: PjrtBackend<'e>,
 }
 
 impl<'e> Session<'e> {
     pub fn new(eng: &'e Engine, cfg: SessionConfig) -> Session<'e> {
-        let m = &eng.ws.meta;
-        let desc = eng.desc();
-        let unit = desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
-        let kv = (0..m.n_layers)
-            .map(|_| {
-                (
-                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
-                    vec![0f32; m.n_heads * m.max_seq * m.d_head],
-                )
-            })
-            .collect();
-        Session {
-            eng,
-            cache: SliceCache::new(cfg.cache_bytes),
-            budget: MissBudget::new(cfg.constraint, unit),
-            hot: HotnessTable::new(),
-            ledger: Ledger::new(),
-            kv,
-            pos: 0,
-            rng: Rng::new(cfg.seed),
-            cfg,
-            steady_accesses: 0,
-            steady_flash: 0,
-            stats_high: 0,
-            stats_low: 0,
-            stats_dropped: 0,
-            stats_substituted: 0,
-            stats_degraded: 0,
-        }
+        let backend = PjrtBackend::new(eng, cfg.temperature, cfg.seed);
+        Session { lane: ServeLoop::new(cfg), backend }
     }
 
-    fn exec(&self, name: &str) -> Result<Executor<'_>> {
-        Executor::new(&self.eng.rt, name)
+    /// Tokens processed so far (prompt + generated).
+    pub fn pos(&self) -> usize {
+        self.backend.pos
     }
 
-    /// Run prefill over `prompt` (<= max_seq - decode budget tokens).
-    /// Real HLO compute; the cache/ledger see layer-wise expert streaming.
-    pub fn prefill(&mut self, prompt: &[u8]) -> Result<Vec<f32>> {
-        let m = &self.eng.ws.meta;
-        let desc = self.eng.desc();
-        let mat = self.eng.mat();
-        let s = m.max_seq;
-        if prompt.is_empty() || prompt.len() > s {
-            bail!("prompt length {} out of range 1..={s}", prompt.len());
-        }
-        let valid = prompt.len();
-        let mut tok = vec![0i32; s];
-        for (i, &b) in prompt.iter().enumerate() {
-            tok[i] = b as i32;
-        }
-        let rt = &self.eng.rt;
-        let tok_b = DeviceTensor::from_i32(rt, &tok, &[s])?;
-        let zero = DeviceTensor::scalar_i32(rt, 0)?;
-        let emb = self.exec("embed_prefill")?;
-        let mut x = emb.run_f32(&[&tok_b.buffer, &zero.buffer, &self.eng.embed.buffer,
-                                  &self.eng.pos.buffer])?
-            .swap_remove(0);
-        let valid_b = DeviceTensor::scalar_i32(rt, valid as i32)?;
-        let msb_b = desc.msb_slice_bytes(mat);
-        let lsb_b = desc.lsb_slice_bytes(mat);
-
-        for l in 0..m.n_layers {
-            let dl = &self.eng.layers[l];
-            let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
-            let attn = self.exec("attn_prefill")?;
-            let outs = attn.run_literals(&[
-                &x_b.buffer, &valid_b.buffer, &dl.ln1.buffer, &dl.wq.buffer,
-                &dl.wk.buffer, &dl.wv.buffer, &dl.wo.buffer,
-            ])?;
-            if outs.len() != 3 {
-                bail!("attn_prefill returned {} outputs", outs.len());
-            }
-            let h = outs[0].to_vec::<f32>()?;
-            self.kv[l].0 = outs[1].to_vec::<f32>()?;
-            self.kv[l].1 = outs[2].to_vec::<f32>()?;
-
-            let h_b = DeviceTensor::from_f32(rt, &h, &[s, m.d_model])?;
-            let gate = self.exec("gate_prefill")?;
-            let gouts = gate.run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
-            let xn = gouts[0].to_vec::<f32>()?;
-            let probs = gouts[1].to_vec::<f32>()?;
-            let xn_b = DeviceTensor::from_f32(rt, &xn, &[s, m.d_model])?;
-
-            // per-token top-k routing + hotness accumulation
-            let e_n = m.n_experts;
-            let mut weights = vec![0f32; s * e_n]; // combine weights [S, E]
-            for t in 0..valid {
-                let p = &probs[t * e_n..(t + 1) * e_n];
-                let mut idx: Vec<usize> = (0..e_n).collect();
-                idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
-                let mass: f32 = idx.iter().take(m.top_k).map(|&e| p[e]).sum();
-                let pmax = p[idx[0]];
-                for &e in idx.iter().take(m.top_k) {
-                    weights[t * e_n + e] = p[e] / mass.max(1e-9);
-                    self.hot.touch(SliceKey::msb(l, e));
-                    self.hot.add_gate_mass(l, e, p[e] as f64);
-                    if p[e] >= 0.5 * pmax {
-                        self.hot.touch(SliceKey::lsb(l, e));
-                    }
-                }
-            }
-
-            // stream every expert (prefill = high precision), fill cache,
-            // charge the ledger with the real packed sizes
-            let mut flash = 0u64;
-            let mut fetches = 0u64;
-            let mut dram = 0u64;
-            let mut y = vec![0f32; s * m.d_model];
-            for e in 0..e_n {
-                for (key, bytes) in
-                    [(SliceKey::msb(l, e), msb_b), (SliceKey::lsb(l, e), lsb_b)]
-                {
-                    if !self.cache.lookup(key) {
-                        flash += bytes;
-                        fetches += 1;
-                        let _ = self.cache.ensure(key, bytes);
-                    }
-                }
-                dram += msb_b + lsb_b;
-                let ye = self.eng.run_expert(l, e, Precision::High, &xn_b.buffer, true)?;
-                for t in 0..valid {
-                    let w = weights[t * e_n + e];
-                    if w != 0.0 {
-                        for dd in 0..m.d_model {
-                            y[t * m.d_model + dd] += w * ye[t * m.d_model + dd];
-                        }
-                    }
-                }
-            }
-            let ops = desc.expert_ops(valid) * m.top_k as f64;
-            self.ledger
-                .record(Phase::Prefill, &self.cfg.hw, ops, dram, flash, fetches);
-            for t in 0..valid {
-                for dd in 0..m.d_model {
-                    x[t * m.d_model + dd] = h[t * m.d_model + dd] + y[t * m.d_model + dd];
-                }
-            }
-        }
-        self.pos = valid;
-        // prefill -> decode transition (PCW or baseline)
-        apply_ex(
-            &mut self.cache,
-            self.cfg.warmup,
-            &self.hot,
-            self.cfg.cache_bytes,
-            m.n_layers,
-            |k| desc.slice_bytes(k.plane, mat),
-            self.cfg.router.dbsc.is_some(),
-        );
-        Ok(x)
+    /// Run prefill over `prompt` (<= max_seq tokens). Real HLO compute;
+    /// the cache/ledger see layer-wise expert streaming; ends with the
+    /// PCW (or baseline) prefill→decode transition.
+    pub fn prefill(&mut self, prompt: &[u8]) -> Result<()> {
+        self.backend.begin_prefill(prompt)?;
+        self.lane.prefill(&mut self.backend, prompt.len())
     }
 
     /// Decode one token (the previous token id goes in, the next comes out).
     pub fn decode_step(&mut self, token: u8) -> Result<(u8, StepStats)> {
         let t0 = std::time::Instant::now();
-        let m = &self.eng.ws.meta;
-        let desc = self.eng.desc();
-        let mat = self.eng.mat();
-        if self.pos >= m.max_seq {
-            bail!("context window exhausted at {}", self.pos);
-        }
-        let rt = &self.eng.rt;
-        self.budget.tick();
-        let mut stats = StepStats::default();
-
-        let tok_b = DeviceTensor::from_i32(rt, &[token as i32], &[1])?;
-        let pos_b = DeviceTensor::scalar_i32(rt, self.pos as i32)?;
-        let emb = self.exec("embed_decode")?;
-        let mut x = emb
-            .run_f32(&[&tok_b.buffer, &pos_b.buffer, &self.eng.embed.buffer,
-                       &self.eng.pos.buffer])?
-            .swap_remove(0);
-
-        for l in 0..m.n_layers {
-            let dl = &self.eng.layers[l];
-            let x_b = DeviceTensor::from_f32(rt, &x, &[1, m.d_model])?;
-            let kvdim = [m.n_heads, m.max_seq, m.d_head];
-            let k_b = DeviceTensor::from_f32(rt, &self.kv[l].0, &kvdim)?;
-            let v_b = DeviceTensor::from_f32(rt, &self.kv[l].1, &kvdim)?;
-            let attn = self.exec("attn_decode")?;
-            let outs = attn.run_literals(&[
-                &x_b.buffer, &k_b.buffer, &v_b.buffer, &pos_b.buffer,
-                &dl.ln1.buffer, &dl.wq.buffer, &dl.wk.buffer, &dl.wv.buffer,
-                &dl.wo.buffer,
-            ])?;
-            let h = outs[0].to_vec::<f32>()?;
-            self.kv[l].0 = outs[1].to_vec::<f32>()?;
-            self.kv[l].1 = outs[2].to_vec::<f32>()?;
-
-            let h_b = DeviceTensor::from_f32(rt, &h, &[1, m.d_model])?;
-            let gate = self.exec("gate_decode")?;
-            let gouts = gate.run_literals(&[&h_b.buffer, &dl.ln2.buffer, &dl.wg.buffer])?;
-            let xn = gouts[0].to_vec::<f32>()?;
-            let probs_f = gouts[1].to_vec::<f32>()?;
-            let probs: Vec<f64> = probs_f.iter().map(|&p| p as f64).collect();
-            let xn_b = DeviceTensor::from_f32(rt, &xn, &[1, m.d_model])?;
-
-            let out = access_layer(
-                &self.cfg.router, &probs, l, &desc, mat, &mut self.cache,
-                &mut self.budget, Some(&mut self.hot),
-            );
-            stats.flash_bytes += out.flash_bytes;
-            stats.n_dropped += out.n_dropped;
-            stats.n_substituted += out.n_substituted;
-            stats.n_degraded += out.n_degraded;
-            if self.ledger.decode_steps >= self.budget.warmup_steps {
-                self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
-                self.steady_flash += out.flash_bytes;
-            }
-
-            let mut y = vec![0f32; m.d_model];
-            for ex in &out.execs {
-                match ex.precision {
-                    Precision::High | Precision::Full => stats.n_high += 1,
-                    Precision::Low => stats.n_low += 1,
-                }
-                let ye =
-                    self.eng
-                        .run_expert(l, ex.expert, ex.precision, &xn_b.buffer, false)?;
-                for dd in 0..m.d_model {
-                    y[dd] += ex.gate as f32 * ye[dd];
-                }
-            }
-            let ops = desc.expert_ops(1) * out.execs.len() as f64;
-            self.ledger.record(
-                Phase::Decode, &self.cfg.hw, ops, out.dram_bytes, out.flash_bytes,
-                out.flash_fetches,
-            );
-            for dd in 0..m.d_model {
-                x[dd] = h[dd] + y[dd];
-            }
-        }
-        self.ledger.bump_decode_steps();
-        self.stats_high += stats.n_high as u64;
-        self.stats_low += stats.n_low as u64;
-        self.stats_dropped += stats.n_dropped as u64;
-        self.stats_substituted += stats.n_substituted as u64;
-        self.stats_degraded += stats.n_degraded as u64;
-
-        let x_b = DeviceTensor::from_f32(rt, &x, &[1, m.d_model])?;
-        let logits_exe = self.exec("logits_decode")?;
-        let logits = logits_exe
-            .run_f32(&[&x_b.buffer, &self.eng.ln_f.buffer, &self.eng.w_out.buffer])?
-            .swap_remove(0);
-        let next = match self.cfg.temperature {
-            None => argmax(&logits) as u8,
-            Some(t) => sample(&logits, t, &mut self.rng) as u8,
-        };
-        self.pos += 1;
+        self.backend.begin_decode(token)?;
+        let mut stats = self.lane.decode_token(&mut self.backend)?;
+        let next = self.backend.finish_decode()?;
         stats.wall_s = t0.elapsed().as_secs_f64();
         Ok((next, stats))
     }
@@ -358,10 +109,11 @@ impl<'e> Session<'e> {
         self.prefill(prompt)?;
         let prefill_wall_s = t0.elapsed().as_secs_f64();
         let mut tokens = Vec::with_capacity(n);
-        let mut cur = *prompt.last().unwrap();
+        let mut cur = *prompt.last().expect("prefill rejects empty prompts");
+        let max_seq = self.backend.eng.ws.meta.max_seq;
         let t1 = std::time::Instant::now();
         for _ in 0..n {
-            if self.pos >= self.eng.ws.meta.max_seq {
+            if self.backend.pos >= max_seq {
                 break;
             }
             let (next, _) = self.decode_step(cur)?;
@@ -369,27 +121,29 @@ impl<'e> Session<'e> {
             cur = next;
         }
         let decode_wall_s = t1.elapsed().as_secs_f64();
-        let st = self.cache.stats;
-        let unit = self.budget.unit_bytes;
+        let (msb_hit_rate, lsb_hit_rate) = self.lane.hit_rates();
+        let c = self.lane.counters;
         Ok(GenerateReport {
             decode_tokens: tokens.len(),
             tokens,
             prefill_wall_s,
             decode_wall_s,
-            ledger: self.ledger.clone(),
-            msb_hit_rate: ratio(st.msb_hits, st.msb_misses),
-            lsb_hit_rate: ratio(st.lsb_hits, st.lsb_misses),
-            miss_rate: if self.steady_accesses == 0 {
-                0.0
-            } else {
-                self.steady_flash as f64 / (self.steady_accesses as f64 * unit as f64)
-            },
-            n_high: self.stats_high,
-            n_low: self.stats_low,
-            n_dropped: self.stats_dropped,
-            n_substituted: self.stats_substituted,
-            n_degraded: self.stats_degraded,
+            ledger: self.lane.ledger.clone(),
+            msb_hit_rate,
+            lsb_hit_rate,
+            miss_rate: self.lane.miss_rate(),
+            n_high: c.n_high,
+            n_low: c.n_low,
+            n_dropped: c.n_dropped,
+            n_substituted: c.n_substituted,
+            n_degraded: c.n_degraded,
+            steady_flash_bytes: self.lane.steady_flash,
+            steady_norm_bytes: self.lane.steady_norm_bytes(),
         })
+    }
+
+    fn exec(&self, name: &str) -> Result<Executor<'_>> {
+        Executor::new(&self.backend.eng.rt, name)
     }
 
     /// Teacher-forced NLL/byte over `text` through the prefill path with a
@@ -400,12 +154,13 @@ impl<'e> Session<'e> {
     where
         F: FnMut(&Engine, usize, usize, &xla::PjRtBuffer) -> Result<Vec<f32>>,
     {
-        let m = &self.eng.ws.meta;
+        let eng = self.backend.eng;
+        let m = &eng.ws.meta;
         let s = m.max_seq;
         if text.len() < 2 {
             bail!("need at least 2 bytes");
         }
-        let rt = &self.eng.rt;
+        let rt = &eng.rt;
         let mut total_nll = 0.0f64;
         let mut count = 0usize;
         for window in text.chunks(s) {
@@ -421,12 +176,12 @@ impl<'e> Session<'e> {
             let zero = DeviceTensor::scalar_i32(rt, 0)?;
             let mut x = self
                 .exec("embed_prefill")?
-                .run_f32(&[&tok_b.buffer, &zero.buffer, &self.eng.embed.buffer,
-                           &self.eng.pos.buffer])?
+                .run_f32(&[&tok_b.buffer, &zero.buffer, &eng.embed.buffer,
+                           &eng.pos.buffer])?
                 .swap_remove(0);
             let valid_b = DeviceTensor::scalar_i32(rt, valid as i32)?;
             for l in 0..m.n_layers {
-                let dl = &self.eng.layers[l];
+                let dl = &eng.layers[l];
                 let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
                 let outs = self.exec("attn_prefill")?.run_literals(&[
                     &x_b.buffer, &valid_b.buffer, &dl.ln1.buffer, &dl.wq.buffer,
@@ -444,7 +199,7 @@ impl<'e> Session<'e> {
                 let mut y = vec![0f32; s * m.d_model];
                 // expert outputs once per expert, combined per-token top-k
                 for e in 0..e_n {
-                    let ye = expert_fn(self.eng, l, e, &xn_b.buffer)?;
+                    let ye = expert_fn(eng, l, e, &xn_b.buffer)?;
                     for t in 0..valid {
                         let p = &probs[t * e_n..(t + 1) * e_n];
                         let mut idx: Vec<usize> = (0..e_n).collect();
@@ -466,7 +221,7 @@ impl<'e> Session<'e> {
             let x_b = DeviceTensor::from_f32(rt, &x, &[s, m.d_model])?;
             let logits = self
                 .exec("logits_prefill")?
-                .run_f32(&[&x_b.buffer, &self.eng.ln_f.buffer, &self.eng.w_out.buffer])?
+                .run_f32(&[&x_b.buffer, &eng.ln_f.buffer, &eng.w_out.buffer])?
                 .swap_remove(0);
             for t in 0..valid - 1 {
                 let row = &logits[t * m.vocab..(t + 1) * m.vocab];
@@ -478,7 +233,11 @@ impl<'e> Session<'e> {
     }
 
     /// NLL/byte with all experts at a uniform precision from the store.
-    pub fn eval_nll_uniform(&mut self, text: &[u8], precision: Precision) -> Result<f64> {
+    pub fn eval_nll_uniform(
+        &mut self,
+        text: &[u8],
+        precision: crate::router::Precision,
+    ) -> Result<f64> {
         self.eval_nll_with(text, |eng, l, e, xn| {
             eng.run_expert(l, e, precision, xn, true)
         })
@@ -496,14 +255,6 @@ impl<'e> Session<'e> {
     }
 }
 
-fn ratio(h: u64, m: u64) -> f64 {
-    if h + m == 0 {
-        1.0
-    } else {
-        h as f64 / (h + m) as f64
-    }
-}
-
 pub fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
@@ -512,7 +263,7 @@ pub fn argmax(xs: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-fn sample(logits: &[f32], temp: f64, rng: &mut Rng) -> usize {
+pub(crate) fn sample(logits: &[f32], temp: f64, rng: &mut Rng) -> usize {
     let scaled: Vec<f64> = logits.iter().map(|&l| l as f64 / temp).collect();
     let m = scaled.iter().copied().fold(f64::NEG_INFINITY, f64::max);
     let weights: Vec<f64> = scaled.iter().map(|&l| (l - m).exp()).collect();

@@ -29,7 +29,7 @@ pub fn mat_for(desc: &ModelDesc) -> MatConfig {
 
 fn base_episode(desc: &ModelDesc, prefill: usize, decode: usize) -> EpisodeConfig {
     let mut cfg = EpisodeConfig::gsm8k_default(desc.clone());
-    cfg.mat = mat_for(desc);
+    cfg.serve.mat = mat_for(desc);
     cfg.prefill_tokens = prefill;
     cfg.decode_tokens = decode;
     cfg
@@ -62,11 +62,12 @@ impl SliceConfig {
     }
 
     pub fn apply(&self, cfg: &mut EpisodeConfig) {
-        let k = cfg.desc.top_k;
+        let k = cfg.serve.desc.top_k;
+        let router = &mut cfg.serve.router;
         match self {
-            SliceConfig::HighBit => cfg.router = RouterConfig::cache_prior_high(k),
+            SliceConfig::HighBit => *router = RouterConfig::cache_prior_high(k),
             SliceConfig::LowBit => {
-                cfg.router = RouterConfig {
+                *router = RouterConfig {
                     policy: Policy::CachePrior { boost: 2.0 },
                     top_k: k,
                     dbsc: None,
@@ -75,16 +76,16 @@ impl SliceConfig {
             }
             SliceConfig::AmatMixed => {
                 // same storage as DBSC but no dynamic split: decode all-low
-                cfg.router = RouterConfig {
+                *router = RouterConfig {
                     policy: Policy::CachePrior { boost: 2.0 },
                     top_k: k,
                     dbsc: None,
                     uniform_precision: Precision::Low,
                 }
             }
-            SliceConfig::DbscAmat => cfg.router = RouterConfig::dbsc(k),
+            SliceConfig::DbscAmat => *router = RouterConfig::dbsc(k),
             SliceConfig::Cumsum => {
-                cfg.router = RouterConfig {
+                *router = RouterConfig {
                     policy: Policy::Cumsum { tau: 0.9 },
                     top_k: k,
                     dbsc: None,
@@ -121,8 +122,8 @@ pub fn fig2(desc: &ModelDesc, threads: usize) -> (Vec<AccuracyPoint>, Table) {
     let desc2 = desc.clone();
     let points = par_map(jobs, threads, move |(kind, c)| {
         let mut cfg = base_episode(&desc2, 500, 128);
-        cfg.cache_bytes = gib(cache_gib);
-        cfg.constraint = c;
+        cfg.serve.cache_bytes = gib(cache_gib);
+        cfg.serve.constraint = c;
         kind.apply(&mut cfg);
         let r = run_episodes_avg(&cfg, 3);
         AccuracyPoint {
@@ -193,8 +194,8 @@ pub fn fig8(desc: &ModelDesc, threads: usize) -> (Vec<AccuracyPoint>, Table) {
     let desc2 = desc.clone();
     let points = par_map(jobs, threads, move |(kind, cg, c)| {
         let mut cfg = base_episode(&desc2, 500, 128);
-        cfg.cache_bytes = gib(cg);
-        cfg.constraint = c;
+        cfg.serve.cache_bytes = gib(cg);
+        cfg.serve.constraint = c;
         kind.apply(&mut cfg);
         let r = run_episodes_avg(&cfg, 2);
         AccuracyPoint {
@@ -308,9 +309,9 @@ pub fn fig9(desc: &ModelDesc, threads: usize) -> (Vec<EfficiencyPoint>, Table) {
         let mut candidates = Vec::new();
         for &c in &constraints {
             let mut cfg = base_episode(&desc2, 500, 128);
-            cfg.cache_bytes = gib(cg);
-            cfg.constraint = c;
-            cfg.warmup = WarmupStrategy::Pcw;
+            cfg.serve.cache_bytes = gib(cg);
+            cfg.serve.constraint = c;
+            cfg.serve.warmup = WarmupStrategy::Pcw;
             scheme.apply(&mut cfg);
             candidates.push(run_episodes_avg(&cfg, 3));
         }
@@ -414,10 +415,10 @@ pub fn fig10(desc: &ModelDesc, threads: usize) -> (Vec<WarmupPoint>, Table) {
     let desc2 = desc.clone();
     let rows = par_map(strategies.to_vec(), threads, move |w| {
         let mut cfg = base_episode(&desc2, 512, 96);
-        cfg.cache_bytes = gib(2.4);
-        cfg.constraint = 0.01;
+        cfg.serve.cache_bytes = gib(2.4);
+        cfg.serve.constraint = 0.01;
         SliceConfig::DbscAmat.apply(&mut cfg);
-        cfg.warmup = w;
+        cfg.serve.warmup = w;
         let r = run_episodes_avg(&cfg, 3);
         (w, r)
     });
@@ -466,10 +467,10 @@ pub fn ablations(desc: &ModelDesc, threads: usize) -> Table {
     let desc2 = desc.clone();
     let theta_rows = par_map(thetas.to_vec(), threads, move |th| {
         let mut cfg = base_episode(&desc2, 400, 96);
-        cfg.cache_bytes = gib(2.4);
-        cfg.constraint = 0.05;
+        cfg.serve.cache_bytes = gib(2.4);
+        cfg.serve.constraint = 0.05;
         SliceConfig::DbscAmat.apply(&mut cfg);
-        cfg.router.dbsc = Some(DbscConfig { theta: th, max_critical: 2 });
+        cfg.serve.router.dbsc = Some(DbscConfig { theta: th, max_critical: 2 });
         (th, run_episode(&cfg))
     });
     for (th, r) in &theta_rows {
@@ -485,10 +486,10 @@ pub fn ablations(desc: &ModelDesc, threads: usize) -> Table {
     let desc4 = desc.clone();
     let het_rows = par_map(vec![true, false], threads, move |het| {
         let mut cfg = base_episode(&desc4, 400, 96);
-        cfg.cache_bytes = gib(2.4);
-        cfg.constraint = 0.05;
+        cfg.serve.cache_bytes = gib(2.4);
+        cfg.serve.constraint = 0.05;
         SliceConfig::DbscAmat.apply(&mut cfg);
-        cfg.heterogeneous_lsb = het;
+        cfg.serve.heterogeneous_lsb = het;
         (het, run_episode(&cfg))
     });
     for (het, r) in &het_rows {
@@ -505,9 +506,9 @@ pub fn ablations(desc: &ModelDesc, threads: usize) -> Table {
     let mats = MatConfig::all().to_vec();
     let mat_rows = par_map(mats, threads, move |mat| {
         let mut cfg = base_episode(&desc3, 400, 96);
-        cfg.cache_bytes = gib(2.4);
-        cfg.constraint = 0.05;
-        cfg.mat = mat;
+        cfg.serve.cache_bytes = gib(2.4);
+        cfg.serve.constraint = 0.05;
+        cfg.serve.mat = mat;
         SliceConfig::DbscAmat.apply(&mut cfg);
         (mat, run_episode(&cfg))
     });

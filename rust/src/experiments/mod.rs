@@ -4,9 +4,11 @@
 //! the CLI, the examples, and the benches regenerate identical artifacts.
 
 pub mod figures;
+#[cfg(feature = "pjrt")]
 pub mod table1;
 
 pub use figures::*;
+#[cfg(feature = "pjrt")]
 pub use table1::*;
 
 use crate::memhier::HwSpec;

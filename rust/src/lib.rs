@@ -4,27 +4,47 @@
 //! Miss-Rate Constraints for Efficient MoE Inference" (CS.AR 2025) as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! * **L3 (this crate)** — the serving coordinator: slice-granular expert
-//!   cache (DBSC), cache-aware routing under miss budgets, predictive
-//!   cache warmup (PCW), the Fig 7 memory-hierarchy cost model, a
-//!   full-geometry trace simulator, and a PJRT-backed execution engine
-//!   serving a real (tiny) MoE LM.
+//! * **L3 (this crate)** — the serving coordinator, built around ONE
+//!   unified pipeline:
+//!   - [`serve`] — the serving core: `ServeLoop` (prefill expert
+//!     streaming + hotness, `access_layer` decode routing,
+//!     `SliceCache`/`MissBudget`/`Ledger` bookkeeping, the PCW
+//!     prefill→decode transition) parameterized over the two-method
+//!     `ExpertBackend` trait;
+//!   - [`sim`] — the full-geometry trace simulator: `run_episode` is a
+//!     thin adapter running the core over `CostModelBackend`;
+//!   - `engine` (feature `pjrt`) — the PJRT execution path serving a real
+//!     (tiny) trained MoE LM: `Session` is the other thin adapter,
+//!     running the core over `PjrtBackend`;
+//!   - [`server`] — a multi-lane scheduler: N worker lanes draining a
+//!     shared bounded queue, each lane a `ServeLoop`, with an optional
+//!     shared mutex-guarded `SliceCache` so concurrent requests contend
+//!     for slice capacity;
+//!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
+//!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
+//!     Fig 7 cost model, AMAT quantization);
+//!   - [`experiments`] — drivers regenerating the paper's tables/figures.
 //! * **L2** — `python/compile/model.py`: the JAX model, AOT-lowered once
 //!   to HLO text artifacts.
 //! * **L1** — `python/compile/kernels/amat_ffn.py`: Pallas bit-sliced
 //!   dequant + expert-FFN kernels (interpret mode), oracled by `ref.py`.
 //!
 //! Python never runs on the request path; `artifacts/` makes the binary
-//! self-contained.
+//! self-contained. The default build is simulator-only and needs no
+//! artifacts or PJRT; enable the `pjrt` feature (plus the vendored `xla`
+//! crate, see Cargo.toml) for the real execution engine.
 
 pub mod cache;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod experiments;
 pub mod memhier;
 pub mod model;
 pub mod quant;
 pub mod router;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod util;

@@ -2,15 +2,13 @@
 //!
 //! Simulator experiments (full paper geometry, no artifacts needed):
 //!   slicemoe sysinfo | fig2 | fig3 | fig8 | fig9 | fig10 | ablations | sim
-//! Engine experiments (need `make artifacts`):
+//!   slicemoe serve-sim        (multi-lane scheduler over the cost model)
+//! Engine experiments (need `make artifacts` + `--features pjrt`):
 //!   slicemoe table1 | generate | serve | calibrate
-
-use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
 use slicemoe::cache::WarmupStrategy;
-use slicemoe::engine::{Engine, Session, SessionConfig};
 use slicemoe::experiments as exp;
 use slicemoe::model::ModelDesc;
 use slicemoe::quant::MatConfig;
@@ -46,11 +44,12 @@ simulator commands (paper-scale geometry):
   fig10                 cache warmup strategies (Empty/Last/Random/PCW)
   ablations             θ sweep, MAT sweep, policy ablations
   sim                   one configurable episode (all knobs exposed)
+  serve-sim             multi-lane scheduler over the cost-model backend
 
-engine commands (require `make artifacts`):
+engine commands (require `make artifacts` and a `--features pjrt` build):
   table1                AMAT PPL table on the trained tiny LM (measured)
   generate              generate text through the DBSC serving path
-  serve                 run the single-batch server over a request stream
+  serve                 run the multi-lane server over a request stream
   calibrate             measured tiny-LM anchors for the accuracy proxy
 
 common flags: --model deepseek|qwen  --threads N  --artifacts DIR
@@ -153,33 +152,18 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 .parse(rest, cmd)?;
             let desc = model_flag(&a)?;
             let mut cfg = EpisodeConfig::gsm8k_default(desc.clone());
-            cfg.mat = MatConfig::parse(&a.str("mat"))
+            cfg.serve.mat = MatConfig::parse(&a.str("mat"))
                 .ok_or_else(|| anyhow::anyhow!("bad --mat"))?;
-            cfg.cache_bytes = exp::gib(a.f64("cache-gib")?);
-            cfg.constraint = parse_constraint(&a.str("constraint"))?;
+            cfg.serve.cache_bytes = exp::gib(a.f64("cache-gib")?);
+            cfg.serve.constraint = parse_constraint(&a.str("constraint"))?;
             cfg.prefill_tokens = a.usize("prefill")?;
             cfg.decode_tokens = a.usize("decode")?;
-            cfg.seed = a.usize("seed")? as u64;
-            cfg.warmup = WarmupStrategy::parse(&a.str("warmup"))
+            cfg.serve.seed = a.usize("seed")? as u64;
+            cfg.serve.warmup = WarmupStrategy::parse(&a.str("warmup"))
                 .ok_or_else(|| anyhow::anyhow!("bad --warmup"))?;
             let policy = Policy::parse(&a.str("policy"))
                 .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
-            cfg.router = match a.str("precision").as_str() {
-                "dbsc" => RouterConfig { policy, ..RouterConfig::dbsc(desc.top_k) },
-                "high" => RouterConfig {
-                    policy,
-                    top_k: desc.top_k,
-                    dbsc: None,
-                    uniform_precision: Precision::High,
-                },
-                "low" => RouterConfig {
-                    policy,
-                    top_k: desc.top_k,
-                    dbsc: None,
-                    uniform_precision: Precision::Low,
-                },
-                p => bail!("bad --precision '{p}'"),
-            };
+            cfg.serve.router = router_flag(&a.str("precision"), policy, desc.top_k)?;
             let r = run_episode(&cfg);
             println!("model           {}", desc.name);
             println!("miss-rate       {:.4} (high-bit-normalized, post-warmup)", r.miss_rate);
@@ -194,84 +178,12 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
                 r.n_dropped, r.n_substituted, r.n_degraded, r.n_critical);
             Ok(())
         }
-        "table1" => {
-            let a = Args::new()
-                .opt("artifacts", "artifacts", "artifacts directory")
-                .opt("eval-bytes", "4096", "eval corpus bytes")
-                .parse(rest, cmd)?;
-            let eng = load_engine(&a, MatConfig::MAT84)?;
-            let eval = eval_corpus(&a, a.usize("eval-bytes")?)?;
-            let mats = [(4u32, 2u32), (6, 3), (8, 4)];
-            let (points, table) = exp::table1(&eng, &eval, &mats, &exp::T1Row::all())?;
-            println!("Table 1 — AMAT accuracy (measured PPL, trained tiny LM)");
-            print!("{}", table.render());
-            let violations = exp::verify_table1_shape(&points);
-            if violations.is_empty() {
-                println!("\nshape check: OK (Trunc collapses, AMAT ~ Base)");
-            } else {
-                for v in &violations {
-                    println!("shape violation: {v}");
-                }
-            }
-            Ok(())
-        }
-        "generate" => {
-            let a = Args::new()
-                .opt("artifacts", "artifacts", "artifacts directory")
-                .opt("mat", "mat84", "MAT config")
-                .opt("prompt", "the cache holds 3 experts and ", "prompt text")
-                .opt("tokens", "64", "decode tokens")
-                .opt("cache-experts", "16", "cache capacity in experts")
-                .opt("constraint", "inf", "miss-rate constraint")
-                .opt("warmup", "pcw", "warmup strategy")
-                .parse(rest, cmd)?;
-            let mat = MatConfig::parse(&a.str("mat"))
-                .ok_or_else(|| anyhow::anyhow!("bad --mat"))?;
-            let eng = load_engine(&a, mat)?;
-            let desc = eng.desc();
-            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
-            let mut cfg = SessionConfig::dbsc_default(&eng);
-            cfg.cache_bytes = unit * a.usize("cache-experts")? as u64;
-            cfg.constraint = parse_constraint(&a.str("constraint"))?;
-            cfg.warmup = WarmupStrategy::parse(&a.str("warmup"))
-                .ok_or_else(|| anyhow::anyhow!("bad --warmup"))?;
-            let mut sess = Session::new(&eng, cfg);
-            let prompt = a.str("prompt").into_bytes();
-            let rep = sess.generate(&prompt, a.usize("tokens")?)?;
-            println!("prompt: {}", String::from_utf8_lossy(&prompt));
-            println!("output: {}", String::from_utf8_lossy(&rep.tokens));
-            println!(
-                "prefill {:.2}s | decode {:.2}s ({:.1} ms/token, {:.1} tok/s)",
-                rep.prefill_wall_s,
-                rep.decode_wall_s,
-                1e3 * rep.decode_wall_s / rep.decode_tokens.max(1) as f64,
-                rep.decode_tokens as f64 / rep.decode_wall_s
-            );
-            println!(
-                "sim decode energy {:.4} J | miss-rate {:.4} | msb-hit {:.3} lsb-hit {:.3}",
-                rep.ledger.decode_energy_j(), rep.miss_rate, rep.msb_hit_rate, rep.lsb_hit_rate
-            );
-            println!(
-                "high {} low {} dropped {} substituted {} degraded {}",
-                rep.n_high, rep.n_low, rep.n_dropped, rep.n_substituted, rep.n_degraded
-            );
-            Ok(())
-        }
-        "serve" => {
-            let a = Args::new()
-                .opt("artifacts", "artifacts", "artifacts directory")
-                .opt("requests", "8", "number of requests")
-                .opt("queue", "4", "admission queue depth")
-                .opt("cache-experts", "16", "cache capacity in experts")
-                .parse(rest, cmd)?;
-            serve_cmd(&a)
-        }
-        "calibrate" => {
-            let a = Args::new()
-                .opt("artifacts", "artifacts", "artifacts directory")
-                .opt("eval-bytes", "4096", "eval corpus bytes")
-                .parse(rest, cmd)?;
-            calibrate_cmd(&a)
+        "serve-sim" => serve_sim_cmd(rest),
+        #[cfg(feature = "pjrt")]
+        "table1" | "generate" | "serve" | "calibrate" => engine_cmds::dispatch(cmd, rest),
+        #[cfg(not(feature = "pjrt"))]
+        "table1" | "generate" | "serve" | "calibrate" => {
+            bail!("'{cmd}' needs the PJRT engine — rebuild with `--features pjrt`")
         }
         "help" | "--help" | "-h" => {
             println!("{}", usage());
@@ -294,114 +206,286 @@ fn parse_constraint(s: &str) -> Result<f64> {
     }
 }
 
-fn load_engine(a: &Args, mat: MatConfig) -> Result<Engine> {
-    let dir = PathBuf::from(a.str("artifacts"));
-    if !dir.join("model_meta.json").exists() {
-        bail!(
-            "artifacts not found in {} — run `make artifacts` first",
-            dir.display()
-        );
-    }
-    Engine::load(&dir, mat)
+fn router_flag(precision: &str, policy: Policy, top_k: usize) -> Result<RouterConfig> {
+    Ok(match precision {
+        "dbsc" => RouterConfig { policy, ..RouterConfig::dbsc(top_k) },
+        "high" => RouterConfig {
+            policy,
+            top_k,
+            dbsc: None,
+            uniform_precision: Precision::High,
+        },
+        "low" => RouterConfig {
+            policy,
+            top_k,
+            dbsc: None,
+            uniform_precision: Precision::Low,
+        },
+        p => bail!("bad --precision '{p}'"),
+    })
 }
 
-fn eval_corpus(a: &Args, n: usize) -> Result<Vec<u8>> {
-    let path = PathBuf::from(a.str("artifacts")).join("corpus_eval.bin");
-    let data = std::fs::read(&path)?;
-    Ok(data[..n.min(data.len())].to_vec())
-}
+/// Multi-lane scheduler over the cost-model backend: paper-scale traffic
+/// through the unified serving core, no artifacts required.
+fn serve_sim_cmd(rest: &[String]) -> Result<()> {
+    use slicemoe::serve::ServeConfig;
+    use slicemoe::server::{summarize, CostModelServerBackend, Request, ServerHandle};
+    use slicemoe::sim::{generate_workload, TraceParams, WorkloadParams};
 
-fn serve_cmd(a: &Args) -> Result<()> {
-    use slicemoe::server::{percentiles, Backend, Request, Response, ServerHandle};
-    use slicemoe::sim::{generate_workload, WorkloadParams};
-
-    let artifacts = PathBuf::from(a.str("artifacts"));
-    let cache_experts = a.usize("cache-experts")? as u64;
+    let a = Args::new()
+        .opt("model", "deepseek", "model geometry")
+        .opt("lanes", "3", "worker lanes")
+        .opt("requests", "12", "number of requests")
+        .opt("queue", "4", "admission queue depth")
+        .opt("cache-gib", "2.4", "expert cache capacity in GiB")
+        .opt("constraint", "0.05", "miss-rate constraint (or 'inf')")
+        .switch("shared-cache", "all lanes contend on one shared cache")
+        .parse(rest, "serve-sim")?;
+    let desc = model_flag(&a)?;
+    let lanes = a.usize("lanes")?.max(1);
     let n_requests = a.usize("requests")?;
-    let queue = a.usize("queue")?;
-    let eval = std::fs::read(artifacts.join("corpus_eval.bin"))?;
+    let queue = a.usize("queue")?.max(1);
+    let shared = a.bool("shared-cache");
 
-    struct EngineBackend {
-        eng: Engine,
-        cache_experts: u64,
-    }
-    impl Backend for EngineBackend {
-        fn serve(&mut self, req: &Request) -> Result<Response> {
-            let mat = self.eng.mat();
-            let desc = self.eng.desc();
-            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
-            let mut cfg = SessionConfig::dbsc_default(&self.eng);
-            cfg.cache_bytes = unit * self.cache_experts;
-            let mut sess = Session::new(&self.eng, cfg);
-            let rep = sess.generate(&req.prompt, req.decode_tokens)?;
-            Ok(Response {
-                id: req.id,
-                output: rep.tokens.clone(),
-                prefill_wall_s: rep.prefill_wall_s,
-                decode_wall_s: rep.decode_wall_s,
-                decode_tokens: rep.decode_tokens,
-                decode_energy_j: rep.ledger.decode_energy_j(),
-                miss_rate: rep.miss_rate,
-                queue_wall_s: 0.0,
-            })
+    let mut cfg = ServeConfig::gsm8k_default(desc.clone());
+    cfg.cache_bytes = exp::gib(a.f64("cache-gib")?);
+    cfg.constraint = parse_constraint(&a.str("constraint"))?;
+    cfg.router = RouterConfig::dbsc(desc.top_k);
+    let shared_cache = shared.then(|| CostModelServerBackend::shared_cache_for(&cfg));
+
+    let handle = ServerHandle::start(lanes, queue, move |_lane| {
+        let mut backend =
+            CostModelServerBackend::new(cfg.clone(), TraceParams::default(), 0x5E4E);
+        if let Some(c) = &shared_cache {
+            backend = backend.with_shared_cache(std::sync::Arc::clone(c));
         }
-    }
-
-    let handle = ServerHandle::start(queue, move || {
-        Ok(EngineBackend {
-            eng: Engine::load(&artifacts, MatConfig::MAT84)?,
-            cache_experts,
-        })
+        Ok(backend)
     });
-    let reqs = generate_workload(&WorkloadParams::tiny(), n_requests, 0x5E4E);
+
+    let reqs = generate_workload(&WorkloadParams::default(), n_requests, 0x5E4E);
     let t0 = std::time::Instant::now();
     for (i, r) in reqs.iter().enumerate() {
-        let off = (i * 4099) % (eval.len() - r.prefill_tokens - 1);
         handle.submit(Request {
             id: i as u64,
-            prompt: eval[off..off + r.prefill_tokens].to_vec(),
+            prompt: vec![0u8; r.prefill_tokens],
             decode_tokens: r.decode_tokens,
         })?;
     }
-    let mut lat = Vec::new();
-    let mut toks = 0usize;
-    let mut energy = 0.0;
+    let mut responses = Vec::new();
     for _ in 0..n_requests {
         let r = handle.recv()?;
         println!(
-            "req {:>3}: prefill {:.2}s decode {:.2}s ({:5.1} tok/s) queue {:.2}s miss {:.4}",
-            r.id, r.prefill_wall_s, r.decode_wall_s, r.tokens_per_s(), r.queue_wall_s,
-            r.miss_rate
+            "req {:>3} lane {}: decode {:>3} tok  sim-energy {:>7.3} J  queue {:.3}s  miss {:.4}",
+            r.id, r.lane, r.decode_tokens, r.decode_energy_j, r.queue_wall_s, r.miss_rate
         );
-        toks += r.decode_tokens;
-        energy += r.decode_energy_j;
-        lat.push(r.decode_wall_s / r.decode_tokens.max(1) as f64);
+        responses.push(r);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let (p50, p90, p99) = percentiles(lat);
-    println!("\n{n_requests} requests, {toks} decode tokens in {wall:.1}s ({:.2} tok/s end-to-end)",
-        toks as f64 / wall);
-    println!("per-token decode latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
-        p50 * 1e3, p90 * 1e3, p99 * 1e3);
-    println!("simulated decode energy total {energy:.3} J");
+    let s = summarize(&responses);
+    println!(
+        "\n{} requests over {lanes} lanes ({}): {} decode tokens in {wall:.2}s",
+        s.requests,
+        if shared { "shared cache" } else { "private caches" },
+        s.decode_tokens
+    );
+    println!("host per-token latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+        s.latency_p50_s * 1e3, s.latency_p90_s * 1e3, s.latency_p99_s * 1e3);
+    println!("simulated decode energy total {:.3} J", s.decode_energy_j);
+    println!("combined steady-state miss rate {:.4}", s.combined_miss_rate);
     handle.shutdown();
     Ok(())
 }
 
-fn calibrate_cmd(a: &Args) -> Result<()> {
-    let eng = load_engine(a, MatConfig::MAT84)?;
-    let eval = eval_corpus(a, a.usize("eval-bytes")?)?;
-    println!("calibration anchors (trained tiny LM, measured through PJRT):");
-    let mut sess = Session::new(&eng, SessionConfig::dbsc_default(&eng));
-    let fp = sess.eval_nll_uniform(&eval, Precision::Full)?;
-    println!("  fp32      : nll/byte {:.4}  ppl {:.4}", fp, fp.exp());
-    for (label, prec) in [("high(8b)", Precision::High), ("low(4b) ", Precision::Low)] {
-        let mut s = Session::new(&eng, SessionConfig::dbsc_default(&eng));
-        let nll = s.eval_nll_uniform(&eval, prec)?;
-        println!(
-            "  {label}: nll/byte {:.4}  ppl {:.4}  (Δnll vs fp {:+.4})",
-            nll, nll.exp(), nll - fp
-        );
+#[cfg(feature = "pjrt")]
+mod engine_cmds {
+    use std::path::PathBuf;
+
+    use anyhow::{bail, Result};
+
+    use slicemoe::cache::WarmupStrategy;
+    use slicemoe::engine::{Engine, Session, SessionConfig};
+    use slicemoe::quant::MatConfig;
+    use slicemoe::router::Precision;
+    use slicemoe::util::cli::Args;
+
+    use super::parse_constraint;
+
+    pub fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
+        match cmd {
+            "table1" => {
+                let a = Args::new()
+                    .opt("artifacts", "artifacts", "artifacts directory")
+                    .opt("eval-bytes", "4096", "eval corpus bytes")
+                    .parse(rest, cmd)?;
+                let eng = load_engine(&a, MatConfig::MAT84)?;
+                let eval = eval_corpus(&a, a.usize("eval-bytes")?)?;
+                let mats = [(4u32, 2u32), (6, 3), (8, 4)];
+                let (points, table) =
+                    slicemoe::experiments::table1(&eng, &eval, &mats, &slicemoe::experiments::T1Row::all())?;
+                println!("Table 1 — AMAT accuracy (measured PPL, trained tiny LM)");
+                print!("{}", table.render());
+                let violations = slicemoe::experiments::verify_table1_shape(&points);
+                if violations.is_empty() {
+                    println!("\nshape check: OK (Trunc collapses, AMAT ~ Base)");
+                } else {
+                    for v in &violations {
+                        println!("shape violation: {v}");
+                    }
+                }
+                Ok(())
+            }
+            "generate" => {
+                let a = Args::new()
+                    .opt("artifacts", "artifacts", "artifacts directory")
+                    .opt("mat", "mat84", "MAT config")
+                    .opt("prompt", "the cache holds 3 experts and ", "prompt text")
+                    .opt("tokens", "64", "decode tokens")
+                    .opt("cache-experts", "16", "cache capacity in experts")
+                    .opt("constraint", "inf", "miss-rate constraint")
+                    .opt("warmup", "pcw", "warmup strategy")
+                    .parse(rest, cmd)?;
+                let mat = MatConfig::parse(&a.str("mat"))
+                    .ok_or_else(|| anyhow::anyhow!("bad --mat"))?;
+                let eng = load_engine(&a, mat)?;
+                let desc = eng.desc();
+                let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+                let mut cfg = SessionConfig::dbsc_default(&eng);
+                cfg.cache_bytes = unit * a.usize("cache-experts")? as u64;
+                cfg.constraint = parse_constraint(&a.str("constraint"))?;
+                cfg.warmup = WarmupStrategy::parse(&a.str("warmup"))
+                    .ok_or_else(|| anyhow::anyhow!("bad --warmup"))?;
+                let mut sess = Session::new(&eng, cfg);
+                let prompt = a.str("prompt").into_bytes();
+                let rep = sess.generate(&prompt, a.usize("tokens")?)?;
+                println!("prompt: {}", String::from_utf8_lossy(&prompt));
+                println!("output: {}", String::from_utf8_lossy(&rep.tokens));
+                println!(
+                    "prefill {:.2}s | decode {:.2}s ({:.1} ms/token, {:.1} tok/s)",
+                    rep.prefill_wall_s,
+                    rep.decode_wall_s,
+                    1e3 * rep.decode_wall_s / rep.decode_tokens.max(1) as f64,
+                    rep.decode_tokens as f64 / rep.decode_wall_s
+                );
+                println!(
+                    "sim decode energy {:.4} J | miss-rate {:.4} | msb-hit {:.3} lsb-hit {:.3}",
+                    rep.ledger.decode_energy_j(), rep.miss_rate, rep.msb_hit_rate, rep.lsb_hit_rate
+                );
+                println!(
+                    "high {} low {} dropped {} substituted {} degraded {}",
+                    rep.n_high, rep.n_low, rep.n_dropped, rep.n_substituted, rep.n_degraded
+                );
+                Ok(())
+            }
+            "serve" => {
+                let a = Args::new()
+                    .opt("artifacts", "artifacts", "artifacts directory")
+                    .opt("lanes", "1", "worker lanes (each loads its own engine)")
+                    .opt("requests", "8", "number of requests")
+                    .opt("queue", "4", "admission queue depth")
+                    .opt("cache-experts", "16", "cache capacity in experts")
+                    .parse(rest, cmd)?;
+                serve_cmd(&a)
+            }
+            "calibrate" => {
+                let a = Args::new()
+                    .opt("artifacts", "artifacts", "artifacts directory")
+                    .opt("eval-bytes", "4096", "eval corpus bytes")
+                    .parse(rest, cmd)?;
+                calibrate_cmd(&a)
+            }
+            other => bail!("not an engine command: {other}"),
+        }
     }
-    Ok(())
+
+    fn load_engine(a: &Args, mat: MatConfig) -> Result<Engine> {
+        let dir = PathBuf::from(a.str("artifacts"));
+        if !dir.join("model_meta.json").exists() {
+            bail!(
+                "artifacts not found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Engine::load(&dir, mat)
+    }
+
+    fn eval_corpus(a: &Args, n: usize) -> Result<Vec<u8>> {
+        let path = PathBuf::from(a.str("artifacts")).join("corpus_eval.bin");
+        let data = std::fs::read(&path)?;
+        Ok(data[..n.min(data.len())].to_vec())
+    }
+
+    fn serve_cmd(a: &Args) -> Result<()> {
+        use slicemoe::engine::EngineBackend;
+        use slicemoe::server::{summarize, Request, ServerHandle};
+        use slicemoe::sim::{generate_workload, WorkloadParams};
+
+        let artifacts = PathBuf::from(a.str("artifacts"));
+        let cache_experts = a.usize("cache-experts")? as u64;
+        let lanes = a.usize("lanes")?.max(1);
+        let n_requests = a.usize("requests")?;
+        let queue = a.usize("queue")?;
+        let eval = std::fs::read(artifacts.join("corpus_eval.bin"))?;
+
+        let handle = ServerHandle::start(lanes, queue, move |_lane| {
+            Ok(EngineBackend {
+                eng: Engine::load(&artifacts, MatConfig::MAT84)?,
+                config: move |eng: &Engine| {
+                    let desc = eng.desc();
+                    let unit =
+                        desc.msb_slice_bytes(eng.mat()) + desc.lsb_slice_bytes(eng.mat());
+                    let mut cfg = SessionConfig::dbsc_default(eng);
+                    cfg.cache_bytes = unit * cache_experts;
+                    cfg
+                },
+            })
+        });
+        let reqs = generate_workload(&WorkloadParams::tiny(), n_requests, 0x5E4E);
+        let t0 = std::time::Instant::now();
+        for (i, r) in reqs.iter().enumerate() {
+            let off = (i * 4099) % (eval.len() - r.prefill_tokens - 1);
+            handle.submit(Request {
+                id: i as u64,
+                prompt: eval[off..off + r.prefill_tokens].to_vec(),
+                decode_tokens: r.decode_tokens,
+            })?;
+        }
+        let mut responses = Vec::new();
+        for _ in 0..n_requests {
+            let r = handle.recv()?;
+            println!(
+                "req {:>3} lane {}: prefill {:.2}s decode {:.2}s ({:5.1} tok/s) queue {:.2}s miss {:.4}",
+                r.id, r.lane, r.prefill_wall_s, r.decode_wall_s, r.tokens_per_s(),
+                r.queue_wall_s, r.miss_rate
+            );
+            responses.push(r);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let s = summarize(&responses);
+        println!("\n{} requests over {lanes} lane(s), {} decode tokens in {wall:.1}s ({:.2} tok/s end-to-end)",
+            s.requests, s.decode_tokens, s.decode_tokens as f64 / wall);
+        println!("per-token decode latency p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
+            s.latency_p50_s * 1e3, s.latency_p90_s * 1e3, s.latency_p99_s * 1e3);
+        println!("simulated decode energy total {:.3} J", s.decode_energy_j);
+        println!("combined steady-state miss rate {:.4}", s.combined_miss_rate);
+        handle.shutdown();
+        Ok(())
+    }
+
+    fn calibrate_cmd(a: &Args) -> Result<()> {
+        let eng = load_engine(a, MatConfig::MAT84)?;
+        let eval = eval_corpus(a, a.usize("eval-bytes")?)?;
+        println!("calibration anchors (trained tiny LM, measured through PJRT):");
+        let mut sess = Session::new(&eng, SessionConfig::dbsc_default(&eng));
+        let fp = sess.eval_nll_uniform(&eval, Precision::Full)?;
+        println!("  fp32      : nll/byte {:.4}  ppl {:.4}", fp, fp.exp());
+        for (label, prec) in [("high(8b)", Precision::High), ("low(4b) ", Precision::Low)] {
+            let mut s = Session::new(&eng, SessionConfig::dbsc_default(&eng));
+            let nll = s.eval_nll_uniform(&eval, prec)?;
+            println!(
+                "  {label}: nll/byte {:.4}  ppl {:.4}  (Δnll vs fp {:+.4})",
+                nll, nll.exp(), nll - fp
+            );
+        }
+        Ok(())
+    }
 }

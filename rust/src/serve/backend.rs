@@ -1,0 +1,51 @@
+//! The execution interface the unified serving pipeline is parameterized
+//! over.
+//!
+//! [`ServeLoop`](super::ServeLoop) owns every policy decision (routing,
+//! precision split, miss budget, cache bookkeeping, PCW); a backend owns
+//! only *execution*: where gating probabilities come from and what it
+//! means to "run" the selected experts. Exactly two methods — the
+//! cost-model backend answers from a synthetic trace and treats execution
+//! as a no-op (the Fig 7 ledger inside the loop is the cost side), while
+//! the PJRT backend answers from real compiled-HLO gate computations and
+//! executes real expert FFNs.
+
+use anyhow::Result;
+
+use crate::memhier::Phase;
+use crate::router::ExpertExec;
+
+/// What the policy core decided for one layer, handed to the backend to
+/// execute.
+#[derive(Debug)]
+pub enum ExecPlan<'a> {
+    /// Prefill streams EVERY expert of the layer at high precision
+    /// (token-parallel batches activate essentially all experts, §4.3).
+    /// `combine[t * n_experts + e]` is the renormalized top-k combine
+    /// weight of expert `e` for prompt token `t` (0.0 when unrouted).
+    Prefill { combine: &'a [f64] },
+    /// Decode executes exactly the routed experts, at the precision the
+    /// cache walk resolved (High / Low / substituted).
+    Decode { execs: &'a [ExpertExec] },
+}
+
+/// An expert execution substrate driven by [`ServeLoop`](super::ServeLoop).
+///
+/// Contract per request: the loop calls `gate` then `run_experts` once per
+/// layer in ascending layer order — for every prompt "token batch" during
+/// prefill (one batched call covering the whole prompt) and once per
+/// generated token during decode. Backends may carry whatever internal
+/// state they need between the two calls (activations, KV caches, RNG
+/// streams); the loop never looks inside.
+pub trait ExpertBackend {
+    /// Gating probabilities at `layer` for the current phase: one
+    /// probability vector per prompt token during prefill, a single-entry
+    /// vector during decode. For real backends this is where the
+    /// attention + gate computation of the layer happens.
+    fn gate(&mut self, phase: Phase, layer: usize) -> Result<Vec<Vec<f64>>>;
+
+    /// Execute the plan for `layer` and fold the expert outputs into the
+    /// backend's activations. Cost-model backends may no-op (the loop's
+    /// ledger already accounts the arithmetic).
+    fn run_experts(&mut self, phase: Phase, layer: usize, plan: &ExecPlan) -> Result<()>;
+}

@@ -1,0 +1,132 @@
+//! Cost-model execution backend: synthetic gating traces, no real
+//! compute.
+//!
+//! Wraps `sim::trace::TraceGenerator` behind [`ExpertBackend`] so the
+//! unified [`ServeLoop`](super::ServeLoop) can run full-geometry episodes.
+//! Execution is a no-op — the loop's Fig 7 ledger is the cost side — so
+//! `gate` is the only consequential method.
+//!
+//! **Determinism / parity contract:** the original simulator drew prefill
+//! gate probabilities token-major (`for token { for layer }`), while the
+//! unified pipeline consumes them layer-major (the only order a real
+//! batched backend can produce them in). To keep the RNG stream — and
+//! therefore every downstream decode probability — bit-identical to the
+//! pre-refactor simulator, the whole prefill probability block is
+//! pre-generated token-major on the first prefill `gate` call and then
+//! served per layer. `tests/serve_parity.rs` pins this equivalence
+//! against a frozen copy of the seed episode loop.
+
+use anyhow::{bail, Result};
+
+use crate::memhier::Phase;
+use crate::model::descriptor::ModelDesc;
+use crate::sim::trace::{TraceGenerator, TraceParams};
+
+use super::backend::{ExecPlan, ExpertBackend};
+
+/// Trace-driven backend for one simulated request.
+pub struct CostModelBackend {
+    gen: TraceGenerator,
+    n_layers: usize,
+    prefill_tokens: usize,
+    /// Pre-generated prefill probabilities, `[layer][token][expert]`,
+    /// drawn token-major (see module docs). Consumed per layer.
+    prefill_probs: Option<Vec<Vec<Vec<f64>>>>,
+}
+
+impl CostModelBackend {
+    pub fn new(
+        desc: &ModelDesc,
+        trace: TraceParams,
+        prefill_tokens: usize,
+        seed: u64,
+    ) -> CostModelBackend {
+        CostModelBackend {
+            gen: TraceGenerator::new(desc, trace, seed),
+            n_layers: desc.n_layers,
+            prefill_tokens,
+            prefill_probs: None,
+        }
+    }
+}
+
+impl ExpertBackend for CostModelBackend {
+    fn gate(&mut self, phase: Phase, layer: usize) -> Result<Vec<Vec<f64>>> {
+        match phase {
+            Phase::Prefill => {
+                if self.prefill_probs.is_none() {
+                    let mut per_layer: Vec<Vec<Vec<f64>>> = (0..self.n_layers)
+                        .map(|_| Vec::with_capacity(self.prefill_tokens))
+                        .collect();
+                    for _t in 0..self.prefill_tokens {
+                        for (l, row) in per_layer.iter_mut().enumerate() {
+                            row.push(self.gen.gate_probs(Phase::Prefill, l));
+                        }
+                    }
+                    self.prefill_probs = Some(per_layer);
+                }
+                let block = self.prefill_probs.as_mut().expect("prefill probs generated");
+                let out = std::mem::take(&mut block[layer]);
+                if out.is_empty() && self.prefill_tokens > 0 {
+                    bail!("prefill gate for layer {layer} consumed twice without a new prefill");
+                }
+                // after the deepest layer the block is spent: drop it so a
+                // reused backend regenerates (continuing the trace RNG)
+                // instead of silently serving empty probability vectors
+                if layer + 1 == self.n_layers {
+                    self.prefill_probs = None;
+                }
+                Ok(out)
+            }
+            Phase::Decode => Ok(vec![self.gen.gate_probs(Phase::Decode, layer)]),
+        }
+    }
+
+    fn run_experts(&mut self, _phase: Phase, _layer: usize, _plan: &ExecPlan) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memhier::Phase;
+
+    #[test]
+    fn prefill_probs_are_token_major_generated() {
+        // drawing through the backend layer-major must equal drawing from
+        // a raw generator token-major
+        let desc = ModelDesc::tiny();
+        let (tokens, seed) = (5, 42);
+        let mut raw = TraceGenerator::new(&desc, TraceParams::default(), seed);
+        let mut expect: Vec<Vec<Vec<f64>>> =
+            (0..desc.n_layers).map(|_| Vec::new()).collect();
+        for _t in 0..tokens {
+            for l in 0..desc.n_layers {
+                expect[l].push(raw.gate_probs(Phase::Prefill, l));
+            }
+        }
+        let first_decode = raw.gate_probs(Phase::Decode, 0);
+
+        let mut be = CostModelBackend::new(&desc, TraceParams::default(), tokens, seed);
+        for l in 0..desc.n_layers {
+            assert_eq!(be.gate(Phase::Prefill, l).unwrap(), expect[l]);
+        }
+        // decode continues from the same RNG state
+        assert_eq!(be.gate(Phase::Decode, 0).unwrap(), vec![first_decode]);
+        // a second prefill pass regenerates rather than serving empties
+        let again = be.gate(Phase::Prefill, 0).unwrap();
+        assert_eq!(again.len(), tokens);
+        // ...and double-consuming a layer within one pass is an error
+        assert!(be.gate(Phase::Prefill, 0).is_err());
+    }
+
+    #[test]
+    fn decode_gate_is_single_token() {
+        let desc = ModelDesc::tiny();
+        let mut be = CostModelBackend::new(&desc, TraceParams::default(), 1, 1);
+        let p = be.gate(Phase::Decode, 2).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].len(), desc.n_experts);
+    }
+}

@@ -1,0 +1,37 @@
+//! Unified serving core: ONE prefill/decode pipeline for every execution
+//! path.
+//!
+//! The paper's three mechanisms — DBSC slice caching, cache-aware routing
+//! under a miss budget, and PCW at the prefill→decode transition — form a
+//! single policy stack regardless of what actually computes the expert
+//! FFNs. This module owns that stack once:
+//!
+//! * [`ServeLoop`] — the full per-request pipeline: prefill expert
+//!   streaming + hotness accumulation, `access_layer` decode routing,
+//!   `SliceCache`/`MissBudget`/`Ledger` bookkeeping, and the PCW
+//!   transition. All policy decisions live here.
+//! * [`ExpertBackend`] — the two-method execution interface the loop is
+//!   parameterized over: `gate` (produce gating probabilities) and
+//!   `run_experts` (execute what the policy selected).
+//! * [`CostModelBackend`] — the full-geometry trace/cost-model backend
+//!   (`sim::run_episode` is a thin adapter over it).
+//! * `engine::PjrtBackend` (feature `pjrt`) — the real tiny-LM execution
+//!   backend (`engine::Session` is the other thin adapter).
+//!
+//! The multi-lane request scheduler in [`crate::server`] stacks N
+//! `ServeLoop`s on top of a shared bounded queue; [`LaneCache`] lets those
+//! lanes either own a private `SliceCache` or contend for one shared,
+//! mutex-guarded cache the way concurrent on-device requests do.
+//!
+//! See `rust/src/serve/README.md` for the architecture notes and the
+//! sim-vs-engine adapter layering.
+
+pub mod backend;
+pub mod cost_model;
+pub mod pipeline;
+
+pub use backend::{ExecPlan, ExpertBackend};
+pub use cost_model::CostModelBackend;
+pub use pipeline::{
+    background_cost, LaneCache, ServeConfig, ServeCounters, ServeLoop, StepStats,
+};

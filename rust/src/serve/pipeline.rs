@@ -1,0 +1,505 @@
+//! The unified prefill/decode pipeline (`ServeLoop`) and its
+//! configuration (`ServeConfig`).
+//!
+//! One implementation of the paper's control flow, shared by the
+//! full-geometry cost-model path (`sim::run_episode`) and the PJRT
+//! engine (`engine::Session`):
+//!
+//! * **prefill** — layer-wise: per-token top-k routing feeds the hotness
+//!   table, every expert of the layer streams through the slice cache at
+//!   high precision, and the Fig 7 ledger is charged; at the end the
+//!   prefill→decode PCW transition reshapes the cache;
+//! * **decode** — per (token, layer): `router::access_layer` resolves
+//!   selection, precision, and the miss budget against the cache; the
+//!   backend executes the routed experts; damage (accuracy proxy), steady
+//!   -state miss statistics, and the ledger are updated.
+//!
+//! The cache is held through [`LaneCache`] so a serving lane can either
+//! own a private `SliceCache` (single-request episodes, exact parity with
+//! the original simulator) or contend on one shared, mutex-guarded cache
+//! with other lanes (the multi-lane scheduler's shared-cache mode).
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cache::{warmup::apply_ex, CacheStats, HotnessTable, SliceCache, WarmupStrategy};
+use crate::memhier::{HwSpec, Ledger, Phase};
+use crate::model::descriptor::{ModelDesc, SliceKey};
+use crate::quant::MatConfig;
+use crate::router::{access_layer, MissBudget, Precision, RouterConfig};
+use crate::sim::accuracy::{AccuracyModel, DamageAccumulator};
+
+use super::backend::{ExecPlan, ExpertBackend};
+
+/// Everything that defines one serving lane's policy stack — the merge of
+/// the old `sim::EpisodeConfig` policy knobs and `engine::SessionConfig`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub desc: ModelDesc,
+    pub mat: MatConfig,
+    pub router: RouterConfig,
+    /// High-bit-normalized miss-rate constraint (`f64::INFINITY` = none).
+    pub constraint: f64,
+    /// Expert-cache budget in bytes.
+    pub cache_bytes: u64,
+    pub warmup: WarmupStrategy,
+    pub hw: HwSpec,
+    /// Accuracy proxy for cost-model runs (`None` on the real engine,
+    /// which measures NLL instead of estimating damage).
+    pub accuracy: Option<AccuracyModel>,
+    /// Include non-expert (attention/norm) compute+DRAM background cost in
+    /// the ledger (cost-model episodes; the engine charges experts only).
+    pub background: bool,
+    /// Heterogeneous slice replacement (MSB=LRU, LSB=aggressive). False =
+    /// treat LSB like MSB (ablation knob).
+    pub heterogeneous_lsb: bool,
+    /// Sampling temperature for token generation (engine path; greedy
+    /// when `None`). Ignored by cost-model backends.
+    pub temperature: Option<f64>,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    /// Paper-scale defaults (GSM8K-shaped single request, §6.1-1).
+    pub fn gsm8k_default(desc: ModelDesc) -> ServeConfig {
+        let top_k = desc.top_k;
+        ServeConfig {
+            accuracy: Some(AccuracyModel::for_model(desc.name)),
+            mat: MatConfig::MAT84,
+            router: RouterConfig::cache_prior_high(top_k),
+            constraint: f64::INFINITY,
+            cache_bytes: (2.4 * (1u64 << 30) as f64) as u64,
+            warmup: WarmupStrategy::Pcw,
+            hw: HwSpec::paper(),
+            background: true,
+            heterogeneous_lsb: true,
+            temperature: None,
+            seed: 0xD15C,
+            desc,
+        }
+    }
+
+    /// Tiny-model engine defaults: DBSC routing + PCW, cache sized to half
+    /// the expert pool, no synthetic background cost or accuracy proxy.
+    pub fn engine_default(desc: ModelDesc, mat: MatConfig) -> ServeConfig {
+        let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+        ServeConfig {
+            router: RouterConfig::dbsc(desc.top_k),
+            constraint: f64::INFINITY,
+            cache_bytes: unit * (desc.total_experts() as u64) / 2,
+            warmup: WarmupStrategy::Pcw,
+            hw: HwSpec::paper(),
+            accuracy: None,
+            background: false,
+            heterogeneous_lsb: true,
+            temperature: None,
+            seed: 7,
+            mat,
+            desc,
+        }
+    }
+
+    /// Bytes of one high-bit expert (MSB + LSB slice) under this config.
+    pub fn unit_bytes(&self) -> u64 {
+        self.desc.msb_slice_bytes(self.mat) + self.desc.lsb_slice_bytes(self.mat)
+    }
+}
+
+/// A lane's view of the slice cache: exclusively owned, or shared with
+/// other lanes behind a mutex (multi-request contention mode).
+#[derive(Clone, Debug)]
+pub enum LaneCache {
+    Private(SliceCache),
+    Shared(Arc<Mutex<SliceCache>>),
+}
+
+impl LaneCache {
+    /// Run `f` with exclusive access to the cache. Private lanes pay
+    /// nothing; shared lanes lock for the duration of `f` (one
+    /// token-layer's worth of cache work — the contention granularity).
+    pub fn with<R>(&mut self, f: impl FnOnce(&mut SliceCache) -> R) -> R {
+        match self {
+            LaneCache::Private(c) => f(c),
+            LaneCache::Shared(m) => f(&mut m.lock().expect("shared slice cache poisoned")),
+        }
+    }
+
+    pub fn stats(&mut self) -> CacheStats {
+        self.with(|c| c.stats)
+    }
+}
+
+/// Per-decode-step statistics (the old `engine::StepStats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub flash_bytes: u64,
+    pub n_high: usize,
+    pub n_low: usize,
+    pub n_dropped: usize,
+    pub n_substituted: usize,
+    pub n_degraded: usize,
+    /// Wall-clock of the step; filled by adapters that measure real time.
+    pub wall_s: f64,
+}
+
+/// Whole-request expert counters accumulated by the loop.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeCounters {
+    pub n_high: u64,
+    pub n_low: u64,
+    pub n_dropped: u64,
+    pub n_substituted: u64,
+    pub n_degraded: u64,
+    pub n_critical: u64,
+}
+
+/// Non-expert per-token background cost for one layer (attention at int8 +
+/// KV-cache reads). Returns (ops, dram_bytes).
+pub fn background_cost(desc: &ModelDesc, ctx_len: usize) -> (f64, u64) {
+    let d = desc.d_model as f64;
+    let ops = 2.0 * (4.0 * d * d) + 4.0 * ctx_len as f64 * d;
+    let dram = (4.0 * d * d) as u64 + (2 * ctx_len * desc.d_model) as u64;
+    (ops, dram)
+}
+
+fn ratio(hits: u64, misses: u64) -> f64 {
+    if hits + misses == 0 {
+        1.0
+    } else {
+        hits as f64 / (hits + misses) as f64
+    }
+}
+
+/// One live request's pipeline state: cache + budget + hotness + ledger +
+/// damage, advanced by a backend.
+#[derive(Debug)]
+pub struct ServeLoop {
+    pub cfg: ServeConfig,
+    pub cache: LaneCache,
+    pub budget: MissBudget,
+    pub hot: HotnessTable,
+    pub ledger: Ledger,
+    pub damage: DamageAccumulator,
+    pub counters: ServeCounters,
+    /// Post-grace-window decode accesses / flash bytes (the constrained
+    /// quantity of the paper: high-bit-normalized steady-state miss rate).
+    pub steady_accesses: u64,
+    pub steady_flash: u64,
+    /// Prompt length, set by `prefill` (drives background KV context).
+    pub prefill_tokens: usize,
+    msb_bytes: u64,
+    lsb_bytes: u64,
+}
+
+impl ServeLoop {
+    /// A lane with its own private cache.
+    pub fn new(cfg: ServeConfig) -> ServeLoop {
+        let mut cache = SliceCache::new(cfg.cache_bytes);
+        cache.heterogeneous = cfg.heterogeneous_lsb;
+        Self::build(cfg, LaneCache::Private(cache))
+    }
+
+    /// A lane contending on a shared cache (the scheduler's shared-cache
+    /// mode). The caller configures capacity/heterogeneity on the shared
+    /// instance; `cfg.cache_bytes` still sets the PCW transition target.
+    pub fn with_shared_cache(cfg: ServeConfig, cache: Arc<Mutex<SliceCache>>) -> ServeLoop {
+        Self::build(cfg, LaneCache::Shared(cache))
+    }
+
+    fn build(cfg: ServeConfig, cache: LaneCache) -> ServeLoop {
+        let msb_bytes = cfg.desc.msb_slice_bytes(cfg.mat);
+        let lsb_bytes = cfg.desc.lsb_slice_bytes(cfg.mat);
+        ServeLoop {
+            budget: MissBudget::new(cfg.constraint, msb_bytes + lsb_bytes),
+            hot: HotnessTable::new(),
+            ledger: Ledger::new(),
+            damage: DamageAccumulator::new(),
+            counters: ServeCounters::default(),
+            steady_accesses: 0,
+            steady_flash: 0,
+            prefill_tokens: 0,
+            msb_bytes,
+            lsb_bytes,
+            cache,
+            cfg,
+        }
+    }
+
+    /// Bytes of one high-bit expert (the miss-rate normalization unit).
+    pub fn unit_bytes(&self) -> u64 {
+        self.msb_bytes + self.lsb_bytes
+    }
+
+    /// Steady-state normalization denominator (`accesses × unit_bytes`) —
+    /// the per-request quantity `server::combined_miss_rate` sums across a
+    /// fleet. The single home of the formula; drivers must not re-derive it.
+    pub fn steady_norm_bytes(&self) -> f64 {
+        self.steady_accesses as f64 * self.unit_bytes() as f64
+    }
+
+    /// Measured steady-state high-bit-normalized miss rate.
+    pub fn miss_rate(&self) -> f64 {
+        if self.steady_accesses == 0 {
+            0.0
+        } else {
+            self.steady_flash as f64 / self.steady_norm_bytes()
+        }
+    }
+
+    /// (msb, lsb) hit rates from the cache statistics. Exact for private
+    /// lanes; in shared-cache mode the statistics are cache-global.
+    pub fn hit_rates(&mut self) -> (f64, f64) {
+        let s = self.cache.stats();
+        (ratio(s.msb_hits, s.msb_misses), ratio(s.lsb_hits, s.lsb_misses))
+    }
+
+    /// Run the prefill phase over `n_tokens` prompt tokens and apply the
+    /// prefill→decode cache-warmup transition.
+    ///
+    /// Per layer (ascending): the backend's gate produces one probability
+    /// vector per prompt token; per-token top-k routing accumulates
+    /// hotness and combine weights; the backend executes the full expert
+    /// stream; the slice cache fills from the stream and the ledger is
+    /// charged with the real slice sizes.
+    pub fn prefill<B: ExpertBackend>(&mut self, backend: &mut B, n_tokens: usize) -> Result<()> {
+        let desc = self.cfg.desc.clone();
+        let (msb_b, lsb_b) = (self.msb_bytes, self.lsb_bytes);
+        let unit = msb_b + lsb_b;
+        let e_n = desc.n_experts;
+        self.prefill_tokens = n_tokens;
+
+        for layer in 0..desc.n_layers {
+            let probs = backend.gate(Phase::Prefill, layer)?;
+            debug_assert_eq!(probs.len(), n_tokens, "prefill gate token count");
+
+            // per-token top-k routing: hotness + combine weights
+            let mut combine = vec![0f64; probs.len() * e_n];
+            for (t, p) in probs.iter().enumerate() {
+                let mut idx: Vec<usize> = (0..p.len()).collect();
+                idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+                let mass: f64 = idx.iter().take(desc.top_k).map(|&e| p[e]).sum();
+                let pmax = p[idx[0]];
+                for &e in idx.iter().take(desc.top_k) {
+                    combine[t * e_n + e] = p[e] / mass.max(1e-9);
+                    self.hot.touch(SliceKey::msb(layer, e));
+                    self.hot.add_gate_mass(layer, e, p[e]);
+                    // critical experts would also touch the LSB plane
+                    if p[e] >= 0.5 * pmax {
+                        self.hot.touch(SliceKey::lsb(layer, e));
+                    }
+                }
+            }
+
+            // stream every expert (prefill = high precision): fill the
+            // cache, then let the backend compute over the stream
+            let (flash, fetches, dram) = self.cache.with(|cache| {
+                let mut flash = 0u64;
+                let mut fetches = 0u64;
+                let mut dram = 0u64;
+                for e in 0..e_n {
+                    for (key, bytes) in
+                        [(SliceKey::msb(layer, e), msb_b), (SliceKey::lsb(layer, e), lsb_b)]
+                    {
+                        if !cache.lookup(key) {
+                            flash += bytes;
+                            fetches += 1;
+                            let _ = cache.ensure(key, bytes);
+                        }
+                    }
+                    dram += unit;
+                }
+                (flash, fetches, dram)
+            });
+            backend.run_experts(
+                Phase::Prefill,
+                layer,
+                &ExecPlan::Prefill { combine: &combine[..] },
+            )?;
+
+            let ops = desc.expert_ops(n_tokens) * desc.top_k as f64;
+            let (mut bg_ops, mut bg_dram) = (0.0, 0u64);
+            if self.cfg.background {
+                let (o, b) = background_cost(&desc, n_tokens / 2);
+                bg_ops = o * n_tokens as f64;
+                bg_dram = b; // dense weights read once per layer
+            }
+            self.ledger.record(
+                Phase::Prefill,
+                &self.cfg.hw,
+                ops + bg_ops,
+                dram + bg_dram,
+                flash,
+                fetches,
+            );
+        }
+
+        // ---- prefill → decode transition (PCW / Fig 10 baselines) ----
+        let (warmup, target, mat) = (self.cfg.warmup, self.cfg.cache_bytes, self.cfg.mat);
+        let single_head = self.cfg.router.dbsc.is_some();
+        let hot = &self.hot;
+        self.cache.with(|cache| {
+            apply_ex(
+                cache,
+                warmup,
+                hot,
+                target,
+                desc.n_layers,
+                |k| desc.slice_bytes(k.plane, mat),
+                single_head,
+            );
+        });
+        Ok(())
+    }
+
+    /// Decode one token through every layer: route against the cache under
+    /// the miss budget, execute via the backend, account damage + ledger.
+    pub fn decode_token<B: ExpertBackend>(&mut self, backend: &mut B) -> Result<StepStats> {
+        let desc = self.cfg.desc.clone();
+        let mat = self.cfg.mat;
+        self.budget.tick();
+        let t = self.ledger.decode_steps; // tokens completed so far
+        let mut step = StepStats::default();
+
+        for layer in 0..desc.n_layers {
+            let probs_all = backend.gate(Phase::Decode, layer)?;
+            let probs = &probs_all[0];
+
+            let out = {
+                let budget = &mut self.budget;
+                let hot = &mut self.hot;
+                let router = &self.cfg.router;
+                self.cache.with(|cache| {
+                    access_layer(router, probs, layer, &desc, mat, cache, budget, Some(hot))
+                })
+            };
+
+            if let Some(model) = &self.cfg.accuracy {
+                let execs: Vec<(f64, Precision)> =
+                    out.execs.iter().map(|e| (e.gate, e.precision)).collect();
+                let bias = (out.ideal_mass - out.realized_mass).max(0.0);
+                self.damage.record(
+                    model,
+                    &execs,
+                    mat.high_bits,
+                    mat.low_bits,
+                    bias,
+                    out.dropped_raw_mass,
+                );
+            }
+
+            for ex in &out.execs {
+                match ex.precision {
+                    Precision::High | Precision::Full => step.n_high += 1,
+                    Precision::Low => step.n_low += 1,
+                }
+            }
+            step.flash_bytes += out.flash_bytes;
+            step.n_dropped += out.n_dropped;
+            step.n_substituted += out.n_substituted;
+            step.n_degraded += out.n_degraded;
+            self.counters.n_critical += out.n_critical as u64;
+
+            if t >= self.budget.warmup_steps {
+                self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
+                self.steady_flash += out.flash_bytes;
+            }
+
+            backend.run_experts(
+                Phase::Decode,
+                layer,
+                &ExecPlan::Decode { execs: &out.execs[..] },
+            )?;
+
+            let ops = desc.expert_ops(1) * out.execs.len() as f64;
+            let (bg_ops, bg_dram) = if self.cfg.background {
+                background_cost(&desc, self.prefill_tokens + t as usize)
+            } else {
+                (0.0, 0)
+            };
+            self.ledger.record(
+                Phase::Decode,
+                &self.cfg.hw,
+                ops + bg_ops,
+                out.dram_bytes + bg_dram,
+                out.flash_bytes,
+                out.flash_fetches,
+            );
+        }
+        self.ledger.bump_decode_steps();
+
+        self.counters.n_high += step.n_high as u64;
+        self.counters.n_low += step.n_low as u64;
+        self.counters.n_dropped += step.n_dropped as u64;
+        self.counters.n_substituted += step.n_substituted as u64;
+        self.counters.n_degraded += step.n_degraded as u64;
+        Ok(step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::CostModelBackend;
+    use crate::sim::TraceParams;
+
+    fn tiny_cfg() -> ServeConfig {
+        let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        cfg.cache_bytes = cfg.unit_bytes() * 6;
+        cfg
+    }
+
+    fn run(cfg: &ServeConfig, prefill: usize, decode: usize) -> ServeLoop {
+        let mut lane = ServeLoop::new(cfg.clone());
+        let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), prefill, cfg.seed);
+        lane.prefill(&mut be, prefill).unwrap();
+        for _ in 0..decode {
+            lane.decode_token(&mut be).unwrap();
+        }
+        lane
+    }
+
+    #[test]
+    fn pipeline_produces_consistent_state() {
+        let cfg = tiny_cfg();
+        let lane = run(&cfg, 32, 24);
+        assert_eq!(lane.ledger.decode_steps, 24);
+        assert_eq!(lane.prefill_tokens, 32);
+        assert!(lane.ledger.decode_energy_j() > 0.0);
+        assert!(lane.ledger.prefill_energy_j() > 0.0);
+        assert!((0.0..=1.5).contains(&lane.miss_rate()));
+        // top-k=2 per layer per token: execs + drops must conserve
+        let total = lane.counters.n_high + lane.counters.n_low + lane.counters.n_dropped;
+        assert_eq!(total, (24 * cfg.desc.n_layers * cfg.desc.top_k) as u64);
+    }
+
+    #[test]
+    fn shared_cache_lane_matches_private_when_alone() {
+        // a single lane on a shared cache must behave exactly like a
+        // private lane (the mutex adds no policy)
+        let cfg = tiny_cfg();
+        let private = run(&cfg, 32, 24);
+
+        let mut shared_cache = SliceCache::new(cfg.cache_bytes);
+        shared_cache.heterogeneous = cfg.heterogeneous_lsb;
+        let shared = Arc::new(Mutex::new(shared_cache));
+        let mut lane = ServeLoop::with_shared_cache(cfg.clone(), shared);
+        let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 32, cfg.seed);
+        lane.prefill(&mut be, 32).unwrap();
+        for _ in 0..24 {
+            lane.decode_token(&mut be).unwrap();
+        }
+        assert_eq!(private.miss_rate(), lane.miss_rate());
+        assert_eq!(private.ledger.decode_energy_j(), lane.ledger.decode_energy_j());
+        assert_eq!(private.counters.n_dropped, lane.counters.n_dropped);
+    }
+
+    #[test]
+    fn background_cost_scales_with_context() {
+        let desc = ModelDesc::tiny();
+        let (o1, d1) = background_cost(&desc, 10);
+        let (o2, d2) = background_cost(&desc, 500);
+        assert!(o2 > o1);
+        assert!(d2 > d1);
+    }
+}

@@ -1,16 +1,38 @@
-//! Single-batch request server (paper Fig 1(a): on-premises, one request
-//! at a time, the regime all three contributions target).
+//! Multi-lane request scheduler.
 //!
-//! No tokio in the offline vendor set, so this is a thread + mpsc design:
-//! the engine (PJRT client holds raw pointers and stays on one thread)
-//! lives inside the worker; clients submit `Request`s through a channel
-//! and receive `Response`s with latency/energy metrics. Backpressure is
-//! the bounded queue.
+//! N worker lanes drain ONE shared bounded queue; each lane owns a
+//! backend (a `serve::ServeLoop`-based serving path — the PJRT engine in
+//! production, the cost-model backend in simulation/tests) and serves one
+//! request at a time. Backpressure is the bounded queue: `submit` blocks
+//! while it is full.
+//!
+//! No tokio in the offline vendor set, so this is threads + a
+//! `Mutex`/`Condvar` queue. Backend construction runs ON the worker
+//! thread (the PJRT client holds raw pointers and is not `Send`).
+//!
+//! Two cache topologies:
+//! * **private** — every request gets a fresh `SliceCache` (the paper's
+//!   single-batch regime, one request at a time per cache);
+//! * **shared** — all lanes point at one mutex-guarded `SliceCache`
+//!   ([`CostModelServerBackend::with_shared_cache`]), so concurrent
+//!   requests contend for slice capacity the way real on-device traffic
+//!   does. [`combined_miss_rate`] aggregates per-request steady-state
+//!   statistics into the fleet-level constrained quantity.
+//!
+//! With more than one lane, responses arrive in COMPLETION order; the
+//! per-response `id` and `lane` fields identify them.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
+use std::time::Instant;
 
 use anyhow::Result;
+
+use crate::cache::SliceCache;
+use crate::serve::{CostModelBackend, ServeConfig, ServeLoop};
+use crate::sim::trace::TraceParams;
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -30,12 +52,46 @@ pub struct Response {
     pub decode_tokens: usize,
     /// Simulated decode energy from the Fig 7 cost model.
     pub decode_energy_j: f64,
+    /// This request's steady-state high-bit-normalized miss rate.
     pub miss_rate: f64,
     /// Queueing delay before execution started.
     pub queue_wall_s: f64,
+    /// Worker lane that served the request.
+    pub lane: usize,
+    /// Steady-state flash traffic (numerator of the miss rate).
+    pub steady_flash_bytes: u64,
+    /// Steady-state normalization denominator (`accesses × unit_bytes`).
+    pub steady_norm_bytes: f64,
 }
 
 impl Response {
+    /// Build a response from a completed lane — the single home of the
+    /// pipeline→Response metric translation (drivers must not copy it).
+    /// Wall-clock fields are measured by the caller; `queue_wall_s` and
+    /// `lane` are stamped by the scheduler.
+    pub fn from_lane(
+        lane: &ServeLoop,
+        id: u64,
+        output: Vec<u8>,
+        prefill_wall_s: f64,
+        decode_wall_s: f64,
+        decode_tokens: usize,
+    ) -> Response {
+        Response {
+            id,
+            output,
+            prefill_wall_s,
+            decode_wall_s,
+            decode_tokens,
+            decode_energy_j: lane.ledger.decode_energy_j(),
+            miss_rate: lane.miss_rate(),
+            queue_wall_s: 0.0,
+            lane: 0,
+            steady_flash_bytes: lane.steady_flash,
+            steady_norm_bytes: lane.steady_norm_bytes(),
+        }
+    }
+
     pub fn tokens_per_s(&self) -> f64 {
         if self.decode_wall_s <= 0.0 {
             0.0
@@ -45,75 +101,260 @@ impl Response {
     }
 }
 
-/// Anything that can serve one request (the PJRT engine in production, a
-/// mock in queueing tests).
+/// Fleet-level high-bit-normalized miss rate over a batch of responses:
+/// total steady-state flash traffic over total normalized accesses. In
+/// shared-cache mode this is the quantity cross-request contention moves.
+pub fn combined_miss_rate(responses: &[Response]) -> f64 {
+    let flash: u64 = responses.iter().map(|r| r.steady_flash_bytes).sum();
+    let norm: f64 = responses.iter().map(|r| r.steady_norm_bytes).sum();
+    if norm <= 0.0 {
+        0.0
+    } else {
+        flash as f64 / norm
+    }
+}
+
+/// Aggregate serving metrics over a completed batch (the single home for
+/// the summary every serving driver prints).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSummary {
+    pub requests: usize,
+    pub decode_tokens: usize,
+    pub decode_energy_j: f64,
+    /// Per-token host decode latency percentiles, seconds.
+    pub latency_p50_s: f64,
+    pub latency_p90_s: f64,
+    pub latency_p99_s: f64,
+    pub combined_miss_rate: f64,
+}
+
+pub fn summarize(responses: &[Response]) -> BatchSummary {
+    let lat: Vec<f64> = responses
+        .iter()
+        .map(|r| r.decode_wall_s / r.decode_tokens.max(1) as f64)
+        .collect();
+    let (p50, p90, p99) = crate::util::stats::percentiles(lat);
+    BatchSummary {
+        requests: responses.len(),
+        decode_tokens: responses.iter().map(|r| r.decode_tokens).sum(),
+        decode_energy_j: responses.iter().map(|r| r.decode_energy_j).sum(),
+        latency_p50_s: p50,
+        latency_p90_s: p90,
+        latency_p99_s: p99,
+        combined_miss_rate: combined_miss_rate(responses),
+    }
+}
+
+/// Anything that can serve one request (the PJRT engine in production, the
+/// cost-model backend in simulation, a mock in queueing tests).
 pub trait Backend {
     fn serve(&mut self, req: &Request) -> Result<Response>;
 }
 
-/// Client handle to a running server.
+// ---------------------------------------------------------------- queue
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue: `push` blocks while full (backpressure), `pop`
+/// blocks while empty, `close` drains producers and wakes everyone.
+struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking push; `Err(item)` if the queue was closed.
+    fn push(&self, item: T) -> std::result::Result<(), T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        while st.items.len() >= self.capacity && !st.closed {
+            st = self.not_full.wait(st).expect("queue poisoned");
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed AND drained.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue poisoned");
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().expect("queue poisoned");
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+// ------------------------------------------------------------ scheduler
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Per-lane drop guard: when the LAST live lane exits — normal drain,
+/// construction failure, or a panic unwinding out of `Backend::serve` —
+/// the queue closes so producers get an error from `submit` instead of
+/// blocking forever on a server nobody drains.
+struct LaneGuard {
+    live: Arc<AtomicUsize>,
+    queue: Arc<BoundedQueue<(Request, Instant)>>,
+}
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        if self.live.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.queue.close();
+        }
+    }
+}
+
+/// Client handle to a running multi-lane server.
 pub struct ServerHandle {
-    tx: Option<mpsc::SyncSender<(Request, std::time::Instant)>>,
+    queue: Arc<BoundedQueue<(Request, Instant)>>,
     rx: mpsc::Receiver<Result<Response>>,
-    worker: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
-    /// Start the worker. `make_backend` runs ON the worker thread (the
-    /// engine is not Send). `queue_depth` bounds admission (backpressure).
-    pub fn start<F, B>(queue_depth: usize, make_backend: F) -> ServerHandle
+    /// Start `lanes` workers draining a shared queue of depth
+    /// `queue_depth`. `make_backend(lane)` runs ON each worker thread
+    /// (backends need not be `Send`). A lane that fails to construct its
+    /// backend logs to stderr and exits — responses stay paired
+    /// one-to-one with requests; if EVERY lane dies, the queue and
+    /// response channel close, so `submit`/`recv` error instead of
+    /// blocking.
+    pub fn start<F, B>(lanes: usize, queue_depth: usize, make_backend: F) -> ServerHandle
     where
-        F: FnOnce() -> Result<B> + Send + 'static,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
         B: Backend,
     {
-        let (tx, rx_req) = mpsc::sync_channel::<(Request, std::time::Instant)>(queue_depth);
+        assert!(lanes >= 1, "need at least one lane");
+        let queue = Arc::new(BoundedQueue::new(queue_depth));
         let (tx_resp, rx) = mpsc::channel();
-        let worker = thread::Builder::new()
-            .name("slicemoe-server".into())
-            .spawn(move || {
-                let mut backend = match make_backend() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        let _ = tx_resp.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok((req, enqueued)) = rx_req.recv() {
-                    let queued = enqueued.elapsed().as_secs_f64();
-                    let result = backend.serve(&req).map(|mut r| {
-                        r.queue_wall_s = queued;
-                        r
-                    });
-                    if tx_resp.send(result).is_err() {
-                        break;
-                    }
-                }
+        let make = Arc::new(make_backend);
+        let live = Arc::new(AtomicUsize::new(lanes));
+        let workers: Vec<_> = (0..lanes)
+            .map(|lane| {
+                let queue = Arc::clone(&queue);
+                let tx = tx_resp.clone();
+                let make = Arc::clone(&make);
+                let live = Arc::clone(&live);
+                thread::Builder::new()
+                    .name(format!("slicemoe-lane-{lane}"))
+                    .spawn(move || {
+                        // Drop guard: runs on EVERY exit path, including a
+                        // panic unwinding out of backend.serve, so a dead
+                        // fleet always closes the queue.
+                        let _guard = LaneGuard { live, queue: Arc::clone(&queue) };
+                        // Responses must pair one-to-one with requests (a
+                        // client doing one recv per submit relies on it),
+                        // so a construction failure is reported out-of-band:
+                        // stderr here, and — once the LAST lane is gone —
+                        // a closed queue/channel at the client.
+                        let mut backend = match make(lane) {
+                            Ok(b) => b,
+                            Err(e) => {
+                                eprintln!(
+                                    "slicemoe-lane-{lane}: backend construction failed: {e:#}"
+                                );
+                                return;
+                            }
+                        };
+                        while let Some((req, enqueued)) = queue.pop() {
+                            let queued = enqueued.elapsed().as_secs_f64();
+                            let outcome = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| backend.serve(&req)),
+                            );
+                            let result = match outcome {
+                                Ok(res) => res.map(|mut r| {
+                                    r.queue_wall_s = queued;
+                                    r.lane = lane;
+                                    r
+                                }),
+                                Err(payload) => {
+                                    // the popped request would otherwise
+                                    // vanish (a client doing one recv per
+                                    // submit would hang): report it, then
+                                    // let the lane die — its backend state
+                                    // is suspect after an unwind
+                                    let _ = tx.send(Err(anyhow::anyhow!(
+                                        "lane {lane} panicked serving request {}: {}",
+                                        req.id,
+                                        panic_text(payload.as_ref())
+                                    )));
+                                    std::panic::resume_unwind(payload);
+                                }
+                            };
+                            if tx.send(result).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn server lane")
             })
-            .expect("spawn server worker");
-        ServerHandle { tx: Some(tx), rx, worker: Some(worker) }
+            .collect();
+        drop(tx_resp);
+        ServerHandle { queue, rx, workers }
     }
 
-    /// Submit a request (blocks when the queue is full — backpressure).
+    /// Submit a request (blocks while the queue is full — backpressure).
     pub fn submit(&self, req: Request) -> Result<()> {
-        self.tx
-            .as_ref()
-            .expect("server closed")
-            .send((req, std::time::Instant::now()))
-            .map_err(|_| anyhow::anyhow!("server worker gone"))
+        self.queue
+            .push((req, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("server closed"))
     }
 
-    /// Receive the next completed response (in submission order —
-    /// single-batch serving is FIFO).
+    /// Receive the next completed response, in completion order (FIFO
+    /// only when running a single lane).
     pub fn recv(&self) -> Result<Response> {
         self.rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("server worker gone"))?
+            .map_err(|_| anyhow::anyhow!("server workers gone"))?
     }
 
-    /// Close the queue and join the worker.
+    /// Close the queue, drain in-flight work, and join every lane.
     pub fn shutdown(mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
@@ -121,26 +362,79 @@ impl ServerHandle {
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close_and_join();
     }
 }
 
-/// Latency percentile summary for a batch of responses.
-pub fn percentiles(mut xs: Vec<f64>) -> (f64, f64, f64) {
-    if xs.is_empty() {
-        return (0.0, 0.0, 0.0);
+// ----------------------------------------------- cost-model request lane
+
+/// A `Backend` serving requests through the unified pipeline with the
+/// cost-model execution backend — the simulator as a service. Lets the
+/// multi-lane scheduler (and its tests) run paper-scale traffic with no
+/// artifacts or PJRT.
+pub struct CostModelServerBackend {
+    /// Per-request policy template (`seed` is re-derived per request id).
+    pub cfg: ServeConfig,
+    pub trace: TraceParams,
+    /// When set, every request contends on this cache; otherwise each
+    /// request gets a private cache of `cfg.cache_bytes`.
+    pub shared_cache: Option<Arc<Mutex<SliceCache>>>,
+    pub seed: u64,
+}
+
+impl CostModelServerBackend {
+    pub fn new(cfg: ServeConfig, trace: TraceParams, seed: u64) -> CostModelServerBackend {
+        CostModelServerBackend { cfg, trace, shared_cache: None, seed }
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pick = |p: f64| xs[((xs.len() - 1) as f64 * p).floor() as usize];
-    (pick(0.5), pick(0.9), pick(0.99))
+
+    pub fn with_shared_cache(mut self, cache: Arc<Mutex<SliceCache>>) -> CostModelServerBackend {
+        self.shared_cache = Some(cache);
+        self
+    }
+
+    /// A shared cache sized/configured from a lane template.
+    pub fn shared_cache_for(cfg: &ServeConfig) -> Arc<Mutex<SliceCache>> {
+        let mut cache = SliceCache::new(cfg.cache_bytes);
+        cache.heterogeneous = cfg.heterogeneous_lsb;
+        Arc::new(Mutex::new(cache))
+    }
+}
+
+impl Backend for CostModelServerBackend {
+    fn serve(&mut self, req: &Request) -> Result<Response> {
+        let prefill_tokens = req.prompt.len().max(1);
+        let mut cfg = self.cfg.clone();
+        cfg.seed = self.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        let mut backend =
+            CostModelBackend::new(&cfg.desc, self.trace, prefill_tokens, cfg.seed);
+        let mut lane = match &self.shared_cache {
+            Some(c) => ServeLoop::with_shared_cache(cfg, Arc::clone(c)),
+            None => ServeLoop::new(cfg),
+        };
+
+        let t0 = Instant::now();
+        lane.prefill(&mut backend, prefill_tokens)?;
+        let prefill_wall_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        for _ in 0..req.decode_tokens {
+            lane.decode_token(&mut backend)?;
+        }
+        // the cost model emits no token bytes, hence the empty output
+        Ok(Response::from_lane(
+            &lane,
+            req.id,
+            Vec::new(),
+            prefill_wall_s,
+            t1.elapsed().as_secs_f64(),
+            req.decode_tokens,
+        ))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::ModelDesc;
 
     struct MockBackend {
         delay_ms: u64,
@@ -158,13 +452,22 @@ mod tests {
                 decode_energy_j: 0.1,
                 miss_rate: 0.01,
                 queue_wall_s: 0.0,
+                lane: 0,
+                steady_flash_bytes: 0,
+                steady_norm_bytes: 0.0,
             })
         }
     }
 
+    fn tiny_cfg(cache_experts: u64) -> ServeConfig {
+        let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        cfg.cache_bytes = cfg.unit_bytes() * cache_experts;
+        cfg
+    }
+
     #[test]
-    fn serves_fifo() {
-        let h = ServerHandle::start(4, || Ok(MockBackend { delay_ms: 1 }));
+    fn single_lane_serves_fifo() {
+        let h = ServerHandle::start(1, 4, |_| Ok(MockBackend { delay_ms: 1 }));
         for id in 0..5 {
             h.submit(Request { id, prompt: vec![1, 2, 3], decode_tokens: 4 }).unwrap();
         }
@@ -172,13 +475,14 @@ mod tests {
             let r = h.recv().unwrap();
             assert_eq!(r.id, id);
             assert_eq!(r.output, vec![3, 2, 1]);
+            assert_eq!(r.lane, 0);
         }
         h.shutdown();
     }
 
     #[test]
     fn later_requests_accumulate_queue_delay() {
-        let h = ServerHandle::start(8, || Ok(MockBackend { delay_ms: 20 }));
+        let h = ServerHandle::start(1, 8, |_| Ok(MockBackend { delay_ms: 20 }));
         for id in 0..3 {
             h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).unwrap();
         }
@@ -191,11 +495,210 @@ mod tests {
         h.shutdown();
     }
 
+    struct PanickingBackend;
+
+    impl Backend for PanickingBackend {
+        fn serve(&mut self, _req: &Request) -> Result<Response> {
+            panic!("serve blew up");
+        }
+    }
+
     #[test]
-    fn percentile_math() {
-        let (p50, p90, p99) = percentiles((1..=100).map(|x| x as f64).collect());
-        assert_eq!(p50, 50.0);
-        assert_eq!(p90, 90.0);
-        assert_eq!(p99, 99.0);
+    fn panicking_lane_closes_queue_instead_of_hanging() {
+        let h = ServerHandle::start(1, 1, |_| Ok(PanickingBackend));
+        h.submit(Request { id: 0, prompt: vec![0], decode_tokens: 1 }).unwrap();
+        // the lane unwinds; the drop guard closes the queue and the
+        // response channel drops, so the client errors instead of parking
+        assert!(h.recv().is_err());
+        let mut saw_err = false;
+        for id in 1..4 {
+            if h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "submit kept succeeding after the lane panicked");
+        h.shutdown();
+    }
+
+    /// Panics on request id 1, serves everything else like the mock.
+    struct FlakyBackend;
+
+    impl Backend for FlakyBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            if req.id == 1 {
+                panic!("flaky request");
+            }
+            MockBackend { delay_ms: 1 }.serve(req)
+        }
+    }
+
+    #[test]
+    fn mid_serve_panic_yields_error_response_and_fleet_survives() {
+        // a panic on one request must not lose its response slot: every
+        // submitted request produces exactly one recv outcome, and the
+        // surviving lane keeps draining the queue
+        let h = ServerHandle::start(2, 4, |_| Ok(FlakyBackend));
+        for id in 0..4 {
+            h.submit(Request { id, prompt: vec![1], decode_tokens: 1 }).unwrap();
+        }
+        let (mut oks, mut errs) = (0, 0);
+        for _ in 0..4 {
+            match h.recv() {
+                Ok(r) => {
+                    assert_ne!(r.id, 1, "panicked request must not yield Ok");
+                    oks += 1;
+                }
+                Err(e) => {
+                    assert!(format!("{e:#}").contains("panicked"), "unexpected: {e:#}");
+                    errs += 1;
+                }
+            }
+        }
+        assert_eq!((oks, errs), (3, 1));
+        h.shutdown();
+    }
+
+    #[test]
+    fn failed_lane_closes_queue_instead_of_hanging() {
+        let h = ServerHandle::start(1, 1, |_| -> Result<MockBackend> {
+            Err(anyhow::anyhow!("backend construction failed"))
+        });
+        // all lanes dead: the response channel closes (no phantom
+        // per-request error is injected) and recv errors out
+        assert!(h.recv().is_err());
+        // ...and the queue closes: submit must error (bounded attempts —
+        // depth 1 — rather than parking forever)
+        let mut saw_err = false;
+        for id in 0..3 {
+            if h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err, "submit kept succeeding after all lanes died");
+        h.shutdown();
+    }
+
+    #[test]
+    fn multi_lane_completes_all_requests_concurrently() {
+        let n = 9u64;
+        let h = ServerHandle::start(3, 4, |_| Ok(MockBackend { delay_ms: 20 }));
+        for id in 0..n {
+            h.submit(Request { id, prompt: vec![id as u8, 1], decode_tokens: 2 }).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        let mut lanes = std::collections::HashSet::new();
+        for _ in 0..n {
+            let r = h.recv().unwrap();
+            assert_eq!(r.output, vec![1, r.id as u8], "per-request payload intact");
+            assert!(seen.insert(r.id), "duplicate response {}", r.id);
+            lanes.insert(r.lane);
+        }
+        assert_eq!(seen.len(), n as usize);
+        // 9 slow requests against 3 lanes: work must have spread out
+        assert!(lanes.len() >= 2, "only lanes {lanes:?} served");
+        h.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure() {
+        let delay = 25u64;
+        let h = ServerHandle::start(1, 1, move |_| Ok(MockBackend { delay_ms: delay }));
+        let t0 = Instant::now();
+        for id in 0..4 {
+            h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).unwrap();
+        }
+        // depth-1 queue + 1 busy lane: submits 3 and 4 must have blocked on
+        // earlier requests completing (~2 service times of slack)
+        let submit_wall = t0.elapsed().as_millis() as u64;
+        assert!(
+            submit_wall >= 2 * delay * 8 / 10,
+            "submit wall {submit_wall} ms shows no backpressure"
+        );
+        for _ in 0..4 {
+            h.recv().unwrap();
+        }
+        h.shutdown();
+    }
+
+    #[test]
+    fn cost_model_lanes_over_scheduler_report_metrics() {
+        // N >= 3 concurrent cost-model requests complete with per-request
+        // metrics; shared-cache mode aggregates a fleet miss rate.
+        let cfg = tiny_cfg(8);
+        let shared = CostModelServerBackend::shared_cache_for(&cfg);
+        let trace = TraceParams::default();
+        let h = ServerHandle::start(3, 2, move |_| {
+            Ok(CostModelServerBackend::new(tiny_cfg(8), trace, 0x5EED)
+                .with_shared_cache(Arc::clone(&shared)))
+        });
+        let n = 9u64;
+        for id in 0..n {
+            h.submit(Request { id, prompt: vec![7; 48], decode_tokens: 48 }).unwrap();
+        }
+        let mut responses = Vec::new();
+        for _ in 0..n {
+            responses.push(h.recv().unwrap());
+        }
+        h.shutdown();
+        assert_eq!(responses.len(), n as usize);
+        for r in &responses {
+            assert_eq!(r.decode_tokens, 48);
+            assert!(r.decode_energy_j > 0.0);
+            assert!((0.0..=1.5).contains(&r.miss_rate), "miss {}", r.miss_rate);
+            assert!(r.steady_norm_bytes > 0.0);
+        }
+        let fleet = combined_miss_rate(&responses);
+        assert!((0.0..=1.5).contains(&fleet), "fleet miss {fleet}");
+    }
+
+    #[test]
+    fn shared_cache_contention_raises_combined_miss_rate() {
+        // Deterministic contention: two pipelines interleave decode tokens
+        // on ONE shared cache vs. the same two requests run back-to-back
+        // on private caches of the same capacity.
+        use crate::serve::CostModelBackend;
+        let trace = TraceParams::default();
+        let (prefill, decode) = (48usize, 64usize);
+
+        let run_private = |seed: u64| {
+            let mut cfg = tiny_cfg(8);
+            cfg.seed = seed;
+            let mut lane = ServeLoop::new(cfg.clone());
+            let mut be = CostModelBackend::new(&cfg.desc, trace, prefill, seed);
+            lane.prefill(&mut be, prefill).unwrap();
+            for _ in 0..decode {
+                lane.decode_token(&mut be).unwrap();
+            }
+            (lane.steady_flash, lane.steady_norm_bytes())
+        };
+        let (f1, n1) = run_private(11);
+        let (f2, n2) = run_private(22);
+        let private = (f1 + f2) as f64 / (n1 + n2);
+
+        let template = tiny_cfg(8);
+        let shared = CostModelServerBackend::shared_cache_for(&template);
+        let mut make = |seed: u64| {
+            let mut cfg = template.clone();
+            cfg.seed = seed;
+            let be = CostModelBackend::new(&cfg.desc, trace, prefill, seed);
+            (ServeLoop::with_shared_cache(cfg, Arc::clone(&shared)), be)
+        };
+        let (mut lane_a, mut be_a) = make(11);
+        let (mut lane_b, mut be_b) = make(22);
+        lane_a.prefill(&mut be_a, prefill).unwrap();
+        lane_b.prefill(&mut be_b, prefill).unwrap(); // clobbers A's warm state
+        for _ in 0..decode {
+            lane_a.decode_token(&mut be_a).unwrap();
+            lane_b.decode_token(&mut be_b).unwrap();
+        }
+        let shared_flash = lane_a.steady_flash + lane_b.steady_flash;
+        let shared_norm = lane_a.steady_norm_bytes() + lane_b.steady_norm_bytes();
+        let contended = shared_flash as f64 / shared_norm;
+        assert!(
+            contended > private,
+            "contended miss rate {contended:.4} should exceed private {private:.4}"
+        );
     }
 }

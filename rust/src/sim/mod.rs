@@ -1,6 +1,7 @@
 //! Full-geometry simulation: synthetic gating traces, the episode runner
-//! (cache + routing + memory-hierarchy cost model at paper scale), the
-//! calibrated accuracy proxy, and GSM8K-shaped workload generation.
+//! (a thin adapter over `serve::ServeLoop` with the cost-model backend,
+//! at paper scale), the calibrated accuracy proxy, and GSM8K-shaped
+//! workload generation.
 
 pub mod accuracy;
 pub mod runner;

@@ -1,10 +1,11 @@
-//! Trace-driven full-geometry episode simulator.
+//! Trace-driven full-geometry episode runner — a thin adapter over the
+//! unified serving core.
 //!
-//! Runs one request (prefill + decode) of a paper-scale MoE geometry
-//! against the slice cache, routing policies, miss budget, and the Fig 7
-//! hardware cost model — producing everything Figs 2/8/9/10 plot: decode
-//! energy, decode latency, high-bit-normalized miss rate, and the accuracy
-//! proxy.
+//! One request (prefill + decode) of a paper-scale MoE geometry through
+//! `serve::ServeLoop` with a `serve::CostModelBackend`: slice cache,
+//! routing policies, miss budget, PCW, and the Fig 7 hardware cost model,
+//! producing everything Figs 2/8/9/10 plot — decode energy, decode
+//! latency, high-bit-normalized miss rate, and the accuracy proxy.
 //!
 //! Prefill model (paper §3, §4.3): prefill processes all tokens in
 //! parallel, layer-wise, and *sequentially streams every expert of every
@@ -12,58 +13,39 @@
 //! unified LRU therefore ends prefill holding the deepest layers' experts —
 //! exactly the "naive leftover" state PCW fixes. Hotness statistics are
 //! accumulated per token from the trace during prefill.
+//!
+//! The policy stack itself lives in `serve::pipeline`; this module only
+//! holds the episode-shaped configuration (`ServeConfig` + trace knobs +
+//! token counts) and the report assembly. `tests/serve_parity.rs` pins
+//! the adapter against a frozen copy of the pre-refactor simulator.
 
-use crate::cache::{warmup::apply_ex, HotnessTable, SliceCache, WarmupStrategy};
-use crate::memhier::{HwSpec, Ledger, Phase};
-use crate::model::descriptor::{ModelDesc, SliceKey};
-use crate::quant::MatConfig;
-use crate::router::{access_layer, MissBudget, Precision, RouterConfig};
+use crate::memhier::Ledger;
+use crate::model::descriptor::ModelDesc;
+use crate::serve::{CostModelBackend, ServeConfig, ServeLoop};
 
-use super::accuracy::{AccuracyModel, DamageAccumulator};
-use super::trace::{TraceGenerator, TraceParams};
+use super::accuracy::AccuracyModel;
+use super::trace::TraceParams;
 
-/// Everything that defines one simulated episode.
+/// Everything that defines one simulated episode: the shared serving
+/// policy stack plus the simulation-only knobs (synthetic trace shape and
+/// token counts).
 #[derive(Clone, Debug)]
 pub struct EpisodeConfig {
-    pub desc: ModelDesc,
-    pub mat: MatConfig,
-    pub router: RouterConfig,
-    /// High-bit-normalized miss-rate constraint (f64::INFINITY = none).
-    pub constraint: f64,
-    pub cache_bytes: u64,
-    pub warmup: WarmupStrategy,
+    /// The unified policy stack (cache, router, budget, warmup, hw, ...).
+    pub serve: ServeConfig,
     pub trace: TraceParams,
     pub prefill_tokens: usize,
     pub decode_tokens: usize,
-    pub hw: HwSpec,
-    pub accuracy: AccuracyModel,
-    /// Include non-expert (attention/norm) compute+DRAM background cost.
-    pub background: bool,
-    /// Heterogeneous slice replacement (MSB=LRU, LSB=aggressive). False =
-    /// treat LSB like MSB (ablation knob).
-    pub heterogeneous_lsb: bool,
-    pub seed: u64,
 }
 
 impl EpisodeConfig {
     /// GSM8K-shaped single request (paper §6.1-1: prefill ~500, decode >100).
     pub fn gsm8k_default(desc: ModelDesc) -> Self {
-        let top_k = desc.top_k;
         EpisodeConfig {
-            accuracy: AccuracyModel::for_model(desc.name),
-            desc,
-            mat: MatConfig::MAT84,
-            router: RouterConfig::cache_prior_high(top_k),
-            constraint: f64::INFINITY,
-            cache_bytes: (2.4 * (1u64 << 30) as f64) as u64,
-            warmup: WarmupStrategy::Pcw,
+            serve: ServeConfig::gsm8k_default(desc),
             trace: TraceParams::default(),
             prefill_tokens: 500,
             decode_tokens: 128,
-            hw: HwSpec::paper(),
-            background: true,
-            heterogeneous_lsb: true,
-            seed: 0xD15C,
         }
     }
 }
@@ -76,7 +58,7 @@ pub fn run_episodes_avg(cfg: &EpisodeConfig, n: usize) -> EpisodeReport {
     let mut reports: Vec<EpisodeReport> = (0..n)
         .map(|i| {
             let mut c = cfg.clone();
-            c.seed = cfg.seed.wrapping_add(i as u64 * 0x9E37_79B9);
+            c.serve.seed = cfg.serve.seed.wrapping_add(i as u64 * 0x9E37_79B9);
             run_episode(&c)
         })
         .collect();
@@ -129,183 +111,58 @@ pub struct EpisodeReport {
     pub early_decode_energy_j: f64,
 }
 
-/// Non-expert per-token background for one layer (attention at int8 +
-/// KV-cache reads). Returns (ops, dram_bytes).
-fn background_cost(desc: &ModelDesc, ctx_len: usize) -> (f64, u64) {
-    let d = desc.d_model as f64;
-    let ops = 2.0 * (4.0 * d * d) + 4.0 * ctx_len as f64 * d;
-    let dram = (4.0 * d * d) as u64 + (2 * ctx_len * desc.d_model) as u64;
-    (ops, dram)
-}
-
 pub fn run_episode(cfg: &EpisodeConfig) -> EpisodeReport {
-    let desc = &cfg.desc;
-    let mat = cfg.mat;
-    let msb_b = desc.msb_slice_bytes(mat);
-    let lsb_b = desc.lsb_slice_bytes(mat);
-    let unit = msb_b + lsb_b;
-
-    let mut cache = SliceCache::new(cfg.cache_bytes);
-    cache.heterogeneous = cfg.heterogeneous_lsb;
-    let mut budget = MissBudget::new(cfg.constraint, unit);
-    let mut hot = HotnessTable::new();
-    let mut ledger = Ledger::new();
-    let mut damage = DamageAccumulator::new();
-    let mut gen = TraceGenerator::new(desc, cfg.trace, cfg.seed);
-
-    // ---------------- prefill ------------------------------------------
-    // Hotness from per-token routing; memory traffic from layer-wise
-    // streaming of the full expert set.
-    for _ in 0..cfg.prefill_tokens {
-        for layer in 0..desc.n_layers {
-            let probs = gen.gate_probs(Phase::Prefill, layer);
-            let mut idx: Vec<usize> = (0..probs.len()).collect();
-            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
-            for &e in idx.iter().take(desc.top_k) {
-                hot.touch(SliceKey::msb(layer, e));
-                hot.add_gate_mass(layer, e, probs[e]);
-                // critical experts would also touch LSB
-                if probs[e] >= 0.5 * probs[idx[0]] {
-                    hot.touch(SliceKey::lsb(layer, e));
-                }
-            }
-        }
-    }
-    for layer in 0..desc.n_layers {
-        let mut flash = 0u64;
-        let mut fetches = 0u64;
-        let mut dram = 0u64;
-        for e in 0..desc.n_experts {
-            // prefill computes at high precision: both slices stream
-            for (key, bytes) in [
-                (SliceKey::msb(layer, e), msb_b),
-                (SliceKey::lsb(layer, e), lsb_b),
-            ] {
-                if !cache.lookup(key) {
-                    flash += bytes;
-                    fetches += 1;
-                    let _ = cache.ensure(key, bytes);
-                }
-            }
-            dram += unit;
-        }
-        // every expert computes over its share of routed tokens
-        let ops = desc.expert_ops(cfg.prefill_tokens) * desc.top_k as f64
-            / desc.n_experts as f64
-            * desc.n_experts as f64;
-        let mut bg_ops = 0.0;
-        let mut bg_dram = 0u64;
-        if cfg.background {
-            let (o, b) = background_cost(desc, cfg.prefill_tokens / 2);
-            bg_ops = o * cfg.prefill_tokens as f64;
-            bg_dram = b; // weights read once per layer; kv accumulated
-        }
-        ledger.record(Phase::Prefill, &cfg.hw, ops + bg_ops, dram + bg_dram, flash, fetches);
-    }
-
-    // ---------------- phase transition: cache warmup --------------------
-    apply_ex(
-        &mut cache, cfg.warmup, &hot, cfg.cache_bytes, desc.n_layers,
-        |k| desc.slice_bytes(k.plane, mat),
-        cfg.router.dbsc.is_some(),
+    let mut lane = ServeLoop::new(cfg.serve.clone());
+    let mut backend = CostModelBackend::new(
+        &cfg.serve.desc,
+        cfg.trace,
+        cfg.prefill_tokens,
+        cfg.serve.seed,
     );
 
-    // ---------------- decode -------------------------------------------
-    let mut steady_accesses = 0u64;
-    let mut steady_flash = 0u64;
-    let warmup_steps = budget.warmup_steps;
+    lane.prefill(&mut backend, cfg.prefill_tokens)
+        .expect("cost-model prefill is infallible");
+
+    let warmup_steps = lane.budget.warmup_steps;
     let early_window = warmup_steps.max(10);
     let mut early_energy_start = None;
-    let mut n_dropped = 0u64;
-    let mut n_substituted = 0u64;
-    let mut n_degraded = 0u64;
-    let mut n_critical = 0u64;
-
     for t in 0..cfg.decode_tokens as u64 {
-        budget.tick();
         if t == early_window {
-            early_energy_start = Some(ledger.decode_energy_j());
+            early_energy_start = Some(lane.ledger.decode_energy_j());
         }
-        for layer in 0..desc.n_layers {
-            let probs = gen.gate_probs(Phase::Decode, layer);
-            let out = access_layer(
-                &cfg.router, &probs, layer, desc, mat, &mut cache, &mut budget,
-                Some(&mut hot),
-            );
-            let execs: Vec<(f64, Precision)> =
-                out.execs.iter().map(|e| (e.gate, e.precision)).collect();
-            let bias = (out.ideal_mass - out.realized_mass).max(0.0);
-            damage.record(
-                &cfg.accuracy,
-                &execs,
-                mat.high_bits,
-                mat.low_bits,
-                bias,
-                out.dropped_raw_mass,
-            );
-            n_dropped += out.n_dropped as u64;
-            n_substituted += out.n_substituted as u64;
-            n_degraded += out.n_degraded as u64;
-            n_critical += out.n_critical as u64;
-            if t >= warmup_steps {
-                steady_accesses += out.execs.len() as u64 + out.n_dropped as u64;
-                steady_flash += out.flash_bytes;
-            }
-            let ops = desc.expert_ops(1) * out.execs.len() as f64 / desc.top_k as f64
-                * desc.top_k as f64;
-            let (bg_ops, bg_dram) = if cfg.background {
-                background_cost(desc, cfg.prefill_tokens + t as usize)
-            } else {
-                (0.0, 0)
-            };
-            ledger.record(
-                Phase::Decode,
-                &cfg.hw,
-                ops + bg_ops,
-                out.dram_bytes + bg_dram,
-                out.flash_bytes,
-                out.flash_fetches,
-            );
-        }
-        ledger.bump_decode_steps();
+        lane.decode_token(&mut backend)
+            .expect("cost-model decode is infallible");
     }
 
-    let early_decode_energy_j = early_energy_start.unwrap_or(ledger.decode_energy_j());
-    let stats = cache.stats;
-    let miss_rate = if steady_accesses == 0 {
-        0.0
-    } else {
-        steady_flash as f64 / (steady_accesses as f64 * unit as f64)
-    };
+    let early_decode_energy_j = early_energy_start.unwrap_or(lane.ledger.decode_energy_j());
+    let model = cfg
+        .serve
+        .accuracy
+        .unwrap_or_else(|| AccuracyModel::for_model(cfg.serve.desc.name));
+    let (msb_hit_rate, lsb_hit_rate) = lane.hit_rates();
+    let counters = lane.counters;
     EpisodeReport {
-        accuracy: damage.accuracy(&cfg.accuracy),
-        mean_damage: damage.mean_damage(),
-        miss_rate,
-        msb_hit_rate: {
-            let h = stats.msb_hits as f64;
-            let t = h + stats.msb_misses as f64;
-            if t == 0.0 { 1.0 } else { h / t }
-        },
-        lsb_hit_rate: {
-            let h = stats.lsb_hits as f64;
-            let t = h + stats.lsb_misses as f64;
-            if t == 0.0 { 1.0 } else { h / t }
-        },
-        n_dropped,
-        n_substituted,
-        n_degraded,
-        n_critical,
-        decode_energy_j: ledger.decode_energy_j(),
-        decode_latency_s: ledger.decode_wall_s,
+        accuracy: lane.damage.accuracy(&model),
+        mean_damage: lane.damage.mean_damage(),
+        miss_rate: lane.miss_rate(),
+        msb_hit_rate,
+        lsb_hit_rate,
+        n_dropped: counters.n_dropped,
+        n_substituted: counters.n_substituted,
+        n_degraded: counters.n_degraded,
+        n_critical: counters.n_critical,
+        decode_energy_j: lane.ledger.decode_energy_j(),
+        decode_latency_s: lane.ledger.decode_wall_s,
         early_decode_energy_j,
-        ledger,
+        ledger: lane.ledger,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::router::Policy;
+    use crate::cache::WarmupStrategy;
+    use crate::router::{Policy, Precision, RouterConfig};
 
     fn base_cfg() -> EpisodeConfig {
         let mut cfg = EpisodeConfig::gsm8k_default(ModelDesc::deepseek_v2_lite());
@@ -327,9 +184,9 @@ mod tests {
     #[test]
     fn bigger_cache_lowers_miss_rate() {
         let mut small = base_cfg();
-        small.cache_bytes = (1.2 * (1u64 << 30) as f64) as u64;
+        small.serve.cache_bytes = (1.2 * (1u64 << 30) as f64) as u64;
         let mut big = small.clone();
-        big.cache_bytes = 4 * (1u64 << 30);
+        big.serve.cache_bytes = 4 * (1u64 << 30);
         let (rs, rb) = (run_episode(&small), run_episode(&big));
         assert!(
             rb.miss_rate < rs.miss_rate,
@@ -343,10 +200,10 @@ mod tests {
     fn dbsc_fits_more_experts_than_uniform_high() {
         // same cache: DBSC (low-bit majority) should see higher MSB hit rate
         let mut high = base_cfg();
-        high.router = RouterConfig::cache_prior_high(6);
-        high.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
+        high.serve.router = RouterConfig::cache_prior_high(6);
+        high.serve.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
         let mut dbsc = high.clone();
-        dbsc.router = RouterConfig::dbsc(6);
+        dbsc.serve.router = RouterConfig::dbsc(6);
         let (rh, rd) = (run_episode(&high), run_episode(&dbsc));
         assert!(
             rd.miss_rate < rh.miss_rate,
@@ -360,8 +217,8 @@ mod tests {
     #[test]
     fn constraint_caps_measured_miss_rate() {
         let mut cfg = base_cfg();
-        cfg.constraint = 0.05;
-        cfg.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
+        cfg.serve.constraint = 0.05;
+        cfg.serve.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
         cfg.decode_tokens = 64;
         let r = run_episode(&cfg);
         assert!(r.miss_rate <= 0.08, "miss rate {} exceeds constraint", r.miss_rate);
@@ -373,11 +230,11 @@ mod tests {
         let mut pcw = base_cfg();
         pcw.prefill_tokens = 256;
         pcw.decode_tokens = 64;
-        pcw.constraint = 0.01;
-        pcw.router = RouterConfig::dbsc(6);
-        pcw.warmup = WarmupStrategy::Pcw;
+        pcw.serve.constraint = 0.01;
+        pcw.serve.router = RouterConfig::dbsc(6);
+        pcw.serve.warmup = WarmupStrategy::Pcw;
         let mut empty = pcw.clone();
-        empty.warmup = WarmupStrategy::Empty;
+        empty.serve.warmup = WarmupStrategy::Empty;
         let (rp, re) = (run_episodes_avg(&pcw, 3), run_episodes_avg(&empty, 3));
         assert!(
             rp.early_decode_energy_j < re.early_decode_energy_j,
@@ -390,9 +247,9 @@ mod tests {
     #[test]
     fn cumsum_is_expensive_but_accurate() {
         let mut cp = base_cfg();
-        cp.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
+        cp.serve.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
         let mut cs = cp.clone();
-        cs.router.policy = Policy::Cumsum { tau: 0.9 };
+        cs.serve.router.policy = Policy::Cumsum { tau: 0.9 };
         let (rp, rc) = (run_episode(&cp), run_episode(&cs));
         // cumsum selects more/uncached experts -> more flash traffic
         assert!(rc.decode_energy_j >= rp.decode_energy_j * 0.9);
@@ -404,5 +261,19 @@ mod tests {
         let b = run_episode(&base_cfg());
         assert_eq!(a.decode_energy_j, b.decode_energy_j);
         assert_eq!(a.accuracy, b.accuracy);
+    }
+
+    #[test]
+    fn uniform_low_precision_config_runs() {
+        let mut cfg = base_cfg();
+        cfg.serve.router = RouterConfig {
+            policy: Policy::CachePrior { boost: 2.0 },
+            top_k: 6,
+            dbsc: None,
+            uniform_precision: Precision::Low,
+        };
+        let r = run_episode(&cfg);
+        assert!(r.decode_energy_j > 0.0);
+        assert_eq!(r.n_critical, 0, "uniform precision has no DBSC criticals");
     }
 }

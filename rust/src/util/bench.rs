@@ -3,10 +3,15 @@
 //!
 //! `cargo bench` targets use `harness = false` and call into this module:
 //! warmup iterations, then timed samples, reported as median / MAD / mean
-//! with throughput when a unit count is supplied. Results can also be
-//! appended to a machine-readable lines file for EXPERIMENTS.md §Perf.
+//! (via `util::stats`) with throughput when a unit count is supplied.
+//! [`Reporter`] additionally collects results and emits a machine-readable
+//! `BENCH_*.json` file so the perf trajectory is tracked across PRs.
 
+use std::io::Write as _;
+use std::path::Path;
 use std::time::Instant;
+
+use super::stats;
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -32,6 +37,20 @@ impl BenchResult {
         }
         s
     }
+
+    /// One JSON object (median/MAD/mean in seconds, sample count,
+    /// optional units/iter). Names are plain ASCII; quotes are escaped.
+    fn to_json(&self) -> String {
+        let name = self.name.replace('\\', "\\\\").replace('"', "\\\"");
+        let units = match self.units_per_iter {
+            Some(u) => format!("{u}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":\"{}\",\"median_s\":{},\"mad_s\":{},\"mean_s\":{},\"samples\":{},\"units_per_iter\":{}}}",
+            name, self.median_s, self.mad_s, self.mean_s, self.samples.len(), units
+        )
+    }
 }
 
 pub fn fmt_time(s: f64) -> String {
@@ -46,14 +65,6 @@ pub fn fmt_time(s: f64) -> String {
     }
 }
 
-fn median_of(mut xs: Vec<f64>) -> (f64, f64) {
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = xs[xs.len() / 2];
-    let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
-    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    (med, dev[dev.len() / 2])
-}
-
 /// Run `f` for `warmup` + `samples` iterations, timing each sample.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
     for _ in 0..warmup {
@@ -65,8 +76,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         f();
         times.push(t0.elapsed().as_secs_f64());
     }
-    let (median_s, mad_s) = median_of(times.clone());
-    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
+    let (median_s, mad_s) = stats::median_mad(&times);
+    let mean_s = stats::mean(&times);
     BenchResult {
         name: name.to_string(),
         samples: times,
@@ -96,6 +107,40 @@ pub fn runner(title: &str) -> impl FnMut(BenchResult) {
     move |r: BenchResult| println!("{}", r.report())
 }
 
+/// Collecting reporter: prints like [`runner`] AND retains results so the
+/// bench binary can persist them as machine-readable JSON.
+pub struct Reporter {
+    title: String,
+    results: Vec<BenchResult>,
+}
+
+impl Reporter {
+    pub fn new(title: &str) -> Reporter {
+        println!("== {title} ==");
+        Reporter { title: title.to_string(), results: Vec::new() }
+    }
+
+    pub fn record(&mut self, r: BenchResult) {
+        println!("{}", r.report());
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write `{"title": ..., "results": [...]}` to `path` (one compact
+    /// object; medians/MADs in seconds).
+    pub fn write_json<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&path)?;
+        let title = self.title.replace('\\', "\\\\").replace('"', "\\\"");
+        let rows: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
+        writeln!(f, "{{\"title\":\"{}\",\"results\":[{}]}}", title, rows.join(","))?;
+        println!("bench results -> {}", path.as_ref().display());
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +165,38 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn json_output_is_parseable() {
+        let r = BenchResult {
+            name: "case \"a\"".to_string(),
+            samples: vec![0.5, 1.0, 1.5],
+            median_s: 1.0,
+            mad_s: 0.5,
+            mean_s: 1.0,
+            units_per_iter: Some(128.0),
+        };
+        let line = r.to_json();
+        let parsed = crate::util::json::Json::parse(&line).expect("valid json");
+        assert_eq!(parsed.at(&["median_s"]).unwrap().as_f64(), Some(1.0));
+        assert_eq!(parsed.at(&["samples"]).unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.at(&["units_per_iter"]).unwrap().as_f64(), Some(128.0));
+        assert_eq!(parsed.at(&["name"]).unwrap().as_str(), Some("case \"a\""));
+    }
+
+    #[test]
+    fn reporter_roundtrip_through_file() {
+        let mut rep = Reporter::new("unit-test");
+        rep.record(bench("tiny", 0, 2, || {
+            std::hint::black_box(1 + 1);
+        }));
+        let path = std::env::temp_dir().join(format!("bench_json_{}.json", std::process::id()));
+        rep.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::Json::parse(&text).expect("valid json file");
+        let results = parsed.at(&["results"]).unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

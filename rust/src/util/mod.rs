@@ -6,6 +6,7 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod rng;
+pub mod stats;
 pub mod testkit;
 pub mod threadpool;
 

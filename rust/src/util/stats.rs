@@ -1,0 +1,119 @@
+//! Shared summary statistics (the single home for what used to be
+//! `server::percentiles` and `util::bench`'s private `median_of`).
+//!
+//! Percentiles use linear interpolation between order statistics
+//! (type-7 / numpy default): `percentile(xs, p)` for `p ∈ [0, 1]` sits at
+//! rank `p · (n - 1)` and interpolates between the two neighboring sorted
+//! values.
+
+/// Linearly-interpolated percentile of `sorted` (ascending), `p ∈ [0, 1]`.
+/// Returns 0.0 for an empty slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + frac * (sorted[hi] - sorted[lo])
+}
+
+/// Linearly-interpolated percentile of an unsorted sample.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    percentile_sorted(&v, p)
+}
+
+/// (p50, p90, p99) latency summary of a batch of samples.
+pub fn percentiles(xs: Vec<f64>) -> (f64, f64, f64) {
+    let mut v = xs;
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    (
+        percentile_sorted(&v, 0.50),
+        percentile_sorted(&v, 0.90),
+        percentile_sorted(&v, 0.99),
+    )
+}
+
+/// Median of a sample (interpolated for even sizes). 0.0 when empty.
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// (median, median-absolute-deviation) — the robust center/spread pair the
+/// bench harness reports.
+pub fn median_mad(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let med = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    (med, median(&dev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates_linearly() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+        // rank 0.25 * 3 = 0.75 -> between 1.0 and 2.0
+        assert!((percentile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_handles_unsorted_input() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn percentiles_triple_on_1_to_100() {
+        let (p50, p90, p99) = percentiles((1..=100).map(|x| x as f64).collect());
+        assert!((p50 - 50.5).abs() < 1e-12);
+        assert!((p90 - 90.1).abs() < 1e-9);
+        assert!((p99 - 99.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.9), 7.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median_mad(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn median_mad_pair() {
+        let xs = [1.0, 1.0, 2.0, 2.0, 100.0];
+        let (med, mad) = median_mad(&xs);
+        assert_eq!(med, 2.0);
+        // deviations: [1, 1, 0, 0, 98] -> median 1.0
+        assert_eq!(mad, 1.0);
+        // MAD shrugs off the outlier, unlike the mean
+        assert!(mean(&xs) > 20.0);
+    }
+
+    #[test]
+    fn median_even_interpolates() {
+        assert_eq!(median(&[1.0, 2.0, 3.0, 10.0]), 2.5);
+    }
+}

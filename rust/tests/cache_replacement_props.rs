@@ -1,0 +1,239 @@
+//! Heterogeneous-replacement property tests for `SliceCache` (testkit
+//! substrate): under random churn,
+//!
+//! * every evictable LSB slice leaves before ANY MSB slice is touched
+//!   (the paper's §4.1 class-priority rule);
+//! * pinned entries never evict;
+//! * byte accounting stays exact (an independent model of the resident
+//!   set agrees with `used_bytes` after every operation).
+
+use std::collections::HashMap;
+
+use slicemoe::cache::{Ensure, SliceCache};
+use slicemoe::model::descriptor::{Plane, SliceKey};
+use slicemoe::util::testkit::check;
+
+#[derive(Clone, Debug)]
+enum Op {
+    Lookup(SliceKey),
+    Ensure(SliceKey, u64),
+    Remove(SliceKey),
+    Pin(SliceKey, bool),
+}
+
+fn gen_ops(rng: &mut slicemoe::util::rng::Rng, n: usize) -> Vec<Op> {
+    (0..n)
+        .map(|_| {
+            let layer = rng.below(4);
+            let expert = rng.below(8);
+            let key = if rng.bool(0.5) {
+                SliceKey::msb(layer, expert)
+            } else {
+                SliceKey::lsb(layer, expert)
+            };
+            match rng.below(8) {
+                0 | 1 => Op::Lookup(key),
+                2..=4 => Op::Ensure(key, 5 + rng.below(40) as u64),
+                5 => Op::Remove(key),
+                6 => Op::Pin(key, true),
+                _ => Op::Pin(key, false),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn lsb_class_always_evicts_before_any_msb() {
+    check(
+        "lsb-before-msb",
+        200,
+        0x15B,
+        |rng| {
+            let cap = 60 + rng.below(300) as u64;
+            (cap, gen_ops(rng, 250))
+        },
+        |(cap, ops)| {
+            let mut c = SliceCache::new(*cap);
+            for op in ops {
+                if let Op::Ensure(key, bytes) = op {
+                    if *bytes > *cap {
+                        continue;
+                    }
+                    if let Ensure::Inserted { evicted } = c.ensure(*key, *bytes) {
+                        // within one eviction batch, every LSB precedes
+                        // every MSB (class priority, LRU within class)
+                        let first_msb = evicted.iter().position(|k| k.plane == Plane::Msb);
+                        if let Some(i) = first_msb {
+                            if evicted[i..].iter().any(|k| k.plane == Plane::Lsb) {
+                                return Err(format!(
+                                    "LSB evicted after an MSB in batch {evicted:?}"
+                                ));
+                            }
+                            // an MSB fell: no unpinned LSB may survive
+                            // (the inserted key itself is exempt)
+                            for k in c.keys_mru() {
+                                if k.plane == Plane::Lsb && k != *key && !c.is_pinned(k) {
+                                    return Err(format!(
+                                        "MSB evicted while unpinned LSB {k:?} resident"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    apply_simple(&mut c, op);
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn pinned_entries_never_evict_under_churn() {
+    check(
+        "pinned-survive",
+        200,
+        0x919,
+        |rng| {
+            let cap = 80 + rng.below(200) as u64;
+            // a few entries that will be pinned up-front, then churn
+            let pinned: Vec<(SliceKey, u64)> = (0..2 + rng.below(3))
+                .map(|i| {
+                    let key = if i % 2 == 0 {
+                        SliceKey::msb(i, i)
+                    } else {
+                        SliceKey::lsb(i, i)
+                    };
+                    (key, 5 + rng.below(15) as u64)
+                })
+                .collect();
+            (cap, pinned, gen_ops(rng, 250))
+        },
+        |(cap, pinned, ops)| {
+            let mut c = SliceCache::new(*cap);
+            for &(key, bytes) in pinned {
+                let _ = c.ensure(key, bytes);
+                c.pin(key, true);
+            }
+            let protected: Vec<SliceKey> = pinned.iter().map(|&(k, _)| k).collect();
+            for op in ops {
+                match op {
+                    // churn must not unpin or remove the protected set
+                    Op::Pin(k, _) | Op::Remove(k) if protected.contains(k) => continue,
+                    Op::Ensure(key, bytes) => {
+                        if *bytes <= *cap && !protected.contains(key) {
+                            let _ = c.ensure(*key, *bytes);
+                        }
+                    }
+                    other => apply_simple(&mut c, other),
+                }
+                for k in &protected {
+                    if !c.contains(*k) {
+                        return Err(format!("pinned {k:?} was evicted"));
+                    }
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn byte_accounting_is_exact_under_random_churn() {
+    check(
+        "byte-accounting",
+        250,
+        0xB17E,
+        |rng| {
+            let cap = 50 + rng.below(400) as u64;
+            (cap, gen_ops(rng, 300))
+        },
+        |(cap, ops)| {
+            let mut c = SliceCache::new(*cap);
+            // independent model of the resident set
+            let mut model: HashMap<SliceKey, u64> = HashMap::new();
+            for op in ops {
+                match op {
+                    Op::Lookup(k) => {
+                        let hit = c.lookup(*k);
+                        if hit != model.contains_key(k) {
+                            return Err(format!("hit/miss mismatch on {k:?}"));
+                        }
+                    }
+                    Op::Ensure(key, bytes) => {
+                        if *bytes > *cap {
+                            continue;
+                        }
+                        match c.ensure(*key, *bytes) {
+                            Ensure::Hit => {
+                                if !model.contains_key(key) {
+                                    return Err(format!("spurious hit {key:?}"));
+                                }
+                            }
+                            Ensure::Inserted { evicted } => {
+                                for e in &evicted {
+                                    if model.remove(e).is_none() {
+                                        return Err(format!("evicted absent {e:?}"));
+                                    }
+                                }
+                                model.insert(*key, *bytes);
+                            }
+                            Ensure::TooLarge => {
+                                // pinned entries can block; the insert must
+                                // NOT have happened
+                                if c.contains(*key) && !model.contains_key(key) {
+                                    return Err("TooLarge but resident".into());
+                                }
+                                // evictions may still have occurred; resync
+                                model.retain(|k, _| c.contains(*k));
+                            }
+                        }
+                    }
+                    Op::Remove(k) => {
+                        let removed = c.remove(*k);
+                        if removed != model.remove(k).is_some() {
+                            return Err(format!("remove mismatch on {k:?}"));
+                        }
+                    }
+                    Op::Pin(k, p) => {
+                        let _ = c.pin(*k, *p);
+                    }
+                }
+                let expect: u64 = model.values().sum();
+                if c.used_bytes() != expect {
+                    return Err(format!(
+                        "byte accounting drifted: cache {} vs model {}",
+                        c.used_bytes(),
+                        expect
+                    ));
+                }
+                if c.len() != model.len() {
+                    return Err(format!("len {} vs model {}", c.len(), model.len()));
+                }
+                if c.used_bytes() > *cap {
+                    return Err("over capacity".into());
+                }
+                c.check_invariants()?;
+            }
+            Ok(())
+        },
+    );
+}
+
+fn apply_simple(c: &mut SliceCache, op: &Op) {
+    match op {
+        Op::Lookup(k) => {
+            c.lookup(*k);
+        }
+        Op::Remove(k) => {
+            c.remove(*k);
+        }
+        Op::Pin(k, p) => {
+            c.pin(*k, *p);
+        }
+        Op::Ensure(..) => unreachable!("handled by callers"),
+    }
+}

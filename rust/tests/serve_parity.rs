@@ -1,0 +1,285 @@
+//! Refactor parity: the unified serving core (`serve::ServeLoop` +
+//! `CostModelBackend`, which `sim::run_episode` adapts) must reproduce the
+//! PRE-REFACTOR simulator exactly.
+//!
+//! `seed_run_episode` below is a frozen copy of the seed repository's
+//! `sim::run_episode` control flow (token-major prefill hotness, layer
+//! streaming, per-token decode via `access_layer`, the original ledger
+//! `ops` expressions), written against the public policy APIs. For the
+//! default GSM8K episode the refactored path must match bit-for-bit on
+//! every counting statistic (miss rate, hit rates, drop/substitution/
+//! degrade/critical counts, accuracy proxy) and within 1e-9 relative on
+//! the energy/latency scalars (the only tolerated difference is the
+//! algebraically-neutral simplification of the ledger `ops` expressions).
+
+use slicemoe::cache::{warmup::apply_ex, HotnessTable, SliceCache};
+use slicemoe::memhier::{Ledger, Phase};
+use slicemoe::model::descriptor::{ModelDesc, SliceKey};
+use slicemoe::router::{access_layer, MissBudget, Precision, RouterConfig};
+use slicemoe::sim::accuracy::{AccuracyModel, DamageAccumulator};
+use slicemoe::sim::trace::TraceGenerator;
+use slicemoe::sim::{run_episode, EpisodeConfig, EpisodeReport};
+
+/// Non-expert per-token background cost (frozen copy of the seed's
+/// private `background_cost`).
+fn seed_background_cost(desc: &ModelDesc, ctx_len: usize) -> (f64, u64) {
+    let d = desc.d_model as f64;
+    let ops = 2.0 * (4.0 * d * d) + 4.0 * ctx_len as f64 * d;
+    let dram = (4.0 * d * d) as u64 + (2 * ctx_len * desc.d_model) as u64;
+    (ops, dram)
+}
+
+/// Frozen copy of the seed repository's `sim::run_episode`.
+fn seed_run_episode(cfg: &EpisodeConfig) -> EpisodeReport {
+    let desc = &cfg.serve.desc;
+    let mat = cfg.serve.mat;
+    let msb_b = desc.msb_slice_bytes(mat);
+    let lsb_b = desc.lsb_slice_bytes(mat);
+    let unit = msb_b + lsb_b;
+
+    let mut cache = SliceCache::new(cfg.serve.cache_bytes);
+    cache.heterogeneous = cfg.serve.heterogeneous_lsb;
+    let mut budget = MissBudget::new(cfg.serve.constraint, unit);
+    let mut hot = HotnessTable::new();
+    let mut ledger = Ledger::new();
+    let mut damage = DamageAccumulator::new();
+    let accuracy_model = cfg
+        .serve
+        .accuracy
+        .unwrap_or_else(|| AccuracyModel::for_model(desc.name));
+    let mut gen = TraceGenerator::new(desc, cfg.trace, cfg.serve.seed);
+
+    // ---------------- prefill (token-major hotness, then streaming) -----
+    for _ in 0..cfg.prefill_tokens {
+        for layer in 0..desc.n_layers {
+            let probs = gen.gate_probs(Phase::Prefill, layer);
+            let mut idx: Vec<usize> = (0..probs.len()).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            for &e in idx.iter().take(desc.top_k) {
+                hot.touch(SliceKey::msb(layer, e));
+                hot.add_gate_mass(layer, e, probs[e]);
+                if probs[e] >= 0.5 * probs[idx[0]] {
+                    hot.touch(SliceKey::lsb(layer, e));
+                }
+            }
+        }
+    }
+    for layer in 0..desc.n_layers {
+        let mut flash = 0u64;
+        let mut fetches = 0u64;
+        let mut dram = 0u64;
+        for e in 0..desc.n_experts {
+            for (key, bytes) in [
+                (SliceKey::msb(layer, e), msb_b),
+                (SliceKey::lsb(layer, e), lsb_b),
+            ] {
+                if !cache.lookup(key) {
+                    flash += bytes;
+                    fetches += 1;
+                    let _ = cache.ensure(key, bytes);
+                }
+            }
+            dram += unit;
+        }
+        let ops = desc.expert_ops(cfg.prefill_tokens) * desc.top_k as f64
+            / desc.n_experts as f64
+            * desc.n_experts as f64;
+        let mut bg_ops = 0.0;
+        let mut bg_dram = 0u64;
+        if cfg.serve.background {
+            let (o, b) = seed_background_cost(desc, cfg.prefill_tokens / 2);
+            bg_ops = o * cfg.prefill_tokens as f64;
+            bg_dram = b;
+        }
+        ledger.record(Phase::Prefill, &cfg.serve.hw, ops + bg_ops, dram + bg_dram, flash, fetches);
+    }
+
+    apply_ex(
+        &mut cache,
+        cfg.serve.warmup,
+        &hot,
+        cfg.serve.cache_bytes,
+        desc.n_layers,
+        |k| desc.slice_bytes(k.plane, mat),
+        cfg.serve.router.dbsc.is_some(),
+    );
+
+    // ---------------- decode -------------------------------------------
+    let mut steady_accesses = 0u64;
+    let mut steady_flash = 0u64;
+    let warmup_steps = budget.warmup_steps;
+    let early_window = warmup_steps.max(10);
+    let mut early_energy_start = None;
+    let mut n_dropped = 0u64;
+    let mut n_substituted = 0u64;
+    let mut n_degraded = 0u64;
+    let mut n_critical = 0u64;
+
+    for t in 0..cfg.decode_tokens as u64 {
+        budget.tick();
+        if t == early_window {
+            early_energy_start = Some(ledger.decode_energy_j());
+        }
+        for layer in 0..desc.n_layers {
+            let probs = gen.gate_probs(Phase::Decode, layer);
+            let out = access_layer(
+                &cfg.serve.router, &probs, layer, desc, mat, &mut cache, &mut budget,
+                Some(&mut hot),
+            );
+            let execs: Vec<(f64, Precision)> =
+                out.execs.iter().map(|e| (e.gate, e.precision)).collect();
+            let bias = (out.ideal_mass - out.realized_mass).max(0.0);
+            damage.record(
+                &accuracy_model,
+                &execs,
+                mat.high_bits,
+                mat.low_bits,
+                bias,
+                out.dropped_raw_mass,
+            );
+            n_dropped += out.n_dropped as u64;
+            n_substituted += out.n_substituted as u64;
+            n_degraded += out.n_degraded as u64;
+            n_critical += out.n_critical as u64;
+            if t >= warmup_steps {
+                steady_accesses += out.execs.len() as u64 + out.n_dropped as u64;
+                steady_flash += out.flash_bytes;
+            }
+            let ops = desc.expert_ops(1) * out.execs.len() as f64 / desc.top_k as f64
+                * desc.top_k as f64;
+            let (bg_ops, bg_dram) = if cfg.serve.background {
+                seed_background_cost(desc, cfg.prefill_tokens + t as usize)
+            } else {
+                (0.0, 0)
+            };
+            ledger.record(
+                Phase::Decode,
+                &cfg.serve.hw,
+                ops + bg_ops,
+                out.dram_bytes + bg_dram,
+                out.flash_bytes,
+                out.flash_fetches,
+            );
+        }
+        ledger.bump_decode_steps();
+    }
+
+    let early_decode_energy_j = early_energy_start.unwrap_or(ledger.decode_energy_j());
+    let stats = cache.stats;
+    let miss_rate = if steady_accesses == 0 {
+        0.0
+    } else {
+        steady_flash as f64 / (steady_accesses as f64 * unit as f64)
+    };
+    EpisodeReport {
+        accuracy: damage.accuracy(&accuracy_model),
+        mean_damage: damage.mean_damage(),
+        miss_rate,
+        msb_hit_rate: {
+            let h = stats.msb_hits as f64;
+            let t = h + stats.msb_misses as f64;
+            if t == 0.0 { 1.0 } else { h / t }
+        },
+        lsb_hit_rate: {
+            let h = stats.lsb_hits as f64;
+            let t = h + stats.lsb_misses as f64;
+            if t == 0.0 { 1.0 } else { h / t }
+        },
+        n_dropped,
+        n_substituted,
+        n_degraded,
+        n_critical,
+        decode_energy_j: ledger.decode_energy_j(),
+        decode_latency_s: ledger.decode_wall_s,
+        early_decode_energy_j,
+        ledger,
+    }
+}
+
+fn assert_parity(cfg: &EpisodeConfig, label: &str) {
+    let seed = seed_run_episode(cfg);
+    let new = run_episode(cfg);
+
+    // counting statistics: bit-for-bit
+    assert_eq!(seed.n_dropped, new.n_dropped, "{label}: n_dropped");
+    assert_eq!(seed.n_substituted, new.n_substituted, "{label}: n_substituted");
+    assert_eq!(seed.n_degraded, new.n_degraded, "{label}: n_degraded");
+    assert_eq!(seed.n_critical, new.n_critical, "{label}: n_critical");
+    assert_eq!(seed.ledger.decode_steps, new.ledger.decode_steps, "{label}: steps");
+    assert_eq!(seed.ledger.flash_bytes, new.ledger.flash_bytes, "{label}: flash bytes");
+    assert_eq!(
+        seed.ledger.flash_fetches, new.ledger.flash_fetches,
+        "{label}: flash fetches"
+    );
+
+    // cache-derived floats: identical operation sequences => exact
+    let exact = |a: f64, b: f64, what: &str| {
+        assert!(
+            (a - b).abs() <= 1e-12,
+            "{label}: {what} diverged: seed {a} vs refactored {b}"
+        );
+    };
+    exact(seed.miss_rate, new.miss_rate, "miss_rate");
+    exact(seed.msb_hit_rate, new.msb_hit_rate, "msb_hit_rate");
+    exact(seed.lsb_hit_rate, new.lsb_hit_rate, "lsb_hit_rate");
+    exact(seed.mean_damage, new.mean_damage, "mean_damage");
+    exact(seed.accuracy, new.accuracy, "accuracy");
+
+    // energy/latency: 1e-9 relative (ops expressions simplified
+    // algebraically in the refactor)
+    let close = |a: f64, b: f64, what: &str| {
+        let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(
+            (a - b).abs() <= tol,
+            "{label}: {what} diverged: seed {a} vs refactored {b}"
+        );
+    };
+    close(seed.decode_energy_j, new.decode_energy_j, "decode_energy_j");
+    close(seed.decode_latency_s, new.decode_latency_s, "decode_latency_s");
+    close(
+        seed.early_decode_energy_j,
+        new.early_decode_energy_j,
+        "early_decode_energy_j",
+    );
+    close(
+        seed.ledger.prefill_energy_j(),
+        new.ledger.prefill_energy_j(),
+        "prefill_energy_j",
+    );
+    close(seed.ledger.prefill_wall_s, new.ledger.prefill_wall_s, "prefill_wall_s");
+}
+
+#[test]
+fn default_gsm8k_episode_matches_seed_simulator() {
+    // the acceptance episode: full default GSM8K shape on DeepSeek-V2-Lite
+    let cfg = EpisodeConfig::gsm8k_default(ModelDesc::deepseek_v2_lite());
+    assert_parity(&cfg, "gsm8k-default");
+}
+
+#[test]
+fn constrained_dbsc_episode_matches_seed_simulator() {
+    // exercise the budget/substitution/degrade paths and PCW under DBSC
+    let mut cfg = EpisodeConfig::gsm8k_default(ModelDesc::deepseek_v2_lite());
+    cfg.serve.router = RouterConfig::dbsc(6);
+    cfg.serve.constraint = 0.05;
+    cfg.serve.cache_bytes = (1.8 * (1u64 << 30) as f64) as u64;
+    cfg.prefill_tokens = 200;
+    cfg.decode_tokens = 64;
+    assert_parity(&cfg, "dbsc-constrained");
+}
+
+#[test]
+fn qwen_low_precision_episode_matches_seed_simulator() {
+    use slicemoe::router::Policy;
+    let mut cfg = EpisodeConfig::gsm8k_default(ModelDesc::qwen15_moe_a27b());
+    cfg.serve.router = RouterConfig {
+        policy: Policy::CachePrior { boost: 2.0 },
+        top_k: 4,
+        dbsc: None,
+        uniform_precision: Precision::Low,
+    };
+    cfg.serve.constraint = 0.02;
+    cfg.prefill_tokens = 128;
+    cfg.decode_tokens = 48;
+    assert_parity(&cfg, "qwen-low");
+}

@@ -1,0 +1,188 @@
+//! In-tree, dependency-free subset of the `anyhow` crate.
+//!
+//! The offline build environment vendors only a handful of crates; this
+//! shim makes a bare checkout build without any registry access while
+//! keeping the exact API surface the project uses: `Result<T>`, `Error`,
+//! `anyhow!`, `bail!`, and the `Context` extension trait on `Result` and
+//! `Option`. Errors are stored as a flattened message chain (newest
+//! context first); `{e}` prints the newest message, `{e:#}` the full
+//! chain joined with `": "` — matching anyhow's display contract for the
+//! formatting this project relies on. Downcasting and backtraces are not
+//! implemented (nothing in the tree uses them).
+
+use std::fmt;
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error value.
+pub struct Error {
+    /// Newest message first; older contexts / root causes follow.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        let mut chain = self.chain;
+        chain.insert(0, context.to_string());
+        Error { chain }
+    }
+
+    /// The message chain from newest context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Context-attachment extension, like `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Attach a context message to the error side.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Attach a lazily-evaluated context message to the error side.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing"))
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = io_err().context("open config").unwrap_err();
+        assert_eq!(format!("{e}"), "open config");
+        assert_eq!(format!("{e:#}"), "open config: missing");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Result<i32> = None.with_context(|| format!("no {}", "value"));
+        assert_eq!(format!("{}", v.unwrap_err()), "no value");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1);
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn g() -> Result<i32> {
+            let n: i32 = "17".parse()?;
+            Ok(n)
+        }
+        assert_eq!(g().unwrap(), 17);
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
