@@ -2,14 +2,18 @@
 //!
 //! Loads the trained tiny MoE byte-LM, starts the multi-lane server (each
 //! lane loads its own engine — the PJRT client is not Send), and pushes a
-//! GSM8K-shaped request stream (long prefill, >100-token decodes) through
-//! the full SliceMoE stack: DBSC slice cache, Cache-Prior routing under a
-//! 5% miss-rate constraint, PCW at each prefill→decode transition, real
-//! PJRT compute per op, and the Fig 7 energy ledger.
+//! workload-preset request stream (steady Poisson arrivals, GSM8K-shaped
+//! lengths scaled to the tiny model's window) through the full SliceMoE
+//! stack via the OPEN-LOOP harness: requests are submitted at trace
+//! arrival times, so queueing delay is measured instead of absorbed by
+//! the driver. Per request: DBSC slice cache, Cache-Prior routing under
+//! a 5% miss-rate constraint, PCW at each prefill→decode transition,
+//! real PJRT compute per op, and the Fig 7 energy ledger.
 //!
-//! Reports wall-clock latency/throughput percentiles plus simulated
-//! decode energy + measured model quality (teacher-forced NLL of the
-//! serving path vs the fp32 reference). Recorded in EXPERIMENTS.md §E2E.
+//! Reports the latency-under-load breakdown (end-to-end / queue /
+//! service) plus simulated decode energy + measured model quality
+//! (teacher-forced NLL of the serving path vs the fp32 reference).
+//! Recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```sh
 //! cargo run --release --offline --features pjrt --example serve_e2e -- [n_requests] [lanes]
@@ -22,8 +26,9 @@ use slicemoe::cache::WarmupStrategy;
 use slicemoe::engine::{Engine, EngineBackend, Session, SessionConfig};
 use slicemoe::quant::MatConfig;
 use slicemoe::router::Precision;
-use slicemoe::server::{summarize, Request, ServerHandle};
-use slicemoe::sim::{generate_workload, WorkloadParams};
+use slicemoe::server::ServerHandle;
+use slicemoe::sim::WorkloadParams;
+use slicemoe::workload::{run_open_loop, OpenLoopOpts, SteadyPoisson, WorkloadGen};
 
 fn main() -> Result<()> {
     let n_requests: usize = std::env::args()
@@ -58,7 +63,7 @@ fn main() -> Result<()> {
         }
     }
 
-    println!("\n== serving {n_requests} GSM8K-shaped requests over {lanes} lane(s) ==");
+    println!("\n== open-loop: {n_requests} steady-Poisson requests over {lanes} lane(s) ==");
     let art2 = artifacts.clone();
     let handle = ServerHandle::start(lanes, 4, move |_lane| {
         Ok(EngineBackend {
@@ -71,49 +76,52 @@ fn main() -> Result<()> {
             },
         })
     });
-    let reqs = generate_workload(&WorkloadParams::tiny(), n_requests, 0xE2E);
-    let t0 = std::time::Instant::now();
-    for (i, r) in reqs.iter().enumerate() {
-        let off = (i * 7919) % (eval.len() - r.prefill_tokens - 1);
-        handle.submit(Request {
-            id: i as u64,
-            prompt: eval[off..off + r.prefill_tokens].to_vec(),
-            decode_tokens: r.decode_tokens,
-        })?;
-    }
-    let mut responses = Vec::new();
-    for _ in 0..n_requests {
-        let r = handle.recv()?;
-        println!(
-            "req {:>2} lane {}: prefill({:>3} tok) {:>5.2}s | decode({:>3} tok) {:>5.2}s \
-             ({:>5.1} tok/s) | queue {:>5.2}s | miss {:.4} | energy {:.4} J",
-            r.id,
-            r.lane,
-            reqs[r.id as usize].prefill_tokens,
-            r.prefill_wall_s,
-            r.decode_tokens,
-            r.decode_wall_s,
-            r.tokens_per_s(),
-            r.queue_wall_s,
-            r.miss_rate,
-            r.decode_energy_j,
-        );
-        responses.push(r);
-    }
-    let wall = t0.elapsed().as_secs_f64();
-    let s = summarize(&responses);
-    println!("\n== summary ==");
-    println!("requests            {} over {lanes} lane(s)", s.requests);
-    println!("decode tokens       {}", s.decode_tokens);
-    println!("end-to-end wall     {wall:.1} s ({:.2} decode tok/s)", s.decode_tokens as f64 / wall);
-    println!(
-        "per-token latency   p50 {:.1} ms  p90 {:.1} ms  p99 {:.1} ms",
-        s.latency_p50_s * 1e3,
-        s.latency_p90_s * 1e3,
-        s.latency_p99_s * 1e3
-    );
-    println!("simulated energy    {:.4} J decode total", s.decode_energy_j);
-    println!("combined miss rate  {:.4}", s.combined_miss_rate);
+
+    // workload preset: steady arrivals, lengths inside the tiny model's
+    // context window (the minimal end-to-end sample — serve-bench is the
+    // full scenario sweep, over the cost model)
+    let preset = SteadyPoisson { rate_rps: 2.0, shape: WorkloadParams::tiny() };
+    let trace = preset.generate(n_requests, 0xE2E);
+    let report = run_open_loop(&handle, &trace, &OpenLoopOpts::default(), |tr| {
+        let pre = tr.prefill_tokens as usize;
+        let off = (tr.id as usize * 7919) % (eval.len() - pre - 1);
+        eval[off..off + pre].to_vec()
+    })?;
     handle.shutdown();
+
+    for o in &report.outcomes {
+        println!(
+            "req {:>2} lane {}: e2e {:>6.2}s = queue {:>5.2}s + service {:>5.2}s \
+             ({:>3} tok, {:>5.1} tok/s) | miss {:.4} | energy {:.4} J",
+            o.id,
+            o.response.lane,
+            o.e2e_s,
+            o.queue_s,
+            o.service_s,
+            o.response.decode_tokens,
+            o.response.tokens_per_s(),
+            o.response.miss_rate,
+            o.response.decode_energy_j,
+        );
+    }
+    for e in &report.errors {
+        eprintln!("error: {e}");
+    }
+
+    let s = report.summary();
+    println!("\n== summary ==");
+    println!("requests            {} over {lanes} lane(s) ({} errors)", s.requests, s.errors);
+    println!("decode tokens       {}", s.decode_tokens);
+    println!("end-to-end wall     {:.1} s ({:.2} decode tok/s goodput)", s.wall_s, s.goodput_tok_s);
+    println!(
+        "e2e latency         p50 {:.2} s  p95 {:.2} s  p99 {:.2} s",
+        s.e2e_p50_s, s.e2e_p95_s, s.e2e_p99_s
+    );
+    println!(
+        "queueing delay      mean {:.2} s  p95 {:.2} s (submit lag max {:.2} s)",
+        s.queue_mean_s, s.queue_p95_s, s.submit_lag_max_s
+    );
+    println!("simulated energy    {:.6} J/token decode", s.energy_per_token_j);
+    println!("combined miss rate  {:.4}", s.miss_rate);
     Ok(())
 }

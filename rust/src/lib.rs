@@ -20,6 +20,10 @@
 //!     shared bounded queue, each lane a `ServeLoop`, with an optional
 //!     shared mutex-guarded `SliceCache` so concurrent requests contend
 //!     for slice capacity;
+//!   - [`workload`] — the workload layer: scenario generators (steady /
+//!     bursty / diurnal / multi-tenant sessions), the SMWT trace
+//!     record/replay format, the open-loop load harness, and the
+//!     `serve-bench` scenario × lane × cache-mode sweep;
 //!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
 //!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
 //!     Fig 7 cost model, AMAT quantization);
@@ -48,6 +52,7 @@ pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod util;
+pub mod workload;
 
 /// Crate version reported by the CLI.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

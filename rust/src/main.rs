@@ -45,6 +45,7 @@ simulator commands (paper-scale geometry):
   ablations             θ sweep, MAT sweep, policy ablations
   sim                   one configurable episode (all knobs exposed)
   serve-sim             multi-lane scheduler over the cost-model backend
+  serve-bench           open-loop workload sweep -> BENCH_workload.json
 
 engine commands (require `make artifacts` and a `--features pjrt` build):
   table1                AMAT PPL table on the trained tiny LM (measured)
@@ -179,6 +180,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
             Ok(())
         }
         "serve-sim" => serve_sim_cmd(rest),
+        "serve-bench" => serve_bench_cmd(rest),
         #[cfg(feature = "pjrt")]
         "table1" | "generate" | "serve" | "calibrate" => engine_cmds::dispatch(cmd, rest),
         #[cfg(not(feature = "pjrt"))]
@@ -265,11 +267,11 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
     let reqs = generate_workload(&WorkloadParams::default(), n_requests, 0x5E4E);
     let t0 = std::time::Instant::now();
     for (i, r) in reqs.iter().enumerate() {
-        handle.submit(Request {
-            id: i as u64,
-            prompt: vec![0u8; r.prefill_tokens],
-            decode_tokens: r.decode_tokens,
-        })?;
+        handle.submit(Request::new(
+            i as u64,
+            vec![0u8; r.prefill_tokens],
+            r.decode_tokens,
+        ))?;
     }
     let mut responses = Vec::new();
     for _ in 0..n_requests {
@@ -293,6 +295,95 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
     println!("simulated decode energy total {:.3} J", s.decode_energy_j);
     println!("combined steady-state miss rate {:.4}", s.combined_miss_rate);
     handle.shutdown();
+    Ok(())
+}
+
+/// Open-loop workload sweep: scenario × lane-count × cache-mode over the
+/// cost-model backend, summarized into `BENCH_workload.json`.
+fn serve_bench_cmd(rest: &[String]) -> Result<()> {
+    use slicemoe::serve::ServeConfig;
+    use slicemoe::util::bench::Reporter;
+    use slicemoe::workload::{run_sweep, Scenario, SweepConfig};
+
+    let a = Args::new()
+        .opt("model", "tiny", "model geometry (tiny|deepseek|qwen)")
+        .opt("requests", "32", "requests per scenario trace")
+        .opt("lanes", "1,4", "comma-separated lane counts to sweep")
+        .opt("scenarios", "steady,bursty,diurnal,tenants", "presets to run")
+        .opt("cache-mode", "both", "private|shared|both")
+        .opt("cache-experts", "12", "cache capacity in high-bit experts")
+        .opt("constraint", "inf", "miss-rate constraint (or 'inf')")
+        .opt("queue", "8", "admission queue depth")
+        .opt("span", "1.5", "host seconds each trace is compressed to")
+        .opt("seed", "4269", "sweep base seed")
+        .opt("trace-dir", "", "write each scenario's .smwt trace here")
+        .opt("out", "BENCH_workload.json", "output JSON path")
+        .switch("smoke", "fast CI path (few requests, short span)")
+        .parse(rest, "serve-bench")?;
+
+    let desc = model_flag(&a)?;
+    let mut template = ServeConfig::gsm8k_default(desc.clone());
+    template.cache_bytes = template.unit_bytes() * a.usize("cache-experts")?.max(1) as u64;
+    template.constraint = parse_constraint(&a.str("constraint"))?;
+    template.router = RouterConfig::dbsc(desc.top_k);
+
+    let mut cfg = if a.bool("smoke") {
+        SweepConfig::smoke(template)
+    } else {
+        SweepConfig::new(template)
+    };
+    cfg.seed = a.usize("seed")? as u64;
+    cfg.queue_depth = a.usize("queue")?.max(1);
+    // explicit flags always win; --smoke only changes the DEFAULTS of
+    // requests/span/lanes
+    if !a.bool("smoke") || a.is_set("requests") {
+        cfg.requests = a.usize("requests")?;
+    }
+    if !a.bool("smoke") || a.is_set("span") {
+        cfg.span_s = a.f64("span")?;
+    }
+    if !a.bool("smoke") || a.is_set("lanes") {
+        cfg.lanes = a
+            .str_list("lanes")
+            .iter()
+            .map(|s| s.parse::<usize>().map_err(|e| anyhow::anyhow!("--lanes: {e}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    cfg.scenarios = a
+        .str_list("scenarios")
+        .iter()
+        .map(|s| {
+            Scenario::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scenario '{s}'"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    cfg.shared_modes = match a.str("cache-mode").as_str() {
+        "private" => vec![false],
+        "shared" => vec![true],
+        "both" => vec![false, true],
+        m => bail!("bad --cache-mode '{m}' (private|shared|both)"),
+    };
+    let dir = a.str("trace-dir");
+    if !dir.is_empty() {
+        cfg.trace_dir = Some(dir.into());
+    }
+
+    let mut rep = Reporter::new(&format!(
+        "serve-bench ({}, {} req/scenario, span {:.2}s)",
+        desc.name, cfg.requests, cfg.span_s
+    ));
+    let cells = run_sweep(&cfg, &mut rep)?;
+    rep.write_json(a.str("out"))?;
+
+    let failed: Vec<_> = cells.iter().filter(|c| c.summary.errors > 0).collect();
+    if !failed.is_empty() {
+        bail!(
+            "{} sweep cell(s) reported serving errors (first: {}/lanes{})",
+            failed.len(),
+            failed[0].scenario,
+            failed[0].lanes
+        );
+    }
+    println!("\n{} cells clean across {} scenario(s)", cells.len(), cfg.scenarios.len());
     Ok(())
 }
 
@@ -443,11 +534,11 @@ mod engine_cmds {
         let t0 = std::time::Instant::now();
         for (i, r) in reqs.iter().enumerate() {
             let off = (i * 4099) % (eval.len() - r.prefill_tokens - 1);
-            handle.submit(Request {
-                id: i as u64,
-                prompt: eval[off..off + r.prefill_tokens].to_vec(),
-                decode_tokens: r.decode_tokens,
-            })?;
+            handle.submit(Request::new(
+                i as u64,
+                eval[off..off + r.prefill_tokens].to_vec(),
+                r.decode_tokens,
+            ))?;
         }
         let mut responses = Vec::new();
         for _ in 0..n_requests {

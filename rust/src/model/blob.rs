@@ -78,12 +78,7 @@ impl Blob {
     pub fn parse(buf: &[u8]) -> Result<Blob> {
         let mut pos = 0usize;
         let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
-            if *pos + n > buf.len() {
-                bail!("truncated blob at byte {}", *pos);
-            }
-            let s = &buf[*pos..*pos + n];
-            *pos += n;
-            Ok(s)
+            crate::util::bytes::take(buf, pos, n, "blob")
         };
         if take(&mut pos, 8)? != b"SMWB0001" {
             bail!("bad magic");

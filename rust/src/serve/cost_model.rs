@@ -20,7 +20,7 @@ use anyhow::{bail, Result};
 
 use crate::memhier::Phase;
 use crate::model::descriptor::ModelDesc;
-use crate::sim::trace::{TraceGenerator, TraceParams};
+use crate::sim::trace::{RoutingBias, TraceGenerator, TraceParams};
 
 use super::backend::{ExecPlan, ExpertBackend};
 
@@ -43,6 +43,32 @@ impl CostModelBackend {
     ) -> CostModelBackend {
         CostModelBackend {
             gen: TraceGenerator::new(desc, trace, seed),
+            n_layers: desc.n_layers,
+            prefill_tokens,
+            prefill_probs: None,
+        }
+    }
+
+    /// Per-request routing-bias hook: overlay `bias` on the lane's base
+    /// trace parameters and route over the bias's tenant-shared affinity
+    /// field, while the per-token stream stays keyed by `stream_seed`
+    /// (the request's own RNG seed). This is how the workload layer
+    /// steers expert popularity per request/tenant without the server
+    /// knowing anything about gating statistics.
+    pub fn with_bias(
+        desc: &ModelDesc,
+        base: TraceParams,
+        bias: &RoutingBias,
+        prefill_tokens: usize,
+        stream_seed: u64,
+    ) -> CostModelBackend {
+        CostModelBackend {
+            gen: TraceGenerator::with_affinity_seed(
+                desc,
+                base.with_bias(bias),
+                bias.affinity_seed,
+                stream_seed,
+            ),
             n_layers: desc.n_layers,
             prefill_tokens,
             prefill_probs: None,
@@ -128,5 +154,24 @@ mod tests {
         let p = be.gate(Phase::Decode, 2).unwrap();
         assert_eq!(p.len(), 1);
         assert_eq!(p[0].len(), desc.n_experts);
+    }
+
+    #[test]
+    fn biased_backend_is_deterministic_and_stream_sensitive() {
+        let desc = ModelDesc::tiny();
+        let bias = crate::sim::trace::RoutingBias {
+            popularity_alpha: 1.1,
+            popularity_weight: 0.8,
+            affinity_seed: 77,
+        };
+        let gate0 = |stream: u64| {
+            let mut be =
+                CostModelBackend::with_bias(&desc, TraceParams::default(), &bias, 1, stream);
+            be.gate(Phase::Decode, 0).unwrap()
+        };
+        // same (bias, stream) reproduces bit-identically
+        assert_eq!(gate0(5), gate0(5));
+        // a different stream seed changes the token-level draw
+        assert_ne!(gate0(5), gate0(6));
     }
 }

@@ -32,7 +32,7 @@ use anyhow::Result;
 
 use crate::cache::SliceCache;
 use crate::serve::{CostModelBackend, ServeConfig, ServeLoop};
-use crate::sim::trace::TraceParams;
+use crate::sim::trace::{RoutingBias, TraceParams};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -40,6 +40,17 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<u8>,
     pub decode_tokens: usize,
+    /// Per-request routing bias (tenant affinity / popularity skew) from
+    /// the workload layer; `None` = the lane's base trace parameters.
+    /// Consumed by [`CostModelServerBackend`]; engine backends ignore it.
+    pub bias: Option<RoutingBias>,
+}
+
+impl Request {
+    /// An unbiased request (the common case outside the workload layer).
+    pub fn new(id: u64, prompt: Vec<u8>, decode_tokens: usize) -> Request {
+        Request { id, prompt, decode_tokens, bias: None }
+    }
 }
 
 /// Completed response with serving metrics.
@@ -104,9 +115,14 @@ impl Response {
 /// Fleet-level high-bit-normalized miss rate over a batch of responses:
 /// total steady-state flash traffic over total normalized accesses. In
 /// shared-cache mode this is the quantity cross-request contention moves.
-pub fn combined_miss_rate(responses: &[Response]) -> f64 {
-    let flash: u64 = responses.iter().map(|r| r.steady_flash_bytes).sum();
-    let norm: f64 = responses.iter().map(|r| r.steady_norm_bytes).sum();
+/// Takes any iterator of `&Response` (a slice, or a projection out of a
+/// richer record) so aggregators never have to clone responses.
+pub fn combined_miss_rate<'a>(responses: impl IntoIterator<Item = &'a Response>) -> f64 {
+    let (mut flash, mut norm) = (0u64, 0.0f64);
+    for r in responses {
+        flash += r.steady_flash_bytes;
+        norm += r.steady_norm_bytes;
+    }
     if norm <= 0.0 {
         0.0
     } else {
@@ -128,6 +144,11 @@ pub struct BatchSummary {
     pub combined_miss_rate: f64,
 }
 
+/// Total over empty/zero-token response sets is well-defined: every field
+/// is 0 (never NaN) — `combined_miss_rate` guards its zero denominator,
+/// per-token latency divides by `max(1)` tokens, and the percentile of an
+/// empty sample is 0.0 (`summarize_of_empty_and_zero_token_batches_is_zero`
+/// pins all of this).
 pub fn summarize(responses: &[Response]) -> BatchSummary {
     let lat: Vec<f64> = responses
         .iter()
@@ -143,6 +164,18 @@ pub fn summarize(responses: &[Response]) -> BatchSummary {
         latency_p99_s: p99,
         combined_miss_rate: combined_miss_rate(responses),
     }
+}
+
+/// Per-request RNG seed: a SplitMix64 hash of the server-level base seed
+/// and the REQUEST ID only — never lane identity or lane-local state — so
+/// a request's trace is the same whichever lane serves it and aggregate
+/// results are invariant to lane count (serialized shared-cache runs are
+/// bit-identical; see `lane_count_invariance_under_shared_cache`).
+pub fn request_seed(base: u64, id: u64) -> u64 {
+    let mut sm = crate::util::rng::SplitMix64::new(
+        base ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1),
+    );
+    sm.next_u64()
 }
 
 /// Anything that can serve one request (the PJRT engine in production, the
@@ -167,6 +200,15 @@ struct BoundedQueue<T> {
     capacity: usize,
 }
 
+/// Outcome of a non-blocking queue push.
+enum TryPush<T> {
+    Pushed,
+    /// Queue at capacity; the item is handed back for a later retry.
+    Full(T),
+    /// Queue closed; the item is handed back.
+    Closed(T),
+}
+
 impl<T> BoundedQueue<T> {
     fn new(capacity: usize) -> BoundedQueue<T> {
         BoundedQueue {
@@ -175,6 +217,20 @@ impl<T> BoundedQueue<T> {
             not_full: Condvar::new(),
             capacity: capacity.max(1),
         }
+    }
+
+    /// Non-blocking push.
+    fn try_push(&self, item: T) -> TryPush<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        if st.closed {
+            return TryPush::Closed(item);
+        }
+        if st.items.len() >= self.capacity {
+            return TryPush::Full(item);
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        TryPush::Pushed
     }
 
     /// Blocking push; `Err(item)` if the queue was closed.
@@ -339,12 +395,40 @@ impl ServerHandle {
             .map_err(|_| anyhow::anyhow!("server closed"))
     }
 
+    /// Non-blocking submit: `Ok(None)` = accepted, `Ok(Some(req))` = the
+    /// admission queue is full and the request is handed back for a later
+    /// retry, `Err` = server closed. Lets an open-loop driver keep
+    /// draining completions while backpressure holds instead of parking
+    /// inside `submit`.
+    pub fn try_submit(&self, req: Request) -> Result<Option<Request>> {
+        match self.queue.try_push((req, Instant::now())) {
+            TryPush::Pushed => Ok(None),
+            TryPush::Full((req, _)) => Ok(Some(req)),
+            TryPush::Closed(_) => Err(anyhow::anyhow!("server closed")),
+        }
+    }
+
     /// Receive the next completed response, in completion order (FIFO
     /// only when running a single lane).
     pub fn recv(&self) -> Result<Response> {
         self.rx
             .recv()
             .map_err(|_| anyhow::anyhow!("server workers gone"))?
+    }
+
+    /// Non-blocking receive: `Ok(None)` when no response is ready yet.
+    /// `Some(Err(_))` outcomes are per-request serving errors, exactly as
+    /// `recv` would return them; a closed response channel (every lane
+    /// dead) is also surfaced as an error. Lets an open-loop driver drain
+    /// completions between timed submissions without parking.
+    pub fn try_recv(&self) -> Result<Option<Response>> {
+        match self.rx.try_recv() {
+            Ok(res) => res.map(Some),
+            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Err(anyhow::anyhow!("server workers gone"))
+            }
+        }
     }
 
     /// Close the queue, drain in-flight work, and join every lane.
@@ -404,9 +488,13 @@ impl Backend for CostModelServerBackend {
     fn serve(&mut self, req: &Request) -> Result<Response> {
         let prefill_tokens = req.prompt.len().max(1);
         let mut cfg = self.cfg.clone();
-        cfg.seed = self.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
-        let mut backend =
-            CostModelBackend::new(&cfg.desc, self.trace, prefill_tokens, cfg.seed);
+        cfg.seed = request_seed(self.seed, req.id);
+        let mut backend = match &req.bias {
+            Some(b) => {
+                CostModelBackend::with_bias(&cfg.desc, self.trace, b, prefill_tokens, cfg.seed)
+            }
+            None => CostModelBackend::new(&cfg.desc, self.trace, prefill_tokens, cfg.seed),
+        };
         let mut lane = match &self.shared_cache {
             Some(c) => ServeLoop::with_shared_cache(cfg, Arc::clone(c)),
             None => ServeLoop::new(cfg),
@@ -469,7 +557,7 @@ mod tests {
     fn single_lane_serves_fifo() {
         let h = ServerHandle::start(1, 4, |_| Ok(MockBackend { delay_ms: 1 }));
         for id in 0..5 {
-            h.submit(Request { id, prompt: vec![1, 2, 3], decode_tokens: 4 }).unwrap();
+            h.submit(Request::new(id, vec![1, 2, 3], 4)).unwrap();
         }
         for id in 0..5 {
             let r = h.recv().unwrap();
@@ -484,7 +572,7 @@ mod tests {
     fn later_requests_accumulate_queue_delay() {
         let h = ServerHandle::start(1, 8, |_| Ok(MockBackend { delay_ms: 20 }));
         for id in 0..3 {
-            h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).unwrap();
+            h.submit(Request::new(id, vec![0], 1)).unwrap();
         }
         let r0 = h.recv().unwrap();
         let r2 = {
@@ -506,13 +594,13 @@ mod tests {
     #[test]
     fn panicking_lane_closes_queue_instead_of_hanging() {
         let h = ServerHandle::start(1, 1, |_| Ok(PanickingBackend));
-        h.submit(Request { id: 0, prompt: vec![0], decode_tokens: 1 }).unwrap();
+        h.submit(Request::new(0, vec![0], 1)).unwrap();
         // the lane unwinds; the drop guard closes the queue and the
         // response channel drops, so the client errors instead of parking
         assert!(h.recv().is_err());
         let mut saw_err = false;
         for id in 1..4 {
-            if h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).is_err() {
+            if h.submit(Request::new(id, vec![0], 1)).is_err() {
                 saw_err = true;
                 break;
             }
@@ -540,7 +628,7 @@ mod tests {
         // surviving lane keeps draining the queue
         let h = ServerHandle::start(2, 4, |_| Ok(FlakyBackend));
         for id in 0..4 {
-            h.submit(Request { id, prompt: vec![1], decode_tokens: 1 }).unwrap();
+            h.submit(Request::new(id, vec![1], 1)).unwrap();
         }
         let (mut oks, mut errs) = (0, 0);
         for _ in 0..4 {
@@ -571,7 +659,7 @@ mod tests {
         // depth 1 — rather than parking forever)
         let mut saw_err = false;
         for id in 0..3 {
-            if h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).is_err() {
+            if h.submit(Request::new(id, vec![0], 1)).is_err() {
                 saw_err = true;
                 break;
             }
@@ -585,7 +673,7 @@ mod tests {
         let n = 9u64;
         let h = ServerHandle::start(3, 4, |_| Ok(MockBackend { delay_ms: 20 }));
         for id in 0..n {
-            h.submit(Request { id, prompt: vec![id as u8, 1], decode_tokens: 2 }).unwrap();
+            h.submit(Request::new(id, vec![id as u8, 1], 2)).unwrap();
         }
         let mut seen = std::collections::HashSet::new();
         let mut lanes = std::collections::HashSet::new();
@@ -602,12 +690,47 @@ mod tests {
     }
 
     #[test]
+    fn try_submit_reports_full_then_closed() {
+        // depth-1 queue, slow lane: one request executing + one queued
+        // leaves no room, so try_submit hands the request back
+        let h = ServerHandle::start(1, 1, |_| Ok(MockBackend { delay_ms: 30 }));
+        h.submit(Request::new(0, vec![0], 1)).unwrap();
+        h.submit(Request::new(1, vec![0], 1)).unwrap();
+        match h.try_submit(Request::new(2, vec![9], 1)).unwrap() {
+            Some(back) => assert_eq!(back.id, 2, "rejected request handed back intact"),
+            None => panic!("try_submit accepted into a full queue"),
+        }
+        for _ in 0..2 {
+            h.recv().unwrap();
+        }
+        h.shutdown();
+
+        // a dead fleet closes the queue: try_submit errors instead of Full
+        let h = ServerHandle::start(1, 1, |_| -> Result<MockBackend> {
+            Err(anyhow::anyhow!("construction failed"))
+        });
+        assert!(h.recv().is_err());
+        let mut saw_closed = false;
+        for id in 0..50 {
+            match h.try_submit(Request::new(id, vec![0], 1)) {
+                Err(_) => {
+                    saw_closed = true;
+                    break;
+                }
+                Ok(_) => std::thread::sleep(std::time::Duration::from_millis(1)),
+            }
+        }
+        assert!(saw_closed, "try_submit never observed the closed queue");
+        h.shutdown();
+    }
+
+    #[test]
     fn bounded_queue_applies_backpressure() {
         let delay = 25u64;
         let h = ServerHandle::start(1, 1, move |_| Ok(MockBackend { delay_ms: delay }));
         let t0 = Instant::now();
         for id in 0..4 {
-            h.submit(Request { id, prompt: vec![0], decode_tokens: 1 }).unwrap();
+            h.submit(Request::new(id, vec![0], 1)).unwrap();
         }
         // depth-1 queue + 1 busy lane: submits 3 and 4 must have blocked on
         // earlier requests completing (~2 service times of slack)
@@ -635,7 +758,7 @@ mod tests {
         });
         let n = 9u64;
         for id in 0..n {
-            h.submit(Request { id, prompt: vec![7; 48], decode_tokens: 48 }).unwrap();
+            h.submit(Request::new(id, vec![7; 48], 48)).unwrap();
         }
         let mut responses = Vec::new();
         for _ in 0..n {
@@ -651,6 +774,90 @@ mod tests {
         }
         let fleet = combined_miss_rate(&responses);
         assert!((0.0..=1.5).contains(&fleet), "fleet miss {fleet}");
+    }
+
+    #[test]
+    fn summarize_of_empty_and_zero_token_batches_is_zero() {
+        // empty set: the well-defined zero summary, no NaN anywhere
+        let s = summarize(&[]);
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.decode_tokens, 0);
+        assert_eq!(s.decode_energy_j, 0.0);
+        assert_eq!(
+            (s.latency_p50_s, s.latency_p90_s, s.latency_p99_s),
+            (0.0, 0.0, 0.0)
+        );
+        assert_eq!(s.combined_miss_rate, 0.0);
+        let empty: Vec<Response> = Vec::new();
+        assert_eq!(combined_miss_rate(&empty), 0.0);
+
+        // zero-token / zero-work responses: still finite everywhere
+        let zero = Response {
+            id: 0,
+            output: Vec::new(),
+            prefill_wall_s: 0.0,
+            decode_wall_s: 0.0,
+            decode_tokens: 0,
+            decode_energy_j: 0.0,
+            miss_rate: 0.0,
+            queue_wall_s: 0.0,
+            lane: 0,
+            steady_flash_bytes: 0,
+            steady_norm_bytes: 0.0,
+        };
+        assert_eq!(zero.tokens_per_s(), 0.0);
+        let s = summarize(&[zero.clone(), zero]);
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.decode_tokens, 0);
+        assert!(s.latency_p50_s.is_finite() && s.latency_p99_s.is_finite());
+        assert_eq!(s.combined_miss_rate, 0.0);
+    }
+
+    #[test]
+    fn request_seed_depends_on_id_not_call_order() {
+        assert_eq!(request_seed(1, 7), request_seed(1, 7));
+        assert_ne!(request_seed(1, 7), request_seed(1, 8));
+        assert_ne!(request_seed(1, 7), request_seed(2, 7));
+    }
+
+    #[test]
+    fn lane_count_invariance_under_shared_cache() {
+        // Serialized traffic (one outstanding request at a time) over a
+        // shared cache must produce BIT-IDENTICAL aggregate results no
+        // matter how many lanes the scheduler runs: per-request seeds
+        // derive from the request id only, and the serialized submission
+        // makes the shared-cache operation order identical.
+        let trace = TraceParams::default();
+        let run = |lanes: usize| {
+            let template = tiny_cfg(8);
+            let shared = CostModelServerBackend::shared_cache_for(&template);
+            let h = ServerHandle::start(lanes, 2, move |_| {
+                Ok(CostModelServerBackend::new(tiny_cfg(8), trace, 0x1A4E)
+                    .with_shared_cache(Arc::clone(&shared)))
+            });
+            let mut responses = Vec::new();
+            for id in 0..6u64 {
+                h.submit(Request::new(id, vec![3; 32], 24)).unwrap();
+                responses.push(h.recv().unwrap());
+            }
+            h.shutdown();
+            responses.sort_by_key(|r| r.id);
+            responses
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.miss_rate, b.miss_rate, "req {}", a.id);
+            assert_eq!(a.decode_energy_j, b.decode_energy_j, "req {}", a.id);
+            assert_eq!(a.steady_flash_bytes, b.steady_flash_bytes, "req {}", a.id);
+        }
+        assert_eq!(combined_miss_rate(&one), combined_miss_rate(&four));
+        assert_eq!(
+            summarize(&one).decode_energy_j,
+            summarize(&four).decode_energy_j
+        );
     }
 
     #[test]

@@ -10,5 +10,7 @@ pub mod workload;
 
 pub use accuracy::{quant_err, AccuracyModel, DamageAccumulator};
 pub use runner::{run_episode, run_episodes_avg, EpisodeConfig, EpisodeReport};
-pub use trace::{correlation, selection_frequency, softmax, TraceGenerator, TraceParams};
+pub use trace::{
+    correlation, selection_frequency, softmax, RoutingBias, TraceGenerator, TraceParams,
+};
 pub use workload::{generate as generate_workload, RequestSpec, WorkloadParams};

@@ -52,20 +52,27 @@ impl WorkloadParams {
             decode_max: 150,
         }
     }
+
+    /// Draw one (prefill, decode) length pair — the single home of the
+    /// gaussian-clamp shape, shared by [`generate`] and the workload
+    /// scenario presets. Draw order (prefill first) is part of the RNG
+    /// stream contract.
+    pub fn sample(&self, rng: &mut Rng) -> (usize, usize) {
+        let p = (self.prefill_mean + self.prefill_std * rng.gauss())
+            .round()
+            .clamp(self.prefill_min as f64, self.prefill_max as f64) as usize;
+        let d = (self.decode_mean + self.decode_std * rng.gauss())
+            .round()
+            .clamp(self.decode_min as f64, self.decode_max as f64) as usize;
+        (p, d)
+    }
 }
 
 pub fn generate(params: &WorkloadParams, n: usize, seed: u64) -> Vec<RequestSpec> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|_| {
-            let p = (params.prefill_mean + params.prefill_std * rng.gauss())
-                .round()
-                .clamp(params.prefill_min as f64, params.prefill_max as f64)
-                as usize;
-            let d = (params.decode_mean + params.decode_std * rng.gauss())
-                .round()
-                .clamp(params.decode_min as f64, params.decode_max as f64)
-                as usize;
+            let (p, d) = params.sample(&mut rng);
             RequestSpec { prefill_tokens: p, decode_tokens: d }
         })
         .collect()

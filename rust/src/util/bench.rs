@@ -107,17 +107,54 @@ pub fn runner(title: &str) -> impl FnMut(BenchResult) {
     move |r: BenchResult| println!("{}", r.report())
 }
 
+/// A named row of scalar metrics (latency percentiles, rates, …) — the
+/// shape workload/serving sweeps report, where a time-sample
+/// median/MAD triple doesn't fit.
+#[derive(Clone, Debug)]
+pub struct MetricRow {
+    pub name: String,
+    pub values: Vec<(String, f64)>,
+}
+
+impl MetricRow {
+    fn to_json(&self) -> String {
+        let name = escape(&self.name);
+        let vals: Vec<String> = self
+            .values
+            .iter()
+            .map(|(k, v)| format!("\"{}\":{}", escape(k), json_num(*v)))
+            .collect();
+        format!("{{\"name\":\"{}\",\"values\":{{{}}}}}", name, vals.join(","))
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Finite floats render as-is; non-finite values (which a hardened
+/// summary should never produce anyway) degrade to `null`, keeping the
+/// file parseable.
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
 /// Collecting reporter: prints like [`runner`] AND retains results so the
 /// bench binary can persist them as machine-readable JSON.
 pub struct Reporter {
     title: String,
     results: Vec<BenchResult>,
+    metrics: Vec<MetricRow>,
 }
 
 impl Reporter {
     pub fn new(title: &str) -> Reporter {
         println!("== {title} ==");
-        Reporter { title: title.to_string(), results: Vec::new() }
+        Reporter { title: title.to_string(), results: Vec::new(), metrics: Vec::new() }
     }
 
     pub fn record(&mut self, r: BenchResult) {
@@ -125,17 +162,39 @@ impl Reporter {
         self.results.push(r);
     }
 
+    /// Record (and print) one named metrics row.
+    pub fn record_metrics(&mut self, name: &str, values: &[(&str, f64)]) {
+        let rendered: Vec<String> =
+            values.iter().map(|(k, v)| format!("{k} {v:.6}")).collect();
+        println!("{:<28} {}", name, rendered.join("  "));
+        self.metrics.push(MetricRow {
+            name: name.to_string(),
+            values: values.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
 
-    /// Write `{"title": ..., "results": [...]}` to `path` (one compact
-    /// object; medians/MADs in seconds).
+    pub fn metrics(&self) -> &[MetricRow] {
+        &self.metrics
+    }
+
+    /// Write `{"title": ..., "results": [...], "metrics": [...]}` to
+    /// `path` (one compact object; medians/MADs in seconds).
     pub fn write_json<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
         let mut f = std::fs::File::create(&path)?;
-        let title = self.title.replace('\\', "\\\\").replace('"', "\\\"");
+        let title = escape(&self.title);
         let rows: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
-        writeln!(f, "{{\"title\":\"{}\",\"results\":[{}]}}", title, rows.join(","))?;
+        let metric_rows: Vec<String> = self.metrics.iter().map(|m| m.to_json()).collect();
+        writeln!(
+            f,
+            "{{\"title\":\"{}\",\"results\":[{}],\"metrics\":[{}]}}",
+            title,
+            rows.join(","),
+            metric_rows.join(",")
+        )?;
         println!("bench results -> {}", path.as_ref().display());
         Ok(())
     }
@@ -191,12 +250,25 @@ mod tests {
         rep.record(bench("tiny", 0, 2, || {
             std::hint::black_box(1 + 1);
         }));
+        rep.record_metrics(
+            "cell \"a\"",
+            &[("p50_s", 0.25), ("rate", 128.0), ("weird", f64::NAN)],
+        );
         let path = std::env::temp_dir().join(format!("bench_json_{}.json", std::process::id()));
         rep.write_json(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         let parsed = crate::util::json::Json::parse(&text).expect("valid json file");
         let results = parsed.at(&["results"]).unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 1);
+        let metrics = parsed.at(&["metrics"]).unwrap().as_arr().unwrap();
+        assert_eq!(metrics.len(), 1);
+        assert_eq!(metrics[0].at(&["name"]).unwrap().as_str(), Some("cell \"a\""));
+        assert_eq!(
+            metrics[0].at(&["values", "p50_s"]).unwrap().as_f64(),
+            Some(0.25)
+        );
+        // non-finite values degrade to null, keeping the file parseable
+        assert!(metrics[0].at(&["values", "weird"]).unwrap().as_f64().is_none());
         let _ = std::fs::remove_file(&path);
     }
 }

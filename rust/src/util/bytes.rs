@@ -1,0 +1,46 @@
+//! Bounds-checked little-endian byte reading, shared by the binary
+//! container parsers (SMWB tensor blobs, SMWT workload traces).
+//!
+//! One overflow-safe implementation of "give me the next `n` bytes or a
+//! truncation error" so the containers can't drift apart on the edge
+//! cases (`model/blob.rs` and `workload/trace_file.rs` used to carry
+//! identical copies).
+
+use anyhow::{bail, Result};
+
+/// Take the next `n` bytes of `buf` at `*pos`, advancing the cursor.
+/// `what` names the container in the truncation error ("blob", "trace").
+pub fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<&'a [u8]> {
+    if buf.len().saturating_sub(*pos) < n {
+        bail!("truncated {what} at byte {}", *pos);
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn takes_and_advances() {
+        let buf = [1u8, 2, 3, 4];
+        let mut pos = 0;
+        assert_eq!(take(&buf, &mut pos, 2, "t").unwrap(), &[1, 2]);
+        assert_eq!(pos, 2);
+        assert_eq!(take(&buf, &mut pos, 2, "t").unwrap(), &[3, 4]);
+        assert_eq!(take(&buf, &mut pos, 0, "t").unwrap(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let buf = [0u8; 3];
+        let mut pos = 2;
+        let e = take(&buf, &mut pos, 2, "thing").unwrap_err();
+        assert!(format!("{e:#}").contains("truncated thing at byte 2"));
+        // overflow-safe even for absurd requests at a large cursor
+        let mut pos = usize::MAX;
+        assert!(take(&buf, &mut pos, 1, "thing").is_err());
+    }
+}

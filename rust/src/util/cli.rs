@@ -112,6 +112,12 @@ impl Args {
         Ok(self)
     }
 
+    /// Whether the user explicitly passed `--name` (vs. the default
+    /// applying). Lets commands layer explicit flags over preset modes.
+    pub fn is_set(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
     fn raw(&self, name: &str) -> String {
         if let Some(v) = self.values.get(name) {
             return v.clone();
@@ -184,6 +190,8 @@ mod tests {
         assert_eq!(a.usize("steps").unwrap(), 7);
         assert_eq!(a.str("name"), "x");
         assert!(a.bool("fast"));
+        assert!(a.is_set("steps"));
+        assert!(!a.is_set("name"), "defaulted flags are not 'set'");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! property-test harness are implemented here.
 
 pub mod bench;
+pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod rng;

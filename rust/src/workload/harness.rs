@@ -1,0 +1,409 @@
+//! Open-loop traffic harness: submit at trace arrival times, measure
+//! latency under load.
+//!
+//! Closed-loop drivers (submit → recv → submit) can never observe
+//! queueing: the client self-throttles to the server's pace. This
+//! harness is open-loop — each request is submitted when the trace says
+//! it arrives (scaled by [`OpenLoopOpts::time_scale`]), regardless of
+//! how many are still in flight — so queueing delay, backpressure, and
+//! shared-cache contention show up in the numbers instead of being
+//! absorbed by the driver. Responses complete out of order across lanes
+//! and are matched back to their submission by request id.
+//!
+//! Three latency components per request:
+//! * **queue** — scheduler-measured enqueue→pop delay
+//!   (`Response::queue_wall_s`);
+//! * **service** — prefill + decode wall time on the serving lane;
+//! * **end-to-end** — completion minus *scheduled* arrival, which also
+//!   counts time the bounded queue pushed back on `submit` (recorded
+//!   separately as `submit_lag_s`).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::server::{combined_miss_rate, Response, ServerHandle};
+use crate::util::stats;
+
+use super::scenario::TraceRequest;
+
+/// Harness knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopOpts {
+    /// Multiplier from trace (virtual) seconds to host seconds — < 1
+    /// compresses a long trace into a short run, > 1 stretches it.
+    pub time_scale: f64,
+}
+
+impl Default for OpenLoopOpts {
+    fn default() -> Self {
+        OpenLoopOpts { time_scale: 1.0 }
+    }
+}
+
+/// One matched (submission, response) pair with its latency breakdown.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    /// Scheduled arrival, host seconds from harness start.
+    pub scheduled_s: f64,
+    /// How late `submit` returned vs the schedule (queue backpressure
+    /// observed by the client; ~0 when the admission queue has room).
+    pub submit_lag_s: f64,
+    /// Completion minus scheduled arrival (the latency a user sees).
+    pub e2e_s: f64,
+    /// Scheduler-measured queueing delay (enqueue → lane pop).
+    pub queue_s: f64,
+    /// Prefill + decode wall time on the lane.
+    pub service_s: f64,
+    pub response: Response,
+}
+
+/// Everything a load run produced.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    pub outcomes: Vec<RequestOutcome>,
+    /// Per-request serving errors (lane panics, dead server, …).
+    pub errors: Vec<String>,
+    /// Host wall time of the whole run (first submit wait → last recv).
+    pub wall_s: f64,
+}
+
+/// Aggregate latency-under-load metrics (the `BENCH_workload.json` row).
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadSummary {
+    pub requests: usize,
+    pub errors: usize,
+    pub decode_tokens: u64,
+    pub e2e_p50_s: f64,
+    pub e2e_p95_s: f64,
+    pub e2e_p99_s: f64,
+    pub queue_mean_s: f64,
+    pub queue_p95_s: f64,
+    /// Worst client-side submit stall (backpressure indicator).
+    pub submit_lag_max_s: f64,
+    /// Completed decode tokens per host second.
+    pub goodput_tok_s: f64,
+    /// Fleet-level steady-state high-bit-normalized miss rate.
+    pub miss_rate: f64,
+    /// Simulated decode energy per completed decode token.
+    pub energy_per_token_j: f64,
+    pub wall_s: f64,
+}
+
+impl LoadReport {
+    pub fn summary(&self) -> WorkloadSummary {
+        let e2e: Vec<f64> = self.outcomes.iter().map(|o| o.e2e_s).collect();
+        let queue: Vec<f64> = self.outcomes.iter().map(|o| o.queue_s).collect();
+        let decode_tokens: u64 = self
+            .outcomes
+            .iter()
+            .map(|o| o.response.decode_tokens as u64)
+            .sum();
+        let energy: f64 = self.outcomes.iter().map(|o| o.response.decode_energy_j).sum();
+        WorkloadSummary {
+            requests: self.outcomes.len(),
+            errors: self.errors.len(),
+            decode_tokens,
+            e2e_p50_s: stats::percentile(&e2e, 0.50),
+            e2e_p95_s: stats::percentile(&e2e, 0.95),
+            e2e_p99_s: stats::percentile(&e2e, 0.99),
+            queue_mean_s: stats::mean(&queue),
+            queue_p95_s: stats::percentile(&queue, 0.95),
+            submit_lag_max_s: self
+                .outcomes
+                .iter()
+                .map(|o| o.submit_lag_s)
+                .fold(0.0, f64::max),
+            goodput_tok_s: if self.wall_s > 0.0 {
+                decode_tokens as f64 / self.wall_s
+            } else {
+                0.0
+            },
+            miss_rate: combined_miss_rate(self.outcomes.iter().map(|o| &o.response)),
+            energy_per_token_j: if decode_tokens > 0 {
+                energy / decode_tokens as f64
+            } else {
+                0.0
+            },
+            wall_s: self.wall_s,
+        }
+    }
+}
+
+/// What the harness remembers about an in-flight request.
+struct Inflight {
+    scheduled_s: f64,
+    submit_lag_s: f64,
+}
+
+/// Drive `trace` (arrival-sorted, as the generators emit it) through a
+/// running server, open-loop. `make_prompt` materializes each request's
+/// prompt bytes (the trace stores lengths, not content). Returns when
+/// every submitted request has either a response or an error.
+pub fn run_open_loop<F>(
+    handle: &ServerHandle,
+    trace: &[TraceRequest],
+    opts: &OpenLoopOpts,
+    mut make_prompt: F,
+) -> Result<LoadReport>
+where
+    F: FnMut(&TraceRequest) -> Vec<u8>,
+{
+    let t0 = Instant::now();
+    let mut report = LoadReport::default();
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    let mut outstanding = 0usize;
+
+    let record = |res: Response,
+                  inflight: &mut HashMap<u64, Inflight>,
+                  report: &mut LoadReport,
+                  now_s: f64| {
+        match inflight.remove(&res.id) {
+            Some(fl) => report.outcomes.push(RequestOutcome {
+                id: res.id,
+                scheduled_s: fl.scheduled_s,
+                submit_lag_s: fl.submit_lag_s,
+                e2e_s: now_s - fl.scheduled_s,
+                queue_s: res.queue_wall_s,
+                service_s: res.prefill_wall_s + res.decode_wall_s,
+                response: res,
+            }),
+            None => report
+                .errors
+                .push(format!("response for unknown request id {}", res.id)),
+        }
+    };
+
+    'submit: for (i, tr) in trace.iter().enumerate() {
+        debug_assert!(
+            i == 0 || tr.arrival_s >= trace[i - 1].arrival_s,
+            "trace must be arrival-sorted"
+        );
+        let target_s = tr.arrival_s * opts.time_scale;
+        // hold the arrival time, draining completions while we wait
+        loop {
+            match handle.try_recv() {
+                Ok(Some(res)) => {
+                    let now_s = t0.elapsed().as_secs_f64();
+                    record(res, &mut inflight, &mut report, now_s);
+                    outstanding = outstanding.saturating_sub(1);
+                    continue;
+                }
+                Ok(None) => {}
+                Err(e) => {
+                    if outstanding == 0 {
+                        // channel dead with nothing in flight: stop
+                        // draining; the submit below will fail and end
+                        // the run cleanly
+                        break;
+                    }
+                    report.errors.push(format!("{e:#}"));
+                    outstanding -= 1;
+                    continue;
+                }
+            }
+            let now_s = t0.elapsed().as_secs_f64();
+            if now_s >= target_s {
+                break;
+            }
+            std::thread::sleep(Duration::from_secs_f64(
+                (target_s - now_s).min(1e-3),
+            ));
+        }
+        // non-blocking submit loop: while the admission queue pushes
+        // back, keep draining completions so their e2e timestamps stay
+        // accurate instead of pooling behind a blocked `submit`
+        let mut waiting = Some(tr.to_request(make_prompt(tr)));
+        while let Some(req) = waiting.take() {
+            match handle.try_submit(req) {
+                Ok(None) => {}
+                Ok(Some(back)) => {
+                    waiting = Some(back);
+                    match handle.try_recv() {
+                        Ok(Some(res)) => {
+                            let now_s = t0.elapsed().as_secs_f64();
+                            record(res, &mut inflight, &mut report, now_s);
+                            outstanding = outstanding.saturating_sub(1);
+                        }
+                        Ok(None) => std::thread::sleep(Duration::from_micros(200)),
+                        Err(e) => {
+                            report.errors.push(format!("{e:#}"));
+                            outstanding = outstanding.saturating_sub(1);
+                        }
+                    }
+                }
+                Err(e) => {
+                    // server gone (all lanes dead): stop submitting,
+                    // drain what is still in flight below
+                    report
+                        .errors
+                        .push(format!("submit of request {} failed: {e:#}", tr.id));
+                    break 'submit;
+                }
+            }
+        }
+        let after_s = t0.elapsed().as_secs_f64();
+        inflight.insert(
+            tr.id,
+            Inflight { scheduled_s: target_s, submit_lag_s: (after_s - target_s).max(0.0) },
+        );
+        outstanding += 1;
+    }
+
+    // drain the tail
+    while outstanding > 0 {
+        match handle.recv() {
+            Ok(res) => {
+                let now_s = t0.elapsed().as_secs_f64();
+                record(res, &mut inflight, &mut report, now_s);
+            }
+            Err(e) => report.errors.push(format!("{e:#}")),
+        }
+        outstanding -= 1;
+    }
+
+    report.wall_s = t0.elapsed().as_secs_f64();
+    report.outcomes.sort_by_key(|o| o.id);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::{Backend, Request};
+
+    /// Fixed-delay mock lane (mirrors the scheduler's unit-test mock).
+    struct SleepyBackend {
+        delay_ms: u64,
+    }
+
+    impl Backend for SleepyBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            std::thread::sleep(Duration::from_millis(self.delay_ms));
+            Ok(Response {
+                id: req.id,
+                output: Vec::new(),
+                prefill_wall_s: 0.001,
+                decode_wall_s: self.delay_ms as f64 * 1e-3,
+                decode_tokens: req.decode_tokens,
+                decode_energy_j: 0.25 * req.decode_tokens as f64,
+                miss_rate: 0.0,
+                queue_wall_s: 0.0,
+                lane: 0,
+                steady_flash_bytes: 1,
+                steady_norm_bytes: 10.0,
+            })
+        }
+    }
+
+    fn toy_trace(n: usize, gap_s: f64) -> Vec<TraceRequest> {
+        (0..n)
+            .map(|i| TraceRequest {
+                id: i as u64,
+                arrival_s: i as f64 * gap_s,
+                prefill_tokens: 4,
+                decode_tokens: 8,
+                tenant: 0,
+                bias: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn open_loop_completes_and_matches_out_of_order() {
+        let h = ServerHandle::start(2, 8, |_| Ok(SleepyBackend { delay_ms: 5 }));
+        let trace = toy_trace(10, 0.002);
+        let report =
+            run_open_loop(&h, &trace, &OpenLoopOpts::default(), |tr| {
+                vec![0u8; tr.prefill_tokens as usize]
+            })
+            .unwrap();
+        h.shutdown();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.outcomes.len(), 10);
+        for (i, o) in report.outcomes.iter().enumerate() {
+            assert_eq!(o.id, i as u64, "outcomes sorted by id");
+            assert!(o.e2e_s >= 0.0 && o.e2e_s.is_finite());
+            assert!(o.service_s > 0.0);
+        }
+        let s = report.summary();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.decode_tokens, 80);
+        assert!(s.goodput_tok_s > 0.0);
+        assert!(s.e2e_p99_s >= s.e2e_p50_s);
+        assert!(s.energy_per_token_j > 0.0);
+        assert!(s.wall_s > 0.0);
+    }
+
+    #[test]
+    fn overload_shows_queueing_in_e2e() {
+        // 1 lane × 20 ms service, arrivals every 2 ms: the backlog grows,
+        // so late requests' e2e must dwarf early ones' and the p99 must
+        // sit well above one service time
+        let h = ServerHandle::start(1, 64, |_| Ok(SleepyBackend { delay_ms: 20 }));
+        let trace = toy_trace(8, 0.002);
+        let report = run_open_loop(&h, &trace, &OpenLoopOpts::default(), |_| vec![0u8; 4])
+            .unwrap();
+        h.shutdown();
+        assert_eq!(report.outcomes.len(), 8);
+        let first = report.outcomes.first().unwrap().e2e_s;
+        let last = report.outcomes.last().unwrap().e2e_s;
+        assert!(
+            last > first + 0.04,
+            "backlog should inflate the tail: first {first:.4}s last {last:.4}s"
+        );
+        let s = report.summary();
+        assert!(s.e2e_p99_s > 0.05, "p99 {:.4}", s.e2e_p99_s);
+    }
+
+    #[test]
+    fn backpressure_path_completes_and_reports_submit_lag() {
+        // depth-1 queue, 1 slow lane, 6 simultaneous arrivals: the
+        // non-blocking submit loop must spin completions out while the
+        // queue is full, finish every request, and surface the stall as
+        // submit lag
+        let h = ServerHandle::start(1, 1, |_| Ok(SleepyBackend { delay_ms: 10 }));
+        let trace = toy_trace(6, 0.0);
+        let report =
+            run_open_loop(&h, &trace, &OpenLoopOpts::default(), |_| vec![0u8; 2]).unwrap();
+        h.shutdown();
+        assert!(report.errors.is_empty(), "{:?}", report.errors);
+        assert_eq!(report.outcomes.len(), 6);
+        let s = report.summary();
+        assert!(
+            s.submit_lag_max_s > 0.005,
+            "full queue must show submit lag: {}",
+            s.submit_lag_max_s
+        );
+    }
+
+    #[test]
+    fn time_scale_stretches_the_run() {
+        let h = ServerHandle::start(2, 8, |_| Ok(SleepyBackend { delay_ms: 1 }));
+        let trace = toy_trace(5, 1.0); // 4 virtual seconds of trace
+        let opts = OpenLoopOpts { time_scale: 0.01 }; // → 40 ms
+        let t0 = Instant::now();
+        let report = run_open_loop(&h, &trace, &opts, |_| vec![0u8; 4]).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        h.shutdown();
+        assert_eq!(report.outcomes.len(), 5);
+        assert!(wall >= 0.04, "compressed schedule still paces: {wall}");
+        assert!(wall < 2.0, "0.01 scale must not take virtual time: {wall}");
+    }
+
+    #[test]
+    fn empty_trace_is_a_zero_report() {
+        let h = ServerHandle::start(1, 2, |_| Ok(SleepyBackend { delay_ms: 1 }));
+        let report =
+            run_open_loop(&h, &[], &OpenLoopOpts::default(), |_| Vec::new()).unwrap();
+        h.shutdown();
+        let s = report.summary();
+        assert_eq!((s.requests, s.errors, s.decode_tokens), (0, 0, 0));
+        assert_eq!(s.e2e_p50_s, 0.0);
+        assert_eq!(s.goodput_tok_s, 0.0);
+        assert_eq!(s.energy_per_token_j, 0.0);
+        assert!(s.miss_rate == 0.0, "no NaN from empty runs");
+    }
+}

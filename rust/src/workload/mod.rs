@@ -1,0 +1,37 @@
+//! Workload subsystem: scenario generation, trace record/replay, and
+//! open-loop latency-under-load benchmarking.
+//!
+//! PR 1 gave the repo a multi-lane scheduler but only closed-loop
+//! synthetic traffic — queueing delay, backpressure, and cache
+//! contention under realistic load were unmeasurable. This module is
+//! the missing workload layer:
+//!
+//! * [`scenario`] — a [`WorkloadGen`] trait with four presets (steady
+//!   Poisson, bursty on/off MMPP, diurnal ramp, multi-tenant multi-turn
+//!   sessions with per-tenant routing bias and popularity drift)
+//!   producing arrival-timed [`TraceRequest`]s;
+//! * [`trace_file`] — the versioned SMWT on-disk trace container, so
+//!   any generated or captured workload replays bit-identically;
+//! * [`harness`] — the open-loop load harness: timed submission against
+//!   `server::ServerHandle`, out-of-order response matching by request
+//!   id, and a queueing/service/end-to-end latency breakdown;
+//! * [`sweep`] — the `serve-bench` scenario × lane-count × cache-mode
+//!   sweep emitting `BENCH_workload.json` via `util::bench::Reporter`.
+//!
+//! The routing-bias hook (`sim::trace::RoutingBias` →
+//! `serve::CostModelBackend::with_bias`) is how tenant-level expert
+//! popularity reaches the gating statistics without the scheduler
+//! knowing anything about gating.
+
+pub mod harness;
+pub mod scenario;
+pub mod sweep;
+pub mod trace_file;
+
+pub use harness::{run_open_loop, LoadReport, OpenLoopOpts, RequestOutcome, WorkloadSummary};
+pub use scenario::{
+    BurstyOnOff, DiurnalRamp, MultiTenantSessions, Scenario, SteadyPoisson, TraceRequest,
+    WorkloadGen,
+};
+pub use sweep::{run_sweep, SweepCell, SweepConfig};
+pub use trace_file::TraceFile;

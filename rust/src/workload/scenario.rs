@@ -1,0 +1,594 @@
+//! Scenario generators: arrival-timed request traces.
+//!
+//! Each preset implements [`WorkloadGen`] and produces a vector of
+//! [`TraceRequest`]s — per-request arrival timestamps (virtual seconds
+//! from trace start), prompt/decode lengths (GSM8K-shaped, via
+//! `sim::workload::WorkloadParams`), and optional per-request routing
+//! bias consumed by the cost-model backend. Arrival processes:
+//!
+//! * [`SteadyPoisson`] — stationary Poisson arrivals (the M/G/c
+//!   baseline every queueing result is read against);
+//! * [`BurstyOnOff`] — a two-state Markov-modulated Poisson process:
+//!   exponentially-distributed ON/OFF dwell times with state-dependent
+//!   arrival rates (traffic in bursts, the tail-latency stressor);
+//! * [`DiurnalRamp`] — a raised-cosine rate profile over one period
+//!   (trough → peak → trough), sampled by thinning: the slow ramp that
+//!   exposes capacity cliffs;
+//! * [`MultiTenantSessions`] — per-tenant multi-turn conversations:
+//!   session starts are Poisson and Zipf-assigned to tenants, each
+//!   session runs several turns whose prompts grow by the conversation
+//!   history (shared-prefix prefills), and every request carries a
+//!   tenant-shared [`RoutingBias`] whose affinity field drifts over
+//!   time — the workload whose temporal locality cache policy actually
+//!   sees.
+//!
+//! All generators are deterministic in `(params, n, seed)`; requests
+//! come out sorted by arrival with ids `0..n` in arrival order, which
+//! the trace file format and the open-loop harness both rely on.
+
+use crate::sim::trace::RoutingBias;
+use crate::sim::workload::WorkloadParams;
+use crate::util::rng::{Rng, SplitMix64, Zipf};
+
+/// One trace record: a request with an arrival time and routing bias.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    /// Sequential id in arrival order (assigned by the generator).
+    pub id: u64,
+    /// Arrival offset from trace start, virtual seconds.
+    pub arrival_s: f64,
+    pub prefill_tokens: u32,
+    pub decode_tokens: u32,
+    /// Owning tenant (0 for single-tenant scenarios).
+    pub tenant: u32,
+    /// Per-request routing bias; `None` = lane defaults.
+    pub bias: Option<RoutingBias>,
+}
+
+impl TraceRequest {
+    /// Materialize the server request (the prompt is the caller's: trace
+    /// replay has no token content, only lengths).
+    pub fn to_request(&self, prompt: Vec<u8>) -> crate::server::Request {
+        crate::server::Request {
+            id: self.id,
+            prompt,
+            decode_tokens: self.decode_tokens as usize,
+            bias: self.bias,
+        }
+    }
+}
+
+/// A scenario generator: deterministic trace synthesis.
+pub trait WorkloadGen {
+    fn name(&self) -> &'static str;
+    /// Generate `n` requests; deterministic in `(self, n, seed)`.
+    fn generate(&self, n: usize, seed: u64) -> Vec<TraceRequest>;
+}
+
+/// Exponential inter-arrival time at `rate` arrivals/s.
+fn exp_interval(rng: &mut Rng, rate: f64) -> f64 {
+    debug_assert!(rate > 0.0);
+    // 1 - f64() is in (0, 1], so ln is finite
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+/// GSM8K-shaped (prefill, decode) lengths, from the shared sampler in
+/// [`WorkloadParams::sample`] (one home for the gaussian-clamp shape).
+fn sample_lengths(rng: &mut Rng, p: &WorkloadParams) -> (u32, u32) {
+    let (pre, dec) = p.sample(rng);
+    (pre as u32, dec as u32)
+}
+
+/// Sort by arrival and stamp sequential ids — every generator's epilogue.
+fn finalize(mut reqs: Vec<TraceRequest>) -> Vec<TraceRequest> {
+    reqs.sort_by(|a, b| a.arrival_s.partial_cmp(&b.arrival_s).unwrap());
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    reqs
+}
+
+// ------------------------------------------------------------- presets
+
+/// Stationary Poisson arrivals.
+#[derive(Clone, Copy, Debug)]
+pub struct SteadyPoisson {
+    /// Mean arrival rate, requests per virtual second.
+    pub rate_rps: f64,
+    pub shape: WorkloadParams,
+}
+
+impl Default for SteadyPoisson {
+    fn default() -> Self {
+        SteadyPoisson { rate_rps: 8.0, shape: WorkloadParams::default() }
+    }
+}
+
+impl WorkloadGen for SteadyPoisson {
+    fn name(&self) -> &'static str {
+        "steady"
+    }
+
+    fn generate(&self, n: usize, seed: u64) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut reqs = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += exp_interval(&mut rng, self.rate_rps);
+            let (pre, dec) = sample_lengths(&mut rng, &self.shape);
+            reqs.push(TraceRequest {
+                id: 0,
+                arrival_s: t,
+                prefill_tokens: pre,
+                decode_tokens: dec,
+                tenant: 0,
+                bias: None,
+            });
+        }
+        finalize(reqs)
+    }
+}
+
+/// Two-state MMPP: exponential ON/OFF dwell times, Poisson arrivals at a
+/// state-dependent rate (OFF may be 0 — pure silence between bursts).
+#[derive(Clone, Copy, Debug)]
+pub struct BurstyOnOff {
+    /// Arrival rate while the source is ON, requests/s.
+    pub on_rps: f64,
+    /// Arrival rate while OFF (0 = silent troughs).
+    pub off_rps: f64,
+    /// Mean ON dwell, seconds.
+    pub mean_on_s: f64,
+    /// Mean OFF dwell, seconds.
+    pub mean_off_s: f64,
+    pub shape: WorkloadParams,
+}
+
+impl Default for BurstyOnOff {
+    fn default() -> Self {
+        BurstyOnOff {
+            on_rps: 24.0,
+            off_rps: 0.0,
+            mean_on_s: 1.0,
+            mean_off_s: 2.0,
+            shape: WorkloadParams::default(),
+        }
+    }
+}
+
+impl WorkloadGen for BurstyOnOff {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn generate(&self, n: usize, seed: u64) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(seed);
+        let mut reqs = Vec::with_capacity(n);
+        let mut t = 0.0;
+        let mut on = true;
+        let mut switch_at = exp_interval(&mut rng, 1.0 / self.mean_on_s.max(1e-9));
+        while reqs.len() < n {
+            let rate = if on { self.on_rps } else { self.off_rps };
+            // next arrival in the current state, or no arrival at all
+            // before the state flips (rate 0, or the dwell ends first)
+            let next = if rate > 0.0 {
+                t + exp_interval(&mut rng, rate)
+            } else {
+                f64::INFINITY
+            };
+            if next >= switch_at {
+                t = switch_at;
+                on = !on;
+                let mean = if on { self.mean_on_s } else { self.mean_off_s };
+                switch_at = t + exp_interval(&mut rng, 1.0 / mean.max(1e-9));
+                continue;
+            }
+            t = next;
+            let (pre, dec) = sample_lengths(&mut rng, &self.shape);
+            reqs.push(TraceRequest {
+                id: 0,
+                arrival_s: t,
+                prefill_tokens: pre,
+                decode_tokens: dec,
+                tenant: 0,
+                bias: None,
+            });
+        }
+        finalize(reqs)
+    }
+}
+
+/// Raised-cosine diurnal profile over one `period_s`:
+/// `rate(t) = base + (peak - base) · ½(1 − cos 2πt/T)` — trough at the
+/// trace start, peak mid-period. Sampled by thinning against `peak_rps`.
+#[derive(Clone, Copy, Debug)]
+pub struct DiurnalRamp {
+    pub base_rps: f64,
+    pub peak_rps: f64,
+    pub period_s: f64,
+    pub shape: WorkloadParams,
+}
+
+impl Default for DiurnalRamp {
+    fn default() -> Self {
+        DiurnalRamp {
+            base_rps: 2.0,
+            peak_rps: 16.0,
+            period_s: 8.0,
+            shape: WorkloadParams::default(),
+        }
+    }
+}
+
+impl WorkloadGen for DiurnalRamp {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+
+    fn generate(&self, n: usize, seed: u64) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(seed);
+        let mut reqs = Vec::with_capacity(n);
+        let mut t = 0.0;
+        let peak = self.peak_rps.max(self.base_rps).max(1e-9);
+        while reqs.len() < n {
+            t += exp_interval(&mut rng, peak);
+            let phase = (t / self.period_s.max(1e-9)) * std::f64::consts::TAU;
+            let rate =
+                self.base_rps + (self.peak_rps - self.base_rps) * 0.5 * (1.0 - phase.cos());
+            if rng.f64() >= rate / peak {
+                continue; // thinned: candidate rejected at this instant
+            }
+            let (pre, dec) = sample_lengths(&mut rng, &self.shape);
+            reqs.push(TraceRequest {
+                id: 0,
+                arrival_s: t,
+                prefill_tokens: pre,
+                decode_tokens: dec,
+                tenant: 0,
+                bias: None,
+            });
+        }
+        finalize(reqs)
+    }
+}
+
+/// Multi-tenant multi-turn sessions with per-tenant routing bias.
+///
+/// Session starts form a Poisson stream; each start is assigned to a
+/// tenant by a Zipf(`tenant_skew`) draw (a few tenants dominate). A
+/// session runs `turns` requests separated by exponential think times;
+/// turn `k`'s prompt is the whole conversation so far (previous prompt +
+/// previous decode + a fresh user turn), capped at `2 × prefill_max` —
+/// the shared-prefix prefill pattern. Every request carries a
+/// [`RoutingBias`]: the tenant's own affinity seed (so one tenant's
+/// traffic routes over one popularity field and overlaps in the cache),
+/// a per-tenant Zipf popularity exponent in
+/// `alpha_base ± alpha_spread`, and popularity drift — the affinity
+/// field advances to a fresh epoch every `drift_tau_s` of trace time,
+/// so what is "hot" slowly rotates under the cache.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiTenantSessions {
+    pub tenants: usize,
+    /// Zipf exponent of the tenant-popularity draw.
+    pub tenant_skew: f64,
+    /// Session-start rate, sessions per virtual second.
+    pub session_rps: f64,
+    /// Turns (requests) per session.
+    pub turns: usize,
+    /// Mean think time between a response and the next turn, seconds.
+    pub think_mean_s: f64,
+    /// Center of the per-tenant popularity exponent.
+    pub alpha_base: f64,
+    /// Half-width of the per-tenant popularity exponent spread.
+    pub alpha_spread: f64,
+    /// Popularity weight every biased request uses (locality strength).
+    pub popularity_weight: f64,
+    /// Seconds per affinity epoch (popularity drift); `inf` = static.
+    pub drift_tau_s: f64,
+    pub shape: WorkloadParams,
+}
+
+impl Default for MultiTenantSessions {
+    fn default() -> Self {
+        MultiTenantSessions {
+            tenants: 4,
+            tenant_skew: 1.0,
+            session_rps: 3.0,
+            turns: 3,
+            think_mean_s: 0.5,
+            alpha_base: 0.9,
+            alpha_spread: 0.4,
+            popularity_weight: 0.6,
+            drift_tau_s: 4.0,
+            shape: WorkloadParams::default(),
+        }
+    }
+}
+
+impl MultiTenantSessions {
+    /// The tenant's epoch-`e` affinity seed (stable across generations).
+    fn affinity_seed(trace_seed: u64, tenant: u32, epoch: u64) -> u64 {
+        let mut sm = SplitMix64::new(trace_seed ^ 0x7E4A_47_u64);
+        let base = sm.next_u64();
+        let mut sm = SplitMix64::new(base ^ ((tenant as u64) << 32) ^ epoch);
+        sm.next_u64()
+    }
+}
+
+impl WorkloadGen for MultiTenantSessions {
+    fn name(&self) -> &'static str {
+        "tenants"
+    }
+
+    fn generate(&self, n: usize, seed: u64) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(seed);
+        let tenants = self.tenants.max(1);
+        let zipf = Zipf::new(tenants, self.tenant_skew);
+        let turns = self.turns.max(1);
+        let prefill_cap = (self.shape.prefill_max as u32).saturating_mul(2);
+        let mut reqs: Vec<TraceRequest> = Vec::with_capacity(n + turns);
+        let mut session_start = 0.0;
+        while reqs.len() < n {
+            session_start += exp_interval(&mut rng, self.session_rps);
+            let tenant = zipf.sample(&mut rng) as u32;
+            // per-tenant popularity exponent, deterministic in the tenant
+            let spread = if tenants > 1 {
+                (tenant as f64 / (tenants - 1) as f64) * 2.0 - 1.0
+            } else {
+                0.0
+            };
+            let alpha = self.alpha_base + self.alpha_spread * spread;
+            let mut t = session_start;
+            let mut context: u32 = 0; // conversation tokens accumulated
+            for turn in 0..turns {
+                let (pre, dec) = sample_lengths(&mut rng, &self.shape);
+                let prefill = (context + pre).min(prefill_cap.max(1));
+                let epoch = if self.drift_tau_s.is_finite() && self.drift_tau_s > 0.0 {
+                    (t / self.drift_tau_s) as u64
+                } else {
+                    0
+                };
+                reqs.push(TraceRequest {
+                    id: 0,
+                    arrival_s: t,
+                    prefill_tokens: prefill,
+                    decode_tokens: dec,
+                    tenant,
+                    bias: Some(RoutingBias {
+                        popularity_alpha: alpha,
+                        popularity_weight: self.popularity_weight,
+                        affinity_seed: Self::affinity_seed(seed, tenant, epoch),
+                    }),
+                });
+                context = prefill.saturating_add(dec);
+                if turn + 1 < turns {
+                    t += exp_interval(&mut rng, 1.0 / self.think_mean_s.max(1e-9));
+                }
+            }
+        }
+        // the last session may overshoot `n` turns: drop the excess (by
+        // generation order — deterministic) before sorting/stamping ids
+        reqs.truncate(n);
+        finalize(reqs)
+    }
+}
+
+// ------------------------------------------------------------ scenarios
+
+/// The preset menu the CLI / bench sweep iterates over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    Steady,
+    Bursty,
+    Diurnal,
+    Tenants,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 4] {
+        [Scenario::Steady, Scenario::Bursty, Scenario::Diurnal, Scenario::Tenants]
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "steady" | "poisson" => Some(Scenario::Steady),
+            "bursty" | "onoff" | "mmpp" => Some(Scenario::Bursty),
+            "diurnal" | "ramp" => Some(Scenario::Diurnal),
+            "tenants" | "sessions" | "multi-tenant" => Some(Scenario::Tenants),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Tenants => "tenants",
+        }
+    }
+
+    /// Canonical per-scenario seed salt — a property of the scenario, NOT
+    /// of its position in whatever subset a sweep runs, so `(seed,
+    /// scenario)` always produces the same trace bytes.
+    pub fn seed_salt(&self) -> u64 {
+        match self {
+            Scenario::Steady => 1,
+            Scenario::Bursty => 2,
+            Scenario::Diurnal => 3,
+            Scenario::Tenants => 4,
+        }
+    }
+
+    /// Default-knob generator for this preset over `shape`d requests.
+    pub fn build(&self, shape: WorkloadParams) -> Box<dyn WorkloadGen> {
+        match self {
+            Scenario::Steady => Box::new(SteadyPoisson { shape, ..Default::default() }),
+            Scenario::Bursty => Box::new(BurstyOnOff { shape, ..Default::default() }),
+            Scenario::Diurnal => Box::new(DiurnalRamp { shape, ..Default::default() }),
+            Scenario::Tenants => {
+                Box::new(MultiTenantSessions { shape, ..Default::default() })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(reqs: &[TraceRequest], n: usize, shape: &WorkloadParams) {
+        assert_eq!(reqs.len(), n);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids sequential in arrival order");
+            assert!(r.arrival_s.is_finite() && r.arrival_s >= 0.0);
+            if i > 0 {
+                assert!(r.arrival_s >= reqs[i - 1].arrival_s, "arrivals sorted");
+            }
+            assert!(r.prefill_tokens >= shape.prefill_min as u32);
+            assert!(r.prefill_tokens <= 2 * shape.prefill_max as u32);
+            assert!((shape.decode_min as u32..=shape.decode_max as u32)
+                .contains(&r.decode_tokens));
+        }
+    }
+
+    #[test]
+    fn every_preset_generates_valid_deterministic_traces() {
+        let shape = WorkloadParams::default();
+        for sc in Scenario::all() {
+            let g = sc.build(shape);
+            let a = g.generate(64, 11);
+            check_invariants(&a, 64, &shape);
+            assert_eq!(a, g.generate(64, 11), "{} deterministic", g.name());
+            assert_ne!(a, g.generate(64, 12), "{} seed-sensitive", g.name());
+        }
+    }
+
+    #[test]
+    fn steady_interarrivals_match_rate() {
+        let g = SteadyPoisson { rate_rps: 10.0, shape: WorkloadParams::default() };
+        let reqs = g.generate(2000, 3);
+        let span = reqs.last().unwrap().arrival_s;
+        let mean_gap = span / 2000.0;
+        assert!((mean_gap - 0.1).abs() < 0.02, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_steady() {
+        // squared coefficient of variation of inter-arrivals: ~1 for
+        // Poisson, substantially larger for the on/off process
+        let cv2 = |reqs: &[TraceRequest]| {
+            let gaps: Vec<f64> = reqs
+                .windows(2)
+                .map(|w| w[1].arrival_s - w[0].arrival_s)
+                .collect();
+            let m = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let v = gaps.iter().map(|g| (g - m) * (g - m)).sum::<f64>()
+                / gaps.len() as f64;
+            v / (m * m)
+        };
+        let steady = SteadyPoisson::default().generate(1500, 5);
+        let bursty = BurstyOnOff::default().generate(1500, 5);
+        let (cs, cb) = (cv2(&steady), cv2(&bursty));
+        assert!(cs < 1.5, "steady cv2 {cs}");
+        assert!(cb > 2.0 * cs, "bursty cv2 {cb} vs steady {cs}");
+    }
+
+    #[test]
+    fn diurnal_rate_rises_toward_mid_period() {
+        let g = DiurnalRamp {
+            base_rps: 2.0,
+            peak_rps: 30.0,
+            period_s: 10.0,
+            shape: WorkloadParams::default(),
+        };
+        let reqs = g.generate(600, 9);
+        // compare arrivals landing in the first vs the middle fifth of
+        // the first period
+        let in_window = |lo: f64, hi: f64| {
+            reqs.iter()
+                .filter(|r| r.arrival_s >= lo && r.arrival_s < hi)
+                .count()
+        };
+        let trough = in_window(0.0, 2.0);
+        let peak = in_window(4.0, 6.0);
+        assert!(
+            peak > 2 * trough.max(1),
+            "peak window {peak} should dominate trough {trough}"
+        );
+    }
+
+    #[test]
+    fn tenants_share_affinity_and_conversations_grow() {
+        let g = MultiTenantSessions { drift_tau_s: f64::INFINITY, ..Default::default() };
+        let reqs = g.generate(120, 21);
+        let mut by_tenant: std::collections::HashMap<u32, Vec<u64>> = Default::default();
+        for r in &reqs {
+            let b = r.bias.expect("tenant requests carry bias");
+            assert!(b.popularity_alpha > 0.0);
+            by_tenant.entry(r.tenant).or_default().push(b.affinity_seed);
+        }
+        assert!(by_tenant.len() >= 2, "multiple tenants active");
+        // static drift: one affinity seed per tenant, distinct across
+        let mut seeds = std::collections::HashSet::new();
+        for (t, s) in &by_tenant {
+            assert!(s.windows(2).all(|w| w[0] == w[1]), "tenant {t} seed stable");
+            seeds.insert(s[0]);
+        }
+        assert_eq!(seeds.len(), by_tenant.len(), "tenants have distinct fields");
+        // zipf assignment: the hottest tenant sees the most traffic
+        let max_traffic = by_tenant.values().map(Vec::len).max().unwrap();
+        assert!(max_traffic as f64 >= 120.0 / g.tenants as f64);
+    }
+
+    #[test]
+    fn tenant_drift_rotates_affinity_epochs() {
+        let g = MultiTenantSessions { drift_tau_s: 0.5, ..Default::default() };
+        let reqs = g.generate(200, 33);
+        let mut per_tenant: std::collections::HashMap<u32, std::collections::HashSet<u64>> =
+            Default::default();
+        for r in &reqs {
+            per_tenant
+                .entry(r.tenant)
+                .or_default()
+                .insert(r.bias.unwrap().affinity_seed);
+        }
+        // the busiest tenant spans many epochs over the trace
+        let max_epochs = per_tenant.values().map(|s| s.len()).max().unwrap();
+        assert!(max_epochs >= 2, "drift should rotate the affinity field");
+    }
+
+    #[test]
+    fn shared_prefix_prefills_grow_within_a_session() {
+        // with sparse sessions, consecutive same-tenant requests inside a
+        // think-time window are the same conversation: prefill must be
+        // strictly larger than the previous turn's prompt
+        let g = MultiTenantSessions {
+            tenants: 1,
+            session_rps: 0.05, // sessions far apart vs think time
+            turns: 3,
+            think_mean_s: 0.2,
+            ..Default::default()
+        };
+        let reqs = g.generate(30, 7);
+        let mut grew = 0;
+        for w in reqs.windows(2) {
+            if w[1].arrival_s - w[0].arrival_s < 3.0 {
+                // same session: conversation context accumulated
+                if w[1].prefill_tokens > w[0].prefill_tokens {
+                    grew += 1;
+                }
+            }
+        }
+        assert!(grew > 5, "saw only {grew} growing turns");
+    }
+
+    #[test]
+    fn scenario_parse_roundtrip() {
+        for sc in Scenario::all() {
+            assert_eq!(Scenario::parse(sc.name()), Some(sc));
+        }
+        assert_eq!(Scenario::parse("mmpp"), Some(Scenario::Bursty));
+        assert!(Scenario::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,222 @@
+//! `serve-bench`: the scenario × lane-count × cache-mode sweep.
+//!
+//! For every scenario preset, generate a fixed-seed trace (optionally
+//! persisting it as an SMWT file for bit-identical replay), then drive
+//! it open-loop through a fresh multi-lane server per (lanes,
+//! cache-mode) cell with the cost-model backend. Each cell's
+//! [`WorkloadSummary`] is recorded on the [`Reporter`] as a metrics row,
+//! so `BENCH_workload.json` accumulates the workload-level perf
+//! trajectory (p50/p95/p99 end-to-end latency, queueing delay, goodput,
+//! combined miss rate, energy per token) across PRs.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::serve::ServeConfig;
+use crate::server::{request_seed, CostModelServerBackend, ServerHandle};
+use crate::sim::trace::TraceParams;
+use crate::sim::workload::WorkloadParams;
+use crate::util::bench::Reporter;
+
+use super::harness::{run_open_loop, OpenLoopOpts, WorkloadSummary};
+use super::scenario::Scenario;
+use super::trace_file::TraceFile;
+
+/// The sweep grid and per-lane serving template.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Per-lane policy template (`seed` is the server base seed from
+    /// which per-request seeds derive).
+    pub template: ServeConfig,
+    /// Base trace statistics (per-request bias overlays on top).
+    pub trace: TraceParams,
+    /// Request length shape shared by every scenario.
+    pub shape: WorkloadParams,
+    pub scenarios: Vec<Scenario>,
+    pub lanes: Vec<usize>,
+    /// Cache modes to sweep: `false` = private per-request caches,
+    /// `true` = one shared contended cache.
+    pub shared_modes: Vec<bool>,
+    /// Requests per trace.
+    pub requests: usize,
+    /// Admission queue depth.
+    pub queue_depth: usize,
+    /// Host seconds each trace's arrival span is compressed/stretched to.
+    pub span_s: f64,
+    pub seed: u64,
+    /// When set, write each scenario's trace as `trace_<name>.smwt`.
+    pub trace_dir: Option<PathBuf>,
+}
+
+impl SweepConfig {
+    /// Full default sweep over all four presets.
+    pub fn new(template: ServeConfig) -> SweepConfig {
+        SweepConfig {
+            template,
+            trace: TraceParams::default(),
+            shape: WorkloadParams::default(),
+            scenarios: Scenario::all().to_vec(),
+            lanes: vec![1, 4],
+            shared_modes: vec![false, true],
+            requests: 32,
+            queue_depth: 8,
+            span_s: 1.5,
+            seed: 0x10AD,
+            trace_dir: None,
+        }
+    }
+
+    /// Fast CI path: same four scenarios, minimal load.
+    pub fn smoke(template: ServeConfig) -> SweepConfig {
+        SweepConfig {
+            requests: 8,
+            lanes: vec![2],
+            span_s: 0.25,
+            ..Self::new(template)
+        }
+    }
+}
+
+/// One completed sweep cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub scenario: &'static str,
+    pub lanes: usize,
+    pub shared_cache: bool,
+    pub summary: WorkloadSummary,
+}
+
+/// Run the sweep, recording one metrics row per cell on `rep`.
+pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::new();
+    for sc in &cfg.scenarios {
+        let generator = sc.build(cfg.shape);
+        let trace_seed = request_seed(cfg.seed, sc.seed_salt());
+        let reqs = generator.generate(cfg.requests, trace_seed);
+        if let Some(dir) = &cfg.trace_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create trace dir {}", dir.display()))?;
+            TraceFile::new(sc.name(), trace_seed, reqs.clone())
+                .write(&dir.join(format!("trace_{}.smwt", sc.name())))?;
+        }
+        let span = reqs.last().map(|r| r.arrival_s).unwrap_or(0.0);
+        let time_scale = if span > 0.0 { cfg.span_s / span } else { 1.0 };
+
+        for &lanes in &cfg.lanes {
+            for &shared in &cfg.shared_modes {
+                let template = cfg.template.clone();
+                let trace_params = cfg.trace;
+                let base_seed = cfg.seed;
+                let shared_cache =
+                    shared.then(|| CostModelServerBackend::shared_cache_for(&template));
+                let handle = ServerHandle::start(
+                    lanes.max(1),
+                    cfg.queue_depth.max(1),
+                    move |_lane| {
+                        let mut b = CostModelServerBackend::new(
+                            template.clone(),
+                            trace_params,
+                            base_seed,
+                        );
+                        if let Some(c) = &shared_cache {
+                            b = b.with_shared_cache(Arc::clone(c));
+                        }
+                        Ok(b)
+                    },
+                );
+                let report = run_open_loop(
+                    &handle,
+                    &reqs,
+                    &OpenLoopOpts { time_scale },
+                    |tr| vec![0u8; tr.prefill_tokens as usize],
+                )?;
+                handle.shutdown();
+                let s = report.summary();
+                let name = format!(
+                    "{}/lanes{}/{}",
+                    sc.name(),
+                    lanes,
+                    if shared { "shared" } else { "private" }
+                );
+                rep.record_metrics(
+                    &name,
+                    &[
+                        ("requests", s.requests as f64),
+                        ("errors", s.errors as f64),
+                        ("decode_tokens", s.decode_tokens as f64),
+                        ("e2e_p50_s", s.e2e_p50_s),
+                        ("e2e_p95_s", s.e2e_p95_s),
+                        ("e2e_p99_s", s.e2e_p99_s),
+                        ("queue_mean_s", s.queue_mean_s),
+                        ("queue_p95_s", s.queue_p95_s),
+                        ("submit_lag_max_s", s.submit_lag_max_s),
+                        ("goodput_tok_s", s.goodput_tok_s),
+                        ("miss_rate", s.miss_rate),
+                        ("energy_per_token_j", s.energy_per_token_j),
+                        ("wall_s", s.wall_s),
+                    ],
+                );
+                cells.push(SweepCell {
+                    scenario: sc.name(),
+                    lanes,
+                    shared_cache: shared,
+                    summary: s,
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+
+    fn tiny_template() -> ServeConfig {
+        let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        cfg.cache_bytes = cfg.unit_bytes() * 8;
+        cfg
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_reports_clean_cells() {
+        let mut cfg = SweepConfig::smoke(tiny_template());
+        cfg.scenarios = vec![Scenario::Steady, Scenario::Tenants];
+        cfg.lanes = vec![1, 2];
+        cfg.requests = 5;
+        cfg.span_s = 0.05;
+        // short requests so the unit test stays fast
+        cfg.shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        let mut rep = Reporter::new("sweep-unit");
+        let cells = run_sweep(&cfg, &mut rep).unwrap();
+        // 2 scenarios × 2 lane counts × 2 cache modes
+        assert_eq!(cells.len(), 8);
+        for c in &cells {
+            assert_eq!(c.summary.requests, 5, "{}: all requests served", c.scenario);
+            assert_eq!(c.summary.errors, 0);
+            assert!(c.summary.decode_tokens >= 5 * 8);
+            assert!(c.summary.e2e_p50_s.is_finite());
+            assert!(c.summary.miss_rate.is_finite());
+        }
+        let path = std::env::temp_dir()
+            .join(format!("bench_sweep_{}.json", std::process::id()));
+        rep.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let parsed = crate::util::json::Json::parse(&text).expect("valid json");
+        let metrics = parsed.at(&["metrics"]).unwrap().as_arr().unwrap();
+        assert_eq!(metrics.len(), 8);
+    }
+}

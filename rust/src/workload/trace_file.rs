@@ -1,0 +1,236 @@
+//! On-disk workload trace container (SMWT — "SliceMoE Workload Trace").
+//!
+//! Any generated or captured workload can be persisted and re-run
+//! bit-identically: arrival times and routing-bias scalars round-trip as
+//! raw IEEE-754 bits, so a replayed trace drives the server with exactly
+//! the inputs the original run saw. Sibling of `model/blob.rs`'s SMWB
+//! container, same conventions (little-endian, explicit sizes, hard
+//! errors on truncation/trailing bytes).
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SMWT" | u16 version (=1) | u16 reserved (=0) |
+//! u64 seed | u16 scenario_len | scenario utf-8 | u32 count |
+//! count × {
+//!   u64 id | f64 arrival_s | u32 prefill | u32 decode | u32 tenant |
+//!   u8 has_bias | f64 popularity_alpha | f64 popularity_weight |
+//!   u64 affinity_seed
+//! }
+//! ```
+//! Bias fields are written as zeros when `has_bias == 0` (fixed-size
+//! records keep the reader trivial and the format seekable).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::trace::RoutingBias;
+use crate::util::bytes;
+
+use super::scenario::TraceRequest;
+
+const MAGIC: &[u8; 4] = b"SMWT";
+const VERSION: u16 = 1;
+/// Fixed per-request record size (see the layout above).
+const RECORD_BYTES: usize = 8 + 8 + 4 + 4 + 4 + 1 + 8 + 8 + 8;
+
+/// A workload trace with its provenance header.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceFile {
+    /// Scenario preset name (free-form provenance, ≤ u16::MAX bytes).
+    pub scenario: String,
+    /// Seed the trace was generated from.
+    pub seed: u64,
+    pub requests: Vec<TraceRequest>,
+}
+
+impl TraceFile {
+    pub fn new(scenario: &str, seed: u64, requests: Vec<TraceRequest>) -> TraceFile {
+        TraceFile { scenario: scenario.to_string(), seed, requests }
+    }
+
+    /// Serialize to the SMWT byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let name = self.scenario.as_bytes();
+        let name_len = name.len().min(u16::MAX as usize);
+        let mut out =
+            Vec::with_capacity(24 + name_len + self.requests.len() * RECORD_BYTES);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(name_len as u16).to_le_bytes());
+        out.extend_from_slice(&name[..name_len]);
+        out.extend_from_slice(&(self.requests.len() as u32).to_le_bytes());
+        for r in &self.requests {
+            out.extend_from_slice(&r.id.to_le_bytes());
+            out.extend_from_slice(&r.arrival_s.to_le_bytes());
+            out.extend_from_slice(&r.prefill_tokens.to_le_bytes());
+            out.extend_from_slice(&r.decode_tokens.to_le_bytes());
+            out.extend_from_slice(&r.tenant.to_le_bytes());
+            match &r.bias {
+                Some(b) => {
+                    out.push(1);
+                    out.extend_from_slice(&b.popularity_alpha.to_le_bytes());
+                    out.extend_from_slice(&b.popularity_weight.to_le_bytes());
+                    out.extend_from_slice(&b.affinity_seed.to_le_bytes());
+                }
+                None => {
+                    out.push(0);
+                    out.extend_from_slice(&[0u8; 24]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse an SMWT buffer, validating magic, version, and exact length.
+    pub fn parse(buf: &[u8]) -> Result<TraceFile> {
+        let mut pos = 0usize;
+        let take =
+            |pos: &mut usize, n: usize| -> Result<&[u8]> { bytes::take(buf, pos, n, "trace") };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not an SMWT workload trace)");
+        }
+        let version = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported trace version {version} (this reader speaks {VERSION})");
+        }
+        let _reserved = take(&mut pos, 2)?;
+        let seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let name_len = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?) as usize;
+        let scenario = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .context("scenario name is not utf-8")?;
+        let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        // cap the pre-allocation by what the buffer could actually hold:
+        // a corrupt count must yield a truncation error below, not an
+        // attempted multi-GB allocation here
+        let plausible = buf.len().saturating_sub(pos) / RECORD_BYTES;
+        let mut requests = Vec::with_capacity(count.min(plausible));
+        for _ in 0..count {
+            let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let arrival_s = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let prefill_tokens = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            let decode_tokens = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            let tenant = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+            let has_bias = take(&mut pos, 1)?[0];
+            let popularity_alpha = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let popularity_weight = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let affinity_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let bias = match has_bias {
+                0 => None,
+                1 => Some(RoutingBias { popularity_alpha, popularity_weight, affinity_seed }),
+                b => bail!("bad bias flag {b} (trace corrupt)"),
+            };
+            requests.push(TraceRequest {
+                id,
+                arrival_s,
+                prefill_tokens,
+                decode_tokens,
+                tenant,
+                bias,
+            });
+        }
+        if pos != buf.len() {
+            bail!("trailing {} bytes after last record", buf.len() - pos);
+        }
+        Ok(TraceFile { scenario, seed, requests })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write trace {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<TraceFile> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("open trace {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parse trace {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TraceFile {
+        TraceFile::new(
+            "unit",
+            0xABCD,
+            vec![
+                TraceRequest {
+                    id: 0,
+                    arrival_s: 0.125,
+                    prefill_tokens: 480,
+                    decode_tokens: 128,
+                    tenant: 0,
+                    bias: None,
+                },
+                TraceRequest {
+                    id: 1,
+                    arrival_s: 0.375,
+                    prefill_tokens: 500,
+                    decode_tokens: 160,
+                    tenant: 3,
+                    bias: Some(RoutingBias {
+                        popularity_alpha: 1.25,
+                        popularity_weight: 0.625,
+                        affinity_seed: 42,
+                    }),
+                },
+            ],
+        )
+    }
+
+    #[test]
+    fn roundtrip_is_identical() {
+        let t = sample();
+        let parsed = TraceFile::parse(&t.to_bytes()).unwrap();
+        assert_eq!(parsed, t);
+        // serialization is itself deterministic
+        assert_eq!(t.to_bytes(), parsed.to_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_and_truncation() {
+        let bytes = sample().to_bytes();
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        let e = TraceFile::parse(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "{e:#}");
+
+        let mut v2 = bytes.clone();
+        v2[4] = 2; // version little-endian low byte
+        let e = TraceFile::parse(&v2).unwrap_err();
+        assert!(format!("{e:#}").contains("version 2"), "{e:#}");
+
+        for cut in [3, 10, bytes.len() - 1] {
+            let e = TraceFile::parse(&bytes[..cut]).unwrap_err();
+            assert!(format!("{e:#}").contains("truncated"), "cut {cut}: {e:#}");
+        }
+
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        let e = TraceFile::parse(&trailing).unwrap_err();
+        assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+
+        // an absurd record count must error out as truncation, not
+        // attempt the allocation it claims (header is 22 bytes for the
+        // 4-byte "unit" scenario name; count sits right after)
+        let mut huge = bytes.clone();
+        huge[22..26].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = TraceFile::parse(&huge).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let t = sample();
+        let path = std::env::temp_dir()
+            .join(format!("smwt_unit_{}.smwt", std::process::id()));
+        t.write(&path).unwrap();
+        let loaded = TraceFile::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded, t);
+    }
+}
