@@ -4,7 +4,7 @@
 //! in the cache. Results print to stdout AND land in `BENCH_hotpath.json`
 //! (median/MAD per case) so the perf trajectory is tracked across PRs.
 
-use slicemoe::cache::SliceCache;
+use slicemoe::cache::{CacheOps, ShardedSliceCache, SliceCache};
 use slicemoe::memhier::Phase;
 use slicemoe::model::descriptor::SliceKey;
 use slicemoe::model::ModelDesc;
@@ -75,6 +75,121 @@ fn main() {
                 std::hint::black_box(out);
             }
         }));
+    }
+
+    // multi-threaded shared-cache churn: one global mutex vs the
+    // lock-striped sharded cache, point ops and batched token-layer
+    // transactions. Ops/sec lands as metrics rows so the lanes-scaling
+    // curve is tracked across PRs.
+    {
+        use std::sync::Mutex;
+        use std::time::Instant;
+
+        let desc = ModelDesc::deepseek_v2_lite();
+        let mat = MatConfig::MAT84;
+        let msb = desc.msb_slice_bytes(mat);
+        let (layers, experts) = (26usize, 64usize);
+        let iters = 60_000usize; // per thread
+        let batch = 6usize; // routed experts per simulated token-layer
+        const SHARDS: usize = 16;
+
+        let key_of = |r: u64| {
+            SliceKey::msb(((r >> 32) as usize) % layers, (r as usize) % experts)
+        };
+        // run `work(thread_id)` on `threads` OS threads, return elapsed s
+        let churn = |threads: usize, work: &(dyn Fn(usize) + Sync)| -> f64 {
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for t in 0..threads {
+                    s.spawn(move || work(t));
+                }
+            });
+            t0.elapsed().as_secs_f64()
+        };
+
+        for &threads in &[1usize, 2, 4, 8] {
+            // -- point ops: one lock acquisition per cache op ------------
+            let mutex_cache = Mutex::new(SliceCache::new(msb * 300));
+            let wall = churn(threads, &|t| {
+                let mut rng = Rng::new(0x7EA0 + t as u64);
+                let mut scratch = Vec::new();
+                for _ in 0..iters {
+                    let key = key_of(rng.next_u64());
+                    let mut c = mutex_cache.lock().unwrap();
+                    if !c.lookup(key) {
+                        let _ = c.ensure_into(key, msb, &mut scratch);
+                    }
+                    scratch.clear();
+                }
+            });
+            let mutex_point = (threads * iters) as f64 / wall;
+
+            let sharded = ShardedSliceCache::new(msb * 300, SHARDS);
+            let wall = churn(threads, &|t| {
+                let mut rng = Rng::new(0x7EA0 + t as u64);
+                let mut scratch = Vec::new();
+                for _ in 0..iters {
+                    let key = key_of(rng.next_u64());
+                    // one lock acquisition per op, symmetric with the
+                    // mutex arm's single guard over lookup+fill
+                    sharded.lookup_or_insert(key, msb, &mut scratch);
+                    scratch.clear();
+                }
+            });
+            let sharded_point = (threads * iters) as f64 / wall;
+
+            // -- batched txns: one critical section per token-layer ------
+            let txn_iters = iters / batch;
+            let mutex_cache = Mutex::new(SliceCache::new(msb * 300));
+            let wall = churn(threads, &|t| {
+                let mut rng = Rng::new(0x7EA0 + t as u64);
+                let mut scratch = Vec::new();
+                for _ in 0..txn_iters {
+                    let keys: Vec<SliceKey> =
+                        (0..batch).map(|_| key_of(rng.next_u64())).collect();
+                    let mut c = mutex_cache.lock().unwrap();
+                    for &key in &keys {
+                        if !c.lookup(key) {
+                            let _ = c.ensure_into(key, msb, &mut scratch);
+                        }
+                    }
+                    scratch.clear();
+                }
+            });
+            let mutex_txn = (threads * txn_iters * batch) as f64 / wall;
+
+            let sharded = ShardedSliceCache::new(msb * 300, SHARDS);
+            let wall = churn(threads, &|t| {
+                let mut rng = Rng::new(0x7EA0 + t as u64);
+                let mut scratch = Vec::new();
+                for _ in 0..txn_iters {
+                    let keys: Vec<SliceKey> =
+                        (0..batch).map(|_| key_of(rng.next_u64())).collect();
+                    let mut txn = sharded.txn(
+                        keys.iter().map(|k| sharded.shard_of_expert(k.expert as usize)),
+                    );
+                    for &key in &keys {
+                        if !txn.lookup(key) {
+                            let _ = txn.ensure_into(key, msb, &mut scratch);
+                        }
+                    }
+                    drop(txn);
+                    scratch.clear();
+                }
+            });
+            let sharded_txn = (threads * txn_iters * batch) as f64 / wall;
+
+            for (name, ops) in [
+                ("point/mutex".to_string(), mutex_point),
+                (format!("point/sharded{SHARDS}"), sharded_point),
+                ("txn/mutex".to_string(), mutex_txn),
+                (format!("txn/sharded{SHARDS}"), sharded_txn),
+            ] {
+                let row = format!("cache-contention/{name}/threads{threads}");
+                println!("{row:<46} {ops:>12.0} ops/s");
+                report.record_metrics(&row, &[("ops_per_s", ops), ("threads", threads as f64)]);
+            }
+        }
     }
 
     // quantization throughput (weight-store build path)

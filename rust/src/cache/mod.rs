@@ -1,7 +1,14 @@
 //! Slice-level expert caching (DBSC's storage side) + predictive warmup.
+//!
+//! Two cache implementations share one replacement policy (§4.1) and one
+//! operation vocabulary ([`CacheOps`]): the single-LRU [`SliceCache`]
+//! (the paper path) and the lock-striped [`ShardedSliceCache`] (the
+//! concurrent serving path; bit-exact with the former at one shard).
 
+pub mod sharded;
 pub mod slice_cache;
 pub mod warmup;
 
-pub use slice_cache::{CacheStats, Ensure, SliceCache};
-pub use warmup::{apply as apply_warmup, HotnessTable, WarmupStrategy};
+pub use sharded::{ShardTxn, ShardedSliceCache};
+pub use slice_cache::{CacheOps, CacheStats, Ensure, EnsureOutcome, SliceCache};
+pub use warmup::{apply as apply_warmup, apply_sharded, HotnessTable, WarmupStrategy};

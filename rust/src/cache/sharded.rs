@@ -1,0 +1,710 @@
+//! Lock-striped concurrent slice cache (the multi-lane scheduler's
+//! shared-cache fast path).
+//!
+//! `ShardedSliceCache` splits the unified DBSC cache into N independent
+//! shards, each a full [`SliceCache`] behind its own mutex. Shard
+//! assignment hashes only the `SliceKey` EXPERT id, so both planes of an
+//! expert (and the MSB→LSB upgrade inside one token-layer transaction)
+//! always land on the same shard. Within a shard the paper's §4.1
+//! heterogeneous replacement (MSB = LRU, LSB = evict-first) is preserved
+//! verbatim — the divergence from the single global LRU is only that
+//! recency is tracked per shard.
+//!
+//! * **Byte budgets** are shard-local, carved from the global
+//!   `capacity`: `Σ shard.capacity == capacity` at all times, so the
+//!   global accounting invariant (`Σ used <= capacity`) holds without
+//!   any cross-shard coordination on the hot path. A periodic
+//!   [`ShardedSliceCache::rebalance`] pass moves free bytes toward
+//!   shards with recent pressure (evictions + `TooLarge` denials) and
+//!   guarantees pressured shards a funded floor — evicting donor
+//!   residents only as a last resort — so skewed expert popularity
+//!   cannot strand capacity on cold shards or starve a shard forever.
+//! * **Statistics** are aggregated into relaxed atomic counters folded
+//!   in as shard-stats deltas when a lock is released; [`stats`]
+//!   (`ShardedSliceCache::stats`) reads them without taking any lock.
+//! * **Transactions** ([`ShardTxn`]) lock a set of shards once, in
+//!   ascending shard order (deadlock-free), and expose the [`CacheOps`]
+//!   view the routing walk runs against — one lock acquisition per
+//!   touched shard per (token, layer), instead of one per cache op.
+//!
+//! With `shards = 1` every key maps to shard 0 and every transaction
+//! degenerates to "lock the one SliceCache, run the identical op
+//! sequence": the sharded cache reproduces the single-LRU recency
+//! order, stats, and eviction choices bit-exactly (pinned by
+//! `tests/sharded_cache_props.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::model::descriptor::SliceKey;
+
+use super::slice_cache::{CacheOps, Ensure, EnsureOutcome, SliceCache};
+use super::CacheStats;
+
+/// Rebalance slack every this many transactions (`maybe_rebalance`).
+const REBALANCE_EVERY: u64 = 512;
+
+#[derive(Debug, Default)]
+struct AtomicStats {
+    msb_hits: AtomicU64,
+    msb_misses: AtomicU64,
+    lsb_hits: AtomicU64,
+    lsb_misses: AtomicU64,
+    evictions: AtomicU64,
+    insertions: AtomicU64,
+}
+
+impl AtomicStats {
+    fn fold_delta(&self, before: &CacheStats, after: &CacheStats) {
+        let add = |c: &AtomicU64, b: u64, a: u64| {
+            if a != b {
+                c.fetch_add(a.wrapping_sub(b), Ordering::Relaxed);
+            }
+        };
+        add(&self.msb_hits, before.msb_hits, after.msb_hits);
+        add(&self.msb_misses, before.msb_misses, after.msb_misses);
+        add(&self.lsb_hits, before.lsb_hits, after.lsb_hits);
+        add(&self.lsb_misses, before.lsb_misses, after.lsb_misses);
+        add(&self.evictions, before.evictions, after.evictions);
+        add(&self.insertions, before.insertions, after.insertions);
+    }
+
+    fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            msb_hits: self.msb_hits.load(Ordering::Relaxed),
+            msb_misses: self.msb_misses.load(Ordering::Relaxed),
+            lsb_hits: self.lsb_hits.load(Ordering::Relaxed),
+            lsb_misses: self.lsb_misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-shard pressure baselines at the last rebalance.
+#[derive(Debug)]
+struct RebalanceState {
+    last_evictions: Vec<u64>,
+    last_denials: Vec<u64>,
+}
+
+/// N lock-striped [`SliceCache`] shards presenting one DBSC cache.
+#[derive(Debug)]
+pub struct ShardedSliceCache {
+    shards: Vec<Mutex<SliceCache>>,
+    capacity: u64,
+    stats: AtomicStats,
+    txn_count: AtomicU64,
+    /// Per-shard `TooLarge` insert denials (an entry that no longer fits
+    /// its shard's budget). Eviction counters alone cannot see these —
+    /// a shard starved down to a tiny budget evicts nothing — so they
+    /// feed the rebalancer's pressure signal too.
+    too_large: Vec<AtomicU64>,
+    rebal: Mutex<RebalanceState>,
+}
+
+impl ShardedSliceCache {
+    /// `n_shards` shards splitting `capacity_bytes` evenly (remainder
+    /// bytes go to the first shards so the budgets sum exactly).
+    pub fn new(capacity_bytes: u64, n_shards: usize) -> ShardedSliceCache {
+        let n = n_shards.max(1) as u64;
+        let (base, rem) = (capacity_bytes / n, capacity_bytes % n);
+        let shards = (0..n)
+            .map(|i| Mutex::new(SliceCache::new(base + u64::from(i < rem))))
+            .collect();
+        ShardedSliceCache {
+            shards,
+            capacity: capacity_bytes,
+            stats: AtomicStats::default(),
+            txn_count: AtomicU64::new(0),
+            too_large: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            rebal: Mutex::new(RebalanceState {
+                last_evictions: vec![0; n as usize],
+                last_denials: vec![0; n as usize],
+            }),
+        }
+    }
+
+    /// Record a `TooLarge` denial against `shard` (rebalance pressure).
+    fn note_too_large(&self, shard: usize) {
+        self.too_large[shard].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Toggle §4.1 heterogeneous replacement on every shard (construction
+    /// -time knob, before the cache is shared).
+    pub fn set_heterogeneous(&mut self, on: bool) {
+        for s in &self.shards {
+            s.lock().expect("sharded slice cache poisoned").heterogeneous = on;
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Shard owning expert `e` (both planes, every layer).
+    pub fn shard_of_expert(&self, expert: usize) -> usize {
+        expert % self.shards.len()
+    }
+
+    fn shard_of(&self, key: SliceKey) -> usize {
+        self.shard_of_expert(key.expert as usize)
+    }
+
+    /// Run `f` under `key`'s shard lock, folding the stats delta.
+    fn with_shard<R>(&self, key: SliceKey, f: impl FnOnce(&mut SliceCache) -> R) -> R {
+        let mut g = self.shards[self.shard_of(key)]
+            .lock()
+            .expect("sharded slice cache poisoned");
+        let before = g.stats;
+        let out = f(&mut g);
+        self.stats.fold_delta(&before, &g.stats);
+        out
+    }
+
+    /// Lock every shard in order and visit it, folding stats deltas.
+    /// Whole-cache maintenance (warmup reshape, rebalancing, tests) —
+    /// NOT atomic across shards: locks are taken one at a time.
+    pub fn for_each_shard(&self, mut f: impl FnMut(usize, &mut SliceCache)) {
+        for (i, m) in self.shards.iter().enumerate() {
+            let mut g = m.lock().expect("sharded slice cache poisoned");
+            let before = g.stats;
+            f(i, &mut g);
+            self.stats.fold_delta(&before, &g.stats);
+        }
+    }
+
+    // -- single-key operations (tests, warmup, simple callers) -----------
+
+    pub fn lookup(&self, key: SliceKey) -> bool {
+        self.with_shard(key, |c| c.lookup(key))
+    }
+
+    pub fn peek(&self, key: SliceKey) -> bool {
+        self.shards[self.shard_of(key)]
+            .lock()
+            .expect("sharded slice cache poisoned")
+            .peek(key)
+    }
+
+    pub fn contains(&self, key: SliceKey) -> bool {
+        self.peek(key)
+    }
+
+    pub fn ensure(&self, key: SliceKey, bytes: u64) -> Ensure {
+        let out = self.with_shard(key, |c| c.ensure(key, bytes));
+        if out == Ensure::TooLarge {
+            self.note_too_large(self.shard_of(key));
+        }
+        out
+    }
+
+    pub fn ensure_into(
+        &self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> EnsureOutcome {
+        let out = self.with_shard(key, |c| c.ensure_into(key, bytes, evicted));
+        if out == EnsureOutcome::TooLarge {
+            self.note_too_large(self.shard_of(key));
+        }
+        out
+    }
+
+    /// Probe-then-fill under ONE shard-lock acquisition (the common
+    /// miss-path pair for single-key callers). Returns true on hit.
+    pub fn lookup_or_insert(
+        &self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> bool {
+        let (hit, denied) = self.with_shard(key, |c| {
+            if c.lookup(key) {
+                (true, false)
+            } else {
+                (false, c.ensure_into(key, bytes, evicted) == EnsureOutcome::TooLarge)
+            }
+        });
+        if denied {
+            self.note_too_large(self.shard_of(key));
+        }
+        hit
+    }
+
+    pub fn remove(&self, key: SliceKey) -> bool {
+        self.with_shard(key, |c| c.remove(key))
+    }
+
+    pub fn pin(&self, key: SliceKey, pinned: bool) -> bool {
+        self.with_shard(key, |c| c.pin(key, pinned))
+    }
+
+    pub fn is_pinned(&self, key: SliceKey) -> bool {
+        self.shards[self.shard_of(key)]
+            .lock()
+            .expect("sharded slice cache poisoned")
+            .is_pinned(key)
+    }
+
+    // -- aggregate views ---------------------------------------------------
+
+    /// Lock-free aggregate statistics (relaxed reads; exact once every
+    /// in-flight transaction has committed).
+    pub fn stats(&self) -> CacheStats {
+        self.stats.snapshot()
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|m| m.lock().expect("sharded slice cache poisoned").used_bytes())
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|m| m.lock().expect("sharded slice cache poisoned").len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident keys, MRU→LRU within each shard, shards concatenated in
+    /// index order (at `shards = 1` this IS the global recency order).
+    pub fn keys_mru(&self) -> Vec<SliceKey> {
+        let mut out = Vec::new();
+        for m in &self.shards {
+            out.extend(m.lock().expect("sharded slice cache poisoned").keys_mru());
+        }
+        out
+    }
+
+    /// Per-shard consistency plus the global budget invariants
+    /// (`Σ shard.capacity == capacity`, `Σ used <= capacity`).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut cap_sum = 0u64;
+        let mut used_sum = 0u64;
+        for (i, m) in self.shards.iter().enumerate() {
+            let g = m.lock().expect("sharded slice cache poisoned");
+            g.check_invariants().map_err(|e| format!("shard {i}: {e}"))?;
+            cap_sum += g.capacity();
+            used_sum += g.used_bytes();
+        }
+        if cap_sum != self.capacity {
+            return Err(format!("shard budgets {} != capacity {}", cap_sum, self.capacity));
+        }
+        if used_sum > self.capacity {
+            return Err(format!("over capacity: {} > {}", used_sum, self.capacity));
+        }
+        Ok(())
+    }
+
+    // -- transactions ------------------------------------------------------
+
+    /// Lock the given shards (deduped, ascending — the global lock order
+    /// that makes concurrent transactions deadlock-free) and return the
+    /// `CacheOps` view for one batched token-layer's worth of cache work.
+    pub fn txn<I: IntoIterator<Item = usize>>(&self, shards: I) -> ShardTxn<'_> {
+        let mut ids: Vec<usize> = shards.into_iter().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let mut guards = Vec::with_capacity(ids.len());
+        let mut entry_stats = Vec::with_capacity(ids.len());
+        for i in ids {
+            let g = self.shards[i].lock().expect("sharded slice cache poisoned");
+            entry_stats.push(g.stats);
+            guards.push((i, g));
+        }
+        ShardTxn { owner: self, guards, entry_stats }
+    }
+
+    /// A transaction over every shard (substitution scans may touch any
+    /// expert, so constrained decode steps use this).
+    pub fn txn_all(&self) -> ShardTxn<'_> {
+        self.txn(0..self.shards.len())
+    }
+
+    /// MSB-plane residency of experts `0..n_experts` in `layer`, read
+    /// with one short lock per shard (the selection-phase snapshot; in
+    /// the single-cache walk all selection peeks happen before any
+    /// mutation of the token-layer, so a snapshot is equivalent).
+    pub fn residency_mask(&self, layer: usize, n_experts: usize) -> Vec<bool> {
+        let mut mask = vec![false; n_experts];
+        for (s, m) in self.shards.iter().enumerate() {
+            let g = m.lock().expect("sharded slice cache poisoned");
+            for e in (0..n_experts).filter(|&e| self.shard_of_expert(e) == s) {
+                mask[e] = g.peek(SliceKey::msb(layer, e));
+            }
+        }
+        mask
+    }
+
+    // -- slack rebalancing -------------------------------------------------
+
+    /// Count one completed transaction; every [`REBALANCE_EVERY`]-th
+    /// triggers a slack-rebalance pass. Call with NO shard locks held.
+    pub fn maybe_rebalance(&self) {
+        if self.shards.len() == 1 {
+            return;
+        }
+        if (self.txn_count.fetch_add(1, Ordering::Relaxed) + 1) % REBALANCE_EVERY == 0 {
+            self.rebalance();
+        }
+    }
+
+    /// Redistribute FREE bytes toward shards with pressure (evictions +
+    /// `TooLarge` denials) since the last pass, then guarantee every
+    /// PRESSURED shard at least a floor of `capacity / (4 × shards)`.
+    /// The proportional phase never evicts (no shard shrinks below its
+    /// resident set); funding a starved shard's floor prefers donors'
+    /// free budget and only as a last resort shrinks a donor into its
+    /// residents — without that escape hatch a shard whose budget once
+    /// collapsed could never recover on a full cache, permanently
+    /// flash-streaming its experts. `Σ capacity` is preserved exactly.
+    /// A no-op at `shards = 1`.
+    pub fn rebalance(&self) {
+        let n = self.shards.len();
+        if n == 1 {
+            return;
+        }
+        let mut rb = self.rebal.lock().expect("rebalance state poisoned");
+        let mut guards: Vec<MutexGuard<'_, SliceCache>> = self
+            .shards
+            .iter()
+            .map(|m| m.lock().expect("sharded slice cache poisoned"))
+            .collect();
+        let entry_stats: Vec<CacheStats> = guards.iter().map(|g| g.stats).collect();
+        let used: Vec<u64> = guards.iter().map(|g| g.used_bytes()).collect();
+        let evictions: Vec<u64> = guards.iter().map(|g| g.stats.evictions).collect();
+        let denials: Vec<u64> = self
+            .too_large
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .collect();
+        let pressure: Vec<u64> = (0..n)
+            .map(|i| {
+                evictions[i].saturating_sub(rb.last_evictions[i])
+                    + denials[i].saturating_sub(rb.last_denials[i])
+            })
+            .collect();
+        rb.last_evictions = evictions;
+        rb.last_denials = denials;
+
+        // 1. proportional slack distribution (eviction-free)
+        let total_used: u64 = used.iter().sum();
+        let slack = self.capacity.saturating_sub(total_used);
+        let weight_sum: u128 = pressure.iter().map(|&p| p as u128 + 1).sum();
+        let mut caps = vec![0u64; n];
+        let mut assigned = 0u64;
+        for i in 0..n {
+            let share = if i + 1 == n {
+                slack - assigned
+            } else {
+                ((slack as u128 * (pressure[i] as u128 + 1)) / weight_sum) as u64
+            };
+            assigned += share;
+            caps[i] = used[i] + share;
+        }
+
+        // 2. de-starve: raise pressured shards to the floor, funded from
+        // the richest donors (free budget first, residents last). A
+        // donor never shrinks below its PINNED bytes — those cannot
+        // evict, and forcing them under budget would break `Σ capacity`
+        let floor = self.capacity / (4 * n as u64);
+        let pinned: Vec<u64> = guards.iter().map(|g| g.pinned_bytes()).collect();
+        let donor_floor = |j: usize| floor.max(pinned[j]);
+        for i in 0..n {
+            while caps[i] < floor && pressure[i] > 0 {
+                // donor with the most budget above its floor, preferring
+                // free (non-resident) budget so funding rarely evicts
+                let donor = (0..n)
+                    .filter(|&j| j != i && caps[j] > donor_floor(j))
+                    .max_by_key(|&j| (caps[j].saturating_sub(used[j]), caps[j]));
+                let Some(j) = donor else { break };
+                let need = floor - caps[i];
+                let avail = caps[j] - donor_floor(j);
+                let free_budget = caps[j].saturating_sub(used[j]).min(avail);
+                // whole chunks: the donor's free budget, or (only when it
+                // has none) a resident-evicting slice down to its floor
+                let take = need.min(if free_budget > 0 { free_budget } else { avail });
+                caps[j] -= take;
+                caps[i] += take;
+            }
+        }
+
+        for i in 0..n {
+            guards[i].set_capacity(caps[i]);
+            // last-resort donor evictions must reach the atomic aggregate
+            self.stats.fold_delta(&entry_stats[i], &guards[i].stats);
+        }
+    }
+
+    /// Install a complete set of shard budgets atomically with respect
+    /// to other budget writers (rebalance, concurrent PCW reshapes):
+    /// serialized on the rebalance mutex so interleaved per-shard writes
+    /// can never mix two plans into budgets that no longer sum to the
+    /// global capacity. `Σ caps` must equal `capacity`.
+    pub(crate) fn reshape_budgets(&self, caps: &[u64]) {
+        debug_assert_eq!(caps.len(), self.shards.len());
+        debug_assert_eq!(caps.iter().sum::<u64>(), self.capacity);
+        let _rb = self.rebal.lock().expect("rebalance state poisoned");
+        self.for_each_shard(|i, c| c.set_capacity(caps[i]));
+    }
+}
+
+/// A set of locked shards: the [`CacheOps`] view one batched token-layer
+/// transaction runs against. Stats deltas fold into the owner's atomic
+/// aggregate when the transaction drops.
+pub struct ShardTxn<'a> {
+    owner: &'a ShardedSliceCache,
+    guards: Vec<(usize, MutexGuard<'a, SliceCache>)>,
+    entry_stats: Vec<CacheStats>,
+}
+
+impl ShardTxn<'_> {
+    fn guard_pos(&self, key: SliceKey) -> usize {
+        let shard = self.owner.shard_of(key);
+        self.guards
+            .iter()
+            .position(|(i, _)| *i == shard)
+            .unwrap_or_else(|| panic!("shard {shard} not locked in this transaction"))
+    }
+
+    fn shard(&self, key: SliceKey) -> &SliceCache {
+        &self.guards[self.guard_pos(key)].1
+    }
+
+    fn shard_mut(&mut self, key: SliceKey) -> &mut SliceCache {
+        let p = self.guard_pos(key);
+        &mut self.guards[p].1
+    }
+}
+
+impl CacheOps for ShardTxn<'_> {
+    fn peek(&self, key: SliceKey) -> bool {
+        self.shard(key).peek(key)
+    }
+
+    fn lookup(&mut self, key: SliceKey) -> bool {
+        self.shard_mut(key).lookup(key)
+    }
+
+    fn ensure_into(
+        &mut self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> EnsureOutcome {
+        let out = self.shard_mut(key).ensure_into(key, bytes, evicted);
+        if out == EnsureOutcome::TooLarge {
+            self.owner.note_too_large(self.owner.shard_of(key));
+        }
+        out
+    }
+}
+
+impl Drop for ShardTxn<'_> {
+    fn drop(&mut self) {
+        for ((_, g), before) in self.guards.iter().zip(&self.entry_stats) {
+            self.owner.stats.fold_delta(before, &g.stats);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::descriptor::Plane;
+
+    fn k(l: usize, e: usize, msb: bool) -> SliceKey {
+        if msb {
+            SliceKey::msb(l, e)
+        } else {
+            SliceKey::lsb(l, e)
+        }
+    }
+
+    #[test]
+    fn budgets_split_exactly_and_keys_stripe_by_expert() {
+        let c = ShardedSliceCache::new(103, 4);
+        c.check_invariants().unwrap();
+        for e in 0..8 {
+            assert_eq!(c.shard_of_expert(e), e % 4);
+            // both planes co-locate
+            assert_eq!(c.shard_of(k(0, e, true)), c.shard_of(k(3, e, false)));
+        }
+    }
+
+    #[test]
+    fn single_shard_matches_slice_cache_ops() {
+        let mut reference = SliceCache::new(100);
+        let sharded = ShardedSliceCache::new(100, 1);
+        let keys = [k(0, 0, true), k(0, 1, false), k(1, 0, true), k(0, 2, true)];
+        for (i, &key) in keys.iter().enumerate().cycle().take(24) {
+            let bytes = 20 + (i as u64 % 3) * 10;
+            assert_eq!(reference.lookup(key), sharded.lookup(key), "op {i}");
+            assert_eq!(reference.ensure(key, bytes), sharded.ensure(key, bytes), "op {i}");
+        }
+        assert_eq!(reference.stats, sharded.stats());
+        assert_eq!(reference.keys_mru(), sharded.keys_mru());
+        assert_eq!(reference.used_bytes(), sharded.used_bytes());
+        sharded.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn txn_batches_ops_and_folds_stats_on_drop() {
+        let c = ShardedSliceCache::new(400, 4);
+        let mut scratch = Vec::new();
+        {
+            let mut txn = c.txn([0usize, 2, 0]); // dup deduped
+            assert!(!txn.lookup(k(0, 0, true)));
+            assert_eq!(
+                txn.ensure_into(k(0, 0, true), 40, &mut scratch),
+                EnsureOutcome::Inserted
+            );
+            assert!(!txn.lookup(k(0, 2, true)));
+            txn.ensure_into(k(0, 2, true), 40, &mut scratch);
+            // stats not folded until the txn drops
+            assert_eq!(c.stats(), CacheStats::default());
+        }
+        let s = c.stats();
+        assert_eq!(s.msb_misses, 2);
+        assert_eq!(s.insertions, 2);
+        assert!(c.contains(k(0, 0, true)) && c.contains(k(0, 2, true)));
+    }
+
+    #[test]
+    #[should_panic(expected = "not locked in this transaction")]
+    fn txn_rejects_unlocked_shard() {
+        let c = ShardedSliceCache::new(400, 4);
+        let mut txn = c.txn([0usize]);
+        txn.lookup(k(0, 1, true)); // expert 1 lives on shard 1
+    }
+
+    #[test]
+    fn rebalance_moves_slack_toward_pressure() {
+        let c = ShardedSliceCache::new(200, 2); // 100 bytes per shard
+        // churn shard 0 (even experts) until it evicts; shard 1 stays empty
+        for i in 0..12 {
+            c.ensure(k(0, 2 * (i % 6), true), 30);
+        }
+        assert!(c.stats().evictions > 0);
+        c.rebalance();
+        c.check_invariants().unwrap();
+        let mut caps = Vec::new();
+        c.for_each_shard(|_, s| caps.push(s.capacity()));
+        assert_eq!(caps.iter().sum::<u64>(), 200);
+        assert!(
+            caps[0] > caps[1],
+            "pressured shard should hold more budget: {caps:?}"
+        );
+        // second pass with no new pressure keeps budgets valid
+        c.rebalance();
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn too_large_denials_feed_rebalance_pressure() {
+        // a shard whose budget collapsed evicts nothing, so only the
+        // TooLarge denial counter can signal its demand back to the
+        // rebalancer — without it the shard would stay starved forever
+        let c = ShardedSliceCache::new(400, 2);
+        // shard 1 (odd experts): fill to its 200-byte budget, then churn
+        // so it accumulates eviction pressure
+        for i in 0..8 {
+            c.ensure(k(0, 2 * i + 1, true), 50);
+        }
+        assert!(c.stats().evictions > 0);
+        c.rebalance(); // slack flows to shard 1; shard 0 shrinks
+        let mut caps = Vec::new();
+        c.for_each_shard(|_, s| caps.push(s.capacity()));
+        assert!(caps[0] < 50, "shard 0 should have been shrunk: {caps:?}");
+
+        // shard 0 now wants a 40-byte entry it cannot fit -> denial
+        assert_eq!(c.ensure(k(0, 0, true), 40), Ensure::TooLarge);
+        c.rebalance();
+        let mut caps = Vec::new();
+        c.for_each_shard(|_, s| caps.push(s.capacity()));
+        assert!(caps[0] >= 40, "denial pressure should regrow shard 0: {caps:?}");
+        assert_eq!(caps.iter().sum::<u64>(), 400);
+        match c.ensure(k(0, 0, true), 40) {
+            Ensure::Inserted { .. } => {}
+            o => panic!("shard 0 still starved: {o:?}"),
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_free_rebalance_never_evicts() {
+        let c = ShardedSliceCache::new(300, 3);
+        for e in 0..9 {
+            c.ensure(k(0, e, e % 2 == 0), 25);
+        }
+        let before_len = c.len();
+        let before_ev = c.stats().evictions;
+        c.rebalance();
+        assert_eq!(c.len(), before_len);
+        assert_eq!(c.stats().evictions, before_ev);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn residency_mask_reports_msb_plane() {
+        let c = ShardedSliceCache::new(400, 4);
+        c.ensure(k(2, 1, true), 40);
+        c.ensure(k(2, 3, false), 40); // LSB must not count
+        let mask = c.residency_mask(2, 8);
+        assert!(mask[1]);
+        assert!(!mask[3]);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 1);
+    }
+
+    #[test]
+    fn heterogeneous_toggle_reaches_every_shard() {
+        let mut c = ShardedSliceCache::new(240, 2);
+        c.set_heterogeneous(false);
+        // homogeneous: a touched LSB is NOT class-evicted before MSBs
+        c.ensure(k(0, 0, false), 60);
+        c.ensure(k(0, 2, true), 60); // same shard 0
+        c.lookup(k(0, 0, false));
+        let out = c.ensure(k(0, 4, true), 60); // shard 0 full: evict LRU
+        match out {
+            Ensure::Inserted { evicted } => {
+                assert_eq!(evicted, vec![k(0, 2, true)]);
+            }
+            o => panic!("{o:?}"),
+        }
+        assert!(c.contains(k(0, 0, false)));
+    }
+
+    #[test]
+    fn plane_totals_conserved_under_churn() {
+        let c = ShardedSliceCache::new(500, 4);
+        let mut rng = crate::util::rng::Rng::new(0x5A4D);
+        let (mut msb_lookups, mut lsb_lookups) = (0u64, 0u64);
+        for _ in 0..500 {
+            let key = k(rng.below(4), rng.below(16), rng.bool(0.5));
+            match key.plane {
+                Plane::Msb => msb_lookups += 1,
+                Plane::Lsb => lsb_lookups += 1,
+            }
+            if !c.lookup(key) {
+                let _ = c.ensure(key, 10 + rng.below(40) as u64);
+            }
+            c.maybe_rebalance();
+        }
+        let s = c.stats();
+        assert_eq!(s.msb_hits + s.msb_misses, msb_lookups);
+        assert_eq!(s.lsb_hits + s.lsb_misses, lsb_lookups);
+        c.check_invariants().unwrap();
+    }
+}

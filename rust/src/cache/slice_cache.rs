@@ -66,6 +66,35 @@ pub enum Ensure {
     TooLarge,
 }
 
+/// Allocation-free outcome of [`CacheOps::ensure_into`]: evicted keys go
+/// to the caller-provided scratch buffer instead of a fresh `Vec`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnsureOutcome {
+    Hit,
+    Inserted,
+    TooLarge,
+}
+
+/// The cache-operation subset the per-(token, layer) access walk needs.
+///
+/// Implemented by the plain [`SliceCache`] (private lanes, the global
+/// mutex-guarded shared mode) and by `ShardTxn` (a set of locked shards
+/// of a `ShardedSliceCache`), so the routing walk exists exactly once
+/// and `shards = 1` is bit-exact with the single LRU by construction.
+pub trait CacheOps {
+    /// Probe without side effects (no stats, no reordering).
+    fn peek(&self, key: SliceKey) -> bool;
+    /// Probe, updating stats and recency. Returns true on hit.
+    fn lookup(&mut self, key: SliceKey) -> bool;
+    /// Make `key` resident; evicted keys are APPENDED to `evicted`.
+    fn ensure_into(
+        &mut self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> EnsureOutcome;
+}
+
 #[derive(Clone, Debug)]
 pub struct SliceCache {
     capacity: u64,
@@ -200,22 +229,42 @@ impl SliceCache {
     }
 
     /// Make `key` resident (after a miss was decided to be filled).
+    ///
+    /// Convenience wrapper over [`SliceCache::ensure_into`] that returns
+    /// the evicted keys in a fresh `Vec`; hot paths use `ensure_into`
+    /// with a reused scratch buffer instead (zero steady-state alloc).
     pub fn ensure(&mut self, key: SliceKey, bytes: u64) -> Ensure {
+        let mut evicted = Vec::new();
+        match self.ensure_into(key, bytes, &mut evicted) {
+            EnsureOutcome::Hit => Ensure::Hit,
+            EnsureOutcome::Inserted => Ensure::Inserted { evicted },
+            // evictions (if pinned entries blocked making room) already
+            // happened; the seed behavior — accept them, refuse the
+            // insert, report nothing — is preserved by dropping the list
+            EnsureOutcome::TooLarge => Ensure::TooLarge,
+        }
+    }
+
+    /// Allocation-free `ensure`: evicted keys are APPENDED to `evicted`
+    /// (a caller-owned scratch buffer that amortizes across calls).
+    pub fn ensure_into(
+        &mut self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> EnsureOutcome {
         if self.index.contains_key(&key) {
-            return Ensure::Hit;
+            return EnsureOutcome::Hit;
         }
         if bytes > self.capacity {
-            return Ensure::TooLarge;
+            return EnsureOutcome::TooLarge;
         }
-        let evicted = self.evict_until(self.capacity - bytes);
+        self.evict_until_into(self.capacity - bytes, evicted);
         if self.used + bytes > self.capacity {
             // pinned entries blocked eviction: cannot make room
-            for key in &evicted {
-                // (already removed; re-inserting would falsify LRU order —
-                // accept the evictions, refuse the insert)
-                let _ = key;
-            }
-            return Ensure::TooLarge;
+            // (already removed; re-inserting would falsify LRU order —
+            // accept the evictions, refuse the insert)
+            return EnsureOutcome::TooLarge;
         }
         let i = self.alloc(Entry {
             key,
@@ -229,7 +278,7 @@ impl SliceCache {
         self.index.insert(key, i);
         self.used += bytes;
         self.stats.insertions += 1;
-        Ensure::Inserted { evicted }
+        EnsureOutcome::Inserted
     }
 
     /// Evict entries (skipping pinned) until `used <= target`.
@@ -241,6 +290,12 @@ impl SliceCache {
     /// coverage) always win the capacity fight.
     pub fn evict_until(&mut self, target: u64) -> Vec<SliceKey> {
         let mut evicted = Vec::new();
+        self.evict_until_into(target, &mut evicted);
+        evicted
+    }
+
+    /// `evict_until` appending to a caller-owned scratch buffer.
+    pub fn evict_until_into(&mut self, target: u64, evicted: &mut Vec<SliceKey>) {
         if self.heterogeneous {
             let mut cursor = self.tail;
             while self.used > target && cursor != NIL {
@@ -262,7 +317,35 @@ impl SliceCache {
             }
             evicted.push(self.remove_idx(i));
         }
-        evicted
+    }
+
+    /// Resize the byte budget (shard rebalancing). Shrinking below the
+    /// resident set evicts down to the new capacity; pinned entries are
+    /// unevictable, so the effective capacity never drops below them
+    /// (`used <= capacity` stays invariant).
+    pub fn set_capacity(&mut self, capacity_bytes: u64) {
+        self.capacity = capacity_bytes;
+        if self.used > self.capacity {
+            let mut scratch = Vec::new();
+            self.evict_until_into(self.capacity, &mut scratch);
+            if self.used > self.capacity {
+                self.capacity = self.used; // pinned floor
+            }
+        }
+    }
+
+    /// Bytes held by pinned (unevictable) entries.
+    pub fn pinned_bytes(&self) -> u64 {
+        let mut total = 0;
+        let mut i = self.head;
+        while i != NIL {
+            let e = &self.entries[i as usize];
+            if e.pinned {
+                total += e.bytes;
+            }
+            i = e.next;
+        }
+        total
     }
 
     fn remove_idx(&mut self, i: u32) -> SliceKey {
@@ -397,6 +480,25 @@ impl SliceCache {
     }
 }
 
+impl CacheOps for SliceCache {
+    fn peek(&self, key: SliceKey) -> bool {
+        SliceCache::peek(self, key)
+    }
+
+    fn lookup(&mut self, key: SliceKey) -> bool {
+        SliceCache::lookup(self, key)
+    }
+
+    fn ensure_into(
+        &mut self,
+        key: SliceKey,
+        bytes: u64,
+        evicted: &mut Vec<SliceKey>,
+    ) -> EnsureOutcome {
+        SliceCache::ensure_into(self, key, bytes, evicted)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +628,50 @@ mod tests {
         // LRU victim is now a freq-0 entry
         let out = c.evict_until(c.used_bytes() - 1);
         assert!(out[0] != k(0, 3, true) && out[0] != k(0, 1, true));
+    }
+
+    #[test]
+    fn ensure_into_matches_ensure_and_reuses_scratch() {
+        let mut a = SliceCache::new(100);
+        let mut b = SliceCache::new(100);
+        let mut scratch = Vec::new();
+        for e in 0..4 {
+            let out_a = a.ensure(k(0, e, true), 40);
+            scratch.clear();
+            let out_b = b.ensure_into(k(0, e, true), 40, &mut scratch);
+            match (out_a, out_b) {
+                (Ensure::Hit, EnsureOutcome::Hit) | (Ensure::TooLarge, EnsureOutcome::TooLarge) => {}
+                (Ensure::Inserted { evicted }, EnsureOutcome::Inserted) => {
+                    assert_eq!(evicted, scratch);
+                }
+                (x, y) => panic!("diverged: {x:?} vs {y:?}"),
+            }
+        }
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.keys_mru(), b.keys_mru());
+        // scratch APPENDS: un-cleared buffer accumulates across calls
+        scratch.clear();
+        b.ensure_into(k(1, 0, true), 40, &mut scratch);
+        let first = scratch.len();
+        b.ensure_into(k(1, 1, true), 40, &mut scratch);
+        assert!(scratch.len() >= first);
+    }
+
+    #[test]
+    fn set_capacity_shrink_evicts_to_fit() {
+        let mut c = SliceCache::new(120);
+        for e in 0..3 {
+            c.ensure(k(0, e, true), 40);
+        }
+        c.set_capacity(50);
+        assert!(c.used_bytes() <= 50);
+        assert_eq!(c.capacity(), 50);
+        // the MRU entry survives
+        assert!(c.contains(k(0, 2, true)));
+        c.check_invariants().unwrap();
+        // growing never evicts
+        c.set_capacity(400);
+        assert_eq!(c.len(), 1);
     }
 
     #[test]

@@ -21,6 +21,7 @@ use std::collections::HashMap;
 use crate::model::descriptor::{Plane, SliceKey};
 use crate::util::rng::Rng;
 
+use super::sharded::ShardedSliceCache;
 use super::slice_cache::SliceCache;
 
 /// Per-slice access frequency accumulated over prefill (survives eviction —
@@ -182,88 +183,222 @@ pub fn apply_ex<S: Fn(SliceKey) -> u64>(
             cache.reorder_by(|k| -(rank[&k] as f64));
         }
         WarmupStrategy::Pcw => {
-            // The paper's PCW reshapes the cache *during* prefill so that
-            // at the transition it holds the prefill-hot slices of ALL
-            // layers, not the layer-streaming leftovers (deepest layers
-            // only). We reconstruct that end state from the accumulated
-            // hotness table:
-            //
-            // 1. LSB retention is single-head-guided: only ~1 expert per
-            //    layer (its hottest) keeps the LSB slice — "the ratio of
-            //    experts that retain their MSB [high-bit] form stays below
-            //    one per layer on average";
-            // 2. MSB slices are admitted in descending prefill hotness
-            //    until the capacity target, never-accessed slices are
-            //    discarded ("consistently low gating scores first");
-            // 3. the final recency order is hotness-aligned (reorder step).
+            let plan = pcw_plan(hot, target_bytes, &slice_bytes, single_head_lsb);
             let stats = cache.stats;
             cache.clear();
             cache.stats = stats;
-            // hottest LSB per layer
-            let mut best_lsb: HashMap<u16, (SliceKey, u32)> = HashMap::new();
-            let mut msbs: Vec<(SliceKey, f64)> = Vec::new();
-            for (key, count) in hot.iter() {
-                if count == 0 {
-                    continue;
-                }
-                match key.plane {
-                    Plane::Lsb => {
-                        // deterministic tie-break on the key: the hotness
-                        // table iterates in hash order, which must never
-                        // leak into the retained set
-                        let e = best_lsb.entry(key.layer).or_insert((key, count));
-                        if count > e.1 || (count == e.1 && key < e.0) {
-                            *e = (key, count);
-                        }
-                    }
-                    Plane::Msb => msbs.push((key, hot.score(key))),
-                }
-            }
-            msbs.sort_by(|a, b| {
-                b.1.partial_cmp(&a.1)
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then_with(|| a.0.cmp(&b.0))
-            });
-            // admit MSBs (paired with their LSB in uniform-high mode) until
-            // the target; hottest ends at MRU
-            let mut lsb_keep: Vec<SliceKey> = Vec::new();
-            let mut used: u64 = 0;
-            if single_head_lsb {
-                // hottest first, within the capacity target
-                let mut cands: Vec<(SliceKey, u32)> =
-                    best_lsb.values().copied().collect();
-                cands.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
-                for (k, _) in cands {
-                    let b = slice_bytes(k);
-                    if used + b <= target_bytes {
-                        used += b;
-                        lsb_keep.push(k);
-                    }
-                }
-            }
-            let mut admitted = Vec::new();
-            for (key, _) in msbs {
-                let lsb_key = SliceKey { plane: Plane::Lsb, ..key };
-                let b = slice_bytes(key)
-                    + if single_head_lsb { 0 } else { slice_bytes(lsb_key) };
-                if used + b > target_bytes {
-                    break;
-                }
-                used += b;
-                admitted.push(key);
-                if !single_head_lsb {
-                    admitted.push(lsb_key);
-                }
-            }
-            for &key in admitted.iter().rev() {
+            for &key in plan.admitted.iter().rev() {
                 let _ = cache.ensure(key, slice_bytes(key));
             }
-            for &key in &lsb_keep {
+            for &key in &plan.lsb_keep {
                 let _ = cache.ensure(key, slice_bytes(key));
             }
             // hotness-aligned recency; decode stats start clean
             cache.reorder_by(|k| hot.score(k));
             cache.reset_freq();
+        }
+    }
+}
+
+/// The PCW retention decision, independent of cache layout.
+struct PcwPlan {
+    /// MSB slices (plus their LSBs in uniform-high mode) in descending
+    /// admission priority — the hottest first.
+    admitted: Vec<SliceKey>,
+    /// Single-head-retained LSB slices (one hottest per layer).
+    lsb_keep: Vec<SliceKey>,
+}
+
+/// Compute which slices PCW retains at the prefill→decode transition.
+///
+/// The paper's PCW reshapes the cache *during* prefill so that at the
+/// transition it holds the prefill-hot slices of ALL layers, not the
+/// layer-streaming leftovers (deepest layers only). Reconstructed from
+/// the accumulated hotness table:
+///
+/// 1. LSB retention is single-head-guided: only ~1 expert per layer (its
+///    hottest) keeps the LSB slice — "the ratio of experts that retain
+///    their MSB [high-bit] form stays below one per layer on average";
+/// 2. MSB slices are admitted in descending prefill hotness until the
+///    capacity target, never-accessed slices are discarded
+///    ("consistently low gating scores first");
+/// 3. the final recency order is hotness-aligned (the caller's reorder).
+fn pcw_plan<S: Fn(SliceKey) -> u64>(
+    hot: &HotnessTable,
+    target_bytes: u64,
+    slice_bytes: &S,
+    single_head_lsb: bool,
+) -> PcwPlan {
+    // hottest LSB per layer
+    let mut best_lsb: HashMap<u16, (SliceKey, u32)> = HashMap::new();
+    let mut msbs: Vec<(SliceKey, f64)> = Vec::new();
+    for (key, count) in hot.iter() {
+        if count == 0 {
+            continue;
+        }
+        match key.plane {
+            Plane::Lsb => {
+                // deterministic tie-break on the key: the hotness
+                // table iterates in hash order, which must never
+                // leak into the retained set
+                let e = best_lsb.entry(key.layer).or_insert((key, count));
+                if count > e.1 || (count == e.1 && key < e.0) {
+                    *e = (key, count);
+                }
+            }
+            Plane::Msb => msbs.push((key, hot.score(key))),
+        }
+    }
+    msbs.sort_by(|a, b| {
+        b.1.partial_cmp(&a.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.0.cmp(&b.0))
+    });
+    // admit MSBs (paired with their LSB in uniform-high mode) until
+    // the target; hottest ends at MRU
+    let mut lsb_keep: Vec<SliceKey> = Vec::new();
+    let mut used: u64 = 0;
+    if single_head_lsb {
+        // hottest first, within the capacity target
+        let mut cands: Vec<(SliceKey, u32)> = best_lsb.values().copied().collect();
+        cands.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        for (k, _) in cands {
+            let b = slice_bytes(k);
+            if used + b <= target_bytes {
+                used += b;
+                lsb_keep.push(k);
+            }
+        }
+    }
+    let mut admitted = Vec::new();
+    for (key, _) in msbs {
+        let lsb_key = SliceKey { plane: Plane::Lsb, ..key };
+        let b = slice_bytes(key) + if single_head_lsb { 0 } else { slice_bytes(lsb_key) };
+        if used + b > target_bytes {
+            break;
+        }
+        used += b;
+        admitted.push(key);
+        if !single_head_lsb {
+            admitted.push(lsb_key);
+        }
+    }
+    PcwPlan { admitted, lsb_keep }
+}
+
+/// [`apply_ex`] for the lock-striped [`ShardedSliceCache`]: the strategy
+/// decision is made under a GLOBAL view (PCW retention is computed over
+/// the whole hotness table exactly as in the single-cache path), then
+/// installed shard by shard. Shard byte budgets are reshaped first so a
+/// skew-heavy plan (hot experts clustered on few shards) never loses
+/// retained slices to stale per-shard budgets.
+///
+/// At `shards = 1` every arm reduces to the identical operation sequence
+/// `apply_ex` performs on a single `SliceCache` — bit-exact, including
+/// the `Random` seed and eviction order.
+///
+/// Unlike the mutex-guarded mode the reshape is not atomic across
+/// shards: lanes decoding concurrently may interleave with it (the same
+/// cross-request clobbering the shared-cache mode already accepts).
+pub fn apply_sharded<S: Fn(SliceKey) -> u64>(
+    cache: &ShardedSliceCache,
+    strategy: WarmupStrategy,
+    hot: &HotnessTable,
+    target_bytes: u64,
+    n_layers: usize,
+    slice_bytes: S,
+    single_head_lsb: bool,
+) {
+    let n = cache.n_shards();
+    match strategy {
+        WarmupStrategy::Empty => cache.for_each_shard(|_, c| c.clear()),
+        WarmupStrategy::LastLayer { keep_layers } => {
+            let cutoff = n_layers.saturating_sub(keep_layers) as u16;
+            let mut used = vec![0u64; n];
+            cache.for_each_shard(|i, c| {
+                for key in c.keys_mru() {
+                    if key.layer < cutoff {
+                        c.remove(key);
+                    }
+                }
+                used[i] = c.used_bytes();
+            });
+            let total: u64 = used.iter().sum();
+            if total > target_bytes {
+                // shrink to the target proportionally to residency
+                cache.for_each_shard(|i, c| {
+                    let share =
+                        ((target_bytes as u128 * used[i] as u128) / total as u128) as u64;
+                    c.evict_until(share);
+                });
+            }
+        }
+        WarmupStrategy::Random { seed } => {
+            let mut used = vec![0u64; n];
+            cache.for_each_shard(|i, c| used[i] = c.used_bytes());
+            let total: u64 = used.iter().sum();
+            cache.for_each_shard(|i, c| {
+                let share = if total == 0 {
+                    target_bytes
+                } else {
+                    ((target_bytes as u128 * used[i] as u128) / total as u128) as u64
+                };
+                // shard-salted seed; shard 0 keeps `seed` so one shard is
+                // bit-exact with the single-cache Random reshape
+                let salted = seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                apply_ex(
+                    c,
+                    WarmupStrategy::Random { seed: salted },
+                    hot,
+                    share,
+                    n_layers,
+                    &slice_bytes,
+                    single_head_lsb,
+                );
+            });
+        }
+        WarmupStrategy::Pcw => {
+            // never retain more than the cache can physically hold
+            let target = target_bytes.min(cache.capacity());
+            let plan = pcw_plan(hot, target, &slice_bytes, single_head_lsb);
+            // re-carve shard budgets to fit the plan (skewed hot experts
+            // may cluster on few shards), remaining slack split evenly;
+            // budgets keep summing exactly to the global capacity
+            let mut need = vec![0u64; n];
+            for &key in plan.admitted.iter().chain(&plan.lsb_keep) {
+                need[cache.shard_of_expert(key.expert as usize)] += slice_bytes(key);
+            }
+            let needed: u64 = need.iter().sum();
+            let slack = cache.capacity().saturating_sub(needed);
+            let (base, rem) = (slack / n as u64, (slack % n as u64) as usize);
+            let caps: Vec<u64> = (0..n)
+                .map(|i| need[i] + base + u64::from(i < rem))
+                .collect();
+            // clear BEFORE shrinking budgets (a shrink against residents
+            // would count spurious evictions); budget writes serialize on
+            // the rebalance mutex so two concurrent reshapes can never
+            // mix plans into budgets that don't sum to the capacity
+            cache.for_each_shard(|_, c| c.clear());
+            cache.reshape_budgets(&caps);
+            cache.for_each_shard(|i, c| {
+                for &key in plan
+                    .admitted
+                    .iter()
+                    .rev()
+                    .filter(|k| cache.shard_of_expert(k.expert as usize) == i)
+                {
+                    let _ = c.ensure(key, slice_bytes(key));
+                }
+                for &key in plan
+                    .lsb_keep
+                    .iter()
+                    .filter(|k| cache.shard_of_expert(k.expert as usize) == i)
+                {
+                    let _ = c.ensure(key, slice_bytes(key));
+                }
+                c.reorder_by(|k| hot.score(k));
+                c.reset_freq();
+            });
         }
     }
 }
@@ -372,6 +507,68 @@ mod tests {
             assert!(before.contains(&k));
         }
         c.check_invariants().unwrap();
+    }
+
+    /// Mirror of `filled_cache` on a sharded cache (same capacity split
+    /// across `n` shards, same resident set and hotness).
+    fn filled_sharded(n: usize) -> (ShardedSliceCache, HotnessTable) {
+        let c = ShardedSliceCache::new(1000, n);
+        let (_, h) = filled_cache();
+        for l in 0..4 {
+            for e in 0..4 {
+                c.ensure(SliceKey::msb(l, e), MSB_B);
+                if e < 2 {
+                    c.ensure(SliceKey::lsb(l, e), LSB_B);
+                }
+            }
+        }
+        (c, h)
+    }
+
+    #[test]
+    fn sharded_pcw_single_shard_matches_apply_ex() {
+        let (mut single, h) = filled_cache();
+        apply(&mut single, WarmupStrategy::Pcw, &h, 1000, 4, sz);
+        let (sharded, h2) = filled_sharded(1);
+        apply_sharded(&sharded, WarmupStrategy::Pcw, &h2, 1000, 4, sz, true);
+        assert_eq!(single.keys_mru(), sharded.keys_mru());
+        assert_eq!(single.used_bytes(), sharded.used_bytes());
+        sharded.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_pcw_reshapes_budgets_for_skew() {
+        // every hot expert of filled_cache lives on shards {0,1,2,3}; give
+        // a tight target and verify the retained set matches the global
+        // plan (no slice lost to a stale per-shard budget) and budgets
+        // still sum to capacity
+        let (sharded, h) = filled_sharded(4);
+        let target = 3 * MSB_B + LSB_B;
+        apply_sharded(&sharded, WarmupStrategy::Pcw, &h, target, 4, sz, true);
+        assert!(sharded.used_bytes() <= target);
+        assert!(sharded.contains(SliceKey::msb(0, 0)));
+        assert!(sharded.contains(SliceKey::msb(1, 1)));
+        assert!(sharded.contains(SliceKey::lsb(0, 0)));
+        sharded.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_empty_and_last_layer_behave() {
+        let (sharded, h) = filled_sharded(4);
+        apply_sharded(&sharded, WarmupStrategy::LastLayer { keep_layers: 1 }, &h, 1000, 4, sz, true);
+        assert!(sharded.keys_mru().iter().all(|k| k.layer == 3));
+        assert!(!sharded.is_empty());
+        apply_sharded(&sharded, WarmupStrategy::Empty, &h, 1000, 4, sz, true);
+        assert!(sharded.is_empty());
+        sharded.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_random_fits_target() {
+        let (sharded, h) = filled_sharded(2);
+        apply_sharded(&sharded, WarmupStrategy::Random { seed: 7 }, &h, 300, 4, sz, true);
+        assert!(sharded.used_bytes() <= 300);
+        sharded.check_invariants().unwrap();
     }
 
     #[test]

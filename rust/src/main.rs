@@ -46,6 +46,8 @@ simulator commands (paper-scale geometry):
   sim                   one configurable episode (all knobs exposed)
   serve-sim             multi-lane scheduler over the cost-model backend
   serve-bench           open-loop workload sweep -> BENCH_workload.json
+  bench-diff            compare two BENCH_workload.json (CI gate: exits
+                        nonzero on >10% p99/goodput regression)
 
 engine commands (require `make artifacts` and a `--features pjrt` build):
   table1                AMAT PPL table on the trained tiny LM (measured)
@@ -181,6 +183,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "serve-sim" => serve_sim_cmd(rest),
         "serve-bench" => serve_bench_cmd(rest),
+        "bench-diff" => bench_diff_cmd(rest),
         #[cfg(feature = "pjrt")]
         "table1" | "generate" | "serve" | "calibrate" => engine_cmds::dispatch(cmd, rest),
         #[cfg(not(feature = "pjrt"))]
@@ -227,11 +230,42 @@ fn router_flag(precision: &str, policy: Policy, top_k: usize) -> Result<RouterCo
     })
 }
 
+/// Compare two `BENCH_workload.json` reports; nonzero exit on regression.
+fn bench_diff_cmd(rest: &[String]) -> Result<()> {
+    use slicemoe::workload::diff::{diff_workload_reports, render};
+
+    let a = Args::new()
+        .opt("threshold", "0.10", "tolerated relative worsening (0.10 = 10%)")
+        .parse(rest, "bench-diff")?;
+    let pos = a.positional();
+    let [baseline, candidate] = pos else {
+        bail!("usage: slicemoe bench-diff <baseline.json> <candidate.json> [--threshold 0.10]");
+    };
+    let threshold = a.f64("threshold")?;
+    let base = std::fs::read_to_string(baseline)
+        .map_err(|e| anyhow::anyhow!("read baseline {baseline}: {e}"))?;
+    let cand = std::fs::read_to_string(candidate)
+        .map_err(|e| anyhow::anyhow!("read candidate {candidate}: {e}"))?;
+    let diff = diff_workload_reports(&base, &cand, threshold)?;
+    print!("{}", render(&diff, threshold));
+    if diff.is_regression() {
+        bail!(
+            "{} regression(s), {} missing cell(s) vs {}",
+            diff.regressions.len(),
+            diff.missing.len(),
+            baseline
+        );
+    }
+    Ok(())
+}
+
 /// Multi-lane scheduler over the cost-model backend: paper-scale traffic
 /// through the unified serving core, no artifacts required.
 fn serve_sim_cmd(rest: &[String]) -> Result<()> {
     use slicemoe::serve::ServeConfig;
-    use slicemoe::server::{summarize, CostModelServerBackend, Request, ServerHandle};
+    use slicemoe::server::{
+        summarize, CostModelServerBackend, Request, ServerHandle, SharedCacheHandle,
+    };
     use slicemoe::sim::{generate_workload, TraceParams, WorkloadParams};
 
     let a = Args::new()
@@ -241,26 +275,41 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
         .opt("queue", "4", "admission queue depth")
         .opt("cache-gib", "2.4", "expert cache capacity in GiB")
         .opt("constraint", "0.05", "miss-rate constraint (or 'inf')")
+        .opt(
+            "cache-shards",
+            "0",
+            "shared-cache shards (0 = private unless --shared-cache; 1 = one global mutex; >1 = lock-striped). Any value >= 1 implies a shared cache",
+        )
         .switch("shared-cache", "all lanes contend on one shared cache")
         .parse(rest, "serve-sim")?;
     let desc = model_flag(&a)?;
     let lanes = a.usize("lanes")?.max(1);
     let n_requests = a.usize("requests")?;
     let queue = a.usize("queue")?.max(1);
-    let shared = a.bool("shared-cache");
+    let shards = a.usize("cache-shards")?;
+    let shared = a.bool("shared-cache") || shards >= 1;
 
     let mut cfg = ServeConfig::gsm8k_default(desc.clone());
     cfg.cache_bytes = exp::gib(a.f64("cache-gib")?);
     cfg.constraint = parse_constraint(&a.str("constraint"))?;
     cfg.router = RouterConfig::dbsc(desc.top_k);
-    let shared_cache = shared.then(|| CostModelServerBackend::shared_cache_for(&cfg));
+    let shared_cache = shared.then(|| {
+        if shards > 1 {
+            SharedCacheHandle::Sharded(CostModelServerBackend::sharded_cache_for(&cfg, shards))
+        } else {
+            SharedCacheHandle::Mutex(CostModelServerBackend::shared_cache_for(&cfg))
+        }
+    });
+    // report the CONSTRUCTED stripe count (sharded_cache_for may clamp)
+    let sharded_n = shared_cache.as_ref().and_then(|h| match h {
+        SharedCacheHandle::Sharded(c) => Some(c.n_shards()),
+        SharedCacheHandle::Mutex(_) => None,
+    });
 
     let handle = ServerHandle::start(lanes, queue, move |_lane| {
         let mut backend =
             CostModelServerBackend::new(cfg.clone(), TraceParams::default(), 0x5E4E);
-        if let Some(c) = &shared_cache {
-            backend = backend.with_shared_cache(std::sync::Arc::clone(c));
-        }
+        backend.shared_cache = shared_cache.clone();
         Ok(backend)
     });
 
@@ -284,11 +333,16 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     let s = summarize(&responses);
+    let cache_desc = if !shared {
+        "private caches".to_string()
+    } else if let Some(n) = sharded_n {
+        format!("shared cache, {n} shards")
+    } else {
+        "shared cache".to_string()
+    };
     println!(
-        "\n{} requests over {lanes} lanes ({}): {} decode tokens in {wall:.2}s",
-        s.requests,
-        if shared { "shared cache" } else { "private caches" },
-        s.decode_tokens
+        "\n{} requests over {lanes} lanes ({cache_desc}): {} decode tokens in {wall:.2}s",
+        s.requests, s.decode_tokens
     );
     println!("host per-token latency p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
         s.latency_p50_s * 1e3, s.latency_p90_s * 1e3, s.latency_p99_s * 1e3);
@@ -303,7 +357,7 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
 fn serve_bench_cmd(rest: &[String]) -> Result<()> {
     use slicemoe::serve::ServeConfig;
     use slicemoe::util::bench::Reporter;
-    use slicemoe::workload::{run_sweep, Scenario, SweepConfig};
+    use slicemoe::workload::{run_sweep, CacheMode, Scenario, SweepConfig};
 
     let a = Args::new()
         .opt("model", "tiny", "model geometry (tiny|deepseek|qwen)")
@@ -311,6 +365,11 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
         .opt("lanes", "1,4", "comma-separated lane counts to sweep")
         .opt("scenarios", "steady,bursty,diurnal,tenants", "presets to run")
         .opt("cache-mode", "both", "private|shared|both")
+        .opt(
+            "cache-shards",
+            "",
+            "comma-separated shard counts for the shared cells (empty = one global mutex)",
+        )
         .opt("cache-experts", "12", "cache capacity in high-bit experts")
         .opt("constraint", "inf", "miss-rate constraint (or 'inf')")
         .opt("queue", "8", "admission queue depth")
@@ -356,12 +415,32 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             Scenario::parse(s).ok_or_else(|| anyhow::anyhow!("unknown scenario '{s}'"))
         })
         .collect::<Result<Vec<_>>>()?;
-    cfg.shared_modes = match a.str("cache-mode").as_str() {
-        "private" => vec![false],
-        "shared" => vec![true],
-        "both" => vec![false, true],
-        m => bail!("bad --cache-mode '{m}' (private|shared|both)"),
-    };
+    // the grid defaults (smoke or full) already include sharded points;
+    // explicit --cache-mode / --cache-shards replace the whole mode list
+    if a.is_set("cache-mode") || a.is_set("cache-shards") {
+        let shard_counts: Vec<usize> = if a.str("cache-shards").is_empty() {
+            Vec::new()
+        } else {
+            a.str_list("cache-shards")
+                .iter()
+                .map(|s| {
+                    s.parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--cache-shards: {e}"))
+                })
+                .collect::<Result<Vec<_>>>()?
+        };
+        let shared: Vec<CacheMode> = if shard_counts.is_empty() {
+            vec![CacheMode::SharedMutex]
+        } else {
+            shard_counts.iter().map(|&n| CacheMode::Sharded(n.max(1))).collect()
+        };
+        cfg.cache_modes = match a.str("cache-mode").as_str() {
+            "private" => vec![CacheMode::Private],
+            "shared" => shared,
+            "both" => std::iter::once(CacheMode::Private).chain(shared).collect(),
+            m => bail!("bad --cache-mode '{m}' (private|shared|both)"),
+        };
+    }
     let dir = a.str("trace-dir");
     if !dir.is_empty() {
         cfg.trace_dir = Some(dir.into());

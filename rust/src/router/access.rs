@@ -21,11 +21,11 @@
 //!       └─ denied ─► degrade to Low (MSB-only compute, no drop)
 //! ```
 
-use crate::cache::{Ensure, HotnessTable, SliceCache};
+use crate::cache::{CacheOps, HotnessTable, ShardedSliceCache, SliceCache};
 use crate::model::descriptor::{ModelDesc, SliceKey};
 use crate::quant::MatConfig;
 
-use super::{dbsc, policies, MissBudget, Precision, RouterConfig};
+use super::{dbsc, policies, MissBudget, Policy, Precision, RouterConfig};
 
 /// One expert execution the engine must perform.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -65,6 +65,55 @@ pub struct AccessOutcome {
     pub dropped_raw_mass: f64,
 }
 
+/// The selection-phase product: routed experts plus the routing-quality
+/// reference stats (everything decided BEFORE the cache walk mutates
+/// anything — in the single-cache path all residency peeks precede the
+/// first write of the token-layer, which is what lets the sharded path
+/// use a residency snapshot without changing behavior).
+#[derive(Clone, Debug)]
+pub struct RoutedLayer {
+    pub routed: Vec<super::Routed>,
+    pub ideal_mass: f64,
+    pub n_critical: usize,
+}
+
+/// The policy actually applied this step: Cache-Prior boosting engages
+/// WITH the constraint; while the budget is inactive (prefill / decode
+/// grace window) fetches are free, so biasing selection toward the cache
+/// would cost accuracy for nothing.
+pub fn effective_policy(cfg: &RouterConfig, budget: &MissBudget) -> Policy {
+    match cfg.policy {
+        Policy::CachePrior { .. } if !budget.active() => Policy::TopK,
+        p => p,
+    }
+}
+
+/// Selection + precision split for one (token, layer): pure given the
+/// residency view `cached(e)` (MSB-plane residency of expert `e`).
+pub fn route_layer<F: Fn(usize) -> bool>(
+    cfg: &RouterConfig,
+    probs: &[f64],
+    budget: &MissBudget,
+    cached: F,
+) -> RoutedLayer {
+    // routing-quality reference: the unconstrained top-k mass
+    let mut sorted: Vec<f64> = probs.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let ideal_mass = sorted.iter().take(cfg.top_k).sum();
+
+    // 1. selection (policy sees MSB residency = "is this expert cached")
+    let policy = effective_policy(cfg, budget);
+    let mut routed = policies::select_experts(policy, probs, cfg.top_k, cached);
+
+    // 2. precision split
+    let mut n_critical = 0;
+    match cfg.dbsc {
+        Some(d) => n_critical = dbsc::split_precision(&mut routed, d),
+        None => dbsc::uniform_precision(&mut routed, cfg.uniform_precision),
+    }
+    RoutedLayer { routed, ideal_mass, n_critical }
+}
+
 /// Route one token through one layer's expert cache.
 #[allow(clippy::too_many_arguments)]
 pub fn access_layer(
@@ -77,37 +126,99 @@ pub fn access_layer(
     budget: &mut MissBudget,
     hot: Option<&mut HotnessTable>,
 ) -> AccessOutcome {
-    let mut out = AccessOutcome::default();
+    let mut scratch = Vec::new();
+    access_layer_scratch(cfg, probs, layer, desc, mat, cache, budget, hot, &mut scratch)
+}
+
+/// [`access_layer`] with a caller-owned eviction scratch buffer (reused
+/// across token-layers — zero steady-state allocation on the fill path).
+#[allow(clippy::too_many_arguments)]
+pub fn access_layer_scratch(
+    cfg: &RouterConfig,
+    probs: &[f64],
+    layer: usize,
+    desc: &ModelDesc,
+    mat: MatConfig,
+    cache: &mut SliceCache,
+    budget: &mut MissBudget,
+    hot: Option<&mut HotnessTable>,
+    evict_scratch: &mut Vec<SliceKey>,
+) -> AccessOutcome {
+    let route = route_layer(cfg, probs, budget, |e| cache.peek(SliceKey::msb(layer, e)));
+    walk_layer(cfg, route, probs, layer, desc, mat, cache, budget, hot, evict_scratch)
+}
+
+/// [`access_layer`] against a lock-striped [`ShardedSliceCache`]: the
+/// batched token-layer transaction. Residency for selection is a one-
+/// lock-per-shard snapshot (taken only when the effective policy reads
+/// it); the walk then locks each shard owning a routed expert exactly
+/// once and applies that shard's hits/fills/evictions in one critical
+/// section. When the miss budget can deny (active constraint), every
+/// shard is locked instead, because the Cache-Prior salvage scan may
+/// touch any expert in the layer.
+#[allow(clippy::too_many_arguments)]
+pub fn access_layer_sharded(
+    cfg: &RouterConfig,
+    probs: &[f64],
+    layer: usize,
+    desc: &ModelDesc,
+    mat: MatConfig,
+    cache: &ShardedSliceCache,
+    budget: &mut MissBudget,
+    hot: Option<&mut HotnessTable>,
+    evict_scratch: &mut Vec<SliceKey>,
+) -> AccessOutcome {
+    let mask = match effective_policy(cfg, budget) {
+        Policy::TopK => None,
+        _ => Some(cache.residency_mask(layer, probs.len())),
+    };
+    let route = route_layer(cfg, probs, budget, |e| {
+        mask.as_ref().is_some_and(|m| m[e])
+    });
+    let out = {
+        let mut txn = if budget.active() {
+            cache.txn_all()
+        } else {
+            cache.txn(route.routed.iter().map(|r| cache.shard_of_expert(r.expert)))
+        };
+        walk_layer(cfg, route, probs, layer, desc, mat, &mut txn, budget, hot, evict_scratch)
+    };
+    cache.maybe_rebalance();
+    out
+}
+
+/// The per-expert cache walk for one (token, layer): budget admission,
+/// miss fills, Cache-Prior salvage, LSB precision resolution. Generic
+/// over [`CacheOps`] so the single LRU and a sharded transaction run the
+/// IDENTICAL op sequence (`shards = 1` bit-exactness is structural).
+#[allow(clippy::too_many_arguments)]
+pub fn walk_layer<C: CacheOps>(
+    cfg: &RouterConfig,
+    route: RoutedLayer,
+    probs: &[f64],
+    layer: usize,
+    desc: &ModelDesc,
+    mat: MatConfig,
+    cache: &mut C,
+    budget: &mut MissBudget,
+    hot: Option<&mut HotnessTable>,
+    evict_scratch: &mut Vec<SliceKey>,
+) -> AccessOutcome {
+    let mut out = AccessOutcome {
+        ideal_mass: route.ideal_mass,
+        n_critical: route.n_critical,
+        ..Default::default()
+    };
     let msb_bytes = desc.msb_slice_bytes(mat);
     let lsb_bytes = desc.lsb_slice_bytes(mat);
-
-    // routing-quality reference: the unconstrained top-k mass
-    let mut sorted: Vec<f64> = probs.to_vec();
-    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
-    out.ideal_mass = sorted.iter().take(cfg.top_k).sum();
-
-    // 1. selection (policy sees MSB residency = "is this expert cached").
-    // Cache-aware boosting engages WITH the constraint: while the budget is
-    // inactive (prefill / decode grace window) fetches are free, so biasing
-    // selection toward the cache would cost accuracy for nothing.
-    let policy = match cfg.policy {
-        super::Policy::CachePrior { .. } if !budget.active() => super::Policy::TopK,
-        p => p,
-    };
-    let mut routed = policies::select_experts(policy, probs, cfg.top_k, |e| {
-        cache.peek(SliceKey::msb(layer, e))
-    });
-
-    // 2. precision split
-    match cfg.dbsc {
-        Some(d) => out.n_critical = dbsc::split_precision(&mut routed, d),
-        None => dbsc::uniform_precision(&mut routed, cfg.uniform_precision),
-    }
+    // evictions are not consumed by the serving path today; the buffer
+    // exists so the fill path allocates nothing in the steady state
+    evict_scratch.clear();
 
     let mut hot = hot;
 
     // 3. per-expert cache walk
-    for r in routed {
+    for r in route.routed {
         budget.on_access();
         let msb_key = SliceKey::msb(layer, r.expert);
         if let Some(h) = hot.as_deref_mut() {
@@ -121,13 +232,9 @@ pub fn access_layer(
             if budget.try_fetch(msb_bytes) {
                 out.flash_bytes += msb_bytes;
                 out.flash_fetches += 1;
-                match cache.ensure(msb_key, msb_bytes) {
-                    Ensure::TooLarge => {
-                        // pathological capacity; execute streaming from flash
-                        // (already charged), do not cache
-                    }
-                    _ => {}
-                }
+                // TooLarge = pathological capacity; execute streaming from
+                // flash (already charged), do not cache
+                let _ = cache.ensure_into(msb_key, msb_bytes, evict_scratch);
             } else {
                 // salvage: best cached expert in this layer not yet selected
                 let mut best: Option<(usize, f64)> = None;
@@ -178,7 +285,7 @@ pub fn access_layer(
                 if admitted {
                     out.flash_bytes += lsb_bytes;
                     out.flash_fetches += 1;
-                    let _ = cache.ensure(lsb_key, lsb_bytes);
+                    let _ = cache.ensure_into(lsb_key, lsb_bytes, evict_scratch);
                 } else if precision == Precision::High {
                     precision = Precision::Low;
                     out.n_degraded += 1;
@@ -282,6 +389,79 @@ mod tests {
         assert_eq!(out.n_dropped, 0);
         assert_eq!(out.n_degraded, 1); // the critical expert degraded
         assert!(out.execs.iter().all(|e| e.precision == Precision::Low));
+    }
+
+    /// Pseudo-random softmax-ish prob vectors for equivalence sweeps.
+    fn prob_stream(seed: u64, n_vecs: usize, e_n: usize) -> Vec<Vec<f64>> {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (0..n_vecs)
+            .map(|_| {
+                let mut p: Vec<f64> = (0..e_n).map(|_| rng.f64().max(1e-6)).collect();
+                let sum: f64 = p.iter().sum();
+                p.iter_mut().for_each(|x| *x /= sum);
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_single_shard_is_bit_exact_with_single_cache() {
+        // constrained budget past warmup: exercises miss denial, salvage
+        // substitution, LSB degradation — the full walk — through the
+        // txn-all path, and must match the single LRU exactly
+        let (desc, mat, mut cache, _) = setup(4);
+        let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+        let sharded = crate::cache::ShardedSliceCache::new(cache.capacity(), 1);
+        let mut budget_a = MissBudget::new(0.3, unit);
+        let mut budget_b = MissBudget::new(0.3, unit);
+        let cfg = RouterConfig::dbsc(2);
+        let mut scratch_a = Vec::new();
+        let mut scratch_b = Vec::new();
+        for (i, probs) in prob_stream(0xACE5, 120, 8).iter().enumerate() {
+            budget_a.tick();
+            budget_b.tick();
+            let layer = i % 4;
+            let a = access_layer_scratch(&cfg, probs, layer, &desc, mat, &mut cache,
+                                         &mut budget_a, None, &mut scratch_a);
+            let b = access_layer_sharded(&cfg, probs, layer, &desc, mat, &sharded,
+                                         &mut budget_b, None, &mut scratch_b);
+            assert_eq!(a.execs, b.execs, "step {i}");
+            assert_eq!(a.flash_bytes, b.flash_bytes, "step {i}");
+            assert_eq!(a.flash_fetches, b.flash_fetches, "step {i}");
+            assert_eq!(a.dram_bytes, b.dram_bytes, "step {i}");
+            assert_eq!(
+                (a.n_dropped, a.n_substituted, a.n_degraded, a.n_critical),
+                (b.n_dropped, b.n_substituted, b.n_degraded, b.n_critical),
+                "step {i}"
+            );
+            assert_eq!(scratch_a, scratch_b, "step {i}");
+        }
+        assert_eq!(cache.stats, sharded.stats());
+        assert_eq!(cache.keys_mru(), sharded.keys_mru());
+        sharded.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_multi_shard_conserves_routed_work() {
+        let (desc, mat, _, _) = setup(4);
+        let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+        let sharded = crate::cache::ShardedSliceCache::new(4 * unit, 4);
+        let mut budget = MissBudget::new(0.3, unit);
+        let cfg = RouterConfig::dbsc(2);
+        let mut scratch = Vec::new();
+        let mut total = 0usize;
+        for (i, probs) in prob_stream(0xBEE, 80, 8).iter().enumerate() {
+            budget.tick();
+            let out = access_layer_sharded(&cfg, probs, i % 4, &desc, mat, &sharded,
+                                           &mut budget, None, &mut scratch);
+            // every routed expert executes or drops
+            assert_eq!(out.execs.len() + out.n_dropped, cfg.top_k, "step {i}");
+            total += out.execs.len();
+        }
+        assert!(total > 0);
+        sharded.check_invariants().unwrap();
+        let s = sharded.stats();
+        assert!(s.msb_hits + s.msb_misses > 0);
     }
 
     #[test]

@@ -21,7 +21,10 @@ pub mod constraint;
 pub mod dbsc;
 pub mod policies;
 
-pub use access::{access_layer, AccessOutcome, ExpertExec};
+pub use access::{
+    access_layer, access_layer_scratch, access_layer_sharded, effective_policy, route_layer,
+    walk_layer, AccessOutcome, ExpertExec, RoutedLayer,
+};
 pub use constraint::MissBudget;
 pub use dbsc::{split_precision, DbscConfig};
 pub use policies::{select_experts, Policy};

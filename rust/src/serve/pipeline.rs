@@ -14,20 +14,27 @@
 //!   backend executes the routed experts; damage (accuracy proxy), steady
 //!   -state miss statistics, and the ledger are updated.
 //!
-//! The cache is held through [`LaneCache`] so a serving lane can either
-//! own a private `SliceCache` (single-request episodes, exact parity with
-//! the original simulator) or contend on one shared, mutex-guarded cache
-//! with other lanes (the multi-lane scheduler's shared-cache mode).
+//! The cache is held through [`LaneCache`] so a serving lane can own a
+//! private `SliceCache` (single-request episodes, exact parity with the
+//! original simulator), contend on one shared mutex-guarded cache with
+//! other lanes (the contention baseline), or contend on the lock-striped
+//! `ShardedSliceCache` (per-shard locking, batched token-layer
+//! transactions — see `rust/src/serve/README.md`).
 
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::cache::{warmup::apply_ex, CacheStats, HotnessTable, SliceCache, WarmupStrategy};
+use crate::cache::{
+    warmup::{apply_ex, apply_sharded},
+    CacheOps, CacheStats, HotnessTable, ShardedSliceCache, SliceCache, WarmupStrategy,
+};
 use crate::memhier::{HwSpec, Ledger, Phase};
 use crate::model::descriptor::{ModelDesc, SliceKey};
 use crate::quant::MatConfig;
-use crate::router::{access_layer, MissBudget, Precision, RouterConfig};
+use crate::router::{
+    access_layer_scratch, access_layer_sharded, MissBudget, Precision, RouterConfig,
+};
 use crate::sim::accuracy::{AccuracyModel, DamageAccumulator};
 
 use super::backend::{ExecPlan, ExpertBackend};
@@ -106,27 +113,24 @@ impl ServeConfig {
     }
 }
 
-/// A lane's view of the slice cache: exclusively owned, or shared with
-/// other lanes behind a mutex (multi-request contention mode).
+/// A lane's view of the slice cache: exclusively owned, shared with
+/// other lanes behind one global mutex (the contention BASELINE), or
+/// shared through the lock-striped [`ShardedSliceCache`] (the concurrent
+/// fast path — per-shard locking, batched token-layer transactions).
 #[derive(Clone, Debug)]
 pub enum LaneCache {
     Private(SliceCache),
     Shared(Arc<Mutex<SliceCache>>),
+    Sharded(Arc<ShardedSliceCache>),
 }
 
 impl LaneCache {
-    /// Run `f` with exclusive access to the cache. Private lanes pay
-    /// nothing; shared lanes lock for the duration of `f` (one
-    /// token-layer's worth of cache work — the contention granularity).
-    pub fn with<R>(&mut self, f: impl FnOnce(&mut SliceCache) -> R) -> R {
-        match self {
-            LaneCache::Private(c) => f(c),
-            LaneCache::Shared(m) => f(&mut m.lock().expect("shared slice cache poisoned")),
-        }
-    }
-
     pub fn stats(&mut self) -> CacheStats {
-        self.with(|c| c.stats)
+        match self {
+            LaneCache::Private(c) => c.stats,
+            LaneCache::Shared(m) => m.lock().expect("shared slice cache poisoned").stats,
+            LaneCache::Sharded(s) => s.stats(),
+        }
     }
 }
 
@@ -171,6 +175,33 @@ fn ratio(hits: u64, misses: u64) -> f64 {
     }
 }
 
+/// Stream `experts`' MSB+LSB slices of `layer` through a cache view
+/// (the prefill fill: lookup, then fill on miss at full priority).
+/// Returns (flash_bytes, flash_fetches). Generic over [`CacheOps`] so
+/// the private, mutex-shared, and per-shard batched paths run the same
+/// op sequence.
+fn stream_layer_fill<C: CacheOps, I: IntoIterator<Item = usize>>(
+    cache: &mut C,
+    layer: usize,
+    experts: I,
+    msb_b: u64,
+    lsb_b: u64,
+    scratch: &mut Vec<SliceKey>,
+) -> (u64, u64) {
+    let (mut flash, mut fetches) = (0u64, 0u64);
+    for e in experts {
+        for (key, bytes) in [(SliceKey::msb(layer, e), msb_b), (SliceKey::lsb(layer, e), lsb_b)]
+        {
+            if !cache.lookup(key) {
+                flash += bytes;
+                fetches += 1;
+                let _ = cache.ensure_into(key, bytes, scratch);
+            }
+        }
+    }
+    (flash, fetches)
+}
+
 /// One live request's pipeline state: cache + budget + hotness + ledger +
 /// damage, advanced by a backend.
 #[derive(Debug)]
@@ -190,6 +221,9 @@ pub struct ServeLoop {
     pub prefill_tokens: usize,
     msb_bytes: u64,
     lsb_bytes: u64,
+    /// Reused eviction scratch buffer: `ensure_into` appends evicted keys
+    /// here instead of allocating a fresh `Vec` per miss on the hot path.
+    evict_scratch: Vec<SliceKey>,
 }
 
 impl ServeLoop {
@@ -207,6 +241,13 @@ impl ServeLoop {
         Self::build(cfg, LaneCache::Shared(cache))
     }
 
+    /// A lane contending on a lock-striped sharded cache (the scheduler's
+    /// concurrent shared-cache fast path). Same contract as
+    /// [`ServeLoop::with_shared_cache`] for capacity/heterogeneity.
+    pub fn with_sharded_cache(cfg: ServeConfig, cache: Arc<ShardedSliceCache>) -> ServeLoop {
+        Self::build(cfg, LaneCache::Sharded(cache))
+    }
+
     fn build(cfg: ServeConfig, cache: LaneCache) -> ServeLoop {
         let msb_bytes = cfg.desc.msb_slice_bytes(cfg.mat);
         let lsb_bytes = cfg.desc.lsb_slice_bytes(cfg.mat);
@@ -221,6 +262,7 @@ impl ServeLoop {
             prefill_tokens: 0,
             msb_bytes,
             lsb_bytes,
+            evict_scratch: Vec::new(),
             cache,
             cfg,
         }
@@ -293,24 +335,37 @@ impl ServeLoop {
 
             // stream every expert (prefill = high precision): fill the
             // cache, then let the backend compute over the stream
-            let (flash, fetches, dram) = self.cache.with(|cache| {
-                let mut flash = 0u64;
-                let mut fetches = 0u64;
-                let mut dram = 0u64;
-                for e in 0..e_n {
-                    for (key, bytes) in
-                        [(SliceKey::msb(layer, e), msb_b), (SliceKey::lsb(layer, e), lsb_b)]
-                    {
-                        if !cache.lookup(key) {
-                            flash += bytes;
-                            fetches += 1;
-                            let _ = cache.ensure(key, bytes);
-                        }
-                    }
-                    dram += unit;
+            let scratch = &mut self.evict_scratch;
+            scratch.clear();
+            let (flash, fetches) = match &mut self.cache {
+                LaneCache::Private(c) => {
+                    stream_layer_fill(c, layer, 0..e_n, msb_b, lsb_b, scratch)
                 }
-                (flash, fetches, dram)
-            });
+                LaneCache::Shared(m) => {
+                    let mut g = m.lock().expect("shared slice cache poisoned");
+                    stream_layer_fill(&mut *g, layer, 0..e_n, msb_b, lsb_b, scratch)
+                }
+                LaneCache::Sharded(s) => {
+                    // one lock acquisition per shard per layer: each shard's
+                    // experts stream in one critical section
+                    let (mut flash, mut fetches) = (0u64, 0u64);
+                    for shard in 0..s.n_shards() {
+                        let mut txn = s.txn([shard]);
+                        let (f, n) = stream_layer_fill(
+                            &mut txn,
+                            layer,
+                            (0..e_n).filter(|&e| s.shard_of_expert(e) == shard),
+                            msb_b,
+                            lsb_b,
+                            scratch,
+                        );
+                        flash += f;
+                        fetches += n;
+                    }
+                    (flash, fetches)
+                }
+            };
+            let dram = e_n as u64 * unit;
             backend.run_experts(
                 Phase::Prefill,
                 layer,
@@ -338,17 +393,20 @@ impl ServeLoop {
         let (warmup, target, mat) = (self.cfg.warmup, self.cfg.cache_bytes, self.cfg.mat);
         let single_head = self.cfg.router.dbsc.is_some();
         let hot = &self.hot;
-        self.cache.with(|cache| {
-            apply_ex(
-                cache,
-                warmup,
-                hot,
-                target,
-                desc.n_layers,
-                |k| desc.slice_bytes(k.plane, mat),
-                single_head,
-            );
-        });
+        let slice_bytes = |k: SliceKey| desc.slice_bytes(k.plane, mat);
+        match &mut self.cache {
+            LaneCache::Private(c) => {
+                apply_ex(c, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
+            }
+            LaneCache::Shared(m) => {
+                let mut g = m.lock().expect("shared slice cache poisoned");
+                apply_ex(&mut g, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
+            }
+            LaneCache::Sharded(s) => {
+                // global-view reshape distributed across shards
+                apply_sharded(s, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
+            }
+        }
         Ok(())
     }
 
@@ -368,10 +426,23 @@ impl ServeLoop {
             let out = {
                 let budget = &mut self.budget;
                 let hot = &mut self.hot;
+                let scratch = &mut self.evict_scratch;
                 let router = &self.cfg.router;
-                self.cache.with(|cache| {
-                    access_layer(router, probs, layer, &desc, mat, cache, budget, Some(hot))
-                })
+                match &mut self.cache {
+                    LaneCache::Private(c) => access_layer_scratch(
+                        router, probs, layer, &desc, mat, c, budget, Some(hot), scratch,
+                    ),
+                    LaneCache::Shared(m) => {
+                        let mut g = m.lock().expect("shared slice cache poisoned");
+                        access_layer_scratch(
+                            router, probs, layer, &desc, mat, &mut g, budget, Some(hot),
+                            scratch,
+                        )
+                    }
+                    LaneCache::Sharded(s) => access_layer_sharded(
+                        router, probs, layer, &desc, mat, s, budget, Some(hot), scratch,
+                    ),
+                }
             };
 
             if let Some(model) = &self.cfg.accuracy {
@@ -492,6 +563,56 @@ mod tests {
         assert_eq!(private.miss_rate(), lane.miss_rate());
         assert_eq!(private.ledger.decode_energy_j(), lane.ledger.decode_energy_j());
         assert_eq!(private.counters.n_dropped, lane.counters.n_dropped);
+    }
+
+    #[test]
+    fn sharded_single_shard_lane_is_bit_exact_with_private() {
+        // the acceptance bar of the sharded refactor: shards = 1 must
+        // reproduce the paper path exactly through the WHOLE pipeline
+        // (prefill fill, PCW reshape, decode walk, stats)
+        let cfg = tiny_cfg();
+        let mut private = run(&cfg, 32, 24);
+
+        let mut sc = ShardedSliceCache::new(cfg.cache_bytes, 1);
+        sc.set_heterogeneous(cfg.heterogeneous_lsb);
+        let shared = Arc::new(sc);
+        let mut lane = ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&shared));
+        let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 32, cfg.seed);
+        lane.prefill(&mut be, 32).unwrap();
+        for _ in 0..24 {
+            lane.decode_token(&mut be).unwrap();
+        }
+        assert_eq!(private.miss_rate(), lane.miss_rate());
+        assert_eq!(private.ledger.decode_energy_j(), lane.ledger.decode_energy_j());
+        assert_eq!(private.ledger.prefill_energy_j(), lane.ledger.prefill_energy_j());
+        assert_eq!(private.counters.n_dropped, lane.counters.n_dropped);
+        assert_eq!(private.counters.n_high, lane.counters.n_high);
+        assert_eq!(private.counters.n_critical, lane.counters.n_critical);
+        assert_eq!(private.hit_rates(), lane.hit_rates());
+        assert_eq!(private.cache.stats(), shared.stats());
+        shared.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_multi_shard_lane_serves_consistently() {
+        let cfg = tiny_cfg();
+        let mut sc = ShardedSliceCache::new(cfg.cache_bytes, 4);
+        sc.set_heterogeneous(cfg.heterogeneous_lsb);
+        let mut lane = ServeLoop::with_sharded_cache(cfg.clone(), Arc::new(sc));
+        let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 32, cfg.seed);
+        lane.prefill(&mut be, 32).unwrap();
+        for _ in 0..24 {
+            lane.decode_token(&mut be).unwrap();
+        }
+        assert_eq!(lane.ledger.decode_steps, 24);
+        assert!((0.0..=1.5).contains(&lane.miss_rate()));
+        let total = lane.counters.n_high + lane.counters.n_low + lane.counters.n_dropped;
+        assert_eq!(total, (24 * cfg.desc.n_layers * cfg.desc.top_k) as u64);
+        if let LaneCache::Sharded(s) = &lane.cache {
+            s.check_invariants().unwrap();
+        } else {
+            panic!("lane lost its sharded cache");
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cache::SliceCache;
+use crate::cache::{ShardedSliceCache, SliceCache};
 use crate::serve::{CostModelBackend, ServeConfig, ServeLoop};
 use crate::sim::trace::{RoutingBias, TraceParams};
 
@@ -452,6 +452,16 @@ impl Drop for ServerHandle {
 
 // ----------------------------------------------- cost-model request lane
 
+/// A shared cache every lane of a fleet contends on: either ONE mutex
+/// around the whole `SliceCache` (the contention baseline the paper path
+/// pins) or the lock-striped [`ShardedSliceCache`] (per-shard locking,
+/// batched token-layer transactions).
+#[derive(Clone, Debug)]
+pub enum SharedCacheHandle {
+    Mutex(Arc<Mutex<SliceCache>>),
+    Sharded(Arc<ShardedSliceCache>),
+}
+
 /// A `Backend` serving requests through the unified pipeline with the
 /// cost-model execution backend — the simulator as a service. Lets the
 /// multi-lane scheduler (and its tests) run paper-scale traffic with no
@@ -462,7 +472,7 @@ pub struct CostModelServerBackend {
     pub trace: TraceParams,
     /// When set, every request contends on this cache; otherwise each
     /// request gets a private cache of `cfg.cache_bytes`.
-    pub shared_cache: Option<Arc<Mutex<SliceCache>>>,
+    pub shared_cache: Option<SharedCacheHandle>,
     pub seed: u64,
 }
 
@@ -472,15 +482,40 @@ impl CostModelServerBackend {
     }
 
     pub fn with_shared_cache(mut self, cache: Arc<Mutex<SliceCache>>) -> CostModelServerBackend {
-        self.shared_cache = Some(cache);
+        self.shared_cache = Some(SharedCacheHandle::Mutex(cache));
         self
     }
 
-    /// A shared cache sized/configured from a lane template.
+    pub fn with_sharded_cache(mut self, cache: Arc<ShardedSliceCache>) -> CostModelServerBackend {
+        self.shared_cache = Some(SharedCacheHandle::Sharded(cache));
+        self
+    }
+
+    /// A mutex-shared cache sized/configured from a lane template.
     pub fn shared_cache_for(cfg: &ServeConfig) -> Arc<Mutex<SliceCache>> {
         let mut cache = SliceCache::new(cfg.cache_bytes);
         cache.heterogeneous = cfg.heterogeneous_lsb;
         Arc::new(Mutex::new(cache))
+    }
+
+    /// A lock-striped shared cache sized/configured from a lane template.
+    ///
+    /// The stripe count is clamped so every shard's budget holds at least
+    /// one high-bit expert (MSB+LSB pair): a sub-unit shard budget would
+    /// thrash an expert's own planes against each other — measuring
+    /// capacity fragmentation, not concurrency.
+    pub fn sharded_cache_for(cfg: &ServeConfig, shards: usize) -> Arc<ShardedSliceCache> {
+        let max_shards = (cfg.cache_bytes / cfg.unit_bytes().max(1)).max(1) as usize;
+        let clamped = shards.clamp(1, max_shards);
+        if clamped != shards {
+            eprintln!(
+                "sharded cache: clamping {shards} shards to {clamped} so each \
+                 shard fits one high-bit expert"
+            );
+        }
+        let mut cache = ShardedSliceCache::new(cfg.cache_bytes, clamped);
+        cache.set_heterogeneous(cfg.heterogeneous_lsb);
+        Arc::new(cache)
     }
 }
 
@@ -496,7 +531,12 @@ impl Backend for CostModelServerBackend {
             None => CostModelBackend::new(&cfg.desc, self.trace, prefill_tokens, cfg.seed),
         };
         let mut lane = match &self.shared_cache {
-            Some(c) => ServeLoop::with_shared_cache(cfg, Arc::clone(c)),
+            Some(SharedCacheHandle::Mutex(c)) => {
+                ServeLoop::with_shared_cache(cfg, Arc::clone(c))
+            }
+            Some(SharedCacheHandle::Sharded(c)) => {
+                ServeLoop::with_sharded_cache(cfg, Arc::clone(c))
+            }
             None => ServeLoop::new(cfg),
         };
 
@@ -858,6 +898,74 @@ mod tests {
             summarize(&one).decode_energy_j,
             summarize(&four).decode_energy_j
         );
+    }
+
+    #[test]
+    fn sharded_single_shard_fleet_matches_mutex_fleet() {
+        // serialized traffic over shards=1 must be bit-identical with the
+        // global-mutex shared cache: same per-request miss rates, energy,
+        // and fleet aggregate (the sharded cache IS the paper path then)
+        let trace = TraceParams::default();
+        let run = |sharded: Option<usize>| {
+            let template = tiny_cfg(8);
+            let mutex_cache = CostModelServerBackend::shared_cache_for(&template);
+            let sharded_cache =
+                sharded.map(|n| CostModelServerBackend::sharded_cache_for(&template, n));
+            let h = ServerHandle::start(2, 2, move |_| {
+                let b = CostModelServerBackend::new(tiny_cfg(8), trace, 0x7A11);
+                Ok(match &sharded_cache {
+                    Some(c) => b.with_sharded_cache(Arc::clone(c)),
+                    None => b.with_shared_cache(Arc::clone(&mutex_cache)),
+                })
+            });
+            let mut responses = Vec::new();
+            for id in 0..6u64 {
+                h.submit(Request::new(id, vec![3; 32], 24)).unwrap();
+                responses.push(h.recv().unwrap());
+            }
+            h.shutdown();
+            responses.sort_by_key(|r| r.id);
+            responses
+        };
+        let mutex = run(None);
+        let sharded = run(Some(1));
+        for (a, b) in mutex.iter().zip(&sharded) {
+            assert_eq!(a.miss_rate, b.miss_rate, "req {}", a.id);
+            assert_eq!(a.decode_energy_j, b.decode_energy_j, "req {}", a.id);
+            assert_eq!(a.steady_flash_bytes, b.steady_flash_bytes, "req {}", a.id);
+        }
+        assert_eq!(combined_miss_rate(&mutex), combined_miss_rate(&sharded));
+    }
+
+    #[test]
+    fn sharded_fleet_serves_concurrent_requests_clean() {
+        let template = tiny_cfg(8);
+        let cache = CostModelServerBackend::sharded_cache_for(&template, 4);
+        let trace = TraceParams::default();
+        let check = Arc::clone(&cache);
+        let h = ServerHandle::start(3, 2, move |_| {
+            Ok(CostModelServerBackend::new(tiny_cfg(8), trace, 0x5EED)
+                .with_sharded_cache(Arc::clone(&cache)))
+        });
+        let n = 9u64;
+        for id in 0..n {
+            h.submit(Request::new(id, vec![7; 48], 48)).unwrap();
+        }
+        let mut responses = Vec::new();
+        for _ in 0..n {
+            responses.push(h.recv().unwrap());
+        }
+        h.shutdown();
+        assert_eq!(responses.len(), n as usize);
+        for r in &responses {
+            assert_eq!(r.decode_tokens, 48);
+            assert!((0.0..=1.5).contains(&r.miss_rate), "miss {}", r.miss_rate);
+            assert!(r.steady_norm_bytes > 0.0);
+        }
+        let fleet = combined_miss_rate(&responses);
+        assert!((0.0..=1.5).contains(&fleet), "fleet miss {fleet}");
+        // the concurrent churn left the cache internally consistent
+        check.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! `bench-diff`: compare two `BENCH_workload.json` reports and flag
+//! serving-level performance regressions (the ROADMAP's trend-tracking
+//! differ).
+//!
+//! Each report carries one metrics row per sweep cell
+//! (`scenario/lanesN/<cache-mode>`). A cell REGRESSES when, relative to
+//! the baseline,
+//!
+//! * `e2e_p99_s` grows by more than the threshold (latency tail), or
+//! * `goodput_tok_s` shrinks by more than the threshold, or
+//! * the cell disappeared from the candidate report entirely.
+//!
+//! Cells new in the candidate are reported but never fail the diff —
+//! growing the sweep must not require regenerating old baselines.
+//! Degenerate baselines (zero, missing, or non-finite values — the
+//! Reporter serializes non-finite as `null`) skip the relative check.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Higher-is-worse / lower-is-worse metrics checked per cell.
+const CHECKS: &[(&str, Direction)] = &[
+    ("e2e_p99_s", Direction::LowerIsBetter),
+    ("goodput_tok_s", Direction::HigherIsBetter),
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Direction {
+    LowerIsBetter,
+    HigherIsBetter,
+}
+
+/// One metric of one cell that moved past the threshold.
+#[derive(Clone, Debug)]
+pub struct Regression {
+    pub cell: String,
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub candidate: f64,
+    /// Signed relative change, positive = worse (e.g. 0.18 = 18% worse).
+    pub worsened_by: f64,
+}
+
+/// Outcome of one baseline-vs-candidate comparison.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    pub regressions: Vec<Regression>,
+    /// Baseline cells present in the candidate and compared.
+    pub compared: usize,
+    /// Baseline cells the candidate no longer reports (a regression).
+    pub missing: Vec<String>,
+    /// Candidate cells with no baseline counterpart (informational).
+    pub added: Vec<String>,
+}
+
+impl BenchDiff {
+    pub fn is_regression(&self) -> bool {
+        !self.regressions.is_empty() || !self.missing.is_empty()
+    }
+}
+
+fn metric_rows(report: &Json, which: &str) -> Result<Vec<(String, Json)>> {
+    let rows = report
+        .at(&["metrics"])
+        .map_err(|e| anyhow!("{which}: no metrics array: {e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("{which}: metrics is not an array"))?;
+    rows.iter()
+        .map(|row| {
+            let name = row
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("{which}: metrics row without a name"))?;
+            let values = row
+                .get("values")
+                .cloned()
+                .ok_or_else(|| anyhow!("{which}: row '{name}' has no values"))?;
+            Ok((name.to_string(), values))
+        })
+        .collect()
+}
+
+fn value(values: &Json, key: &str) -> Option<f64> {
+    values.get(key).and_then(|v| v.as_f64()).filter(|v| v.is_finite())
+}
+
+/// Compare two serialized `BENCH_workload.json` documents.
+/// `threshold` is the tolerated relative worsening (0.10 = 10%).
+pub fn diff_workload_reports(
+    baseline: &str,
+    candidate: &str,
+    threshold: f64,
+) -> Result<BenchDiff> {
+    let base = Json::parse(baseline).context("parse baseline report")?;
+    let cand = Json::parse(candidate).context("parse candidate report")?;
+    let base_rows = metric_rows(&base, "baseline")?;
+    let cand_rows = metric_rows(&cand, "candidate")?;
+
+    let mut diff = BenchDiff::default();
+    for (name, _) in &cand_rows {
+        if !base_rows.iter().any(|(n, _)| n == name) {
+            diff.added.push(name.clone());
+        }
+    }
+    for (name, base_vals) in &base_rows {
+        let Some((_, cand_vals)) = cand_rows.iter().find(|(n, _)| n == name) else {
+            diff.missing.push(name.clone());
+            continue;
+        };
+        diff.compared += 1;
+        for &(metric, dir) in CHECKS {
+            let (Some(b), Some(c)) = (value(base_vals, metric), value(cand_vals, metric))
+            else {
+                continue;
+            };
+            if b <= 0.0 {
+                continue; // degenerate baseline: no meaningful ratio
+            }
+            let worsened_by = match dir {
+                Direction::LowerIsBetter => (c - b) / b,
+                Direction::HigherIsBetter => (b - c) / b,
+            };
+            if worsened_by > threshold {
+                diff.regressions.push(Regression {
+                    cell: name.clone(),
+                    metric,
+                    baseline: b,
+                    candidate: c,
+                    worsened_by,
+                });
+            }
+        }
+    }
+    Ok(diff)
+}
+
+/// Human-readable report (one line per finding).
+pub fn render(diff: &BenchDiff, threshold: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "compared {} cell(s), threshold {:.0}%\n",
+        diff.compared,
+        threshold * 100.0
+    ));
+    for r in &diff.regressions {
+        out.push_str(&format!(
+            "REGRESSION {} {}: {:.6} -> {:.6} ({:+.1}%)\n",
+            r.cell,
+            r.metric,
+            r.baseline,
+            r.candidate,
+            r.worsened_by * 100.0
+        ));
+    }
+    for m in &diff.missing {
+        out.push_str(&format!("MISSING    {m}: cell absent from candidate\n"));
+    }
+    for a in &diff.added {
+        out.push_str(&format!("new        {a}: no baseline (not checked)\n"));
+    }
+    if !diff.is_regression() {
+        out.push_str("no regressions\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(cells: &[(&str, f64, f64)]) -> String {
+        let rows: Vec<String> = cells
+            .iter()
+            .map(|(name, p99, goodput)| {
+                format!(
+                    "{{\"name\":\"{name}\",\"values\":{{\"e2e_p99_s\":{p99},\"goodput_tok_s\":{goodput},\"miss_rate\":0.1}}}}"
+                )
+            })
+            .collect();
+        format!(
+            "{{\"title\":\"t\",\"results\":[],\"metrics\":[{}]}}",
+            rows.join(",")
+        )
+    }
+
+    #[test]
+    fn clean_diff_when_within_threshold() {
+        let base = report(&[("steady/lanes4/shared", 0.100, 500.0)]);
+        let cand = report(&[("steady/lanes4/shared", 0.105, 480.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn p99_growth_past_threshold_regresses() {
+        let base = report(&[("steady/lanes4/shared", 0.100, 500.0)]);
+        let cand = report(&[("steady/lanes4/shared", 0.150, 500.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "e2e_p99_s");
+        assert!((d.regressions[0].worsened_by - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn goodput_drop_past_threshold_regresses() {
+        let base = report(&[("bursty/lanes1/private", 0.2, 1000.0)]);
+        let cand = report(&[("bursty/lanes1/private", 0.2, 850.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert_eq!(d.regressions.len(), 1);
+        assert_eq!(d.regressions[0].metric, "goodput_tok_s");
+    }
+
+    #[test]
+    fn improvements_never_flag() {
+        let base = report(&[("steady/lanes4/shared", 0.100, 500.0)]);
+        let cand = report(&[("steady/lanes4/shared", 0.050, 900.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert!(!d.is_regression());
+    }
+
+    #[test]
+    fn missing_cell_fails_added_cell_does_not() {
+        let base = report(&[("steady/lanes4/shared", 0.1, 500.0)]);
+        let cand = report(&[("steady/lanes4/sharded16", 0.05, 900.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert!(d.is_regression());
+        assert_eq!(d.missing, vec!["steady/lanes4/shared".to_string()]);
+        assert_eq!(d.added, vec!["steady/lanes4/sharded16".to_string()]);
+        assert!(d.regressions.is_empty());
+    }
+
+    #[test]
+    fn degenerate_and_null_baselines_skip_relative_check() {
+        // zero baseline p99 and null (non-finite) goodput: nothing to
+        // compare against, so no spurious regression
+        let base = "{\"title\":\"t\",\"results\":[],\"metrics\":[{\"name\":\"a\",\"values\":{\"e2e_p99_s\":0,\"goodput_tok_s\":null}}]}";
+        let cand = report(&[("a", 99.0, 1.0)]);
+        let d = diff_workload_reports(base, cand.as_str(), 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+    }
+
+    #[test]
+    fn malformed_reports_error_out() {
+        assert!(diff_workload_reports("{}", "{}", 0.1).is_err());
+        assert!(diff_workload_reports("not json", "{}", 0.1).is_err());
+    }
+
+    #[test]
+    fn render_mentions_every_finding() {
+        let base = report(&[("x", 0.1, 100.0), ("gone", 0.1, 100.0)]);
+        let cand = report(&[("x", 0.5, 100.0)]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        let text = render(&d, 0.10);
+        assert!(text.contains("REGRESSION x e2e_p99_s"));
+        assert!(text.contains("MISSING    gone"));
+    }
+}

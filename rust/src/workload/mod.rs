@@ -23,6 +23,7 @@
 //! popularity reaches the gating statistics without the scheduler
 //! knowing anything about gating.
 
+pub mod diff;
 pub mod harness;
 pub mod scenario;
 pub mod sweep;
@@ -33,5 +34,6 @@ pub use scenario::{
     BurstyOnOff, DiurnalRamp, MultiTenantSessions, Scenario, SteadyPoisson, TraceRequest,
     WorkloadGen,
 };
-pub use sweep::{run_sweep, SweepCell, SweepConfig};
+pub use diff::{diff_workload_reports, BenchDiff, Regression};
+pub use sweep::{run_sweep, CacheMode, SweepCell, SweepConfig};
 pub use trace_file::TraceFile;

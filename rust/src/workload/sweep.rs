@@ -10,12 +10,11 @@
 //! combined miss rate, energy per token) across PRs.
 
 use std::path::PathBuf;
-use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::serve::ServeConfig;
-use crate::server::{request_seed, CostModelServerBackend, ServerHandle};
+use crate::server::{request_seed, CostModelServerBackend, ServerHandle, SharedCacheHandle};
 use crate::sim::trace::TraceParams;
 use crate::sim::workload::WorkloadParams;
 use crate::util::bench::Reporter;
@@ -23,6 +22,30 @@ use crate::util::bench::Reporter;
 use super::harness::{run_open_loop, OpenLoopOpts, WorkloadSummary};
 use super::scenario::Scenario;
 use super::trace_file::TraceFile;
+
+/// One cache topology of the sweep grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Fresh private cache per request (the paper's single-batch regime).
+    Private,
+    /// One shared cache behind a single global mutex (the contention
+    /// baseline the sharded cache is measured against).
+    SharedMutex,
+    /// One shared lock-striped cache with this many shards.
+    Sharded(usize),
+}
+
+impl CacheMode {
+    /// Stable cell-label fragment (`private`/`shared` keep their
+    /// pre-sharding names so `bench-diff` can track old baselines).
+    pub fn label(&self) -> String {
+        match self {
+            CacheMode::Private => "private".to_string(),
+            CacheMode::SharedMutex => "shared".to_string(),
+            CacheMode::Sharded(n) => format!("sharded{n}"),
+        }
+    }
+}
 
 /// The sweep grid and per-lane serving template.
 #[derive(Clone, Debug)]
@@ -36,9 +59,8 @@ pub struct SweepConfig {
     pub shape: WorkloadParams,
     pub scenarios: Vec<Scenario>,
     pub lanes: Vec<usize>,
-    /// Cache modes to sweep: `false` = private per-request caches,
-    /// `true` = one shared contended cache.
-    pub shared_modes: Vec<bool>,
+    /// Cache topologies to sweep.
+    pub cache_modes: Vec<CacheMode>,
     /// Requests per trace.
     pub requests: usize,
     /// Admission queue depth.
@@ -59,7 +81,15 @@ impl SweepConfig {
             shape: WorkloadParams::default(),
             scenarios: Scenario::all().to_vec(),
             lanes: vec![1, 4],
-            shared_modes: vec![false, true],
+            // shards ∈ {1, 4, 16} records the lock-striping scaling curve
+            // next to the private and global-mutex reference points
+            cache_modes: vec![
+                CacheMode::Private,
+                CacheMode::SharedMutex,
+                CacheMode::Sharded(1),
+                CacheMode::Sharded(4),
+                CacheMode::Sharded(16),
+            ],
             requests: 32,
             queue_depth: 8,
             span_s: 1.5,
@@ -68,12 +98,17 @@ impl SweepConfig {
         }
     }
 
-    /// Fast CI path: same four scenarios, minimal load.
+    /// Fast CI path: same four scenarios, minimal load, one sharded point.
     pub fn smoke(template: ServeConfig) -> SweepConfig {
         SweepConfig {
             requests: 8,
             lanes: vec![2],
             span_s: 0.25,
+            cache_modes: vec![
+                CacheMode::Private,
+                CacheMode::SharedMutex,
+                CacheMode::Sharded(4),
+            ],
             ..Self::new(template)
         }
     }
@@ -84,7 +119,7 @@ impl SweepConfig {
 pub struct SweepCell {
     pub scenario: &'static str,
     pub lanes: usize,
-    pub shared_cache: bool,
+    pub cache_mode: CacheMode,
     pub summary: WorkloadSummary,
 }
 
@@ -105,12 +140,28 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
         let time_scale = if span > 0.0 { cfg.span_s / span } else { 1.0 };
 
         for &lanes in &cfg.lanes {
-            for &shared in &cfg.shared_modes {
+            for &mode in &cfg.cache_modes {
                 let template = cfg.template.clone();
                 let trace_params = cfg.trace;
                 let base_seed = cfg.seed;
-                let shared_cache =
-                    shared.then(|| CostModelServerBackend::shared_cache_for(&template));
+                let shared_cache: Option<SharedCacheHandle> = match mode {
+                    CacheMode::Private => None,
+                    CacheMode::SharedMutex => Some(SharedCacheHandle::Mutex(
+                        CostModelServerBackend::shared_cache_for(&template),
+                    )),
+                    CacheMode::Sharded(n) => Some(SharedCacheHandle::Sharded(
+                        CostModelServerBackend::sharded_cache_for(&template, n.max(1)),
+                    )),
+                };
+                // report the topology actually CONSTRUCTED —
+                // sharded_cache_for may clamp so every shard fits one
+                // expert, and a cell must never report a topology it
+                // did not measure
+                let actual_mode = match &shared_cache {
+                    Some(SharedCacheHandle::Sharded(c)) => CacheMode::Sharded(c.n_shards()),
+                    _ => mode,
+                };
+                let mode_label = actual_mode.label();
                 let handle = ServerHandle::start(
                     lanes.max(1),
                     cfg.queue_depth.max(1),
@@ -120,9 +171,7 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                             trace_params,
                             base_seed,
                         );
-                        if let Some(c) = &shared_cache {
-                            b = b.with_shared_cache(Arc::clone(c));
-                        }
+                        b.shared_cache = shared_cache.clone();
                         Ok(b)
                     },
                 );
@@ -134,12 +183,7 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                 )?;
                 handle.shutdown();
                 let s = report.summary();
-                let name = format!(
-                    "{}/lanes{}/{}",
-                    sc.name(),
-                    lanes,
-                    if shared { "shared" } else { "private" }
-                );
+                let name = format!("{}/lanes{}/{mode_label}", sc.name(), lanes);
                 rep.record_metrics(
                     &name,
                     &[
@@ -161,7 +205,7 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                 cells.push(SweepCell {
                     scenario: sc.name(),
                     lanes,
-                    shared_cache: shared,
+                    cache_mode: actual_mode,
                     summary: s,
                 });
             }
@@ -186,6 +230,7 @@ mod tests {
         let mut cfg = SweepConfig::smoke(tiny_template());
         cfg.scenarios = vec![Scenario::Steady, Scenario::Tenants];
         cfg.lanes = vec![1, 2];
+        cfg.cache_modes = vec![CacheMode::Private, CacheMode::SharedMutex];
         cfg.requests = 5;
         cfg.span_s = 0.05;
         // short requests so the unit test stays fast
@@ -218,5 +263,36 @@ mod tests {
         let parsed = crate::util::json::Json::parse(&text).expect("valid json");
         let metrics = parsed.at(&["metrics"]).unwrap().as_arr().unwrap();
         assert_eq!(metrics.len(), 8);
+    }
+
+    #[test]
+    fn sweep_sharded_cells_run_clean_and_label_by_shard_count() {
+        let mut cfg = SweepConfig::smoke(tiny_template());
+        cfg.scenarios = vec![Scenario::Steady];
+        cfg.lanes = vec![2];
+        cfg.cache_modes = vec![CacheMode::Sharded(1), CacheMode::Sharded(4)];
+        cfg.requests = 4;
+        cfg.span_s = 0.05;
+        cfg.shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        let mut rep = Reporter::new("sweep-sharded-unit");
+        let cells = run_sweep(&cfg, &mut rep).unwrap();
+        assert_eq!(cells.len(), 2);
+        for c in &cells {
+            assert_eq!(c.summary.errors, 0, "{:?}", c.cache_mode);
+            assert_eq!(c.summary.requests, 4);
+        }
+        let names: Vec<String> =
+            rep.metrics().iter().map(|m| m.name.clone()).collect();
+        assert!(names.iter().any(|n| n.ends_with("/sharded1")), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with("/sharded4")), "{names:?}");
     }
 }

@@ -1,0 +1,233 @@
+//! Shard-equivalence property tests for `ShardedSliceCache`.
+//!
+//! * `shards = 1` is BIT-EXACT with the single-LRU `SliceCache` for any
+//!   operation sequence: same hit/miss answers, same eviction victims in
+//!   the same order, same recency order, same stats.
+//! * For `shards > 1`: global byte accounting never exceeds the
+//!   configured capacity (shard budgets always sum to it, including
+//!   across rebalance passes), and per-plane hit/miss totals are
+//!   conserved (`hits + misses == lookups issued`, per plane).
+//! * The batched token-layer transaction path (`access_layer_sharded`)
+//!   at one shard is bit-exact with `access_layer` on a single cache,
+//!   including under an active miss-rate constraint (salvage
+//!   substitution, LSB degradation).
+
+use slicemoe::cache::{Ensure, ShardedSliceCache, SliceCache};
+use slicemoe::model::descriptor::{ModelDesc, Plane, SliceKey};
+use slicemoe::quant::MatConfig;
+use slicemoe::router::{access_layer_scratch, access_layer_sharded, MissBudget, RouterConfig};
+use slicemoe::util::rng::Rng;
+use slicemoe::util::testkit::check;
+
+#[derive(Clone, Debug)]
+enum Op {
+    Lookup(SliceKey),
+    Ensure(SliceKey, u64),
+    Remove(SliceKey),
+    Pin(SliceKey, bool),
+    Rebalance,
+}
+
+fn gen_ops(rng: &mut Rng, n: usize) -> Vec<Op> {
+    (0..n)
+        .map(|_| {
+            let layer = rng.below(4);
+            let expert = rng.below(8);
+            let key = if rng.bool(0.5) {
+                SliceKey::msb(layer, expert)
+            } else {
+                SliceKey::lsb(layer, expert)
+            };
+            match rng.below(10) {
+                0..=2 => Op::Lookup(key),
+                3..=6 => Op::Ensure(key, 5 + rng.below(40) as u64),
+                7 => Op::Remove(key),
+                8 => Op::Pin(key, rng.bool(0.5)),
+                _ => Op::Rebalance,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn single_shard_is_bit_exact_for_any_op_sequence() {
+    check(
+        "sharded(1) == SliceCache",
+        150,
+        0x5AD1,
+        |rng| gen_ops(rng, 120),
+        |ops| {
+            let mut single = SliceCache::new(200);
+            let sharded = ShardedSliceCache::new(200, 1);
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    Op::Lookup(k) => {
+                        if single.lookup(k) != sharded.lookup(k) {
+                            return Err(format!("op {i}: lookup diverged on {k:?}"));
+                        }
+                    }
+                    Op::Ensure(k, b) => {
+                        let a = single.ensure(k, b);
+                        let s = sharded.ensure(k, b);
+                        if a != s {
+                            return Err(format!("op {i}: ensure {k:?} -> {a:?} vs {s:?}"));
+                        }
+                    }
+                    Op::Remove(k) => {
+                        if single.remove(k) != sharded.remove(k) {
+                            return Err(format!("op {i}: remove diverged on {k:?}"));
+                        }
+                    }
+                    Op::Pin(k, p) => {
+                        if single.pin(k, p) != sharded.pin(k, p) {
+                            return Err(format!("op {i}: pin diverged on {k:?}"));
+                        }
+                    }
+                    // a no-op at one shard — must change nothing
+                    Op::Rebalance => sharded.rebalance(),
+                }
+                if single.used_bytes() != sharded.used_bytes() {
+                    return Err(format!(
+                        "op {i}: used {} vs {}",
+                        single.used_bytes(),
+                        sharded.used_bytes()
+                    ));
+                }
+            }
+            if single.stats != sharded.stats() {
+                return Err(format!("stats {:?} vs {:?}", single.stats, sharded.stats()));
+            }
+            if single.keys_mru() != sharded.keys_mru() {
+                return Err("recency order diverged".to_string());
+            }
+            sharded.check_invariants()?;
+            single.check_invariants()
+        },
+    );
+}
+
+#[test]
+fn multi_shard_conserves_bytes_and_plane_totals() {
+    check(
+        "sharded(N) accounting",
+        120,
+        0x5AD2,
+        |rng| {
+            let shards = 1 + rng.below(7);
+            (shards, gen_ops(rng, 150))
+        },
+        |(shards, ops)| {
+            let capacity = 300u64;
+            let sharded = ShardedSliceCache::new(capacity, *shards);
+            let (mut msb_lookups, mut lsb_lookups) = (0u64, 0u64);
+            let mut insert_ok = 0u64;
+            for op in ops {
+                match *op {
+                    Op::Lookup(k) => {
+                        match k.plane {
+                            Plane::Msb => msb_lookups += 1,
+                            Plane::Lsb => lsb_lookups += 1,
+                        }
+                        sharded.lookup(k);
+                    }
+                    Op::Ensure(k, b) => {
+                        if let Ensure::Inserted { .. } = sharded.ensure(k, b) {
+                            insert_ok += 1;
+                        }
+                    }
+                    Op::Remove(k) => {
+                        sharded.remove(k);
+                    }
+                    Op::Pin(k, p) => {
+                        sharded.pin(k, p);
+                    }
+                    Op::Rebalance => sharded.rebalance(),
+                }
+                if sharded.used_bytes() > capacity {
+                    return Err(format!(
+                        "over global capacity: {} > {capacity}",
+                        sharded.used_bytes()
+                    ));
+                }
+                sharded.check_invariants()?;
+            }
+            let s = sharded.stats();
+            if s.msb_hits + s.msb_misses != msb_lookups {
+                return Err(format!(
+                    "msb conservation: {} + {} != {msb_lookups}",
+                    s.msb_hits, s.msb_misses
+                ));
+            }
+            if s.lsb_hits + s.lsb_misses != lsb_lookups {
+                return Err(format!(
+                    "lsb conservation: {} + {} != {lsb_lookups}",
+                    s.lsb_hits, s.lsb_misses
+                ));
+            }
+            if s.insertions != insert_ok {
+                return Err(format!("insertions {} != {insert_ok}", s.insertions));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pseudo-random prob vectors shaped like a softmax output.
+fn prob_vec(rng: &mut Rng, e_n: usize) -> Vec<f64> {
+    let mut p: Vec<f64> = (0..e_n).map(|_| rng.f64().max(1e-6)).collect();
+    let sum: f64 = p.iter().sum();
+    p.iter_mut().for_each(|x| *x /= sum);
+    p
+}
+
+#[test]
+fn batched_txn_path_matches_single_cache_at_one_shard() {
+    check(
+        "access_layer_sharded(1) == access_layer",
+        40,
+        0x5AD3,
+        |rng| {
+            let constrained = rng.bool(0.5);
+            let steps: Vec<(usize, Vec<f64>)> =
+                (0..60).map(|i| (i % 4, prob_vec(rng, 8))).collect();
+            (constrained, steps)
+        },
+        |(constrained, steps)| {
+            let desc = ModelDesc::tiny();
+            let mat = MatConfig::MAT84;
+            let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+            let mut single = SliceCache::new(4 * unit);
+            let sharded = ShardedSliceCache::new(4 * unit, 1);
+            let constraint = if *constrained { 0.25 } else { f64::INFINITY };
+            let mut budget_a = MissBudget::new(constraint, unit);
+            let mut budget_b = MissBudget::new(constraint, unit);
+            let cfg = RouterConfig::dbsc(2);
+            let (mut scratch_a, mut scratch_b) = (Vec::new(), Vec::new());
+            for (i, (layer, probs)) in steps.iter().enumerate() {
+                budget_a.tick();
+                budget_b.tick();
+                let a = access_layer_scratch(&cfg, probs, *layer, &desc, mat, &mut single,
+                                             &mut budget_a, None, &mut scratch_a);
+                let b = access_layer_sharded(&cfg, probs, *layer, &desc, mat, &sharded,
+                                             &mut budget_b, None, &mut scratch_b);
+                if a.execs != b.execs
+                    || a.flash_bytes != b.flash_bytes
+                    || a.dram_bytes != b.dram_bytes
+                    || a.n_dropped != b.n_dropped
+                    || a.n_substituted != b.n_substituted
+                    || a.n_degraded != b.n_degraded
+                    || scratch_a != scratch_b
+                {
+                    return Err(format!("step {i} diverged"));
+                }
+            }
+            if single.stats != sharded.stats() {
+                return Err(format!("stats {:?} vs {:?}", single.stats, sharded.stats()));
+            }
+            if single.keys_mru() != sharded.keys_mru() {
+                return Err("recency order diverged".to_string());
+            }
+            Ok(())
+        },
+    );
+}
