@@ -192,6 +192,84 @@ fn main() {
         }
     }
 
+    // cross-request expert aggregation (wave decode): N co-routed
+    // requests walking the same (layer, wave) against one sharded cache,
+    // one txn per request vs one shared wave txn. The aggregated walk
+    // charges each slice fill once per wave instead of once per request,
+    // so fetches/token falls as co-routed width grows; ops/s tracks the
+    // walk-loop overhead of the shared transaction.
+    {
+        use slicemoe::router::{route_layer, walk_layer};
+        use std::time::Instant;
+
+        let desc = ModelDesc::deepseek_v2_lite();
+        let mat = MatConfig::MAT84;
+        let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+        let cfg = RouterConfig::dbsc(6);
+        let layers = 26usize;
+        let steps = 1024usize; // (token, layer) wave steps per run
+        const SHARDS: usize = 8;
+
+        for &width in &[1usize, 4, 16] {
+            // per-request decode gate draws, identical across both variants
+            let probs: Vec<Vec<Vec<f64>>> = (0..width)
+                .map(|r| {
+                    let mut gen =
+                        TraceGenerator::new(&desc, TraceParams::default(), 0xA6 + r as u64);
+                    (0..steps).map(|s| gen.gate_probs(Phase::Decode, s % layers)).collect()
+                })
+                .collect();
+
+            for (variant, aggregated) in [("per-request", false), ("aggregated", true)] {
+                let cache = ShardedSliceCache::new(unit * 96, SHARDS);
+                let mut budgets: Vec<MissBudget> =
+                    (0..width).map(|_| MissBudget::new(f64::INFINITY, unit)).collect();
+                let mut scratch = Vec::new();
+                let mut fetches = 0u64;
+                let t0 = Instant::now();
+                for s in 0..steps {
+                    let layer = s % layers;
+                    let routes: Vec<_> = (0..width)
+                        .map(|r| route_layer(&cfg, &probs[r][s], &budgets[r], |_| false))
+                        .collect();
+                    if aggregated {
+                        let mut txn = cache.txn(routes.iter().flat_map(|rt| {
+                            rt.routed.iter().map(|x| cache.shard_of_expert(x.expert))
+                        }));
+                        for (r, route) in routes.into_iter().enumerate() {
+                            let out = walk_layer(
+                                &cfg, route, &probs[r][s], layer, &desc, mat, &mut txn,
+                                &mut budgets[r], None, &mut scratch,
+                            );
+                            fetches += out.flash_fetches;
+                        }
+                    } else {
+                        for (r, route) in routes.into_iter().enumerate() {
+                            let mut txn = cache.txn(
+                                route.routed.iter().map(|x| cache.shard_of_expert(x.expert)),
+                            );
+                            let out = walk_layer(
+                                &cfg, route, &probs[r][s], layer, &desc, mat, &mut txn,
+                                &mut budgets[r], None, &mut scratch,
+                            );
+                            fetches += out.flash_fetches;
+                        }
+                    }
+                }
+                let wall = t0.elapsed().as_secs_f64();
+                let walks = (steps * width) as f64;
+                let ops = walks / wall;
+                let fpt = fetches as f64 / walks;
+                let row = format!("wave-aggregation/{variant}/width{width}");
+                println!("{row:<46} {ops:>12.0} ops/s  {fpt:.4} fetches/token");
+                report.record_metrics(
+                    &row,
+                    &[("ops_per_s", ops), ("fetches_per_token", fpt), ("width", width as f64)],
+                );
+            }
+        }
+    }
+
     // quantization throughput (weight-store build path)
     {
         let mut rng = Rng::new(4);

@@ -357,7 +357,7 @@ fn serve_sim_cmd(rest: &[String]) -> Result<()> {
 fn serve_bench_cmd(rest: &[String]) -> Result<()> {
     use slicemoe::serve::ServeConfig;
     use slicemoe::util::bench::Reporter;
-    use slicemoe::workload::{run_sweep, CacheMode, Scenario, SweepConfig};
+    use slicemoe::workload::{run_sweep, CacheMode, DecodeMode, Scenario, SweepConfig};
 
     let a = Args::new()
         .opt("model", "tiny", "model geometry (tiny|deepseek|qwen)")
@@ -369,6 +369,11 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             "cache-shards",
             "",
             "comma-separated shard counts for the shared cells (empty = one global mutex)",
+        )
+        .opt(
+            "decode-mode",
+            "both",
+            "lanes|wave|both (wave cells run only on sharded cache modes)",
         )
         .opt("cache-experts", "12", "cache capacity in high-bit experts")
         .opt("constraint", "inf", "miss-rate constraint (or 'inf')")
@@ -441,6 +446,12 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             m => bail!("bad --cache-mode '{m}' (private|shared|both)"),
         };
     }
+    cfg.decode_modes = match a.str("decode-mode").as_str() {
+        "lanes" => vec![DecodeMode::Lanes],
+        "wave" => vec![DecodeMode::Wave],
+        "both" => vec![DecodeMode::Lanes, DecodeMode::Wave],
+        m => bail!("bad --decode-mode '{m}' (lanes|wave|both)"),
+    };
     let dir = a.str("trace-dir");
     if !dir.is_empty() {
         cfg.trace_dir = Some(dir.into());

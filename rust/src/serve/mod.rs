@@ -29,9 +29,11 @@
 pub mod backend;
 pub mod cost_model;
 pub mod pipeline;
+pub mod wave;
 
 pub use backend::{ExecPlan, ExpertBackend};
 pub use cost_model::CostModelBackend;
 pub use pipeline::{
     background_cost, LaneCache, ServeConfig, ServeCounters, ServeLoop, StepStats,
 };
+pub use wave::{WaveDone, WaveEngine};

@@ -33,7 +33,8 @@ use crate::memhier::{HwSpec, Ledger, Phase};
 use crate::model::descriptor::{ModelDesc, SliceKey};
 use crate::quant::MatConfig;
 use crate::router::{
-    access_layer_scratch, access_layer_sharded, MissBudget, Precision, RouterConfig,
+    access_layer_scratch, access_layer_sharded, AccessOutcome, MissBudget, Precision,
+    RouterConfig,
 };
 use crate::sim::accuracy::{AccuracyModel, DamageAccumulator};
 
@@ -138,6 +139,8 @@ impl LaneCache {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
     pub flash_bytes: u64,
+    /// Flash fetch count this step (each slice fill = one fetch).
+    pub flash_fetches: u64,
     pub n_high: usize,
     pub n_low: usize,
     pub n_dropped: usize,
@@ -217,6 +220,9 @@ pub struct ServeLoop {
     /// quantity of the paper: high-bit-normalized steady-state miss rate).
     pub steady_accesses: u64,
     pub steady_flash: u64,
+    /// Total decode-phase flash fetches (whole request, no grace window) —
+    /// the numerator of the workload layer's fetches-per-token metric.
+    pub decode_flash_fetches: u64,
     /// Prompt length, set by `prefill` (drives background KV context).
     pub prefill_tokens: usize,
     msb_bytes: u64,
@@ -259,6 +265,7 @@ impl ServeLoop {
             counters: ServeCounters::default(),
             steady_accesses: 0,
             steady_flash: 0,
+            decode_flash_fetches: 0,
             prefill_tokens: 0,
             msb_bytes,
             lsb_bytes,
@@ -412,11 +419,17 @@ impl ServeLoop {
 
     /// Decode one token through every layer: route against the cache under
     /// the miss budget, execute via the backend, account damage + ledger.
+    ///
+    /// The per-token bookkeeping is split into `begin_decode_token` /
+    /// `account_decode_layer` / `charge_decode_layer` /
+    /// `finish_decode_token` so the wave engine (`serve::wave`) can drive
+    /// the IDENTICAL op sequence layer-by-layer across a batch of
+    /// requests. This method is the per-request composition of those
+    /// pieces — the wave engine at batch = 1 reduces to exactly this.
     pub fn decode_token<B: ExpertBackend>(&mut self, backend: &mut B) -> Result<StepStats> {
         let desc = self.cfg.desc.clone();
         let mat = self.cfg.mat;
-        self.budget.tick();
-        let t = self.ledger.decode_steps; // tokens completed so far
+        let t = self.begin_decode_token();
         let mut step = StepStats::default();
 
         for layer in 0..desc.n_layers {
@@ -445,36 +458,7 @@ impl ServeLoop {
                 }
             };
 
-            if let Some(model) = &self.cfg.accuracy {
-                let execs: Vec<(f64, Precision)> =
-                    out.execs.iter().map(|e| (e.gate, e.precision)).collect();
-                let bias = (out.ideal_mass - out.realized_mass).max(0.0);
-                self.damage.record(
-                    model,
-                    &execs,
-                    mat.high_bits,
-                    mat.low_bits,
-                    bias,
-                    out.dropped_raw_mass,
-                );
-            }
-
-            for ex in &out.execs {
-                match ex.precision {
-                    Precision::High | Precision::Full => step.n_high += 1,
-                    Precision::Low => step.n_low += 1,
-                }
-            }
-            step.flash_bytes += out.flash_bytes;
-            step.n_dropped += out.n_dropped;
-            step.n_substituted += out.n_substituted;
-            step.n_degraded += out.n_degraded;
-            self.counters.n_critical += out.n_critical as u64;
-
-            if t >= self.budget.warmup_steps {
-                self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
-                self.steady_flash += out.flash_bytes;
-            }
+            self.account_decode_layer(&out, t, &mut step);
 
             backend.run_experts(
                 Phase::Decode,
@@ -482,29 +466,85 @@ impl ServeLoop {
                 &ExecPlan::Decode { execs: &out.execs[..] },
             )?;
 
-            let ops = desc.expert_ops(1) * out.execs.len() as f64;
-            let (bg_ops, bg_dram) = if self.cfg.background {
-                background_cost(&desc, self.prefill_tokens + t as usize)
-            } else {
-                (0.0, 0)
-            };
-            self.ledger.record(
-                Phase::Decode,
-                &self.cfg.hw,
-                ops + bg_ops,
-                out.dram_bytes + bg_dram,
-                out.flash_bytes,
-                out.flash_fetches,
+            self.charge_decode_layer(&out, t);
+        }
+        Ok(self.finish_decode_token(step))
+    }
+
+    /// Open one decode token: advance the miss-budget grace window and
+    /// return the token index `t` (decode steps completed so far).
+    pub fn begin_decode_token(&mut self) -> u64 {
+        self.budget.tick();
+        self.ledger.decode_steps
+    }
+
+    /// Fold one layer's access outcome into the damage proxy, the step /
+    /// request expert counters, and the steady-state miss statistics.
+    pub fn account_decode_layer(&mut self, out: &AccessOutcome, t: u64, step: &mut StepStats) {
+        let mat = self.cfg.mat;
+        if let Some(model) = &self.cfg.accuracy {
+            let execs: Vec<(f64, Precision)> =
+                out.execs.iter().map(|e| (e.gate, e.precision)).collect();
+            let bias = (out.ideal_mass - out.realized_mass).max(0.0);
+            self.damage.record(
+                model,
+                &execs,
+                mat.high_bits,
+                mat.low_bits,
+                bias,
+                out.dropped_raw_mass,
             );
         }
-        self.ledger.bump_decode_steps();
 
+        for ex in &out.execs {
+            match ex.precision {
+                Precision::High | Precision::Full => step.n_high += 1,
+                Precision::Low => step.n_low += 1,
+            }
+        }
+        step.flash_bytes += out.flash_bytes;
+        step.flash_fetches += out.flash_fetches;
+        step.n_dropped += out.n_dropped;
+        step.n_substituted += out.n_substituted;
+        step.n_degraded += out.n_degraded;
+        self.counters.n_critical += out.n_critical as u64;
+
+        if t >= self.budget.warmup_steps {
+            self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
+            self.steady_flash += out.flash_bytes;
+        }
+    }
+
+    /// Charge the ledger for one executed decode layer (expert compute +
+    /// optional background cost + this layer's flash traffic).
+    pub fn charge_decode_layer(&mut self, out: &AccessOutcome, t: u64) {
+        let ops = self.cfg.desc.expert_ops(1) * out.execs.len() as f64;
+        let (bg_ops, bg_dram) = if self.cfg.background {
+            background_cost(&self.cfg.desc, self.prefill_tokens + t as usize)
+        } else {
+            (0.0, 0)
+        };
+        self.ledger.record(
+            Phase::Decode,
+            &self.cfg.hw,
+            ops + bg_ops,
+            out.dram_bytes + bg_dram,
+            out.flash_bytes,
+            out.flash_fetches,
+        );
+    }
+
+    /// Close one decode token: bump the ledger step counter and fold the
+    /// step's expert counters into the request totals.
+    pub fn finish_decode_token(&mut self, step: StepStats) -> StepStats {
+        self.ledger.bump_decode_steps();
+        self.decode_flash_fetches += step.flash_fetches;
         self.counters.n_high += step.n_high as u64;
         self.counters.n_low += step.n_low as u64;
         self.counters.n_dropped += step.n_dropped as u64;
         self.counters.n_substituted += step.n_substituted as u64;
         self.counters.n_degraded += step.n_degraded as u64;
-        Ok(step)
+        step
     }
 }
 

@@ -1,0 +1,392 @@
+//! Token-wave batched decode: cross-request expert aggregation over the
+//! lock-striped sharded cache.
+//!
+//! `ServeLoop` is request-at-a-time: K concurrent requests that route to
+//! the same hot expert pay K independent slice fetches. [`WaveEngine`]
+//! instead steps a BATCH of in-flight requests one (layer, wave) at a
+//! time:
+//!
+//! 1. **gate** every request (each keeps its own per-request RNG stream —
+//!    gates are drawn in per-request layer order, so a request's trace is
+//!    identical whether it is waved or served alone);
+//! 2. **snapshot** MSB residency ONCE per (wave, layer) and
+//!    `route_layer` every request against that shared snapshot;
+//! 3. open **one `ShardTxn` per (wave, layer)** covering the union of all
+//!    routed experts' shards, and `walk_layer` each request through it in
+//!    admission order. The first token routed to an uncached expert pays
+//!    the flash fetch + dequant; every later co-routed token in the same
+//!    wave HITS the just-filled slice. De-duplicated fetch cost falls out
+//!    of the shared transaction — no special-case accounting — while
+//!    per-token expert compute is still charged per request;
+//! 4. per-request damage/ledger accounting and `run_experts`, in the
+//!    exact per-request order `ServeLoop::decode_token` uses.
+//!
+//! **Continuous batching:** requests join the wave set between token
+//! steps ([`WaveEngine::admit`] runs their prefill immediately) and leave
+//! on completion ([`WaveEngine::step_wave`] returns finished slots), so a
+//! scheduler alternates `admit` / `step_wave` against one queue.
+//!
+//! **Batch = 1 is bit-exact with `ServeLoop::decode_token`:** the wave
+//! step then degenerates to the identical op sequence (gate → snapshot →
+//! route → one txn → walk → rebalance → account → execute → charge), so
+//! every parity suite pinning the per-request path extends to the wave
+//! engine structurally (`tests/wave_decode_parity.rs` pins it end to
+//! end).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cache::ShardedSliceCache;
+use crate::memhier::Phase;
+use crate::model::descriptor::SliceKey;
+use crate::router::{
+    effective_policy, route_layer, walk_layer, AccessOutcome, Policy, RoutedLayer,
+};
+
+use super::backend::{ExecPlan, ExpertBackend};
+use super::pipeline::{ServeConfig, ServeLoop, StepStats};
+
+/// One in-flight request in the wave set.
+struct WaveSlot<B: ExpertBackend> {
+    id: u64,
+    lane: ServeLoop,
+    backend: B,
+    /// Decode tokens still to produce.
+    remaining: usize,
+    /// Decode tokens produced so far.
+    decode_done: usize,
+    prefill_wall_s: f64,
+    decode_started: Instant,
+}
+
+/// A completed request leaving the wave set. Carries the full pipeline
+/// state so the scheduler builds its `Response` through the single
+/// `server::Response::from_lane` translation.
+pub struct WaveDone {
+    pub id: u64,
+    pub lane: ServeLoop,
+    pub prefill_wall_s: f64,
+    pub decode_wall_s: f64,
+    pub decode_tokens: usize,
+}
+
+/// Wave-stepped decode over one shared [`ShardedSliceCache`].
+pub struct WaveEngine<B: ExpertBackend> {
+    cache: Arc<ShardedSliceCache>,
+    slots: Vec<WaveSlot<B>>,
+    max_batch: usize,
+    /// Shared eviction scratch (cleared by every walk; never read back).
+    evict_scratch: Vec<SliceKey>,
+}
+
+impl<B: ExpertBackend> WaveEngine<B> {
+    pub fn new(cache: Arc<ShardedSliceCache>, max_batch: usize) -> WaveEngine<B> {
+        WaveEngine {
+            cache,
+            slots: Vec::new(),
+            max_batch: max_batch.max(1),
+            evict_scratch: Vec::new(),
+        }
+    }
+
+    /// Slots currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Whether another request may join the wave set.
+    pub fn has_room(&self) -> bool {
+        self.slots.len() < self.max_batch
+    }
+
+    /// Admit a request into the wave set: build its pipeline on the shared
+    /// cache and run its prefill immediately (prefill is not wave-stepped;
+    /// admission between token steps is where continuous batching pays).
+    pub fn admit(
+        &mut self,
+        id: u64,
+        cfg: ServeConfig,
+        mut backend: B,
+        prefill_tokens: usize,
+        decode_tokens: usize,
+    ) -> Result<()> {
+        if !self.has_room() {
+            bail!("wave set full ({} slots)", self.max_batch);
+        }
+        if let Some(first) = self.slots.first() {
+            if first.lane.cfg.desc.n_layers != cfg.desc.n_layers {
+                bail!(
+                    "wave set requires a uniform layer count ({} != {})",
+                    first.lane.cfg.desc.n_layers,
+                    cfg.desc.n_layers
+                );
+            }
+        }
+        let t0 = Instant::now();
+        let mut lane = ServeLoop::with_sharded_cache(cfg, Arc::clone(&self.cache));
+        lane.prefill(&mut backend, prefill_tokens)?;
+        let prefill_wall_s = t0.elapsed().as_secs_f64();
+        self.slots.push(WaveSlot {
+            id,
+            lane,
+            backend,
+            remaining: decode_tokens,
+            decode_done: 0,
+            prefill_wall_s,
+            decode_started: Instant::now(),
+        });
+        Ok(())
+    }
+
+    /// Pull completed slots out of the wave set (admission order).
+    fn harvest(&mut self) -> Vec<WaveDone> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].remaining == 0 {
+                let s = self.slots.remove(i);
+                done.push(WaveDone {
+                    id: s.id,
+                    prefill_wall_s: s.prefill_wall_s,
+                    decode_wall_s: s.decode_started.elapsed().as_secs_f64(),
+                    decode_tokens: s.decode_done,
+                    lane: s.lane,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Decode ONE token for every in-flight request, layer by layer, and
+    /// return the requests that completed. A no-op on an idle engine.
+    pub fn step_wave(&mut self) -> Result<Vec<WaveDone>> {
+        // zero-decode admissions complete without producing a token
+        let mut done = self.harvest();
+        if self.slots.is_empty() {
+            return Ok(done);
+        }
+        let n_layers = self.slots[0].lane.cfg.desc.n_layers;
+        let ts: Vec<u64> =
+            self.slots.iter_mut().map(|s| s.lane.begin_decode_token()).collect();
+        let mut steps = vec![StepStats::default(); self.slots.len()];
+
+        for layer in 0..n_layers {
+            // 1. gate every slot (per-request RNG streams, admission order)
+            let mut probs: Vec<Vec<f64>> = Vec::with_capacity(self.slots.len());
+            for s in &mut self.slots {
+                let mut all = s.backend.gate(Phase::Decode, layer)?;
+                if all.is_empty() {
+                    bail!("decode gate returned no probability vector");
+                }
+                probs.push(all.swap_remove(0));
+            }
+
+            // 2. one residency snapshot for the whole wave, taken only
+            //    when some slot's effective policy actually reads it
+            let needs_mask: Vec<bool> = self
+                .slots
+                .iter()
+                .map(|s| {
+                    effective_policy(&s.lane.cfg.router, &s.lane.budget) != Policy::TopK
+                })
+                .collect();
+            let mask = if needs_mask.iter().any(|&b| b) {
+                let n = probs.iter().map(|p| p.len()).max().unwrap_or(0);
+                Some(self.cache.residency_mask(layer, n))
+            } else {
+                None
+            };
+
+            // 3. route every slot against the shared snapshot
+            let routes: Vec<RoutedLayer> = self
+                .slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    route_layer(&s.lane.cfg.router, &probs[i], &s.lane.budget, |e| {
+                        needs_mask[i] && mask.as_ref().is_some_and(|m| m[e])
+                    })
+                })
+                .collect();
+
+            // 4. ONE transaction per (wave, layer): each shard locks once;
+            //    the first walk to miss an expert fills it, later
+            //    co-routed walks hit the filled slice — the fetch dedup.
+            //    An active miss budget falls back to all-shard locking for
+            //    the same reason the per-request path does (salvage may
+            //    probe any expert).
+            let any_active = self.slots.iter().any(|s| s.lane.budget.active());
+            let outs: Vec<AccessOutcome> = {
+                let cache = &*self.cache;
+                let mut txn = if any_active {
+                    cache.txn_all()
+                } else {
+                    cache.txn(routes.iter().flat_map(|r| {
+                        r.routed.iter().map(|x| cache.shard_of_expert(x.expert))
+                    }))
+                };
+                let scratch = &mut self.evict_scratch;
+                routes
+                    .into_iter()
+                    .zip(self.slots.iter_mut())
+                    .zip(&probs)
+                    .map(|((route, slot), p)| {
+                        let lane = &mut slot.lane;
+                        walk_layer(
+                            &lane.cfg.router,
+                            route,
+                            p,
+                            layer,
+                            &lane.cfg.desc,
+                            lane.cfg.mat,
+                            &mut txn,
+                            &mut lane.budget,
+                            Some(&mut lane.hot),
+                            scratch,
+                        )
+                    })
+                    .collect()
+            };
+            self.cache.maybe_rebalance();
+
+            // 5. per-slot accounting + execution, the decode_token order
+            for ((slot, out), (step, &t)) in self
+                .slots
+                .iter_mut()
+                .zip(&outs)
+                .zip(steps.iter_mut().zip(&ts))
+            {
+                slot.lane.account_decode_layer(out, t, step);
+                slot.backend.run_experts(
+                    Phase::Decode,
+                    layer,
+                    &ExecPlan::Decode { execs: &out.execs[..] },
+                )?;
+                slot.lane.charge_decode_layer(out, t);
+            }
+        }
+
+        for (slot, step) in self.slots.iter_mut().zip(steps) {
+            slot.lane.finish_decode_token(step);
+            slot.decode_done += 1;
+            slot.remaining -= 1;
+        }
+        done.extend(self.harvest());
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+    use crate::serve::CostModelBackend;
+    use crate::sim::TraceParams;
+
+    fn tiny_cfg(cache_experts: u64) -> ServeConfig {
+        let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        cfg.cache_bytes = cfg.unit_bytes() * cache_experts;
+        cfg
+    }
+
+    fn engine(shards: usize, max_batch: usize) -> WaveEngine<CostModelBackend> {
+        let cfg = tiny_cfg(8);
+        let mut cache = ShardedSliceCache::new(cfg.cache_bytes, shards);
+        cache.set_heterogeneous(cfg.heterogeneous_lsb);
+        WaveEngine::new(Arc::new(cache), max_batch)
+    }
+
+    fn admit_one(eng: &mut WaveEngine<CostModelBackend>, id: u64, decode: usize) {
+        let mut cfg = tiny_cfg(8);
+        cfg.seed = 0x1000 + id;
+        let be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 16, cfg.seed);
+        eng.admit(id, cfg, be, 16, decode).unwrap();
+    }
+
+    #[test]
+    fn wave_serves_a_batch_to_completion_and_conserves_work() {
+        let mut eng = engine(4, 4);
+        for id in 0..3 {
+            admit_one(&mut eng, id, 6 + id as usize);
+        }
+        assert_eq!(eng.in_flight(), 3);
+        let mut done = Vec::new();
+        let mut steps = 0;
+        while !eng.is_idle() {
+            done.extend(eng.step_wave().unwrap());
+            steps += 1;
+            assert!(steps <= 16, "wave failed to drain");
+        }
+        assert_eq!(done.len(), 3);
+        done.sort_by_key(|d| d.id);
+        for (i, d) in done.iter().enumerate() {
+            assert_eq!(d.id, i as u64);
+            assert_eq!(d.decode_tokens, 6 + i);
+            assert_eq!(d.lane.ledger.decode_steps, (6 + i) as u64);
+            // top-k work conservation per request
+            let c = d.lane.counters;
+            let total = c.n_high + c.n_low + c.n_dropped;
+            let desc = &d.lane.cfg.desc;
+            assert_eq!(total, ((6 + i) * desc.n_layers * desc.top_k) as u64);
+        }
+        // shortest request left first
+        assert!(done[0].decode_tokens <= done[2].decode_tokens);
+    }
+
+    #[test]
+    fn admission_beyond_capacity_is_rejected() {
+        let mut eng = engine(2, 2);
+        admit_one(&mut eng, 0, 4);
+        admit_one(&mut eng, 1, 4);
+        assert!(!eng.has_room());
+        let cfg = tiny_cfg(8);
+        let be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 16, 9);
+        assert!(eng.admit(2, cfg, be, 16, 4).is_err());
+        // draining one slot reopens admission
+        for _ in 0..4 {
+            eng.step_wave().unwrap();
+        }
+        assert!(eng.is_idle() && eng.has_room());
+    }
+
+    #[test]
+    fn continuous_admission_joins_between_token_steps() {
+        let mut eng = engine(4, 4);
+        admit_one(&mut eng, 0, 8);
+        eng.step_wave().unwrap();
+        eng.step_wave().unwrap();
+        // request 1 joins mid-flight and both complete
+        admit_one(&mut eng, 1, 3);
+        let mut done = Vec::new();
+        while !eng.is_idle() {
+            done.extend(eng.step_wave().unwrap());
+        }
+        done.sort_by_key(|d| d.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].decode_tokens, 8);
+        assert_eq!(done[1].decode_tokens, 3);
+        if let crate::serve::LaneCache::Sharded(s) = &done[0].lane.cache {
+            s.check_invariants().unwrap();
+        } else {
+            panic!("wave slot lost its sharded cache");
+        }
+    }
+
+    #[test]
+    fn zero_decode_request_completes_without_a_token() {
+        let mut eng = engine(2, 2);
+        admit_one(&mut eng, 7, 0);
+        let done = eng.step_wave().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].decode_tokens, 0);
+        assert!(eng.is_idle());
+    }
+}

@@ -31,7 +31,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::{ShardedSliceCache, SliceCache};
-use crate::serve::{CostModelBackend, ServeConfig, ServeLoop};
+use crate::serve::{CostModelBackend, ExpertBackend, ServeConfig, ServeLoop, WaveEngine};
 use crate::sim::trace::{RoutingBias, TraceParams};
 
 /// A generation request.
@@ -73,6 +73,10 @@ pub struct Response {
     pub steady_flash_bytes: u64,
     /// Steady-state normalization denominator (`accesses × unit_bytes`).
     pub steady_norm_bytes: f64,
+    /// Total decode-phase flash fetches (no grace window) — numerator of
+    /// the workload layer's fetches-per-token metric, the quantity wave
+    /// -mode cross-request aggregation drives down.
+    pub decode_flash_fetches: u64,
 }
 
 impl Response {
@@ -100,6 +104,7 @@ impl Response {
             lane: 0,
             steady_flash_bytes: lane.steady_flash,
             steady_norm_bytes: lane.steady_norm_bytes(),
+            decode_flash_fetches: lane.decode_flash_fetches,
         }
     }
 
@@ -247,6 +252,17 @@ impl<T> BoundedQueue<T> {
         Ok(())
     }
 
+    /// Non-blocking pop; `None` when the queue is momentarily empty
+    /// (closed or not — callers that must distinguish use `pop`).
+    fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("queue poisoned");
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
     /// Blocking pop; `None` once the queue is closed AND drained.
     fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().expect("queue poisoned");
@@ -279,6 +295,47 @@ fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
         s
     } else {
         "non-string panic payload"
+    }
+}
+
+/// Admit one queued request into a wave engine. A failed admission (lane
+/// construction or prefill) reports its error through `tx` so the
+/// client's one-recv-per-submit pairing holds; a panic reports, then
+/// resumes unwinding (the engine's state is suspect after an unwind).
+fn admit_waved<B, F>(
+    engine: &mut WaveEngine<B>,
+    make_lane: &mut F,
+    (req, enqueued): (Request, Instant),
+    tx: &mpsc::Sender<Result<Response>>,
+    inflight: &mut std::collections::HashMap<u64, f64>,
+) where
+    B: ExpertBackend,
+    F: FnMut(&Request) -> Result<(ServeConfig, B)>,
+{
+    let queued = enqueued.elapsed().as_secs_f64();
+    let prefill_tokens = req.prompt.len().max(1);
+    let admitted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let (cfg, backend) = make_lane(&req)?;
+        engine.admit(req.id, cfg, backend, prefill_tokens, req.decode_tokens)
+    }));
+    match admitted {
+        Ok(Ok(())) => {
+            inflight.insert(req.id, queued);
+        }
+        Ok(Err(e)) => {
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "wave admission failed for request {}: {e:#}",
+                req.id
+            )));
+        }
+        Err(payload) => {
+            let _ = tx.send(Err(anyhow::anyhow!(
+                "wave worker panicked admitting request {}: {}",
+                req.id,
+                panic_text(payload.as_ref())
+            )));
+            std::panic::resume_unwind(payload);
+        }
     }
 }
 
@@ -386,6 +443,117 @@ impl ServerHandle {
             .collect();
         drop(tx_resp);
         ServerHandle { queue, rx, workers }
+    }
+
+    /// Start a WAVE-MODE server: one worker thread drives a
+    /// [`WaveEngine`] of up to `max_batch` in-flight requests over the
+    /// shared sharded `cache`, decoding the whole wave one (layer, token)
+    /// step at a time so co-routed requests share slice fetches.
+    ///
+    /// Continuous batching: between token steps the worker admits queued
+    /// requests while the wave has room (`try_pop`), and blocks on the
+    /// queue only when idle. `make_lane(req)` produces the per-request
+    /// (config, execution backend) pair ON the worker thread — see
+    /// [`CostModelServerBackend::wave_lane`] for the cost-model one.
+    ///
+    /// The client contract is identical to [`ServerHandle::start`]:
+    /// `submit`/`try_submit` + one `recv` outcome per request (responses
+    /// in completion order, `lane` always 0). Like the cost-model lanes,
+    /// wave responses carry no output bytes (`ExpertBackend` computes
+    /// experts; token sampling lives in engine adapters).
+    pub fn start_wave<F, B>(
+        max_batch: usize,
+        queue_depth: usize,
+        cache: Arc<ShardedSliceCache>,
+        mut make_lane: F,
+    ) -> ServerHandle
+    where
+        F: FnMut(&Request) -> Result<(ServeConfig, B)> + Send + 'static,
+        B: ExpertBackend + 'static,
+    {
+        let queue = Arc::new(BoundedQueue::new(queue_depth));
+        let (tx_resp, rx) = mpsc::channel();
+        let live = Arc::new(AtomicUsize::new(1));
+        let worker_queue = Arc::clone(&queue);
+        let worker = thread::Builder::new()
+            .name("slicemoe-wave".to_string())
+            .spawn(move || {
+                let _guard = LaneGuard { live, queue: Arc::clone(&worker_queue) };
+                let mut engine: WaveEngine<B> = WaveEngine::new(cache, max_batch);
+                // id → queueing delay of every in-flight request, so a
+                // mid-wave failure still yields one outcome per request
+                let mut inflight: std::collections::HashMap<u64, f64> =
+                    std::collections::HashMap::new();
+                let tx = tx_resp;
+                loop {
+                    // admit: block only when idle; otherwise take what is
+                    // ready and get back to stepping the wave
+                    if engine.is_idle() {
+                        match worker_queue.pop() {
+                            Some(item) => {
+                                admit_waved(&mut engine, &mut make_lane, item, &tx, &mut inflight)
+                            }
+                            None => return, // closed and drained
+                        }
+                    }
+                    while engine.has_room() {
+                        match worker_queue.try_pop() {
+                            Some(item) => {
+                                admit_waved(&mut engine, &mut make_lane, item, &tx, &mut inflight)
+                            }
+                            None => break,
+                        }
+                    }
+                    if engine.is_idle() {
+                        continue; // every admission failed; block again
+                    }
+
+                    let outcome = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| engine.step_wave()),
+                    );
+                    match outcome {
+                        Ok(Ok(done)) => {
+                            for d in done {
+                                let queued = inflight.remove(&d.id).unwrap_or(0.0);
+                                let mut r = Response::from_lane(
+                                    &d.lane,
+                                    d.id,
+                                    Vec::new(),
+                                    d.prefill_wall_s,
+                                    d.decode_wall_s,
+                                    d.decode_tokens,
+                                );
+                                r.queue_wall_s = queued;
+                                if tx.send(Ok(r)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Ok(Err(e)) => {
+                            // a failed wave step poisons every in-flight
+                            // request; report each so request/response
+                            // pairing holds, then retire the worker
+                            for (&id, _) in inflight.iter() {
+                                let _ = tx.send(Err(anyhow::anyhow!(
+                                    "wave step failed serving request {id}: {e:#}"
+                                )));
+                            }
+                            return;
+                        }
+                        Err(payload) => {
+                            for (&id, _) in inflight.iter() {
+                                let _ = tx.send(Err(anyhow::anyhow!(
+                                    "wave worker panicked serving request {id}: {}",
+                                    panic_text(payload.as_ref())
+                                )));
+                            }
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                }
+            })
+            .expect("spawn wave worker");
+        ServerHandle { queue, rx, workers: vec![worker] }
     }
 
     /// Submit a request (blocks while the queue is full — backpressure).
@@ -517,19 +685,29 @@ impl CostModelServerBackend {
         cache.set_heterogeneous(cfg.heterogeneous_lsb);
         Arc::new(cache)
     }
-}
 
-impl Backend for CostModelServerBackend {
-    fn serve(&mut self, req: &Request) -> Result<Response> {
+    /// Per-request (config, execution backend) pair — the single home of
+    /// the per-request seed/bias derivation, shared by `Backend::serve`
+    /// (lane mode) and [`ServerHandle::start_wave`] factories (wave
+    /// mode), so both decode modes route identical per-request traces.
+    pub fn wave_lane(&self, req: &Request) -> (ServeConfig, CostModelBackend) {
         let prefill_tokens = req.prompt.len().max(1);
         let mut cfg = self.cfg.clone();
         cfg.seed = request_seed(self.seed, req.id);
-        let mut backend = match &req.bias {
+        let backend = match &req.bias {
             Some(b) => {
                 CostModelBackend::with_bias(&cfg.desc, self.trace, b, prefill_tokens, cfg.seed)
             }
             None => CostModelBackend::new(&cfg.desc, self.trace, prefill_tokens, cfg.seed),
         };
+        (cfg, backend)
+    }
+}
+
+impl Backend for CostModelServerBackend {
+    fn serve(&mut self, req: &Request) -> Result<Response> {
+        let prefill_tokens = req.prompt.len().max(1);
+        let (cfg, mut backend) = self.wave_lane(req);
         let mut lane = match &self.shared_cache {
             Some(SharedCacheHandle::Mutex(c)) => {
                 ServeLoop::with_shared_cache(cfg, Arc::clone(c))
@@ -583,6 +761,7 @@ mod tests {
                 lane: 0,
                 steady_flash_bytes: 0,
                 steady_norm_bytes: 0.0,
+                decode_flash_fetches: 0,
             })
         }
     }
@@ -844,6 +1023,7 @@ mod tests {
             lane: 0,
             steady_flash_bytes: 0,
             steady_norm_bytes: 0.0,
+            decode_flash_fetches: 0,
         };
         assert_eq!(zero.tokens_per_s(), 0.0);
         let s = summarize(&[zero.clone(), zero]);
@@ -966,6 +1146,72 @@ mod tests {
         assert!((0.0..=1.5).contains(&fleet), "fleet miss {fleet}");
         // the concurrent churn left the cache internally consistent
         check.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn wave_server_completes_all_requests_with_paired_responses() {
+        let template = tiny_cfg(8);
+        let cache = CostModelServerBackend::sharded_cache_for(&template, 4);
+        let trace = TraceParams::default();
+        let factory = CostModelServerBackend::new(tiny_cfg(8), trace, 0x5EED);
+        let check = Arc::clone(&cache);
+        let h = ServerHandle::start_wave(4, 4, cache, move |req| Ok(factory.wave_lane(req)));
+        let n = 8u64;
+        for id in 0..n {
+            h.submit(Request::new(id, vec![7; 32], 24)).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n {
+            let r = h.recv().unwrap();
+            assert!(seen.insert(r.id), "duplicate response {}", r.id);
+            assert_eq!(r.decode_tokens, 24);
+            assert_eq!(r.lane, 0);
+            assert!(r.decode_energy_j > 0.0);
+            assert!((0.0..=1.5).contains(&r.miss_rate), "miss {}", r.miss_rate);
+            assert!(r.decode_flash_fetches > 0, "decode made no fetches at all?");
+        }
+        assert_eq!(seen.len(), n as usize);
+        h.shutdown();
+        check.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn serialized_wave_server_matches_lane_server_bit_exact() {
+        // one outstanding request at a time: the wave degenerates to
+        // batch = 1 and must reproduce the per-request lane path exactly
+        let trace = TraceParams::default();
+        let run = |wave: bool| {
+            let template = tiny_cfg(8);
+            let cache = CostModelServerBackend::sharded_cache_for(&template, 4);
+            let h = if wave {
+                let f = CostModelServerBackend::new(tiny_cfg(8), trace, 0x7A7A);
+                ServerHandle::start_wave(4, 2, cache, move |req| Ok(f.wave_lane(req)))
+            } else {
+                ServerHandle::start(2, 2, move |_| {
+                    Ok(CostModelServerBackend::new(tiny_cfg(8), trace, 0x7A7A)
+                        .with_sharded_cache(Arc::clone(&cache)))
+                })
+            };
+            let mut responses = Vec::new();
+            for id in 0..6u64 {
+                h.submit(Request::new(id, vec![3; 32], 24)).unwrap();
+                responses.push(h.recv().unwrap());
+            }
+            h.shutdown();
+            responses.sort_by_key(|r| r.id);
+            responses
+        };
+        let lanes = run(false);
+        let waved = run(true);
+        assert_eq!(lanes.len(), waved.len());
+        for (a, b) in lanes.iter().zip(&waved) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.miss_rate, b.miss_rate, "req {}", a.id);
+            assert_eq!(a.decode_energy_j, b.decode_energy_j, "req {}", a.id);
+            assert_eq!(a.steady_flash_bytes, b.steady_flash_bytes, "req {}", a.id);
+            assert_eq!(a.decode_flash_fetches, b.decode_flash_fetches, "req {}", a.id);
+        }
+        assert_eq!(combined_miss_rate(&lanes), combined_miss_rate(&waved));
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! growing the sweep must not require regenerating old baselines.
 //! Degenerate baselines (zero, missing, or non-finite values — the
 //! Reporter serializes non-finite as `null`) skip the relative check.
+//! The reverse is NOT symmetric: a candidate that reports `null` (or
+//! drops the metric) where the baseline holds a finite positive value
+//! has lost a measurement, and that flags as a regression rather than
+//! silently skipping.
 
 use anyhow::{anyhow, Context, Result};
 
@@ -110,13 +114,25 @@ pub fn diff_workload_reports(
         };
         diff.compared += 1;
         for &(metric, dir) in CHECKS {
-            let (Some(b), Some(c)) = (value(base_vals, metric), value(cand_vals, metric))
-            else {
-                continue;
+            let Some(b) = value(base_vals, metric) else {
+                continue; // no baseline measurement: nothing to compare
             };
             if b <= 0.0 {
                 continue; // degenerate baseline: no meaningful ratio
             }
+            let Some(c) = value(cand_vals, metric) else {
+                // the baseline measured this metric but the candidate
+                // reports null/non-finite or dropped the key — a lost
+                // measurement must fail the gate, not skip it
+                diff.regressions.push(Regression {
+                    cell: name.clone(),
+                    metric,
+                    baseline: b,
+                    candidate: f64::NAN,
+                    worsened_by: f64::INFINITY,
+                });
+                continue;
+            };
             let worsened_by = match dir {
                 Direction::LowerIsBetter => (c - b) / b,
                 Direction::HigherIsBetter => (b - c) / b,
@@ -239,6 +255,41 @@ mod tests {
         let cand = report(&[("a", 99.0, 1.0)]);
         let d = diff_workload_reports(base, cand.as_str(), 0.10).unwrap();
         assert!(!d.is_regression(), "{d:?}");
+    }
+
+    #[test]
+    fn candidate_null_where_baseline_is_finite_regresses() {
+        let base = report(&[("steady/lanes4/shared", 0.1, 500.0)]);
+        let cand = "{\"title\":\"t\",\"results\":[],\"metrics\":[{\"name\":\"steady/lanes4/shared\",\"values\":{\"e2e_p99_s\":null,\"goodput_tok_s\":510.0}}]}";
+        let d = diff_workload_reports(&base, cand, 0.10).unwrap();
+        assert_eq!(d.regressions.len(), 1, "{d:?}");
+        assert_eq!(d.regressions[0].metric, "e2e_p99_s");
+        assert!(d.regressions[0].candidate.is_nan());
+        assert!(d.regressions[0].worsened_by.is_infinite());
+    }
+
+    #[test]
+    fn candidate_dropping_a_measured_metric_regresses() {
+        let base = report(&[("steady/lanes4/shared", 0.1, 500.0)]);
+        let cand = "{\"title\":\"t\",\"results\":[],\"metrics\":[{\"name\":\"steady/lanes4/shared\",\"values\":{\"e2e_p99_s\":0.1}}]}";
+        let d = diff_workload_reports(&base, cand, 0.10).unwrap();
+        assert_eq!(d.regressions.len(), 1, "{d:?}");
+        assert_eq!(d.regressions[0].metric, "goodput_tok_s");
+    }
+
+    #[test]
+    fn wave_decode_mode_cells_are_added_not_regressions() {
+        // a baseline recorded before the wave decode mode existed must
+        // accept the new `/wave` cells without failing the gate
+        let base = report(&[("steady/lanes4/sharded4", 0.1, 500.0)]);
+        let cand = report(&[
+            ("steady/lanes4/sharded4", 0.1, 500.0),
+            ("steady/lanes4/sharded4/wave", 0.08, 620.0),
+        ]);
+        let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.added, vec!["steady/lanes4/sharded4/wave".to_string()]);
+        assert_eq!(d.compared, 1);
     }
 
     #[test]

@@ -89,6 +89,9 @@ pub struct WorkloadSummary {
     pub miss_rate: f64,
     /// Simulated decode energy per completed decode token.
     pub energy_per_token_j: f64,
+    /// Decode flash fetches per completed decode token — the quantity
+    /// wave-mode cross-request aggregation drives down vs lane mode.
+    pub fetches_per_token: f64,
     pub wall_s: f64,
 }
 
@@ -102,6 +105,11 @@ impl LoadReport {
             .map(|o| o.response.decode_tokens as u64)
             .sum();
         let energy: f64 = self.outcomes.iter().map(|o| o.response.decode_energy_j).sum();
+        let fetches: u64 = self
+            .outcomes
+            .iter()
+            .map(|o| o.response.decode_flash_fetches)
+            .sum();
         WorkloadSummary {
             requests: self.outcomes.len(),
             errors: self.errors.len(),
@@ -124,6 +132,11 @@ impl LoadReport {
             miss_rate: combined_miss_rate(self.outcomes.iter().map(|o| &o.response)),
             energy_per_token_j: if decode_tokens > 0 {
                 energy / decode_tokens as f64
+            } else {
+                0.0
+            },
+            fetches_per_token: if decode_tokens > 0 {
+                fetches as f64 / decode_tokens as f64
             } else {
                 0.0
             },
@@ -294,6 +307,7 @@ mod tests {
                 lane: 0,
                 steady_flash_bytes: 1,
                 steady_norm_bytes: 10.0,
+                decode_flash_fetches: 2 * req.decode_tokens as u64,
             })
         }
     }
@@ -334,6 +348,7 @@ mod tests {
         assert!(s.goodput_tok_s > 0.0);
         assert!(s.e2e_p99_s >= s.e2e_p50_s);
         assert!(s.energy_per_token_j > 0.0);
+        assert_eq!(s.fetches_per_token, 2.0, "sleepy lane emits 2 fetches/token");
         assert!(s.wall_s > 0.0);
     }
 
@@ -404,6 +419,7 @@ mod tests {
         assert_eq!(s.e2e_p50_s, 0.0);
         assert_eq!(s.goodput_tok_s, 0.0);
         assert_eq!(s.energy_per_token_j, 0.0);
+        assert_eq!(s.fetches_per_token, 0.0);
         assert!(s.miss_rate == 0.0, "no NaN from empty runs");
     }
 }

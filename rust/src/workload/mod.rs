@@ -35,5 +35,5 @@ pub use scenario::{
     WorkloadGen,
 };
 pub use diff::{diff_workload_reports, BenchDiff, Regression};
-pub use sweep::{run_sweep, CacheMode, SweepCell, SweepConfig};
+pub use sweep::{run_sweep, CacheMode, DecodeMode, SweepCell, SweepConfig};
 pub use trace_file::TraceFile;

@@ -10,6 +10,7 @@
 //! combined miss rate, energy per token) across PRs.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -47,6 +48,27 @@ impl CacheMode {
     }
 }
 
+/// How decode work is scheduled across concurrent requests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// N independent worker lanes, one request each to completion.
+    Lanes,
+    /// One wave engine batching up to `lanes` in-flight requests per
+    /// (layer, token) step over the shared sharded cache, so co-routed
+    /// requests share slice fetches (`serve::WaveEngine`). Only
+    /// meaningful — and only run — on [`CacheMode::Sharded`] cells.
+    Wave,
+}
+
+impl DecodeMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DecodeMode::Lanes => "lanes",
+            DecodeMode::Wave => "wave",
+        }
+    }
+}
+
 /// The sweep grid and per-lane serving template.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -61,6 +83,12 @@ pub struct SweepConfig {
     pub lanes: Vec<usize>,
     /// Cache topologies to sweep.
     pub cache_modes: Vec<CacheMode>,
+    /// Decode scheduling modes to sweep. [`DecodeMode::Wave`] cells run
+    /// only against sharded cache modes (the wave engine batches over
+    /// one `ShardedSliceCache`) and reuse the cell's `lanes` value as
+    /// the maximum wave width, so the two modes compare at equal
+    /// concurrency.
+    pub decode_modes: Vec<DecodeMode>,
     /// Requests per trace.
     pub requests: usize,
     /// Admission queue depth.
@@ -90,6 +118,7 @@ impl SweepConfig {
                 CacheMode::Sharded(4),
                 CacheMode::Sharded(16),
             ],
+            decode_modes: vec![DecodeMode::Lanes, DecodeMode::Wave],
             requests: 32,
             queue_depth: 8,
             span_s: 1.5,
@@ -120,6 +149,7 @@ pub struct SweepCell {
     pub scenario: &'static str,
     pub lanes: usize,
     pub cache_mode: CacheMode,
+    pub decode_mode: DecodeMode,
     pub summary: WorkloadSummary,
 }
 
@@ -141,73 +171,117 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
 
         for &lanes in &cfg.lanes {
             for &mode in &cfg.cache_modes {
-                let template = cfg.template.clone();
-                let trace_params = cfg.trace;
-                let base_seed = cfg.seed;
-                let shared_cache: Option<SharedCacheHandle> = match mode {
-                    CacheMode::Private => None,
-                    CacheMode::SharedMutex => Some(SharedCacheHandle::Mutex(
-                        CostModelServerBackend::shared_cache_for(&template),
-                    )),
-                    CacheMode::Sharded(n) => Some(SharedCacheHandle::Sharded(
-                        CostModelServerBackend::sharded_cache_for(&template, n.max(1)),
-                    )),
-                };
-                // report the topology actually CONSTRUCTED —
-                // sharded_cache_for may clamp so every shard fits one
-                // expert, and a cell must never report a topology it
-                // did not measure
-                let actual_mode = match &shared_cache {
-                    Some(SharedCacheHandle::Sharded(c)) => CacheMode::Sharded(c.n_shards()),
-                    _ => mode,
-                };
-                let mode_label = actual_mode.label();
-                let handle = ServerHandle::start(
-                    lanes.max(1),
-                    cfg.queue_depth.max(1),
-                    move |_lane| {
-                        let mut b = CostModelServerBackend::new(
-                            template.clone(),
-                            trace_params,
-                            base_seed,
-                        );
-                        b.shared_cache = shared_cache.clone();
-                        Ok(b)
-                    },
-                );
-                let report = run_open_loop(
-                    &handle,
-                    &reqs,
-                    &OpenLoopOpts { time_scale },
-                    |tr| vec![0u8; tr.prefill_tokens as usize],
-                )?;
-                handle.shutdown();
-                let s = report.summary();
-                let name = format!("{}/lanes{}/{mode_label}", sc.name(), lanes);
-                rep.record_metrics(
-                    &name,
-                    &[
-                        ("requests", s.requests as f64),
-                        ("errors", s.errors as f64),
-                        ("decode_tokens", s.decode_tokens as f64),
-                        ("e2e_p50_s", s.e2e_p50_s),
-                        ("e2e_p95_s", s.e2e_p95_s),
-                        ("e2e_p99_s", s.e2e_p99_s),
-                        ("queue_mean_s", s.queue_mean_s),
-                        ("queue_p95_s", s.queue_p95_s),
-                        ("submit_lag_max_s", s.submit_lag_max_s),
-                        ("goodput_tok_s", s.goodput_tok_s),
-                        ("miss_rate", s.miss_rate),
-                        ("energy_per_token_j", s.energy_per_token_j),
-                        ("wall_s", s.wall_s),
-                    ],
-                );
-                cells.push(SweepCell {
-                    scenario: sc.name(),
-                    lanes,
-                    cache_mode: actual_mode,
-                    summary: s,
-                });
+                for &decode_mode in &cfg.decode_modes {
+                    // the wave engine batches over ONE ShardedSliceCache;
+                    // private / global-mutex topologies have nothing for a
+                    // wave to aggregate on, so those cells stay lane-mode
+                    if decode_mode == DecodeMode::Wave
+                        && !matches!(mode, CacheMode::Sharded(_))
+                    {
+                        continue;
+                    }
+                    let template = cfg.template.clone();
+                    let trace_params = cfg.trace;
+                    let base_seed = cfg.seed;
+                    let shared_cache: Option<SharedCacheHandle> = match mode {
+                        CacheMode::Private => None,
+                        CacheMode::SharedMutex => Some(SharedCacheHandle::Mutex(
+                            CostModelServerBackend::shared_cache_for(&template),
+                        )),
+                        CacheMode::Sharded(n) => Some(SharedCacheHandle::Sharded(
+                            CostModelServerBackend::sharded_cache_for(&template, n.max(1)),
+                        )),
+                    };
+                    // report the topology actually CONSTRUCTED —
+                    // sharded_cache_for may clamp so every shard fits one
+                    // expert, and a cell must never report a topology it
+                    // did not measure
+                    let actual_mode = match &shared_cache {
+                        Some(SharedCacheHandle::Sharded(c)) => {
+                            CacheMode::Sharded(c.n_shards())
+                        }
+                        _ => mode,
+                    };
+                    let mode_label = actual_mode.label();
+                    let handle = match decode_mode {
+                        DecodeMode::Lanes => ServerHandle::start(
+                            lanes.max(1),
+                            cfg.queue_depth.max(1),
+                            move |_lane| {
+                                let mut b = CostModelServerBackend::new(
+                                    template.clone(),
+                                    trace_params,
+                                    base_seed,
+                                );
+                                b.shared_cache = shared_cache.clone();
+                                Ok(b)
+                            },
+                        ),
+                        DecodeMode::Wave => {
+                            let cache = match &shared_cache {
+                                Some(SharedCacheHandle::Sharded(c)) => Arc::clone(c),
+                                _ => unreachable!("wave cells run only on sharded caches"),
+                            };
+                            let factory = CostModelServerBackend::new(
+                                template,
+                                trace_params,
+                                base_seed,
+                            );
+                            ServerHandle::start_wave(
+                                lanes.max(1),
+                                cfg.queue_depth.max(1),
+                                cache,
+                                move |req| Ok(factory.wave_lane(req)),
+                            )
+                        }
+                    };
+                    let report = run_open_loop(
+                        &handle,
+                        &reqs,
+                        &OpenLoopOpts { time_scale },
+                        |tr| vec![0u8; tr.prefill_tokens as usize],
+                    )?;
+                    handle.shutdown();
+                    let s = report.summary();
+                    // lane-mode cells keep their pre-wave names so
+                    // bench-diff tracks existing baselines; wave cells add
+                    // a `/wave` suffix (a NEW grid dimension the diff
+                    // tolerates as added cells)
+                    let name = match decode_mode {
+                        DecodeMode::Lanes => {
+                            format!("{}/lanes{}/{mode_label}", sc.name(), lanes)
+                        }
+                        DecodeMode::Wave => {
+                            format!("{}/lanes{}/{mode_label}/wave", sc.name(), lanes)
+                        }
+                    };
+                    rep.record_metrics(
+                        &name,
+                        &[
+                            ("requests", s.requests as f64),
+                            ("errors", s.errors as f64),
+                            ("decode_tokens", s.decode_tokens as f64),
+                            ("e2e_p50_s", s.e2e_p50_s),
+                            ("e2e_p95_s", s.e2e_p95_s),
+                            ("e2e_p99_s", s.e2e_p99_s),
+                            ("queue_mean_s", s.queue_mean_s),
+                            ("queue_p95_s", s.queue_p95_s),
+                            ("submit_lag_max_s", s.submit_lag_max_s),
+                            ("goodput_tok_s", s.goodput_tok_s),
+                            ("miss_rate", s.miss_rate),
+                            ("energy_per_token_j", s.energy_per_token_j),
+                            ("fetches_per_token", s.fetches_per_token),
+                            ("wall_s", s.wall_s),
+                        ],
+                    );
+                    cells.push(SweepCell {
+                        scenario: sc.name(),
+                        lanes,
+                        cache_mode: actual_mode,
+                        decode_mode,
+                        summary: s,
+                    });
+                }
             }
         }
     }
@@ -285,14 +359,53 @@ mod tests {
         };
         let mut rep = Reporter::new("sweep-sharded-unit");
         let cells = run_sweep(&cfg, &mut rep).unwrap();
-        assert_eq!(cells.len(), 2);
+        // 2 sharded cache modes × {lanes, wave} decode modes
+        assert_eq!(cells.len(), 4);
         for c in &cells {
-            assert_eq!(c.summary.errors, 0, "{:?}", c.cache_mode);
+            assert_eq!(
+                c.summary.errors, 0,
+                "{:?}/{:?}",
+                c.cache_mode, c.decode_mode
+            );
             assert_eq!(c.summary.requests, 4);
+            assert!(c.summary.fetches_per_token.is_finite());
         }
         let names: Vec<String> =
             rep.metrics().iter().map(|m| m.name.clone()).collect();
         assert!(names.iter().any(|n| n.ends_with("/sharded1")), "{names:?}");
         assert!(names.iter().any(|n| n.ends_with("/sharded4")), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with("/sharded1/wave")), "{names:?}");
+        assert!(names.iter().any(|n| n.ends_with("/sharded4/wave")), "{names:?}");
+    }
+
+    #[test]
+    fn wave_cells_skip_unsharded_topologies() {
+        let mut cfg = SweepConfig::smoke(tiny_template());
+        cfg.scenarios = vec![Scenario::Steady];
+        cfg.lanes = vec![2];
+        cfg.cache_modes =
+            vec![CacheMode::Private, CacheMode::SharedMutex, CacheMode::Sharded(2)];
+        cfg.decode_modes = vec![DecodeMode::Wave];
+        cfg.requests = 3;
+        cfg.span_s = 0.05;
+        cfg.shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        let mut rep = Reporter::new("sweep-wave-unit");
+        let cells = run_sweep(&cfg, &mut rep).unwrap();
+        // only the sharded topology produces a wave cell
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].decode_mode, DecodeMode::Wave);
+        assert!(matches!(cells[0].cache_mode, CacheMode::Sharded(2)));
+        assert_eq!(cells[0].summary.errors, 0);
+        assert_eq!(cells[0].summary.requests, 3);
+        assert!(rep.metrics()[0].name.ends_with("/sharded2/wave"));
     }
 }

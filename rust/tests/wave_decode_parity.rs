@@ -1,0 +1,187 @@
+//! Wave-decode parity + cross-request fetch aggregation.
+//!
+//! Two properties anchor the wave engine:
+//!
+//! * **batch = 1 is bit-exact** with the per-request `ServeLoop` path on
+//!   the same sharded cache topology — token counts, expert counters,
+//!   miss/hit statistics, steady-state bytes, fetch counts, and simulated
+//!   energies are all EQUAL (not approximately equal: the wave step is
+//!   the same op sequence, so the floats match bit for bit);
+//! * **co-routed requests share fetches**: N requests routed to the same
+//!   experts in one wave pay the flash bill exactly once — the first
+//!   walk fills, every later walk hits the just-filled slice.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use slicemoe::cache::{ShardedSliceCache, WarmupStrategy};
+use slicemoe::memhier::Phase;
+use slicemoe::model::ModelDesc;
+use slicemoe::serve::{
+    CostModelBackend, ExecPlan, ExpertBackend, ServeConfig, ServeLoop, WaveEngine,
+};
+use slicemoe::sim::TraceParams;
+
+fn tiny_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+    cfg.cache_bytes = cfg.unit_bytes() * 8;
+    cfg
+}
+
+fn sharded(cfg: &ServeConfig, shards: usize) -> Arc<ShardedSliceCache> {
+    let mut c = ShardedSliceCache::new(cfg.cache_bytes, shards);
+    c.set_heterogeneous(cfg.heterogeneous_lsb);
+    Arc::new(c)
+}
+
+#[test]
+fn wave_batch_of_one_is_bit_exact_with_serve_loop() {
+    // both the unconstrained path (union-of-shards txns) and an active
+    // miss budget (all-shard txns + salvage) must reduce to the
+    // per-request op sequence at batch = 1
+    for shards in [1usize, 4] {
+        for constraint in [f64::INFINITY, 0.05] {
+            let ctx = format!("shards {shards}, constraint {constraint}");
+            let mut cfg = tiny_cfg();
+            cfg.constraint = constraint;
+
+            // per-request reference on a fresh sharded cache
+            let ref_cache = sharded(&cfg, shards);
+            let mut reference =
+                ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&ref_cache));
+            let mut be =
+                CostModelBackend::new(&cfg.desc, TraceParams::default(), 32, cfg.seed);
+            reference.prefill(&mut be, 32).unwrap();
+            for _ in 0..24 {
+                reference.decode_token(&mut be).unwrap();
+            }
+
+            // wave engine, batch = 1, fresh identical cache + backend
+            let cache = sharded(&cfg, shards);
+            let mut eng = WaveEngine::new(Arc::clone(&cache), 1);
+            let be = CostModelBackend::new(&cfg.desc, TraceParams::default(), 32, cfg.seed);
+            eng.admit(0, cfg.clone(), be, 32, 24).unwrap();
+            let mut done = Vec::new();
+            while !eng.is_idle() {
+                done.extend(eng.step_wave().unwrap());
+            }
+            assert_eq!(done.len(), 1, "{ctx}");
+            let mut d = done.pop().unwrap();
+            assert_eq!(d.decode_tokens, 24, "{ctx}");
+            let w = &mut d.lane;
+
+            assert_eq!(w.ledger.decode_steps, reference.ledger.decode_steps, "{ctx}");
+            assert_eq!(w.prefill_tokens, reference.prefill_tokens, "{ctx}");
+            assert_eq!(w.counters.n_high, reference.counters.n_high, "{ctx}");
+            assert_eq!(w.counters.n_low, reference.counters.n_low, "{ctx}");
+            assert_eq!(w.counters.n_dropped, reference.counters.n_dropped, "{ctx}");
+            assert_eq!(
+                w.counters.n_substituted,
+                reference.counters.n_substituted,
+                "{ctx}"
+            );
+            assert_eq!(w.counters.n_degraded, reference.counters.n_degraded, "{ctx}");
+            assert_eq!(w.counters.n_critical, reference.counters.n_critical, "{ctx}");
+            assert_eq!(w.steady_accesses, reference.steady_accesses, "{ctx}");
+            assert_eq!(w.steady_flash, reference.steady_flash, "{ctx}");
+            assert_eq!(
+                w.decode_flash_fetches,
+                reference.decode_flash_fetches,
+                "{ctx}"
+            );
+            assert_eq!(w.miss_rate(), reference.miss_rate(), "{ctx}");
+            assert_eq!(
+                w.ledger.decode_energy_j(),
+                reference.ledger.decode_energy_j(),
+                "{ctx}"
+            );
+            assert_eq!(
+                w.ledger.prefill_energy_j(),
+                reference.ledger.prefill_energy_j(),
+                "{ctx}"
+            );
+            assert_eq!(w.hit_rates(), reference.hit_rates(), "{ctx}");
+            assert_eq!(cache.stats(), ref_cache.stats(), "{ctx}");
+            cache.check_invariants().unwrap();
+        }
+    }
+}
+
+/// Deterministic backend: every request gates to the SAME fixed
+/// probability vector, so a whole wave co-routes to one top-k set.
+struct FixedGate {
+    prefill_tokens: usize,
+    probs: Vec<f64>,
+}
+
+impl ExpertBackend for FixedGate {
+    fn gate(&mut self, phase: Phase, _layer: usize) -> Result<Vec<Vec<f64>>> {
+        Ok(match phase {
+            Phase::Prefill => vec![self.probs.clone(); self.prefill_tokens],
+            _ => vec![self.probs.clone()],
+        })
+    }
+
+    fn run_experts(&mut self, _phase: Phase, _layer: usize, _plan: &ExecPlan) -> Result<()> {
+        Ok(())
+    }
+}
+
+fn fixed_gate(cfg: &ServeConfig, prefill_tokens: usize) -> FixedGate {
+    let n = cfg.desc.n_experts;
+    let raw: Vec<f64> = (0..n).map(|e| 1.0 / (e + 1) as f64).collect();
+    let total: f64 = raw.iter().sum();
+    FixedGate {
+        prefill_tokens,
+        probs: raw.into_iter().map(|p| p / total).collect(),
+    }
+}
+
+#[test]
+fn co_routed_requests_pay_the_fetch_bill_exactly_once() {
+    // Empty warmup clears the cache at the prefill->decode boundary, so
+    // the first decode token starts cold and every routed slice misses
+    let mut cfg = tiny_cfg();
+    cfg.warmup = WarmupStrategy::Empty;
+
+    // solo reference: the flash-fetch bill of ONE cold request's token
+    let mut eng = WaveEngine::new(sharded(&cfg, 4), 1);
+    eng.admit(0, cfg.clone(), fixed_gate(&cfg, 8), 8, 1).unwrap();
+    let done = eng.step_wave().unwrap();
+    assert_eq!(done.len(), 1);
+    let solo = done[0].lane.decode_flash_fetches;
+    assert!(solo > 0, "a cold decode token must fetch its slices");
+
+    // four co-routed requests in ONE wave: the first (admission order)
+    // pays exactly the solo bill, the other three hit the just-filled
+    // slices and fetch nothing
+    let mut eng = WaveEngine::new(sharded(&cfg, 4), 4);
+    for id in 0..4 {
+        eng.admit(id, cfg.clone(), fixed_gate(&cfg, 8), 8, 1).unwrap();
+    }
+    let mut done = eng.step_wave().unwrap();
+    assert_eq!(done.len(), 4);
+    done.sort_by_key(|d| d.id);
+    assert_eq!(
+        done[0].lane.decode_flash_fetches, solo,
+        "first co-routed request pays the solo fetch bill, once"
+    );
+    for d in &done[1..] {
+        assert_eq!(
+            d.lane.decode_flash_fetches, 0,
+            "request {} re-paid fetches the wave already filled",
+            d.id
+        );
+    }
+    // per-token compute is still charged per request: everyone executed
+    for d in &done {
+        let c = d.lane.counters;
+        assert_eq!(
+            c.n_high + c.n_low + c.n_dropped,
+            (cfg.desc.n_layers * cfg.desc.top_k) as u64,
+            "request {} expert-execution conservation",
+            d.id
+        );
+    }
+}

@@ -105,6 +105,61 @@ fn replay(trace: &[TraceRequest]) -> Vec<slicemoe::server::Response> {
     responses
 }
 
+/// The frozen `Tenants` golden trace: `generate(12, 0x60_1D)` over
+/// `short_shape()`, computed once and pinned as literals so any silent
+/// change to the RNG stream, the gaussian-clamp length sampler, the
+/// Zipf tenant draw, or the session/think-time arrival process breaks
+/// this test instead of silently shifting every downstream benchmark.
+/// Fields: (id, arrival_s, prefill_tokens, decode_tokens, tenant,
+/// affinity_seed). Integer fields are exact; arrivals are checked to
+/// 1e-9 (they pass through libm `ln`, where the last ulp is platform
+/// lore, but 1e-9 is ~1e7 ulp at this magnitude).
+const GOLDEN_TENANTS_TRACE: [(u64, f64, u32, u32, u32, u64); 12] = [
+    (0, 0.4684230149660465, 24, 14, 1, 0x08B2_072A_A148_B22D),
+    (1, 1.002899804090587, 63, 13, 1, 0x08B2_072A_A148_B22D),
+    (2, 1.076271765228529, 23, 10, 1, 0x08B2_072A_A148_B22D),
+    (3, 1.2494633474755523, 50, 12, 1, 0x08B2_072A_A148_B22D),
+    (4, 1.4120442707193746, 19, 11, 0, 0x4B80_7878_97DD_D0D3),
+    (5, 1.4139351539090528, 56, 14, 0, 0x4B80_7878_97DD_D0D3),
+    (6, 1.493187280250112, 23, 12, 1, 0x08B2_072A_A148_B22D),
+    (7, 1.6776156529746873, 64, 12, 1, 0x08B2_072A_A148_B22D),
+    (8, 1.7055200300548687, 64, 13, 0, 0x4B80_7878_97DD_D0D3),
+    (9, 1.7542891579395563, 64, 14, 1, 0x08B2_072A_A148_B22D),
+    (10, 2.5169717268902305, 58, 12, 1, 0x08B2_072A_A148_B22D),
+    (11, 3.1705508145898404, 64, 12, 1, 0x08B2_072A_A148_B22D),
+];
+
+/// Total decode tokens of the golden trace — the literal every replay
+/// below must conserve.
+const GOLDEN_DECODE_TOTAL: u64 = 149;
+
+#[test]
+fn generated_trace_matches_frozen_golden_values() {
+    let reqs = Scenario::Tenants.build(short_shape()).generate(12, 0x60_1D);
+    assert_eq!(reqs.len(), GOLDEN_TENANTS_TRACE.len());
+    for (r, &(id, arrival, pre, dec, tenant, aff)) in
+        reqs.iter().zip(&GOLDEN_TENANTS_TRACE)
+    {
+        assert_eq!(r.id, id);
+        assert!(
+            (r.arrival_s - arrival).abs() < 1e-9,
+            "req {id}: arrival {} vs golden {arrival}",
+            r.arrival_s
+        );
+        assert_eq!(r.prefill_tokens, pre, "req {id} prefill");
+        assert_eq!(r.decode_tokens, dec, "req {id} decode");
+        assert_eq!(r.tenant, tenant, "req {id} tenant");
+        let bias = r.bias.expect("tenant requests carry bias");
+        assert_eq!(bias.affinity_seed, aff, "req {id} affinity seed");
+        assert_eq!(bias.popularity_weight, 0.6, "req {id} popularity weight");
+        // per-tenant popularity exponent: alpha_base + alpha_spread·spread
+        let spread = (tenant as f64 / 3.0) * 2.0 - 1.0;
+        assert_eq!(bias.popularity_alpha, 0.9 + 0.4 * spread, "req {id} alpha");
+    }
+    let total: u64 = reqs.iter().map(|r| r.decode_tokens as u64).sum();
+    assert_eq!(total, GOLDEN_DECODE_TOTAL);
+}
+
 #[test]
 fn golden_replay_pins_summary_stats_under_fixed_seed() {
     let preset = Scenario::Tenants.build(short_shape());
@@ -131,10 +186,10 @@ fn golden_replay_pins_summary_stats_under_fixed_seed() {
     }
     assert_eq!(combined_miss_rate(&a), combined_miss_rate(&b));
 
-    // summary counts are pinned by the trace, not by replay timing
+    // summary counts are pinned by the trace to the FROZEN literal, not
+    // by replay timing or by whatever the generator currently emits
     let decode_total: usize = a.iter().map(|r| r.decode_tokens).sum();
-    let expect: u64 = reqs.iter().map(|r| r.decode_tokens as u64).sum();
-    assert_eq!(decode_total as u64, expect);
+    assert_eq!(decode_total as u64, GOLDEN_DECODE_TOTAL);
     // tenant bias actually reached the backend: biased requests exist
     assert!(reqs.iter().all(|r| r.bias.is_some()));
 }
