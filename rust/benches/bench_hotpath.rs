@@ -270,6 +270,44 @@ fn main() {
         }
     }
 
+    // flight-recorder overhead on the decode loop: the identical
+    // 48-token decode with the recorder disabled (the default), enabled
+    // (per-request plant with an ample ring — the serve-path
+    // configuration), and ring-saturated (capacity 32, so nearly every
+    // event takes the drop-and-count branch). tokens/s per variant lands
+    // in the BENCH JSON; the off↔on gap is the observation-only
+    // overhead budget, and saturated must never be slower than on
+    // (dropping is cheaper than recording).
+    {
+        use slicemoe::serve::{CostModelBackend, ServeConfig, ServeLoop};
+        use slicemoe::telemetry::{Clock, Recorder};
+
+        let mut cfg = ServeConfig::gsm8k_default(ModelDesc::deepseek_v2_lite());
+        cfg.cache_bytes = cfg.unit_bytes() * 96;
+        let tokens = 48usize;
+
+        for variant in ["off", "on", "saturated"] {
+            let name = format!("telemetry/decode 48 tokens (recorder {variant})");
+            let mut lp = ServeLoop::new(cfg.clone());
+            let mut be =
+                CostModelBackend::new(&cfg.desc, TraceParams::default(), 64, cfg.seed);
+            lp.prefill(&mut be, 64).unwrap();
+            report.record(bench_units(&name, 1, 10, tokens as f64, || {
+                // fresh per-iteration recorder, exactly as the scheduler
+                // plants one per admitted request
+                lp.recorder = match variant {
+                    "on" => Recorder::enabled(1, Clock::default(), 65_536, 0.1),
+                    "saturated" => Recorder::enabled(1, Clock::default(), 32, 0.1),
+                    _ => Recorder::disabled(),
+                };
+                for _ in 0..tokens {
+                    lp.decode_token(&mut be).unwrap();
+                }
+                std::hint::black_box(lp.recorder.dropped_events());
+            }));
+        }
+    }
+
     // quantization throughput (weight-store build path)
     {
         let mut rng = Rng::new(4);

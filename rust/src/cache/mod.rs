@@ -9,6 +9,6 @@ pub mod sharded;
 pub mod slice_cache;
 pub mod warmup;
 
-pub use sharded::{ShardTxn, ShardedSliceCache};
+pub use sharded::{RebalanceSummary, ShardTxn, ShardedSliceCache};
 pub use slice_cache::{CacheOps, CacheStats, Ensure, EnsureOutcome, SliceCache};
-pub use warmup::{apply as apply_warmup, apply_sharded, HotnessTable, WarmupStrategy};
+pub use warmup::{apply as apply_warmup, apply_sharded, HotnessTable, ReshapeSummary, WarmupStrategy};

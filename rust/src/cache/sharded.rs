@@ -81,6 +81,17 @@ impl AtomicStats {
     }
 }
 
+/// What one rebalance pass did — surfaced to telemetry (and ignored by
+/// callers that predate it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RebalanceSummary {
+    /// Total budget moved between shards (Σ |new cap − old cap| / 2).
+    pub moved_bytes: u64,
+    /// Shards that showed pressure (evictions + denials) since the last
+    /// pass.
+    pub pressured_shards: u32,
+}
+
 /// Per-shard pressure baselines at the last rebalance.
 #[derive(Debug)]
 struct RebalanceState {
@@ -351,13 +362,16 @@ impl ShardedSliceCache {
     // -- slack rebalancing -------------------------------------------------
 
     /// Count one completed transaction; every [`REBALANCE_EVERY`]-th
-    /// triggers a slack-rebalance pass. Call with NO shard locks held.
-    pub fn maybe_rebalance(&self) {
+    /// triggers a slack-rebalance pass (returning its summary so
+    /// observers can record it). Call with NO shard locks held.
+    pub fn maybe_rebalance(&self) -> Option<RebalanceSummary> {
         if self.shards.len() == 1 {
-            return;
+            return None;
         }
         if (self.txn_count.fetch_add(1, Ordering::Relaxed) + 1) % REBALANCE_EVERY == 0 {
-            self.rebalance();
+            Some(self.rebalance())
+        } else {
+            None
         }
     }
 
@@ -371,10 +385,10 @@ impl ShardedSliceCache {
     /// collapsed could never recover on a full cache, permanently
     /// flash-streaming its experts. `Σ capacity` is preserved exactly.
     /// A no-op at `shards = 1`.
-    pub fn rebalance(&self) {
+    pub fn rebalance(&self) -> RebalanceSummary {
         let n = self.shards.len();
         if n == 1 {
-            return;
+            return RebalanceSummary::default();
         }
         let mut rb = self.rebal.lock().expect("rebalance state poisoned");
         let mut guards: Vec<MutexGuard<'_, SliceCache>> = self
@@ -441,10 +455,16 @@ impl ShardedSliceCache {
             }
         }
 
+        let mut moved = 0u64;
         for i in 0..n {
+            moved += caps[i].abs_diff(guards[i].capacity());
             guards[i].set_capacity(caps[i]);
             // last-resort donor evictions must reach the atomic aggregate
             self.stats.fold_delta(&entry_stats[i], &guards[i].stats);
+        }
+        RebalanceSummary {
+            moved_bytes: moved / 2,
+            pressured_shards: pressure.iter().filter(|&&p| p > 0).count() as u32,
         }
     }
 

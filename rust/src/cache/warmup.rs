@@ -86,6 +86,17 @@ impl HotnessTable {
     }
 }
 
+/// What a warmup reshape left behind — telemetry-facing, computed after
+/// the reshape from the cache's own end state (so it is observation-only:
+/// returning it never changes which slices were retained).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReshapeSummary {
+    /// Slices resident after the reshape.
+    pub retained: u64,
+    /// Bytes resident after the reshape.
+    pub retained_bytes: u64,
+}
+
 /// Cache initial-state strategy at the prefill→decode transition (Fig 10).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WarmupStrategy {
@@ -136,7 +147,7 @@ pub fn apply<S: Fn(SliceKey) -> u64>(
     target_bytes: u64,
     n_layers: usize,
     slice_bytes: S,
-) {
+) -> ReshapeSummary {
     apply_ex(cache, strategy, hot, target_bytes, n_layers, slice_bytes, true)
 }
 
@@ -152,7 +163,7 @@ pub fn apply_ex<S: Fn(SliceKey) -> u64>(
     n_layers: usize,
     slice_bytes: S,
     single_head_lsb: bool,
-) {
+) -> ReshapeSummary {
     match strategy {
         WarmupStrategy::Empty => cache.clear(),
         WarmupStrategy::LastLayer { keep_layers } => {
@@ -197,6 +208,10 @@ pub fn apply_ex<S: Fn(SliceKey) -> u64>(
             cache.reorder_by(|k| hot.score(k));
             cache.reset_freq();
         }
+    }
+    ReshapeSummary {
+        retained: cache.len() as u64,
+        retained_bytes: cache.used_bytes(),
     }
 }
 
@@ -308,7 +323,7 @@ pub fn apply_sharded<S: Fn(SliceKey) -> u64>(
     n_layers: usize,
     slice_bytes: S,
     single_head_lsb: bool,
-) {
+) -> ReshapeSummary {
     let n = cache.n_shards();
     match strategy {
         WarmupStrategy::Empty => cache.for_each_shard(|_, c| c.clear()),
@@ -400,6 +415,10 @@ pub fn apply_sharded<S: Fn(SliceKey) -> u64>(
                 c.reset_freq();
             });
         }
+    }
+    ReshapeSummary {
+        retained: cache.len() as u64,
+        retained_bytes: cache.used_bytes(),
     }
 }
 

@@ -24,6 +24,9 @@
 //!     bursty / diurnal / multi-tenant sessions), the SMWT trace
 //!     record/replay format, the open-loop load harness, and the
 //!     `serve-bench` scenario × lane × cache-mode sweep;
+//!   - [`telemetry`] — the disabled-by-default flight recorder: per-token
+//!     spans, per-expert miss/energy attribution, time-binned serving
+//!     series, and the `serve-trace` Chrome-trace export;
 //!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
 //!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
 //!     Fig 7 cost model, AMAT quantization);
@@ -51,6 +54,7 @@ pub mod runtime;
 pub mod serve;
 pub mod server;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod workload;
 

@@ -46,6 +46,8 @@ simulator commands (paper-scale geometry):
   sim                   one configurable episode (all knobs exposed)
   serve-sim             multi-lane scheduler over the cost-model backend
   serve-bench           open-loop workload sweep -> BENCH_workload.json
+  serve-trace           run one preset with the flight recorder on and
+                        export a Chrome/Perfetto trace JSON + attribution
   bench-diff            compare two BENCH_workload.json (CI gate: exits
                         nonzero on >10% p99/goodput regression)
 
@@ -183,6 +185,7 @@ fn dispatch(cmd: &str, rest: &[String]) -> Result<()> {
         }
         "serve-sim" => serve_sim_cmd(rest),
         "serve-bench" => serve_bench_cmd(rest),
+        "serve-trace" => serve_trace_cmd(rest),
         "bench-diff" => bench_diff_cmd(rest),
         #[cfg(feature = "pjrt")]
         "table1" | "generate" | "serve" | "calibrate" => engine_cmds::dispatch(cmd, rest),
@@ -383,6 +386,10 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
         .opt("trace-dir", "", "write each scenario's .smwt trace here")
         .opt("out", "BENCH_workload.json", "output JSON path")
         .switch("smoke", "fast CI path (few requests, short span)")
+        .switch(
+            "telemetry",
+            "record flight-recorder telemetry per cell (informational {cell}/telemetry rows)",
+        )
         .parse(rest, "serve-bench")?;
 
     let desc = model_flag(&a)?;
@@ -398,6 +405,7 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
     };
     cfg.seed = a.usize("seed")? as u64;
     cfg.queue_depth = a.usize("queue")?.max(1);
+    cfg.telemetry = a.bool("telemetry");
     // explicit flags always win; --smoke only changes the DEFAULTS of
     // requests/span/lanes
     if !a.bool("smoke") || a.is_set("requests") {
@@ -474,6 +482,148 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
         );
     }
     println!("\n{} cells clean across {} scenario(s)", cells.len(), cfg.scenarios.len());
+    Ok(())
+}
+
+/// Flight-recorder export: run one workload preset with telemetry on and
+/// write a Chrome trace-event (Perfetto-loadable) JSON file carrying the
+/// request/token/layer spans, the per-expert attribution table, and the
+/// time-binned serving series.
+fn serve_trace_cmd(rest: &[String]) -> Result<()> {
+    use std::sync::Arc;
+
+    use slicemoe::serve::ServeConfig;
+    use slicemoe::server::{request_seed, CostModelServerBackend, ServerHandle};
+    use slicemoe::sim::{TraceParams, WorkloadParams};
+    use slicemoe::telemetry::{trace_json, Clock, TelemetryHub};
+    use slicemoe::workload::{run_open_loop, OpenLoopOpts, Scenario};
+
+    let a = Args::new()
+        .opt("model", "tiny", "model geometry (tiny|deepseek|qwen)")
+        .opt("scenario", "steady", "workload preset (steady|bursty|diurnal|tenants)")
+        .opt("requests", "12", "requests in the trace")
+        .opt("max-batch", "4", "wave width (wave mode) / worker lanes (lanes mode)")
+        .opt("decode-mode", "wave", "wave|lanes")
+        .opt("cache-experts", "12", "cache capacity in high-bit experts")
+        .opt("cache-shards", "4", "shared-cache shards (wave mode)")
+        .opt("constraint", "inf", "miss-rate constraint (or 'inf')")
+        .opt("queue", "8", "admission queue depth")
+        .opt("span", "0.5", "host seconds the trace is compressed to")
+        .opt("seed", "4269", "base seed")
+        .opt("bin-width", "0.05", "series bin width in seconds")
+        .opt("ring-capacity", "65536", "per-request event-ring capacity")
+        .opt("out", "trace_serve.json", "output trace JSON path")
+        .switch("smoke", "fast CI path (few requests, short span)")
+        .parse(rest, "serve-trace")?;
+
+    let desc = model_flag(&a)?;
+    let smoke = a.bool("smoke");
+    let requests = if smoke && !a.is_set("requests") { 6 } else { a.usize("requests")? };
+    let span_s = if smoke && !a.is_set("span") { 0.2 } else { a.f64("span")? };
+
+    let mut template = ServeConfig::gsm8k_default(desc.clone());
+    template.cache_bytes = template.unit_bytes() * a.usize("cache-experts")?.max(1) as u64;
+    template.constraint = parse_constraint(&a.str("constraint"))?;
+    template.router = RouterConfig::dbsc(desc.top_k);
+
+    let sc = Scenario::parse(&a.str("scenario"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scenario '{}'", a.str("scenario")))?;
+    let base_seed = a.usize("seed")? as u64;
+    let reqs = sc
+        .build(WorkloadParams::default())
+        .generate(requests, request_seed(base_seed, sc.seed_salt()));
+    let arrival_span = reqs.last().map(|r| r.arrival_s).unwrap_or(0.0);
+    let time_scale = if arrival_span > 0.0 { span_s / arrival_span } else { 1.0 };
+
+    let clock = Clock::default();
+    let hub = Arc::new(
+        TelemetryHub::new(clock.clone())
+            .with_ring_capacity(a.usize("ring-capacity")?.max(1))
+            .with_bin_width(a.f64("bin-width")?.max(1e-3)),
+    );
+
+    let queue = a.usize("queue")?.max(1);
+    let width = a.usize("max-batch")?.max(1);
+    let trace_params = TraceParams::default();
+    let handle = match a.str("decode-mode").as_str() {
+        "wave" => {
+            let shards = a.usize("cache-shards")?.max(1);
+            let cache = CostModelServerBackend::sharded_cache_for(&template, shards);
+            let factory =
+                CostModelServerBackend::new(template.clone(), trace_params, base_seed);
+            ServerHandle::start_wave_ex(
+                width,
+                queue,
+                cache,
+                clock.clone(),
+                Some(Arc::clone(&hub)),
+                move |req| Ok(factory.wave_lane(req)),
+            )
+        }
+        "lanes" => {
+            let lane_hub = Arc::clone(&hub);
+            let lane_template = template.clone();
+            ServerHandle::start_ex(
+                width,
+                queue,
+                clock.clone(),
+                Some(Arc::clone(&hub)),
+                move |_lane| {
+                    Ok(CostModelServerBackend::new(
+                        lane_template.clone(),
+                        trace_params,
+                        base_seed,
+                    )
+                    .with_telemetry(Arc::clone(&lane_hub)))
+                },
+            )
+        }
+        m => bail!("bad --decode-mode '{m}' (wave|lanes)"),
+    };
+    let report = run_open_loop(&handle, &reqs, &OpenLoopOpts { time_scale, clock }, |tr| {
+        vec![0u8; tr.prefill_tokens as usize]
+    })?;
+    handle.shutdown();
+    if !report.errors.is_empty() {
+        bail!(
+            "{} serving error(s), first: {}",
+            report.errors.len(),
+            report.errors[0]
+        );
+    }
+
+    let snap = hub.snapshot();
+    let doc = trace_json::render(&snap);
+    let out = a.str("out");
+    std::fs::write(&out, doc.render())
+        .map_err(|e| anyhow::anyhow!("write {out}: {e}"))?;
+
+    let s = report.summary();
+    println!(
+        "{} requests ({}, {}) -> {} decode tokens in {:.2}s",
+        s.requests,
+        sc.name(),
+        a.str("decode-mode"),
+        s.decode_tokens,
+        s.wall_s
+    );
+    println!(
+        "recorded {} events ({} dropped), {} request spans, {} attribution rows, {} series bins",
+        snap.events.len(),
+        snap.dropped_events,
+        snap.requests.len(),
+        snap.attrib.n_rows(),
+        snap.bins.n_bins()
+    );
+    println!(
+        "flash {} B over {} fetches | msb misses {} | evictions {} | energy {:.3} J",
+        snap.attrib.flash_bytes,
+        snap.attrib.flash_fetches,
+        snap.attrib.msb_misses,
+        snap.attrib.evictions,
+        snap.attrib.total_energy_j()
+    );
+    println!("trace -> {out} (load in chrome://tracing or ui.perfetto.dev)");
     Ok(())
 }
 

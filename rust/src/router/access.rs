@@ -21,7 +21,7 @@
 //!       └─ denied ─► degrade to Low (MSB-only compute, no drop)
 //! ```
 
-use crate::cache::{CacheOps, HotnessTable, ShardedSliceCache, SliceCache};
+use crate::cache::{CacheOps, HotnessTable, RebalanceSummary, ShardedSliceCache, SliceCache};
 use crate::model::descriptor::{ModelDesc, SliceKey};
 use crate::quant::MatConfig;
 
@@ -63,6 +63,24 @@ pub struct AccessOutcome {
     pub realized_mass: f64,
     /// Raw-probability mass of hard-dropped experts.
     pub dropped_raw_mass: f64,
+    /// Cache-plane lookup outcomes this step, mirroring exactly what the
+    /// walk contributed to [`crate::cache::CacheStats`] (the salvage
+    /// LRU-touch counts as an MSB hit, like the stats it feeds).
+    pub msb_hits: u32,
+    pub msb_misses: u32,
+    pub lsb_hits: u32,
+    pub lsb_misses: u32,
+    /// Slices fetched from flash this step (in fetch order). Empty in the
+    /// steady state, so carrying it costs no allocation on the hit path.
+    pub fills: Vec<SliceKey>,
+    /// Victims evicted by this step's fills (in eviction order).
+    pub evicted: Vec<SliceKey>,
+    /// Experts hard-dropped (denied fetch, no salvage candidate).
+    pub dropped_experts: Vec<u16>,
+    /// Experts degraded High→Low by a denied LSB fetch.
+    pub degraded_experts: Vec<u16>,
+    /// Set when this access triggered a shard rebalance (sharded path).
+    pub rebalanced: Option<RebalanceSummary>,
 }
 
 /// The selection-phase product: routed experts plus the routing-quality
@@ -175,7 +193,7 @@ pub fn access_layer_sharded(
     let route = route_layer(cfg, probs, budget, |e| {
         mask.as_ref().is_some_and(|m| m[e])
     });
-    let out = {
+    let mut out = {
         let mut txn = if budget.active() {
             cache.txn_all()
         } else {
@@ -183,7 +201,7 @@ pub fn access_layer_sharded(
         };
         walk_layer(cfg, route, probs, layer, desc, mat, &mut txn, budget, hot, evict_scratch)
     };
-    cache.maybe_rebalance();
+    out.rebalanced = cache.maybe_rebalance();
     out
 }
 
@@ -211,8 +229,8 @@ pub fn walk_layer<C: CacheOps>(
     };
     let msb_bytes = desc.msb_slice_bytes(mat);
     let lsb_bytes = desc.lsb_slice_bytes(mat);
-    // evictions are not consumed by the serving path today; the buffer
-    // exists so the fill path allocates nothing in the steady state
+    // the buffer exists so the fill path allocates nothing in the steady
+    // state; its final contents are copied into `out.evicted` below
     evict_scratch.clear();
 
     let mut hot = hot;
@@ -228,10 +246,14 @@ pub fn walk_layer<C: CacheOps>(
         let mut expert = r.expert;
         let mut substituted_for = None;
 
-        if !cache.lookup(msb_key) {
+        if cache.lookup(msb_key) {
+            out.msb_hits += 1;
+        } else {
+            out.msb_misses += 1;
             if budget.try_fetch(msb_bytes) {
                 out.flash_bytes += msb_bytes;
                 out.flash_fetches += 1;
+                out.fills.push(msb_key);
                 // TooLarge = pathological capacity; execute streaming from
                 // flash (already charged), do not cache
                 let _ = cache.ensure_into(msb_key, msb_bytes, evict_scratch);
@@ -254,11 +276,13 @@ pub fn walk_layer<C: CacheOps>(
                         substituted_for = Some(r.expert);
                         out.n_substituted += 1;
                         cache.lookup(SliceKey::msb(layer, e)); // touch LRU
+                        out.msb_hits += 1; // the touch is a guaranteed hit
                     }
                     None => {
                         out.dropped_mass += r.gate;
                         out.dropped_raw_mass += r.prob;
                         out.n_dropped += 1;
+                        out.dropped_experts.push(r.expert as u16);
                         continue;
                     }
                 }
@@ -272,7 +296,10 @@ pub fn walk_layer<C: CacheOps>(
             if let Some(h) = hot.as_deref_mut() {
                 h.touch(lsb_key);
             }
-            if !cache.lookup(lsb_key) {
+            if cache.lookup(lsb_key) {
+                out.lsb_hits += 1;
+            } else {
+                out.lsb_misses += 1;
                 // DBSC treats the LSB as a lowest-priority upgrade; the
                 // uniform high-bit baseline is monolithic (no slice
                 // choice), so its residual plane fetches at normal
@@ -285,10 +312,12 @@ pub fn walk_layer<C: CacheOps>(
                 if admitted {
                     out.flash_bytes += lsb_bytes;
                     out.flash_fetches += 1;
+                    out.fills.push(lsb_key);
                     let _ = cache.ensure_into(lsb_key, lsb_bytes, evict_scratch);
                 } else if precision == Precision::High {
                     precision = Precision::Low;
                     out.n_degraded += 1;
+                    out.degraded_experts.push(expert as u16);
                 }
             }
         }
@@ -308,6 +337,11 @@ pub fn walk_layer<C: CacheOps>(
             Precision::Full => 4 * desc.expert_params() as u64,
         };
         out.execs.push(ExpertExec { expert, gate: r.gate, precision, substituted_for });
+    }
+    // surface this step's victims (telemetry); the scratch buffer itself
+    // stays caller-owned so the fill path allocates nothing steady-state
+    if !evict_scratch.is_empty() {
+        out.evicted.extend_from_slice(evict_scratch);
     }
     out
 }

@@ -30,13 +30,14 @@ use crate::cache::{
     CacheOps, CacheStats, HotnessTable, ShardedSliceCache, SliceCache, WarmupStrategy,
 };
 use crate::memhier::{HwSpec, Ledger, Phase};
-use crate::model::descriptor::{ModelDesc, SliceKey};
+use crate::model::descriptor::{ModelDesc, Plane, SliceKey};
 use crate::quant::MatConfig;
 use crate::router::{
     access_layer_scratch, access_layer_sharded, AccessOutcome, MissBudget, Precision,
     RouterConfig,
 };
 use crate::sim::accuracy::{AccuracyModel, DamageAccumulator};
+use crate::telemetry::Recorder;
 
 use super::backend::{ExecPlan, ExpertBackend};
 
@@ -178,11 +179,37 @@ fn ratio(hits: u64, misses: u64) -> f64 {
     }
 }
 
+/// What one prefill layer's streaming did to the cache, per plane —
+/// exactly mirrors the `CacheStats` contributions of its lookups, so the
+/// telemetry attribution built from it reconciles with the cache's own
+/// counters.
+#[derive(Clone, Copy, Debug, Default)]
+struct FillStats {
+    flash: u64,
+    fetches: u64,
+    msb_hits: u64,
+    msb_misses: u64,
+    lsb_hits: u64,
+    lsb_misses: u64,
+}
+
+impl FillStats {
+    fn fold(&mut self, o: FillStats) {
+        self.flash += o.flash;
+        self.fetches += o.fetches;
+        self.msb_hits += o.msb_hits;
+        self.msb_misses += o.msb_misses;
+        self.lsb_hits += o.lsb_hits;
+        self.lsb_misses += o.lsb_misses;
+    }
+}
+
 /// Stream `experts`' MSB+LSB slices of `layer` through a cache view
 /// (the prefill fill: lookup, then fill on miss at full priority).
-/// Returns (flash_bytes, flash_fetches). Generic over [`CacheOps`] so
-/// the private, mutex-shared, and per-shard batched paths run the same
-/// op sequence.
+/// Fetched keys are appended to `fills` (in fetch order). Generic over
+/// [`CacheOps`] so the private, mutex-shared, and per-shard batched
+/// paths run the same op sequence.
+#[allow(clippy::too_many_arguments)]
 fn stream_layer_fill<C: CacheOps, I: IntoIterator<Item = usize>>(
     cache: &mut C,
     layer: usize,
@@ -190,19 +217,30 @@ fn stream_layer_fill<C: CacheOps, I: IntoIterator<Item = usize>>(
     msb_b: u64,
     lsb_b: u64,
     scratch: &mut Vec<SliceKey>,
-) -> (u64, u64) {
-    let (mut flash, mut fetches) = (0u64, 0u64);
+    fills: &mut Vec<SliceKey>,
+) -> FillStats {
+    let mut fs = FillStats::default();
     for e in experts {
         for (key, bytes) in [(SliceKey::msb(layer, e), msb_b), (SliceKey::lsb(layer, e), lsb_b)]
         {
-            if !cache.lookup(key) {
-                flash += bytes;
-                fetches += 1;
+            if cache.lookup(key) {
+                match key.plane {
+                    Plane::Msb => fs.msb_hits += 1,
+                    Plane::Lsb => fs.lsb_hits += 1,
+                }
+            } else {
+                match key.plane {
+                    Plane::Msb => fs.msb_misses += 1,
+                    Plane::Lsb => fs.lsb_misses += 1,
+                }
+                fs.flash += bytes;
+                fs.fetches += 1;
+                fills.push(key);
                 let _ = cache.ensure_into(key, bytes, scratch);
             }
         }
     }
-    (flash, fetches)
+    fs
 }
 
 /// One live request's pipeline state: cache + budget + hotness + ledger +
@@ -225,6 +263,11 @@ pub struct ServeLoop {
     pub decode_flash_fetches: u64,
     /// Prompt length, set by `prefill` (drives background KV context).
     pub prefill_tokens: usize,
+    /// Flight recorder. Disabled by default (every hook is one branch);
+    /// the scheduler plants an enabled one per request and absorbs it
+    /// into the `TelemetryHub` on completion. Observation-only: the loop
+    /// never reads it back.
+    pub recorder: Recorder,
     msb_bytes: u64,
     lsb_bytes: u64,
     /// Reused eviction scratch buffer: `ensure_into` appends evicted keys
@@ -267,6 +310,7 @@ impl ServeLoop {
             steady_flash: 0,
             decode_flash_fetches: 0,
             prefill_tokens: 0,
+            recorder: Recorder::disabled(),
             msb_bytes,
             lsb_bytes,
             evict_scratch: Vec::new(),
@@ -317,6 +361,9 @@ impl ServeLoop {
         let unit = msb_b + lsb_b;
         let e_n = desc.n_experts;
         self.prefill_tokens = n_tokens;
+        self.recorder.on_prefill_start();
+        let (mut total_flash, mut total_fetches) = (0u64, 0u64);
+        let mut fills: Vec<SliceKey> = Vec::new();
 
         for layer in 0..desc.n_layers {
             let probs = backend.gate(Phase::Prefill, layer)?;
@@ -344,34 +391,48 @@ impl ServeLoop {
             // cache, then let the backend compute over the stream
             let scratch = &mut self.evict_scratch;
             scratch.clear();
-            let (flash, fetches) = match &mut self.cache {
+            fills.clear();
+            let fs = match &mut self.cache {
                 LaneCache::Private(c) => {
-                    stream_layer_fill(c, layer, 0..e_n, msb_b, lsb_b, scratch)
+                    stream_layer_fill(c, layer, 0..e_n, msb_b, lsb_b, scratch, &mut fills)
                 }
                 LaneCache::Shared(m) => {
                     let mut g = m.lock().expect("shared slice cache poisoned");
-                    stream_layer_fill(&mut *g, layer, 0..e_n, msb_b, lsb_b, scratch)
+                    stream_layer_fill(&mut *g, layer, 0..e_n, msb_b, lsb_b, scratch, &mut fills)
                 }
                 LaneCache::Sharded(s) => {
                     // one lock acquisition per shard per layer: each shard's
                     // experts stream in one critical section
-                    let (mut flash, mut fetches) = (0u64, 0u64);
+                    let mut fs = FillStats::default();
                     for shard in 0..s.n_shards() {
                         let mut txn = s.txn([shard]);
-                        let (f, n) = stream_layer_fill(
+                        fs.fold(stream_layer_fill(
                             &mut txn,
                             layer,
                             (0..e_n).filter(|&e| s.shard_of_expert(e) == shard),
                             msb_b,
                             lsb_b,
                             scratch,
-                        );
-                        flash += f;
-                        fetches += n;
+                            &mut fills,
+                        ));
                     }
-                    (flash, fetches)
+                    fs
                 }
             };
+            let (flash, fetches) = (fs.flash, fs.fetches);
+            total_flash += flash;
+            total_fetches += fetches;
+            self.recorder.on_prefill_layer(
+                &self.cfg.hw,
+                fs.msb_hits,
+                fs.msb_misses,
+                fs.lsb_hits,
+                fs.lsb_misses,
+                &fills,
+                &self.evict_scratch,
+                msb_b,
+                lsb_b,
+            );
             let dram = e_n as u64 * unit;
             backend.run_experts(
                 Phase::Prefill,
@@ -394,14 +455,17 @@ impl ServeLoop {
                 flash,
                 fetches,
             );
+            self.recorder
+                .on_charge(Phase::Prefill, &self.cfg.hw, ops + bg_ops, dram + bg_dram, flash);
         }
+        self.recorder.on_prefill_end(n_tokens, total_flash, total_fetches);
 
         // ---- prefill → decode transition (PCW / Fig 10 baselines) ----
         let (warmup, target, mat) = (self.cfg.warmup, self.cfg.cache_bytes, self.cfg.mat);
         let single_head = self.cfg.router.dbsc.is_some();
         let hot = &self.hot;
         let slice_bytes = |k: SliceKey| desc.slice_bytes(k.plane, mat);
-        match &mut self.cache {
+        let reshape = match &mut self.cache {
             LaneCache::Private(c) => {
                 apply_ex(c, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
             }
@@ -413,7 +477,8 @@ impl ServeLoop {
                 // global-view reshape distributed across shards
                 apply_sharded(s, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
             }
-        }
+        };
+        self.recorder.on_reshape(reshape.retained, reshape.retained_bytes);
         Ok(())
     }
 
@@ -458,7 +523,7 @@ impl ServeLoop {
                 }
             };
 
-            self.account_decode_layer(&out, t, &mut step);
+            self.account_decode_layer(&out, t, layer, &mut step);
 
             backend.run_experts(
                 Phase::Decode,
@@ -475,12 +540,31 @@ impl ServeLoop {
     /// return the token index `t` (decode steps completed so far).
     pub fn begin_decode_token(&mut self) -> u64 {
         self.budget.tick();
-        self.ledger.decode_steps
+        let t = self.ledger.decode_steps;
+        self.recorder.on_token_start(t);
+        t
     }
 
     /// Fold one layer's access outcome into the damage proxy, the step /
-    /// request expert counters, and the steady-state miss statistics.
-    pub fn account_decode_layer(&mut self, out: &AccessOutcome, t: u64, step: &mut StepStats) {
+    /// request expert counters, the steady-state miss statistics, and the
+    /// flight recorder.
+    pub fn account_decode_layer(
+        &mut self,
+        out: &AccessOutcome,
+        t: u64,
+        layer: usize,
+        step: &mut StepStats,
+    ) {
+        let budget_active = self.budget.active();
+        self.recorder.on_decode_layer(
+            &self.cfg.hw,
+            t,
+            layer,
+            out,
+            self.msb_bytes,
+            self.lsb_bytes,
+            budget_active,
+        );
         let mat = self.cfg.mat;
         if let Some(model) = &self.cfg.accuracy {
             let execs: Vec<(f64, Precision)> =
@@ -532,11 +616,19 @@ impl ServeLoop {
             out.flash_bytes,
             out.flash_fetches,
         );
+        self.recorder.on_charge(
+            Phase::Decode,
+            &self.cfg.hw,
+            ops + bg_ops,
+            out.dram_bytes + bg_dram,
+            out.flash_bytes,
+        );
     }
 
     /// Close one decode token: bump the ledger step counter and fold the
     /// step's expert counters into the request totals.
     pub fn finish_decode_token(&mut self, step: StepStats) -> StepStats {
+        self.recorder.on_token_end(self.ledger.decode_steps);
         self.ledger.bump_decode_steps();
         self.decode_flash_fetches += step.flash_fetches;
         self.counters.n_high += step.n_high as u64;

@@ -34,7 +34,6 @@
 //! end).
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -44,6 +43,7 @@ use crate::model::descriptor::SliceKey;
 use crate::router::{
     effective_policy, route_layer, walk_layer, AccessOutcome, Policy, RoutedLayer,
 };
+use crate::telemetry::{Clock, TelemetryHub};
 
 use super::backend::{ExecPlan, ExpertBackend};
 use super::pipeline::{ServeConfig, ServeLoop, StepStats};
@@ -58,7 +58,10 @@ struct WaveSlot<B: ExpertBackend> {
     /// Decode tokens produced so far.
     decode_done: usize,
     prefill_wall_s: f64,
-    decode_started: Instant,
+    /// When the slot was admitted (engine clock, µs).
+    admit_us: u64,
+    /// When its decode phase started (engine clock, µs).
+    decode_started_us: u64,
 }
 
 /// A completed request leaving the wave set. Carries the full pipeline
@@ -70,6 +73,10 @@ pub struct WaveDone {
     pub prefill_wall_s: f64,
     pub decode_wall_s: f64,
     pub decode_tokens: usize,
+    /// Admission / completion timestamps on the engine clock (µs) — the
+    /// scheduler folds these into telemetry request spans.
+    pub admit_us: u64,
+    pub complete_us: u64,
 }
 
 /// Wave-stepped decode over one shared [`ShardedSliceCache`].
@@ -79,6 +86,12 @@ pub struct WaveEngine<B: ExpertBackend> {
     max_batch: usize,
     /// Shared eviction scratch (cleared by every walk; never read back).
     evict_scratch: Vec<SliceKey>,
+    /// Timebase for wall splits and telemetry stamps (one source, so
+    /// harness latencies and trace spans are directly comparable).
+    clock: Clock,
+    /// When set, admissions get an enabled per-request recorder and
+    /// engine-level events (shard rebalances) are reported to the hub.
+    hub: Option<Arc<TelemetryHub>>,
 }
 
 impl<B: ExpertBackend> WaveEngine<B> {
@@ -88,7 +101,23 @@ impl<B: ExpertBackend> WaveEngine<B> {
             slots: Vec::new(),
             max_batch: max_batch.max(1),
             evict_scratch: Vec::new(),
+            clock: Clock::default(),
+            hub: None,
         }
+    }
+
+    /// Replace the engine's timebase (tests use a manual clock).
+    pub fn with_clock(mut self, clock: Clock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Attach a telemetry hub: every admitted request records into an
+    /// enabled flight recorder on the hub's clock. Observation-only.
+    pub fn with_telemetry(mut self, hub: Arc<TelemetryHub>) -> Self {
+        self.clock = hub.clock().clone();
+        self.hub = Some(hub);
+        self
     }
 
     /// Slots currently in flight.
@@ -128,10 +157,14 @@ impl<B: ExpertBackend> WaveEngine<B> {
                 );
             }
         }
-        let t0 = Instant::now();
+        let t0 = self.clock.now_us();
         let mut lane = ServeLoop::with_sharded_cache(cfg, Arc::clone(&self.cache));
+        if let Some(hub) = &self.hub {
+            lane.recorder = hub.recorder(id);
+        }
         lane.prefill(&mut backend, prefill_tokens)?;
-        let prefill_wall_s = t0.elapsed().as_secs_f64();
+        let now = self.clock.now_us();
+        let prefill_wall_s = now.saturating_sub(t0) as f64 / 1e6;
         self.slots.push(WaveSlot {
             id,
             lane,
@@ -139,7 +172,8 @@ impl<B: ExpertBackend> WaveEngine<B> {
             remaining: decode_tokens,
             decode_done: 0,
             prefill_wall_s,
-            decode_started: Instant::now(),
+            admit_us: t0,
+            decode_started_us: now,
         });
         Ok(())
     }
@@ -151,11 +185,14 @@ impl<B: ExpertBackend> WaveEngine<B> {
         while i < self.slots.len() {
             if self.slots[i].remaining == 0 {
                 let s = self.slots.remove(i);
+                let now = self.clock.now_us();
                 done.push(WaveDone {
                     id: s.id,
                     prefill_wall_s: s.prefill_wall_s,
-                    decode_wall_s: s.decode_started.elapsed().as_secs_f64(),
+                    decode_wall_s: now.saturating_sub(s.decode_started_us) as f64 / 1e6,
                     decode_tokens: s.decode_done,
+                    admit_us: s.admit_us,
+                    complete_us: now,
                     lane: s.lane,
                 });
             } else {
@@ -255,7 +292,11 @@ impl<B: ExpertBackend> WaveEngine<B> {
                     })
                     .collect()
             };
-            self.cache.maybe_rebalance();
+            if let Some(rb) = self.cache.maybe_rebalance() {
+                if let Some(hub) = &self.hub {
+                    hub.on_rebalance(rb.moved_bytes, rb.pressured_shards);
+                }
+            }
 
             // 5. per-slot accounting + execution, the decode_token order
             for ((slot, out), (step, &t)) in self
@@ -264,7 +305,7 @@ impl<B: ExpertBackend> WaveEngine<B> {
                 .zip(&outs)
                 .zip(steps.iter_mut().zip(&ts))
             {
-                slot.lane.account_decode_layer(out, t, step);
+                slot.lane.account_decode_layer(out, t, layer, step);
                 slot.backend.run_experts(
                     Phase::Decode,
                     layer,

@@ -26,13 +26,13 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cache::{ShardedSliceCache, SliceCache};
 use crate::serve::{CostModelBackend, ExpertBackend, ServeConfig, ServeLoop, WaveEngine};
 use crate::sim::trace::{RoutingBias, TraceParams};
+use crate::telemetry::{Clock, RequestSpan, TelemetryHub};
 
 /// A generation request.
 #[derive(Clone, Debug)]
@@ -305,14 +305,13 @@ fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
 fn admit_waved<B, F>(
     engine: &mut WaveEngine<B>,
     make_lane: &mut F,
-    (req, enqueued): (Request, Instant),
+    (req, enqueue_us): (Request, u64),
     tx: &mpsc::Sender<Result<Response>>,
-    inflight: &mut std::collections::HashMap<u64, f64>,
+    inflight: &mut std::collections::HashMap<u64, u64>,
 ) where
     B: ExpertBackend,
     F: FnMut(&Request) -> Result<(ServeConfig, B)>,
 {
-    let queued = enqueued.elapsed().as_secs_f64();
     let prefill_tokens = req.prompt.len().max(1);
     let admitted = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         let (cfg, backend) = make_lane(&req)?;
@@ -320,7 +319,7 @@ fn admit_waved<B, F>(
     }));
     match admitted {
         Ok(Ok(())) => {
-            inflight.insert(req.id, queued);
+            inflight.insert(req.id, enqueue_us);
         }
         Ok(Err(e)) => {
             let _ = tx.send(Err(anyhow::anyhow!(
@@ -345,7 +344,7 @@ fn admit_waved<B, F>(
 /// blocking forever on a server nobody drains.
 struct LaneGuard {
     live: Arc<AtomicUsize>,
-    queue: Arc<BoundedQueue<(Request, Instant)>>,
+    queue: Arc<BoundedQueue<(Request, u64)>>,
 }
 
 impl Drop for LaneGuard {
@@ -357,10 +356,15 @@ impl Drop for LaneGuard {
 }
 
 /// Client handle to a running multi-lane server.
+///
+/// Queue items carry their enqueue timestamp in µs on the server
+/// [`Clock`], so queueing delay and telemetry request spans share one
+/// timebase (and tests can drive both with a manual clock).
 pub struct ServerHandle {
-    queue: Arc<BoundedQueue<(Request, Instant)>>,
+    queue: Arc<BoundedQueue<(Request, u64)>>,
     rx: mpsc::Receiver<Result<Response>>,
     workers: Vec<thread::JoinHandle<()>>,
+    clock: Clock,
 }
 
 impl ServerHandle {
@@ -376,6 +380,26 @@ impl ServerHandle {
         F: Fn(usize) -> Result<B> + Send + Sync + 'static,
         B: Backend,
     {
+        ServerHandle::start_ex(lanes, queue_depth, Clock::default(), None, make_backend)
+    }
+
+    /// [`ServerHandle::start`] with an explicit [`Clock`] (shared with
+    /// submit-side timestamps, so queueing delay is measured on one
+    /// timebase) and an optional telemetry hub. When `hub` is set, the
+    /// worker records a [`RequestSpan`] per completed request; per-token
+    /// detail additionally requires a backend that plants a recorder on
+    /// its lane (see [`CostModelServerBackend::with_telemetry`]).
+    pub fn start_ex<F, B>(
+        lanes: usize,
+        queue_depth: usize,
+        clock: Clock,
+        hub: Option<Arc<TelemetryHub>>,
+        make_backend: F,
+    ) -> ServerHandle
+    where
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+        B: Backend,
+    {
         assert!(lanes >= 1, "need at least one lane");
         let queue = Arc::new(BoundedQueue::new(queue_depth));
         let (tx_resp, rx) = mpsc::channel();
@@ -387,6 +411,8 @@ impl ServerHandle {
                 let tx = tx_resp.clone();
                 let make = Arc::clone(&make);
                 let live = Arc::clone(&live);
+                let clock = clock.clone();
+                let hub = hub.clone();
                 thread::Builder::new()
                     .name(format!("slicemoe-lane-{lane}"))
                     .spawn(move || {
@@ -408,8 +434,10 @@ impl ServerHandle {
                                 return;
                             }
                         };
-                        while let Some((req, enqueued)) = queue.pop() {
-                            let queued = enqueued.elapsed().as_secs_f64();
+                        while let Some((req, enqueue_us)) = queue.pop() {
+                            let admit_us = clock.now_us();
+                            let queued =
+                                admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
                             let outcome = std::panic::catch_unwind(
                                 std::panic::AssertUnwindSafe(|| backend.serve(&req)),
                             );
@@ -417,6 +445,17 @@ impl ServerHandle {
                                 Ok(res) => res.map(|mut r| {
                                     r.queue_wall_s = queued;
                                     r.lane = lane;
+                                    if let Some(hub) = &hub {
+                                        hub.on_request(RequestSpan {
+                                            id: r.id,
+                                            enqueue_us,
+                                            admit_us,
+                                            complete_us: clock.now_us(),
+                                            prefill_s: r.prefill_wall_s,
+                                            decode_s: r.decode_wall_s,
+                                            decode_tokens: r.decode_tokens,
+                                        });
+                                    }
                                     r
                                 }),
                                 Err(payload) => {
@@ -442,7 +481,7 @@ impl ServerHandle {
             })
             .collect();
         drop(tx_resp);
-        ServerHandle { queue, rx, workers }
+        ServerHandle { queue, rx, workers, clock }
     }
 
     /// Start a WAVE-MODE server: one worker thread drives a
@@ -465,6 +504,25 @@ impl ServerHandle {
         max_batch: usize,
         queue_depth: usize,
         cache: Arc<ShardedSliceCache>,
+        make_lane: F,
+    ) -> ServerHandle
+    where
+        F: FnMut(&Request) -> Result<(ServeConfig, B)> + Send + 'static,
+        B: ExpertBackend + 'static,
+    {
+        ServerHandle::start_wave_ex(max_batch, queue_depth, cache, Clock::default(), None, make_lane)
+    }
+
+    /// [`ServerHandle::start_wave`] with an explicit [`Clock`] and an
+    /// optional telemetry hub. When `hub` is set the engine records every
+    /// lane's per-token/per-layer events into it (absorbed at request
+    /// completion) plus a [`RequestSpan`] per completed request.
+    pub fn start_wave_ex<F, B>(
+        max_batch: usize,
+        queue_depth: usize,
+        cache: Arc<ShardedSliceCache>,
+        clock: Clock,
+        hub: Option<Arc<TelemetryHub>>,
         mut make_lane: F,
     ) -> ServerHandle
     where
@@ -475,14 +533,20 @@ impl ServerHandle {
         let (tx_resp, rx) = mpsc::channel();
         let live = Arc::new(AtomicUsize::new(1));
         let worker_queue = Arc::clone(&queue);
+        let worker_clock = clock.clone();
         let worker = thread::Builder::new()
             .name("slicemoe-wave".to_string())
             .spawn(move || {
                 let _guard = LaneGuard { live, queue: Arc::clone(&worker_queue) };
-                let mut engine: WaveEngine<B> = WaveEngine::new(cache, max_batch);
-                // id → queueing delay of every in-flight request, so a
-                // mid-wave failure still yields one outcome per request
-                let mut inflight: std::collections::HashMap<u64, f64> =
+                let mut engine: WaveEngine<B> =
+                    WaveEngine::new(cache, max_batch).with_clock(worker_clock);
+                if let Some(hub) = &hub {
+                    engine = engine.with_telemetry(Arc::clone(hub));
+                }
+                // id → enqueue timestamp (µs) of every in-flight request,
+                // so a mid-wave failure still yields one outcome per
+                // request and completions can reconstruct queueing delay
+                let mut inflight: std::collections::HashMap<u64, u64> =
                     std::collections::HashMap::new();
                 let tx = tx_resp;
                 loop {
@@ -513,8 +577,11 @@ impl ServerHandle {
                     );
                     match outcome {
                         Ok(Ok(done)) => {
-                            for d in done {
-                                let queued = inflight.remove(&d.id).unwrap_or(0.0);
+                            for mut d in done {
+                                let enqueue_us =
+                                    inflight.remove(&d.id).unwrap_or(d.admit_us);
+                                let queued =
+                                    d.admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
                                 let mut r = Response::from_lane(
                                     &d.lane,
                                     d.id,
@@ -524,6 +591,18 @@ impl ServerHandle {
                                     d.decode_tokens,
                                 );
                                 r.queue_wall_s = queued;
+                                if let Some(hub) = &hub {
+                                    hub.absorb(std::mem::take(&mut d.lane.recorder));
+                                    hub.on_request(RequestSpan {
+                                        id: d.id,
+                                        enqueue_us,
+                                        admit_us: d.admit_us,
+                                        complete_us: d.complete_us,
+                                        prefill_s: d.prefill_wall_s,
+                                        decode_s: d.decode_wall_s,
+                                        decode_tokens: d.decode_tokens,
+                                    });
+                                }
                                 if tx.send(Ok(r)).is_err() {
                                     return;
                                 }
@@ -553,13 +632,18 @@ impl ServerHandle {
                 }
             })
             .expect("spawn wave worker");
-        ServerHandle { queue, rx, workers: vec![worker] }
+        ServerHandle { queue, rx, workers: vec![worker], clock }
+    }
+
+    /// The clock queue timestamps are taken on (shared with the workers).
+    pub fn clock(&self) -> &Clock {
+        &self.clock
     }
 
     /// Submit a request (blocks while the queue is full — backpressure).
     pub fn submit(&self, req: Request) -> Result<()> {
         self.queue
-            .push((req, Instant::now()))
+            .push((req, self.clock.now_us()))
             .map_err(|_| anyhow::anyhow!("server closed"))
     }
 
@@ -569,7 +653,7 @@ impl ServerHandle {
     /// draining completions while backpressure holds instead of parking
     /// inside `submit`.
     pub fn try_submit(&self, req: Request) -> Result<Option<Request>> {
-        match self.queue.try_push((req, Instant::now())) {
+        match self.queue.try_push((req, self.clock.now_us())) {
             TryPush::Pushed => Ok(None),
             TryPush::Full((req, _)) => Ok(Some(req)),
             TryPush::Closed(_) => Err(anyhow::anyhow!("server closed")),
@@ -642,11 +726,32 @@ pub struct CostModelServerBackend {
     /// request gets a private cache of `cfg.cache_bytes`.
     pub shared_cache: Option<SharedCacheHandle>,
     pub seed: u64,
+    /// When set, each served request records per-token/per-layer events
+    /// into a per-request [`Recorder`][crate::telemetry::Recorder]
+    /// absorbed into this hub on completion. Wall-clock splits are taken
+    /// on the hub's clock so spans and latency share one timebase.
+    pub hub: Option<Arc<TelemetryHub>>,
+    clock: Clock,
 }
 
 impl CostModelServerBackend {
     pub fn new(cfg: ServeConfig, trace: TraceParams, seed: u64) -> CostModelServerBackend {
-        CostModelServerBackend { cfg, trace, shared_cache: None, seed }
+        CostModelServerBackend {
+            cfg,
+            trace,
+            shared_cache: None,
+            seed,
+            hub: None,
+            clock: Clock::default(),
+        }
+    }
+
+    /// Record flight-recorder telemetry for every served request into
+    /// `hub` (and time wall-clock splits on the hub's clock).
+    pub fn with_telemetry(mut self, hub: Arc<TelemetryHub>) -> CostModelServerBackend {
+        self.clock = hub.clock().clone();
+        self.hub = Some(hub);
+        self
     }
 
     pub fn with_shared_cache(mut self, cache: Arc<Mutex<SliceCache>>) -> CostModelServerBackend {
@@ -717,23 +822,31 @@ impl Backend for CostModelServerBackend {
             }
             None => ServeLoop::new(cfg),
         };
+        if let Some(hub) = &self.hub {
+            lane.recorder = hub.recorder(req.id);
+        }
 
-        let t0 = Instant::now();
+        let t0 = self.clock.now_us();
         lane.prefill(&mut backend, prefill_tokens)?;
-        let prefill_wall_s = t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
+        let t1 = self.clock.now_us();
+        let prefill_wall_s = t1.saturating_sub(t0) as f64 / 1e6;
         for _ in 0..req.decode_tokens {
             lane.decode_token(&mut backend)?;
         }
+        let decode_wall_s = self.clock.now_us().saturating_sub(t1) as f64 / 1e6;
         // the cost model emits no token bytes, hence the empty output
-        Ok(Response::from_lane(
+        let resp = Response::from_lane(
             &lane,
             req.id,
             Vec::new(),
             prefill_wall_s,
-            t1.elapsed().as_secs_f64(),
+            decode_wall_s,
             req.decode_tokens,
-        ))
+        );
+        if let Some(hub) = &self.hub {
+            hub.absorb(std::mem::take(&mut lane.recorder));
+        }
+        Ok(resp)
     }
 }
 
@@ -741,6 +854,7 @@ impl Backend for CostModelServerBackend {
 mod tests {
     use super::*;
     use crate::model::ModelDesc;
+    use std::time::Instant;
 
     struct MockBackend {
         delay_ms: u64,
@@ -800,6 +914,33 @@ mod tests {
         };
         assert!(r2.queue_wall_s > r0.queue_wall_s);
         h.shutdown();
+    }
+
+    #[test]
+    fn manual_clock_unifies_queue_delay_and_request_spans() {
+        // a manual clock that never advances makes every wall reading
+        // deterministic: zero queue delay and spans whose enqueue, admit
+        // and complete stamps all coincide — proving the server reads
+        // ONE timebase everywhere rather than ad-hoc `Instant`s
+        let (clock, _manual) = Clock::manual();
+        let hub = Arc::new(TelemetryHub::new(clock.clone()));
+        let h = ServerHandle::start_ex(1, 4, clock, Some(Arc::clone(&hub)), |_| {
+            Ok(MockBackend { delay_ms: 1 })
+        });
+        for id in 0..3 {
+            h.submit(Request::new(id, vec![0], 1)).unwrap();
+        }
+        for _ in 0..3 {
+            let r = h.recv().unwrap();
+            assert_eq!(r.queue_wall_s, 0.0);
+        }
+        h.shutdown();
+        let report = hub.snapshot();
+        assert_eq!(report.requests.len(), 3);
+        for span in &report.requests {
+            assert_eq!(span.enqueue_us, span.admit_us);
+            assert_eq!(span.admit_us, span.complete_us);
+        }
     }
 
     struct PanickingBackend;

@@ -1,0 +1,237 @@
+//! Per-expert / per-layer attribution: *which* expert caused the misses,
+//! bytes, and energy the aggregate counters report. This is the
+//! SMWT-compatible activation record the ROADMAP's trace-driven policy
+//! work needs — activation counts per (layer, expert) plus the cache
+//! traffic attributed to each.
+//!
+//! The table also carries run-level totals that reconcile **bit-exactly**
+//! with the existing aggregates (pinned by `tests/telemetry_parity.rs`):
+//!
+//! * `flash_bytes` / `flash_fetches` against `Ledger`;
+//! * the six `*_j` energy accumulators against the ledger's per-phase
+//!   component `Cost` joules — the recorder recomputes each charge from
+//!   the identical inputs in the identical order, so the f64 sums match
+//!   to the last bit;
+//! * plane hit/miss counts and evictions against `CacheStats` deltas
+//!   (under warmup strategies whose reshape does not consume stats —
+//!   `Pcw`/`Empty`; `Random`/`LastLayer` evict via `remove`, which the
+//!   walk cannot observe).
+//!
+//! Per-expert `flash_j_est` is an *estimate* (per-expert share of linear
+//! fetch energy); the exact quantities are the table-level totals.
+
+use std::collections::BTreeMap;
+
+use crate::model::descriptor::{Plane, SliceKey};
+
+/// One (layer, expert) row of the attribution table.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExpertRow {
+    /// Times this expert was routed AND executed (any precision).
+    pub activations: u64,
+    /// Executions at high precision (MSB+LSB resident).
+    pub high: u64,
+    /// Executions at low precision (MSB only).
+    pub low: u64,
+    /// Times this expert was routed but dropped (miss not admitted).
+    pub dropped: u64,
+    /// Times this expert executed as a substitute for a missing one.
+    pub substituted_in: u64,
+    /// High→low degradations (LSB miss not admitted).
+    pub degraded: u64,
+    /// MSB-plane lookup misses attributed to this expert.
+    pub msb_misses: u64,
+    /// LSB-plane lookup misses attributed to this expert.
+    pub lsb_misses: u64,
+    /// Flash bytes fetched for this expert's slices.
+    pub fetched_bytes: u64,
+    /// Individual slice fetches for this expert.
+    pub fetches: u64,
+    /// Evictions where the victim was one of this expert's slices.
+    pub evictions: u64,
+    /// Estimated flash energy share (linear in `fetched_bytes`).
+    pub flash_j_est: f64,
+}
+
+impl ExpertRow {
+    fn merge(&mut self, o: &ExpertRow) {
+        self.activations += o.activations;
+        self.high += o.high;
+        self.low += o.low;
+        self.dropped += o.dropped;
+        self.substituted_in += o.substituted_in;
+        self.degraded += o.degraded;
+        self.msb_misses += o.msb_misses;
+        self.lsb_misses += o.lsb_misses;
+        self.fetched_bytes += o.fetched_bytes;
+        self.fetches += o.fetches;
+        self.evictions += o.evictions;
+        self.flash_j_est += o.flash_j_est;
+    }
+}
+
+/// Rows keyed by (layer, expert) plus the exact run-level totals.
+/// `BTreeMap` so iteration (and therefore every export) is
+/// deterministically ordered.
+#[derive(Clone, Debug, Default)]
+pub struct AttributionTable {
+    rows: BTreeMap<(u16, u16), ExpertRow>,
+    /// Flash miss traffic — reconciles with `Ledger::flash_bytes`.
+    pub flash_bytes: u64,
+    /// Individual slice fetches — reconciles with `Ledger::flash_fetches`.
+    pub flash_fetches: u64,
+    /// Plane lookup outcomes observed by the walk — reconcile with
+    /// `CacheStats` deltas.
+    pub msb_hits: u64,
+    pub msb_misses: u64,
+    pub lsb_hits: u64,
+    pub lsb_misses: u64,
+    /// Evictions observed via the walk's victim scratch.
+    pub evictions: u64,
+    /// Decode tokens recorded (`Ledger::decode_steps`).
+    pub tokens: u64,
+    /// Exact per-phase component energies, accumulated in the same
+    /// chronological order as `Ledger::record`'s `Cost::add` calls.
+    pub prefill_compute_j: f64,
+    pub prefill_dram_j: f64,
+    pub prefill_flash_j: f64,
+    pub decode_compute_j: f64,
+    pub decode_dram_j: f64,
+    pub decode_flash_j: f64,
+}
+
+impl AttributionTable {
+    pub fn row_mut(&mut self, layer: u16, expert: u16) -> &mut ExpertRow {
+        self.rows.entry((layer, expert)).or_default()
+    }
+
+    pub fn row(&self, layer: u16, expert: u16) -> Option<&ExpertRow> {
+        self.rows.get(&(layer, expert))
+    }
+
+    /// Deterministic (layer, expert)-ordered row iteration.
+    pub fn iter(&self) -> impl Iterator<Item = (&(u16, u16), &ExpertRow)> {
+        self.rows.iter()
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Attribute one slice fetch (`key` pulled from Flash).
+    pub fn note_fetch(&mut self, key: SliceKey, bytes: u64, flash_j_est: f64) {
+        self.flash_bytes += bytes;
+        self.flash_fetches += 1;
+        let row = self.row_mut(key.layer, key.expert);
+        row.fetched_bytes += bytes;
+        row.fetches += 1;
+        row.flash_j_est += flash_j_est;
+    }
+
+    /// Attribute one eviction (`key` was the victim).
+    pub fn note_eviction(&mut self, key: SliceKey) {
+        self.evictions += 1;
+        self.row_mut(key.layer, key.expert).evictions += 1;
+    }
+
+    /// Count one observed lookup outcome on `key`'s plane.
+    pub fn note_lookup(&mut self, key: SliceKey, hit: bool) {
+        match (key.plane, hit) {
+            (Plane::Msb, true) => self.msb_hits += 1,
+            (Plane::Msb, false) => {
+                self.msb_misses += 1;
+                self.row_mut(key.layer, key.expert).msb_misses += 1;
+            }
+            (Plane::Lsb, true) => self.lsb_hits += 1,
+            (Plane::Lsb, false) => {
+                self.lsb_misses += 1;
+                self.row_mut(key.layer, key.expert).lsb_misses += 1;
+            }
+        }
+    }
+
+    /// Fold another table in (hub-side cross-request aggregation).
+    pub fn merge(&mut self, o: &AttributionTable) {
+        for (&k, row) in &o.rows {
+            self.rows.entry(k).or_default().merge(row);
+        }
+        self.flash_bytes += o.flash_bytes;
+        self.flash_fetches += o.flash_fetches;
+        self.msb_hits += o.msb_hits;
+        self.msb_misses += o.msb_misses;
+        self.lsb_hits += o.lsb_hits;
+        self.lsb_misses += o.lsb_misses;
+        self.evictions += o.evictions;
+        self.tokens += o.tokens;
+        self.prefill_compute_j += o.prefill_compute_j;
+        self.prefill_dram_j += o.prefill_dram_j;
+        self.prefill_flash_j += o.prefill_flash_j;
+        self.decode_compute_j += o.decode_compute_j;
+        self.decode_dram_j += o.decode_dram_j;
+        self.decode_flash_j += o.decode_flash_j;
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.prefill_compute_j
+            + self.prefill_dram_j
+            + self.prefill_flash_j
+            + self.decode_compute_j
+            + self.decode_dram_j
+            + self.decode_flash_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fetch_and_eviction_attribution_lands_on_the_expert() {
+        let mut t = AttributionTable::default();
+        t.note_fetch(SliceKey::msb(3, 7), 100, 1.5e-6);
+        t.note_fetch(SliceKey::lsb(3, 7), 50, 0.75e-6);
+        t.note_eviction(SliceKey::msb(1, 2));
+        assert_eq!(t.flash_bytes, 150);
+        assert_eq!(t.flash_fetches, 2);
+        let row = t.row(3, 7).unwrap();
+        assert_eq!(row.fetched_bytes, 150);
+        assert_eq!(row.fetches, 2);
+        assert!((row.flash_j_est - 2.25e-6).abs() < 1e-18);
+        assert_eq!(t.row(1, 2).unwrap().evictions, 1);
+        assert_eq!(t.evictions, 1);
+    }
+
+    #[test]
+    fn lookup_outcomes_split_by_plane() {
+        let mut t = AttributionTable::default();
+        t.note_lookup(SliceKey::msb(0, 0), true);
+        t.note_lookup(SliceKey::msb(0, 1), false);
+        t.note_lookup(SliceKey::lsb(0, 1), false);
+        assert_eq!((t.msb_hits, t.msb_misses), (1, 1));
+        assert_eq!((t.lsb_hits, t.lsb_misses), (0, 1));
+        assert_eq!(t.row(0, 1).unwrap().msb_misses, 1);
+        assert_eq!(t.row(0, 1).unwrap().lsb_misses, 1);
+        // hits are not per-expert attributed (only totals reconcile)
+        assert!(t.row(0, 0).is_none());
+    }
+
+    #[test]
+    fn merge_adds_rows_and_totals() {
+        let mut a = AttributionTable::default();
+        a.note_fetch(SliceKey::msb(0, 0), 10, 0.0);
+        a.tokens = 3;
+        a.decode_flash_j = 1.0;
+        let mut b = AttributionTable::default();
+        b.note_fetch(SliceKey::msb(0, 0), 5, 0.0);
+        b.note_fetch(SliceKey::msb(1, 1), 7, 0.0);
+        b.tokens = 2;
+        b.decode_flash_j = 0.5;
+        a.merge(&b);
+        assert_eq!(a.flash_bytes, 22);
+        assert_eq!(a.flash_fetches, 3);
+        assert_eq!(a.tokens, 5);
+        assert_eq!(a.row(0, 0).unwrap().fetched_bytes, 15);
+        assert_eq!(a.row(1, 1).unwrap().fetched_bytes, 7);
+        assert!((a.decode_flash_j - 1.5).abs() < 1e-15);
+    }
+}

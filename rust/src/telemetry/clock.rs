@@ -1,0 +1,100 @@
+//! The telemetry timebase: one `Clock` shared by recorder timestamps,
+//! request spans, and the harness/server latency splits, so every
+//! exported time lives on a single axis. Production uses the monotonic
+//! variant; tests drive a [`ManualClock`] to make span math exact.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Microsecond timebase. Cloning a monotonic clock keeps its base
+/// instant, cloning a manual clock shares the underlying counter — both
+/// give "the same time axis", which is the property everything else
+/// relies on.
+#[derive(Clone, Debug)]
+pub enum Clock {
+    /// Wall time relative to a fixed base instant (`Instant` is
+    /// monotonic, so readings never go backwards).
+    Monotonic { base: Instant },
+    /// Test clock: reads a shared counter that only [`ManualClock`]
+    /// advances.
+    Manual { now_us: Arc<AtomicU64> },
+}
+
+impl Default for Clock {
+    fn default() -> Self {
+        Clock::monotonic()
+    }
+}
+
+impl Clock {
+    pub fn monotonic() -> Clock {
+        Clock::Monotonic { base: Instant::now() }
+    }
+
+    /// A manual clock starting at 0 µs plus the handle that advances it.
+    pub fn manual() -> (Clock, ManualClock) {
+        let now_us = Arc::new(AtomicU64::new(0));
+        (Clock::Manual { now_us: Arc::clone(&now_us) }, ManualClock { now_us })
+    }
+
+    /// Microseconds since the clock's origin.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        match self {
+            Clock::Monotonic { base } => base.elapsed().as_micros() as u64,
+            Clock::Manual { now_us } => now_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Seconds since the clock's origin (µs resolution).
+    #[inline]
+    pub fn now_s(&self) -> f64 {
+        self.now_us() as f64 * 1e-6
+    }
+}
+
+/// Writer handle for [`Clock::Manual`] (the clock itself is read-only so
+/// it can be cloned into every consumer without handing them the pen).
+#[derive(Clone, Debug)]
+pub struct ManualClock {
+    now_us: Arc<AtomicU64>,
+}
+
+impl ManualClock {
+    pub fn advance_us(&self, us: u64) {
+        self.now_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn set_us(&self, us: u64) {
+        self.now_us.store(us, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_never_goes_backwards() {
+        let c = Clock::monotonic();
+        let mut prev = c.now_us();
+        for _ in 0..100 {
+            let t = c.now_us();
+            assert!(t >= prev);
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn manual_clock_is_shared_across_clones() {
+        let (clock, hand) = Clock::manual();
+        let clone = clock.clone();
+        assert_eq!(clock.now_us(), 0);
+        hand.advance_us(250);
+        assert_eq!(clock.now_us(), 250);
+        assert_eq!(clone.now_us(), 250, "clones share the counter");
+        hand.set_us(1_000_000);
+        assert!((clock.now_s() - 1.0).abs() < 1e-12);
+    }
+}

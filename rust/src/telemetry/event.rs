@@ -1,0 +1,154 @@
+//! The raw flight-recorder stream: fixed-size [`Event`]s in a
+//! preallocated [`EventRing`]. The ring is the *detail* layer — spans,
+//! per-layer decode records, cache churn — and it is allowed to
+//! saturate: past capacity events are dropped and counted, never
+//! reallocated. Everything that must stay exact under saturation (the
+//! attribution table, the binned series) is accumulated separately by
+//! the recorder.
+
+use crate::memhier::Phase;
+use crate::model::descriptor::SliceKey;
+
+/// One recorded occurrence. `Copy` and allocation-free by construction —
+/// pushing an event is a bounds check and a memcpy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Event {
+    /// Prefill streaming started for this request.
+    PrefillStart,
+    /// Prefill finished: token count and its total miss traffic.
+    PrefillEnd { tokens: u32, flash_bytes: u64, fetches: u64 },
+    /// Decode token `step` entered the layer walk.
+    TokenStart { step: u64 },
+    /// Decode token `step` completed every layer.
+    TokenEnd { step: u64 },
+    /// One (token, layer) decode access: the routed/executed mix and the
+    /// cache traffic it caused.
+    Layer {
+        step: u64,
+        layer: u16,
+        execs: u16,
+        high: u16,
+        dropped: u16,
+        substituted: u16,
+        degraded: u16,
+        fetch_bytes: u64,
+        fetches: u32,
+        budget_active: bool,
+    },
+    /// A slice was fetched from Flash and inserted (prefill stream or
+    /// decode miss path).
+    Fill { key: SliceKey, bytes: u64 },
+    /// A resident slice was evicted to make room; `key` is the victim.
+    Evict { key: SliceKey, bytes: u64 },
+    /// One `Ledger::record` charge, split into component joules.
+    Charge { phase: Phase, compute_j: f64, dram_j: f64, flash_j: f64 },
+    /// The PCW (or baseline) prefill→decode cache reshape.
+    Reshape { strategy_retained: u64, retained_bytes: u64 },
+    /// A sharded-cache slack rebalance pass.
+    Rebalance { moved_bytes: u64, pressured_shards: u32 },
+}
+
+/// An [`Event`] stamped with its [`Clock`](super::Clock) time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stamped {
+    pub t_us: u64,
+    pub ev: Event,
+}
+
+/// Preallocated bounded event sink. Saturation policy is drop-newest:
+/// the buffer is allocated once at construction and `push` past
+/// capacity increments `dropped_events` instead of growing — the hot
+/// path never reallocates and never loses the count of what it lost.
+#[derive(Clone, Debug)]
+pub struct EventRing {
+    buf: Vec<Stamped>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    pub fn with_capacity(cap: usize) -> EventRing {
+        EventRing { buf: Vec::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    #[inline]
+    pub fn push(&mut self, t_us: u64, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(Stamped { t_us, ev });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events dropped at the capacity wall since construction.
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Stamped> {
+        self.buf.iter()
+    }
+
+    /// Hand the recorded events over (the ring stays usable but empty;
+    /// the dropped count is preserved — it describes the whole run).
+    pub fn take(&mut self) -> Vec<Stamped> {
+        std::mem::take(&mut self.buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_drops_and_counts_without_reallocating() {
+        let mut ring = EventRing::with_capacity(4);
+        let raw_cap = ring.buf.capacity();
+        for step in 0..10u64 {
+            ring.push(step, Event::TokenStart { step });
+        }
+        assert_eq!(ring.len(), 4, "capacity is a hard wall");
+        assert_eq!(ring.dropped_events(), 6, "overflow is counted, not silent");
+        assert_eq!(ring.buf.capacity(), raw_cap, "no reallocation at the wall");
+        // the retained prefix is the oldest events, in order
+        let steps: Vec<u64> = ring
+            .iter()
+            .map(|s| match s.ev {
+                Event::TokenStart { step } => step,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(steps, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn take_preserves_dropped_count() {
+        let mut ring = EventRing::with_capacity(1);
+        ring.push(0, Event::PrefillStart);
+        ring.push(1, Event::PrefillStart);
+        let events = ring.take();
+        assert_eq!(events.len(), 1);
+        assert!(ring.is_empty());
+        assert_eq!(ring.dropped_events(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_ring_only_counts() {
+        let mut ring = EventRing::with_capacity(0);
+        ring.push(0, Event::PrefillStart);
+        assert_eq!(ring.len(), 0);
+        assert_eq!(ring.dropped_events(), 1);
+    }
+}

@@ -1,0 +1,230 @@
+//! Cross-request aggregation point. Each lane/slot records into its own
+//! [`Recorder`] with zero shared state; when a request completes its
+//! recorder is *absorbed* into the hub — one mutex acquisition per
+//! request, off the per-token hot path. The hub also collects
+//! request-level spans (enqueue → admit → complete) from the scheduler
+//! and engine-level events that belong to no single request (shard
+//! rebalances observed between waves).
+
+use std::sync::Mutex;
+
+use super::attribution::AttributionTable;
+use super::clock::Clock;
+use super::event::{Event, Stamped};
+use super::recorder::Recorder;
+use super::series::TimeBins;
+
+/// Sentinel request id for engine-level (requestless) events.
+pub const NO_REQUEST: u64 = u64::MAX;
+
+/// One request's lifecycle timestamps on the hub clock, plus the wall
+/// splits the scheduler measured.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestSpan {
+    pub id: u64,
+    /// When the request entered the queue (µs on the hub clock).
+    pub enqueue_us: u64,
+    /// When a lane/wave slot picked it up.
+    pub admit_us: u64,
+    /// When its response was produced.
+    pub complete_us: u64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub decode_tokens: u64,
+}
+
+#[derive(Debug, Default)]
+struct HubInner {
+    /// (request id, stamped event) in absorption order.
+    events: Vec<(u64, Stamped)>,
+    /// Ring drops from absorbed recorders + hub-side overflow drops.
+    dropped: u64,
+    attrib: AttributionTable,
+    bins: Option<TimeBins>,
+    requests: Vec<RequestSpan>,
+    absorbed: u64,
+}
+
+/// Shared telemetry sink for one serving run.
+#[derive(Debug)]
+pub struct TelemetryHub {
+    clock: Clock,
+    ring_capacity: usize,
+    bin_width_s: f64,
+    /// Hub-side cap on retained raw events (drop-and-count past it).
+    max_events: usize,
+    inner: Mutex<HubInner>,
+}
+
+impl TelemetryHub {
+    pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+    pub const DEFAULT_BIN_WIDTH_S: f64 = 0.1;
+    pub const DEFAULT_MAX_EVENTS: usize = 1 << 20;
+
+    pub fn new(clock: Clock) -> TelemetryHub {
+        TelemetryHub {
+            clock,
+            ring_capacity: Self::DEFAULT_RING_CAPACITY,
+            bin_width_s: Self::DEFAULT_BIN_WIDTH_S,
+            max_events: Self::DEFAULT_MAX_EVENTS,
+            inner: Mutex::new(HubInner::default()),
+        }
+    }
+
+    /// Per-recorder event-ring capacity (events past it are dropped and
+    /// counted in `dropped_events`).
+    pub fn with_ring_capacity(mut self, cap: usize) -> Self {
+        self.ring_capacity = cap;
+        self
+    }
+
+    pub fn with_bin_width(mut self, width_s: f64) -> Self {
+        self.bin_width_s = width_s;
+        self
+    }
+
+    pub fn with_max_events(mut self, max: usize) -> Self {
+        self.max_events = max;
+        self
+    }
+
+    pub fn clock(&self) -> &Clock {
+        &self.clock
+    }
+
+    /// A fresh enabled recorder on the hub's clock, to be planted in a
+    /// `ServeLoop` before the request runs.
+    pub fn recorder(&self, request_id: u64) -> Recorder {
+        Recorder::enabled(request_id, self.clock.clone(), self.ring_capacity, self.bin_width_s)
+    }
+
+    /// Fold a finished request's recorder in (one lock per request). A
+    /// disabled recorder is a no-op, so callers can absorb
+    /// unconditionally.
+    pub fn absorb(&self, mut rec: Recorder) {
+        if !rec.is_enabled() {
+            return;
+        }
+        let id = rec.request_id();
+        let ring_dropped = rec.dropped_events();
+        let events = rec.take_events();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        inner.dropped += ring_dropped;
+        for st in events {
+            if inner.events.len() < self.max_events {
+                inner.events.push((id, st));
+            } else {
+                inner.dropped += 1;
+            }
+        }
+        inner.attrib.merge(&rec.attrib);
+        match &mut inner.bins {
+            Some(b) => b.merge(&rec.bins),
+            None => inner.bins = Some(rec.bins.clone()),
+        }
+        inner.absorbed += 1;
+    }
+
+    /// Record one completed request's lifecycle span.
+    pub fn on_request(&self, span: RequestSpan) {
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        inner.bins.get_or_insert_with(|| TimeBins::new(self.bin_width_s));
+        if let Some(b) = &mut inner.bins {
+            b.at(span.complete_us).completed_requests += 1;
+        }
+        inner.requests.push(span);
+    }
+
+    /// Engine-level rebalance observed outside any request's walk.
+    pub fn on_rebalance(&self, moved_bytes: u64, pressured_shards: u32) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        if inner.events.len() < self.max_events {
+            inner
+                .events
+                .push((NO_REQUEST, Stamped { t_us: t, ev: Event::Rebalance { moved_bytes, pressured_shards } }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// Copy the accumulated state out for export.
+    pub fn snapshot(&self) -> TelemetryReport {
+        let inner = self.inner.lock().expect("telemetry hub poisoned");
+        TelemetryReport {
+            dropped_events: inner.dropped,
+            absorbed_requests: inner.absorbed,
+            events: inner.events.clone(),
+            attrib: inner.attrib.clone(),
+            bins: inner.bins.clone().unwrap_or_else(|| TimeBins::new(self.bin_width_s)),
+            requests: inner.requests.clone(),
+        }
+    }
+}
+
+/// Everything the hub accumulated, detached from the locks — the input
+/// to [`trace_json::render`](super::trace_json::render) and the
+/// reconciliation tests.
+#[derive(Clone, Debug)]
+pub struct TelemetryReport {
+    pub dropped_events: u64,
+    pub absorbed_requests: u64,
+    pub events: Vec<(u64, Stamped)>,
+    pub attrib: AttributionTable,
+    pub bins: TimeBins,
+    pub requests: Vec<RequestSpan>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_merges_attribution_and_counts_requests() {
+        let (clock, hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock).with_ring_capacity(16).with_bin_width(0.1);
+        let mut a = hub.recorder(1);
+        a.on_token_start(0);
+        hand.advance_us(5_000);
+        a.on_token_end(0);
+        let mut b = hub.recorder(2);
+        b.on_token_start(0);
+        b.on_token_end(0);
+        hub.absorb(a);
+        hub.absorb(b);
+        hub.on_request(RequestSpan { id: 1, complete_us: 5_000, ..Default::default() });
+        let rep = hub.snapshot();
+        assert_eq!(rep.absorbed_requests, 2);
+        assert_eq!(rep.attrib.tokens, 2);
+        assert_eq!(rep.events.len(), 4);
+        assert_eq!(rep.requests.len(), 1);
+        assert_eq!(rep.dropped_events, 0);
+        let bin0 = rep.bins.iter().next().unwrap().1;
+        assert_eq!(bin0.tokens, 2);
+        assert_eq!(bin0.completed_requests, 1);
+    }
+
+    #[test]
+    fn hub_event_cap_drops_and_counts() {
+        let (clock, _hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock).with_ring_capacity(16).with_max_events(3);
+        let mut r = hub.recorder(9);
+        for s in 0..5u64 {
+            r.on_token_start(s);
+        }
+        hub.absorb(r);
+        let rep = hub.snapshot();
+        assert_eq!(rep.events.len(), 3);
+        assert_eq!(rep.dropped_events, 2);
+    }
+
+    #[test]
+    fn absorbing_a_disabled_recorder_is_a_no_op() {
+        let (clock, _hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock);
+        hub.absorb(Recorder::disabled());
+        let rep = hub.snapshot();
+        assert_eq!(rep.absorbed_requests, 0);
+        assert!(rep.events.is_empty());
+    }
+}

@@ -1,0 +1,46 @@
+//! Flight-recorder telemetry: always compiled, disabled by default,
+//! observation-only.
+//!
+//! The serving stack (ServeLoop / WaveEngine / the scheduler) threads a
+//! [`Recorder`] through its existing seams; when disabled every hook is a
+//! single branch and the op sequence, RNG streams, ledger energies, and
+//! cache statistics are bit-exactly what they are without telemetry
+//! (pinned by `rust/tests/telemetry_parity.rs`). When enabled it captures
+//!
+//! * **request spans** — enqueue → admit → prefill → per-token decode →
+//!   complete, stamped by a testable [`Clock`] (monotonic in production,
+//!   manual in tests);
+//! * **per-layer decode events** from the ServeLoop
+//!   `begin/account/charge/finish` seam (and therefore from WaveEngine,
+//!   which composes the same four): routed precision mix, slice hit/miss
+//!   per plane, fetch bytes, budget state, per-charge energy;
+//! * **cache events** — fills, evictions with the victim key, shard
+//!   rebalances, PCW reshapes.
+//!
+//! Raw events land in a preallocated [`EventRing`]; past capacity they
+//! are dropped and *counted* (`dropped_events` in every export), never
+//! reallocated on the hot path. The derived products — the per-expert
+//! [`AttributionTable`] and the time-binned [`TimeBins`] series — are
+//! accumulated directly (not replayed from the ring), so ring saturation
+//! can cost detail but never breaks the reconciliation against
+//! `Ledger`/`CacheStats` aggregates.
+//!
+//! Per-lane recorders fold into a shared [`TelemetryHub`] once per
+//! request (one mutex hit, off the token hot path); `slicemoe
+//! serve-trace` exports the hub snapshot as Chrome trace-event JSON
+//! (Perfetto-loadable) via [`trace_json::render`].
+
+pub mod attribution;
+pub mod clock;
+pub mod event;
+pub mod hub;
+pub mod recorder;
+pub mod series;
+pub mod trace_json;
+
+pub use attribution::{AttributionTable, ExpertRow};
+pub use clock::{Clock, ManualClock};
+pub use event::{Event, EventRing, Stamped};
+pub use hub::{RequestSpan, TelemetryHub, TelemetryReport};
+pub use recorder::Recorder;
+pub use series::{Bin, TimeBins};

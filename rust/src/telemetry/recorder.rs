@@ -1,0 +1,408 @@
+//! The per-lane flight recorder. One `Recorder` rides inside each
+//! `ServeLoop` (and therefore inside each wave slot); disabled — the
+//! default — every hook is a single branch and nothing else runs, which
+//! is what makes the observation-only contract trivial to audit: no
+//! hook returns a value the pipeline consumes.
+//!
+//! Energy accounting discipline: `on_charge` is called adjacent to each
+//! `Ledger::record` with the *identical* bound arguments, and recomputes
+//! the same `HwSpec` arithmetic in the same order — so the recorder's
+//! six per-phase component accumulators equal the ledger's `Cost`
+//! joules bit-exactly, not approximately.
+
+use crate::memhier::{HwSpec, Phase};
+use crate::model::descriptor::{Plane, SliceKey};
+use crate::router::{AccessOutcome, Precision};
+
+use super::attribution::AttributionTable;
+use super::clock::Clock;
+use super::event::{Event, EventRing};
+use super::series::TimeBins;
+
+/// Per-request/-lane recorder: event ring + attribution + binned series.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    enabled: bool,
+    request_id: u64,
+    clock: Clock,
+    ring: EventRing,
+    pub attrib: AttributionTable,
+    pub bins: TimeBins,
+}
+
+impl Default for Recorder {
+    /// Disabled recorder: zero-capacity ring, every hook an early return.
+    fn default() -> Self {
+        Recorder {
+            enabled: false,
+            request_id: 0,
+            clock: Clock::default(),
+            ring: EventRing::with_capacity(0),
+            attrib: AttributionTable::default(),
+            bins: TimeBins::new(1.0),
+        }
+    }
+}
+
+impl Recorder {
+    pub fn disabled() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn enabled(request_id: u64, clock: Clock, ring_capacity: usize, bin_width_s: f64) -> Recorder {
+        Recorder {
+            enabled: true,
+            request_id,
+            clock,
+            ring: EventRing::with_capacity(ring_capacity),
+            attrib: AttributionTable::default(),
+            bins: TimeBins::new(bin_width_s),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn request_id(&self) -> u64 {
+        self.request_id
+    }
+
+    pub fn ring(&self) -> &EventRing {
+        &self.ring
+    }
+
+    pub fn dropped_events(&self) -> u64 {
+        self.ring.dropped_events()
+    }
+
+    /// Move the raw events out (hub absorption).
+    pub fn take_events(&mut self) -> Vec<super::event::Stamped> {
+        self.ring.take()
+    }
+
+    // -- request/prefill spans --------------------------------------------
+
+    pub fn on_prefill_start(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(t, Event::PrefillStart);
+    }
+
+    pub fn on_prefill_end(&mut self, tokens: usize, flash_bytes: u64, fetches: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(
+            t,
+            Event::PrefillEnd { tokens: tokens as u32, flash_bytes, fetches },
+        );
+    }
+
+    /// One prefill layer's streaming outcome: aggregate probe counts plus
+    /// the filled and evicted keys (`msb_b`/`lsb_b` size the planes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_prefill_layer(
+        &mut self,
+        hw: &HwSpec,
+        msb_hits: u64,
+        msb_misses: u64,
+        lsb_hits: u64,
+        lsb_misses: u64,
+        fills: &[SliceKey],
+        evicted: &[SliceKey],
+        msb_b: u64,
+        lsb_b: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.attrib.msb_hits += msb_hits;
+        self.attrib.msb_misses += msb_misses;
+        self.attrib.lsb_hits += lsb_hits;
+        self.attrib.lsb_misses += lsb_misses;
+        let plane_bytes = |k: SliceKey| match k.plane {
+            Plane::Msb => msb_b,
+            Plane::Lsb => lsb_b,
+        };
+        let mut fill_bytes = 0u64;
+        for &key in fills {
+            let bytes = plane_bytes(key);
+            fill_bytes += bytes;
+            self.attrib.note_fetch(key, bytes, hw.flash_fetch(bytes).1);
+            match key.plane {
+                Plane::Msb => self.attrib.row_mut(key.layer, key.expert).msb_misses += 1,
+                Plane::Lsb => self.attrib.row_mut(key.layer, key.expert).lsb_misses += 1,
+            }
+            self.ring.push(t, Event::Fill { key, bytes });
+        }
+        let mut evict_bytes = 0u64;
+        for &key in evicted {
+            let bytes = plane_bytes(key);
+            evict_bytes += bytes;
+            self.attrib.note_eviction(key);
+            self.ring.push(t, Event::Evict { key, bytes });
+        }
+        let b = self.bins.at(t);
+        b.msb_lookups += msb_hits + msb_misses;
+        b.msb_misses += msb_misses;
+        b.fetch_bytes += fill_bytes;
+        b.fetches += fills.len() as u64;
+        b.insert_bytes += fill_bytes;
+        b.evict_bytes += evict_bytes;
+    }
+
+    // -- decode seam -------------------------------------------------------
+
+    pub fn on_token_start(&mut self, step: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(t, Event::TokenStart { step });
+    }
+
+    pub fn on_token_end(&mut self, step: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(t, Event::TokenEnd { step });
+        self.attrib.tokens += 1;
+        self.bins.at(t).tokens += 1;
+    }
+
+    /// One (token, layer) decode access, fed from the walk's
+    /// `AccessOutcome` (which carries everything the walk observed, so
+    /// the walk itself needs no recorder and its signature stays fixed).
+    #[allow(clippy::too_many_arguments)]
+    pub fn on_decode_layer(
+        &mut self,
+        hw: &HwSpec,
+        step: u64,
+        layer: usize,
+        out: &AccessOutcome,
+        msb_b: u64,
+        lsb_b: u64,
+        budget_active: bool,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        let layer = layer as u16;
+        let n_high = out
+            .execs
+            .iter()
+            .filter(|x| x.precision != Precision::Low)
+            .count();
+        self.ring.push(
+            t,
+            Event::Layer {
+                step,
+                layer,
+                execs: out.execs.len() as u16,
+                high: n_high as u16,
+                dropped: out.n_dropped as u16,
+                substituted: out.n_substituted as u16,
+                degraded: out.n_degraded as u16,
+                fetch_bytes: out.flash_bytes,
+                fetches: out.flash_fetches as u32,
+                budget_active,
+            },
+        );
+
+        // per-expert rows
+        for x in &out.execs {
+            let row = self.attrib.row_mut(layer, x.expert as u16);
+            row.activations += 1;
+            match x.precision {
+                Precision::Low => row.low += 1,
+                Precision::High | Precision::Full => row.high += 1,
+            }
+            if let Some(orig) = x.substituted_for {
+                row.substituted_in += 1;
+                // the original expert's MSB lookup is what missed
+                self.attrib.row_mut(layer, orig as u16).msb_misses += 1;
+            }
+        }
+        for &e in &out.dropped_experts {
+            let row = self.attrib.row_mut(layer, e);
+            row.dropped += 1;
+            row.msb_misses += 1;
+        }
+        for &e in &out.degraded_experts {
+            let row = self.attrib.row_mut(layer, e);
+            row.degraded += 1;
+            row.lsb_misses += 1;
+        }
+
+        let plane_bytes = |k: SliceKey| match k.plane {
+            Plane::Msb => msb_b,
+            Plane::Lsb => lsb_b,
+        };
+        let mut fill_bytes = 0u64;
+        for &key in &out.fills {
+            let bytes = plane_bytes(key);
+            fill_bytes += bytes;
+            self.attrib.note_fetch(key, bytes, hw.flash_fetch(bytes).1);
+            match key.plane {
+                Plane::Msb => self.attrib.row_mut(key.layer, key.expert).msb_misses += 1,
+                Plane::Lsb => self.attrib.row_mut(key.layer, key.expert).lsb_misses += 1,
+            }
+            self.ring.push(t, Event::Fill { key, bytes });
+        }
+        let mut evict_bytes = 0u64;
+        for &key in &out.evicted {
+            let bytes = plane_bytes(key);
+            evict_bytes += bytes;
+            self.attrib.note_eviction(key);
+            self.ring.push(t, Event::Evict { key, bytes });
+        }
+
+        // exact totals from the walk's own counters
+        self.attrib.msb_hits += u64::from(out.msb_hits);
+        self.attrib.msb_misses += u64::from(out.msb_misses);
+        self.attrib.lsb_hits += u64::from(out.lsb_hits);
+        self.attrib.lsb_misses += u64::from(out.lsb_misses);
+
+        let b = self.bins.at(t);
+        b.msb_lookups += u64::from(out.msb_hits + out.msb_misses);
+        b.msb_misses += u64::from(out.msb_misses);
+        b.fetch_bytes += out.flash_bytes;
+        b.fetches += out.flash_fetches;
+        b.insert_bytes += fill_bytes;
+        b.evict_bytes += evict_bytes;
+
+        if let Some(rb) = out.rebalanced {
+            self.on_rebalance(rb.moved_bytes, rb.pressured_shards);
+        }
+    }
+
+    /// Mirror of one `Ledger::record` call — MUST be passed the same
+    /// `hw`/`ops`/`bytes` the adjacent `record` received.
+    pub fn on_charge(
+        &mut self,
+        phase: Phase,
+        hw: &HwSpec,
+        compute_ops: f64,
+        dram_bytes: u64,
+        flash_bytes: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        // identical arithmetic + accumulation order as Ledger::record
+        let comp = hw.compute(compute_ops);
+        let dram = hw.dram_read(dram_bytes);
+        let flash = hw.flash_fetch(flash_bytes);
+        match phase {
+            Phase::Prefill => {
+                self.attrib.prefill_compute_j += comp.1;
+                self.attrib.prefill_dram_j += dram.1;
+                self.attrib.prefill_flash_j += flash.1;
+            }
+            Phase::Decode => {
+                self.attrib.decode_compute_j += comp.1;
+                self.attrib.decode_dram_j += dram.1;
+                self.attrib.decode_flash_j += flash.1;
+            }
+        }
+        let t = self.clock.now_us();
+        self.ring.push(
+            t,
+            Event::Charge { phase, compute_j: comp.1, dram_j: dram.1, flash_j: flash.1 },
+        );
+    }
+
+    // -- cache maintenance -------------------------------------------------
+
+    pub fn on_reshape(&mut self, retained: u64, retained_bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(
+            t,
+            Event::Reshape { strategy_retained: retained, retained_bytes },
+        );
+    }
+
+    pub fn on_rebalance(&mut self, moved_bytes: u64, pressured_shards: u32) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.clock.now_us();
+        self.ring.push(t, Event::Rebalance { moved_bytes, pressured_shards });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let mut r = Recorder::disabled();
+        r.on_prefill_start();
+        r.on_token_start(0);
+        r.on_charge(Phase::Decode, &HwSpec::paper(), 1e9, 100, 100);
+        r.on_token_end(0);
+        assert!(r.ring().is_empty());
+        assert_eq!(r.dropped_events(), 0);
+        assert_eq!(r.attrib.tokens, 0);
+        assert_eq!(r.attrib.total_energy_j(), 0.0);
+    }
+
+    #[test]
+    fn charge_mirrors_ledger_arithmetic_bit_exactly() {
+        use crate::memhier::Ledger;
+        let hw = HwSpec::paper();
+        let (clock, _hand) = Clock::manual();
+        let mut r = Recorder::enabled(1, clock, 64, 0.1);
+        let mut led = Ledger::new();
+        // a few charges with awkward values, same order both sides
+        for (ops, dram, flash, fetches) in
+            [(1.7e9, 12345u64, 678u64, 2u64), (3.1e7, 999, 0, 0), (2.2e8, 1, 31, 1)]
+        {
+            led.record(Phase::Decode, &hw, ops, dram, flash, fetches);
+            r.on_charge(Phase::Decode, &hw, ops, dram, flash);
+        }
+        led.record(Phase::Prefill, &hw, 5.5e10, 777, 4096, 4);
+        r.on_charge(Phase::Prefill, &hw, 5.5e10, 777, 4096);
+        assert_eq!(r.attrib.decode_compute_j, led.decode_compute.joules);
+        assert_eq!(r.attrib.decode_dram_j, led.decode_dram.joules);
+        assert_eq!(r.attrib.decode_flash_j, led.decode_flash.joules);
+        assert_eq!(r.attrib.prefill_compute_j, led.prefill_compute.joules);
+        assert_eq!(r.attrib.prefill_dram_j, led.prefill_dram.joules);
+        assert_eq!(r.attrib.prefill_flash_j, led.prefill_flash.joules);
+    }
+
+    #[test]
+    fn prefill_layer_attribution_counts_fills_and_evictions() {
+        let hw = HwSpec::paper();
+        let (clock, hand) = Clock::manual();
+        hand.set_us(150_000);
+        let mut r = Recorder::enabled(7, clock, 64, 0.1);
+        let fills = [SliceKey::msb(2, 5), SliceKey::lsb(2, 5)];
+        let evicted = [SliceKey::msb(0, 1)];
+        r.on_prefill_layer(&hw, 3, 2, 1, 1, &fills, &evicted, 100, 40);
+        assert_eq!(r.attrib.flash_bytes, 140);
+        assert_eq!(r.attrib.flash_fetches, 2);
+        assert_eq!(r.attrib.msb_hits, 3);
+        assert_eq!(r.attrib.msb_misses, 2);
+        assert_eq!(r.attrib.evictions, 1);
+        assert_eq!(r.attrib.row(2, 5).unwrap().fetched_bytes, 140);
+        assert_eq!(r.attrib.row(0, 1).unwrap().evictions, 1);
+        // ring saw 2 fills + 1 evict, binned at 0.1s
+        assert_eq!(r.ring().len(), 3);
+        let (t_s, bin) = r.bins.iter().next().unwrap();
+        assert!((t_s - 0.1).abs() < 1e-9);
+        assert_eq!(bin.fetch_bytes, 140);
+        assert_eq!(bin.evict_bytes, 100);
+    }
+}

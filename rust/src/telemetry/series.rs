@@ -1,0 +1,159 @@
+//! Time-binned serving series: miss rate, fetch bytes/s, cache-byte
+//! flow, and completed work per fixed wall-clock interval. Bins are
+//! keyed by the absolute bin index `t_us / width_us` of the shared
+//! [`Clock`](super::Clock), so per-request series merge into the hub's
+//! without any re-anchoring. The bin count is bounded; once the cap is
+//! hit later samples clamp into the last bin (and the clamp is counted)
+//! rather than growing without limit under a runaway manual clock.
+
+use std::collections::BTreeMap;
+
+/// One interval's accumulated counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Bin {
+    /// MSB-plane lookups / misses observed by the walk (miss rate).
+    pub msb_lookups: u64,
+    pub msb_misses: u64,
+    /// Flash miss traffic in this interval.
+    pub fetch_bytes: u64,
+    pub fetches: u64,
+    /// Decode tokens finished in this interval (goodput).
+    pub tokens: u64,
+    /// Bytes inserted into / evicted from the cache (occupancy flow —
+    /// integrate the difference for occupancy-over-time).
+    pub insert_bytes: u64,
+    pub evict_bytes: u64,
+    /// Requests that completed in this interval.
+    pub completed_requests: u64,
+}
+
+impl Bin {
+    fn merge(&mut self, o: &Bin) {
+        self.msb_lookups += o.msb_lookups;
+        self.msb_misses += o.msb_misses;
+        self.fetch_bytes += o.fetch_bytes;
+        self.fetches += o.fetches;
+        self.tokens += o.tokens;
+        self.insert_bytes += o.insert_bytes;
+        self.evict_bytes += o.evict_bytes;
+        self.completed_requests += o.completed_requests;
+    }
+}
+
+/// A bounded map of absolute bin index → [`Bin`].
+#[derive(Clone, Debug)]
+pub struct TimeBins {
+    width_us: u64,
+    max_bins: usize,
+    bins: BTreeMap<u64, Bin>,
+    /// Samples clamped into the last bin after `max_bins` was reached.
+    clamped: u64,
+}
+
+impl TimeBins {
+    pub const DEFAULT_MAX_BINS: usize = 4096;
+
+    pub fn new(width_s: f64) -> TimeBins {
+        TimeBins::with_max_bins(width_s, Self::DEFAULT_MAX_BINS)
+    }
+
+    pub fn with_max_bins(width_s: f64, max_bins: usize) -> TimeBins {
+        let width_us = (width_s * 1e6).max(1.0) as u64;
+        TimeBins { width_us, max_bins: max_bins.max(1), bins: BTreeMap::new(), clamped: 0 }
+    }
+
+    pub fn width_s(&self) -> f64 {
+        self.width_us as f64 * 1e-6
+    }
+
+    pub fn n_bins(&self) -> usize {
+        self.bins.len()
+    }
+
+    pub fn clamped_samples(&self) -> u64 {
+        self.clamped
+    }
+
+    /// Mutate the bin holding time `t_us` (clamping into the newest bin
+    /// when the bin cap is exhausted and `t_us` would open a new one).
+    pub fn at(&mut self, t_us: u64) -> &mut Bin {
+        let mut idx = t_us / self.width_us;
+        if !self.bins.contains_key(&idx) && self.bins.len() >= self.max_bins {
+            // never grow past the cap: clamp into the newest existing bin
+            idx = *self.bins.keys().next_back().expect("max_bins >= 1");
+            self.clamped += 1;
+        }
+        self.bins.entry(idx).or_default()
+    }
+
+    /// (bin start seconds, bin) in time order.
+    pub fn iter(&self) -> impl Iterator<Item = (f64, &Bin)> {
+        let w = self.width_us;
+        self.bins.iter().map(move |(&i, b)| ((i * w) as f64 * 1e-6, b))
+    }
+
+    /// Fold another series in. Only meaningful when both use the same
+    /// width and clock (the hub constructs every recorder, so they do).
+    pub fn merge(&mut self, o: &TimeBins) {
+        debug_assert_eq!(self.width_us, o.width_us, "merging mismatched bin widths");
+        for (&i, b) in &o.bins {
+            if !self.bins.contains_key(&i) && self.bins.len() >= self.max_bins {
+                self.clamped += 1;
+                let last = *self.bins.keys().next_back().expect("max_bins >= 1");
+                self.bins.get_mut(&last).expect("last bin exists").merge(b);
+            } else {
+                self.bins.entry(i).or_default().merge(b);
+            }
+        }
+        self.clamped += o.clamped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_land_in_width_aligned_bins() {
+        let mut tb = TimeBins::new(0.1); // 100ms bins
+        tb.at(50_000).tokens += 1; // bin 0
+        tb.at(99_999).tokens += 1; // bin 0
+        tb.at(100_000).tokens += 1; // bin 1
+        tb.at(1_250_000).fetch_bytes += 64; // bin 12
+        let got: Vec<(f64, Bin)> = tb.iter().map(|(t, b)| (t, *b)).collect();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].0, 0.0);
+        assert_eq!(got[0].1.tokens, 2);
+        assert_eq!(got[1].0, 0.1);
+        assert_eq!(got[1].1.tokens, 1);
+        assert!((got[2].0 - 1.2).abs() < 1e-9);
+        assert_eq!(got[2].1.fetch_bytes, 64);
+    }
+
+    #[test]
+    fn bin_cap_clamps_instead_of_growing() {
+        let mut tb = TimeBins::with_max_bins(0.001, 2);
+        tb.at(0).tokens += 1;
+        tb.at(1_000).tokens += 1; // second bin
+        tb.at(50_000).tokens += 1; // would be bin 50 -> clamped into bin 1
+        assert_eq!(tb.n_bins(), 2);
+        assert_eq!(tb.clamped_samples(), 1);
+        let last = tb.iter().last().unwrap();
+        assert_eq!(last.1.tokens, 2);
+    }
+
+    #[test]
+    fn merge_adds_aligned_bins() {
+        let mut a = TimeBins::new(0.1);
+        a.at(0).msb_lookups = 10;
+        a.at(0).msb_misses = 2;
+        let mut b = TimeBins::new(0.1);
+        b.at(50_000).msb_lookups = 5;
+        b.at(200_000).fetches = 3;
+        a.merge(&b);
+        assert_eq!(a.n_bins(), 2);
+        let first = a.iter().next().unwrap();
+        assert_eq!(first.1.msb_lookups, 15);
+        assert_eq!(first.1.msb_misses, 2);
+    }
+}

@@ -1,0 +1,327 @@
+//! Chrome trace-event export (Perfetto-loadable).
+//!
+//! Emits the standard `{"traceEvents": [...]}` object format: complete
+//! (`"ph":"X"`) spans for requests (and their queue/prefill/decode
+//! phases) and decode tokens, instants (`"ph":"i"`) for per-layer and
+//! cache events, and counters (`"ph":"C"`) from the binned series.
+//! Chrome/Perfetto ignore unknown top-level keys, so the export also
+//! carries the attribution table, the series rows, and — in every
+//! export — `dropped_events`.
+//!
+//! Open `chrome://tracing` or <https://ui.perfetto.dev> and load the
+//! file produced by `slicemoe serve-trace`.
+
+use std::collections::HashMap;
+
+use crate::model::descriptor::{Plane, SliceKey};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::event::Event;
+use super::hub::{TelemetryReport, NO_REQUEST};
+
+fn key_args(key: SliceKey, bytes: u64) -> Json {
+    obj([
+        ("layer", num(key.layer as f64)),
+        ("expert", num(key.expert as f64)),
+        ("plane", s(match key.plane {
+            Plane::Msb => "msb",
+            Plane::Lsb => "lsb",
+        })),
+        ("bytes", num(bytes as f64)),
+    ])
+}
+
+fn span(name: &str, ts_us: u64, dur_us: u64, tid: f64, args: Json) -> Json {
+    obj([
+        ("name", s(name)),
+        ("ph", s("X")),
+        ("ts", num(ts_us as f64)),
+        ("dur", num(dur_us as f64)),
+        ("pid", num(1.0)),
+        ("tid", num(tid)),
+        ("args", args),
+    ])
+}
+
+fn instant(name: &str, ts_us: u64, tid: f64, args: Json) -> Json {
+    obj([
+        ("name", s(name)),
+        ("ph", s("i")),
+        ("s", s("t")),
+        ("ts", num(ts_us as f64)),
+        ("pid", num(1.0)),
+        ("tid", num(tid)),
+        ("args", args),
+    ])
+}
+
+/// Render a hub snapshot as a Chrome trace-event JSON document.
+pub fn render(report: &TelemetryReport) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // request lifecycle spans (one Perfetto track per request id)
+    for r in &report.requests {
+        let tid = r.id as f64;
+        let total = r.complete_us.saturating_sub(r.enqueue_us);
+        events.push(span(
+            "request",
+            r.enqueue_us,
+            total,
+            tid,
+            obj([
+                ("decode_tokens", num(r.decode_tokens as f64)),
+                ("prefill_s", num(r.prefill_s)),
+                ("decode_s", num(r.decode_s)),
+            ]),
+        ));
+        events.push(span(
+            "queue",
+            r.enqueue_us,
+            r.admit_us.saturating_sub(r.enqueue_us),
+            tid,
+            obj([]),
+        ));
+        let prefill_us = (r.prefill_s * 1e6).max(0.0) as u64;
+        events.push(span("prefill", r.admit_us, prefill_us, tid, obj([])));
+        let decode_start = r.admit_us + prefill_us;
+        events.push(span(
+            "decode",
+            decode_start,
+            r.complete_us.saturating_sub(decode_start),
+            tid,
+            obj([("tokens", num(r.decode_tokens as f64))]),
+        ));
+    }
+
+    // raw ring events: token spans (paired start/end) + instants
+    let mut open_tokens: HashMap<(u64, u64), u64> = HashMap::new();
+    for &(req, st) in &report.events {
+        let tid = if req == NO_REQUEST { 0.0 } else { req as f64 };
+        match st.ev {
+            Event::TokenStart { step } => {
+                open_tokens.insert((req, step), st.t_us);
+            }
+            Event::TokenEnd { step } => {
+                if let Some(t0) = open_tokens.remove(&(req, step)) {
+                    events.push(span(
+                        "token",
+                        t0,
+                        st.t_us.saturating_sub(t0),
+                        tid,
+                        obj([("step", num(step as f64))]),
+                    ));
+                }
+            }
+            Event::PrefillStart => {
+                events.push(instant("prefill-start", st.t_us, tid, obj([])));
+            }
+            Event::PrefillEnd { tokens, flash_bytes, fetches } => {
+                events.push(instant(
+                    "prefill-end",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("tokens", num(tokens as f64)),
+                        ("flash_bytes", num(flash_bytes as f64)),
+                        ("fetches", num(fetches as f64)),
+                    ]),
+                ));
+            }
+            Event::Layer {
+                step,
+                layer,
+                execs,
+                high,
+                dropped,
+                substituted,
+                degraded,
+                fetch_bytes,
+                fetches,
+                budget_active,
+            } => {
+                events.push(instant(
+                    "layer",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("step", num(step as f64)),
+                        ("layer", num(layer as f64)),
+                        ("execs", num(execs as f64)),
+                        ("high", num(high as f64)),
+                        ("dropped", num(dropped as f64)),
+                        ("substituted", num(substituted as f64)),
+                        ("degraded", num(degraded as f64)),
+                        ("fetch_bytes", num(fetch_bytes as f64)),
+                        ("fetches", num(fetches as f64)),
+                        ("budget_active", Json::Bool(budget_active)),
+                    ]),
+                ));
+            }
+            Event::Fill { key, bytes } => {
+                events.push(instant("fill", st.t_us, tid, key_args(key, bytes)));
+            }
+            Event::Evict { key, bytes } => {
+                events.push(instant("evict", st.t_us, tid, key_args(key, bytes)));
+            }
+            Event::Charge { phase, compute_j, dram_j, flash_j } => {
+                events.push(instant(
+                    "charge",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("phase", s(match phase {
+                            crate::memhier::Phase::Prefill => "prefill",
+                            crate::memhier::Phase::Decode => "decode",
+                        })),
+                        ("compute_j", num(compute_j)),
+                        ("dram_j", num(dram_j)),
+                        ("flash_j", num(flash_j)),
+                    ]),
+                ));
+            }
+            Event::Reshape { strategy_retained, retained_bytes } => {
+                events.push(instant(
+                    "pcw-reshape",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("retained", num(strategy_retained as f64)),
+                        ("retained_bytes", num(retained_bytes as f64)),
+                    ]),
+                ));
+            }
+            Event::Rebalance { moved_bytes, pressured_shards } => {
+                events.push(instant(
+                    "shard-rebalance",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("moved_bytes", num(moved_bytes as f64)),
+                        ("pressured_shards", num(pressured_shards as f64)),
+                    ]),
+                ));
+            }
+        }
+    }
+
+    // binned counters (one "C" event per bin per counter track)
+    let width_s = report.bins.width_s();
+    for (t_s, bin) in report.bins.iter() {
+        let ts = (t_s * 1e6) as u64;
+        let miss_rate = if bin.msb_lookups > 0 {
+            bin.msb_misses as f64 / bin.msb_lookups as f64
+        } else {
+            0.0
+        };
+        events.push(obj([
+            ("name", s("serving")),
+            ("ph", s("C")),
+            ("ts", num(ts as f64)),
+            ("pid", num(1.0)),
+            ("args", obj([
+                ("miss_rate", num(miss_rate)),
+                ("fetch_bytes_per_s", num(bin.fetch_bytes as f64 / width_s)),
+                ("tokens_per_s", num(bin.tokens as f64 / width_s)),
+                ("occupancy_delta_bytes", num(bin.insert_bytes as f64 - bin.evict_bytes as f64)),
+            ])),
+        ]));
+    }
+
+    // side tables (ignored by trace viewers, used by tooling/tests)
+    let attribution = arr(report.attrib.iter().map(|(&(layer, expert), row)| {
+        obj([
+            ("layer", num(layer as f64)),
+            ("expert", num(expert as f64)),
+            ("activations", num(row.activations as f64)),
+            ("high", num(row.high as f64)),
+            ("low", num(row.low as f64)),
+            ("dropped", num(row.dropped as f64)),
+            ("substituted_in", num(row.substituted_in as f64)),
+            ("degraded", num(row.degraded as f64)),
+            ("msb_misses", num(row.msb_misses as f64)),
+            ("lsb_misses", num(row.lsb_misses as f64)),
+            ("fetched_bytes", num(row.fetched_bytes as f64)),
+            ("fetches", num(row.fetches as f64)),
+            ("evictions", num(row.evictions as f64)),
+            ("flash_j_est", num(row.flash_j_est)),
+        ])
+    }));
+    let series = arr(report.bins.iter().map(|(t_s, bin)| {
+        obj([
+            ("t_s", num(t_s)),
+            ("msb_lookups", num(bin.msb_lookups as f64)),
+            ("msb_misses", num(bin.msb_misses as f64)),
+            ("fetch_bytes", num(bin.fetch_bytes as f64)),
+            ("fetches", num(bin.fetches as f64)),
+            ("tokens", num(bin.tokens as f64)),
+            ("insert_bytes", num(bin.insert_bytes as f64)),
+            ("evict_bytes", num(bin.evict_bytes as f64)),
+            ("completed_requests", num(bin.completed_requests as f64)),
+        ])
+    }));
+
+    obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("dropped_events", num(report.dropped_events as f64)),
+        ("otherData", obj([
+            ("dropped_events", num(report.dropped_events as f64)),
+            ("absorbed_requests", num(report.absorbed_requests as f64)),
+            ("flash_bytes", num(report.attrib.flash_bytes as f64)),
+            ("flash_fetches", num(report.attrib.flash_fetches as f64)),
+            ("decode_tokens", num(report.attrib.tokens as f64)),
+        ])),
+        ("attribution", attribution),
+        ("series", series),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Clock, RequestSpan, TelemetryHub};
+
+    #[test]
+    fn render_produces_parseable_trace_with_request_span() {
+        let (clock, hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock).with_ring_capacity(64).with_bin_width(0.1);
+        let mut rec = hub.recorder(3);
+        rec.on_prefill_start();
+        hand.advance_us(10_000);
+        rec.on_prefill_end(16, 4096, 2);
+        rec.on_token_start(0);
+        hand.advance_us(2_000);
+        rec.on_token_end(0);
+        hub.absorb(rec);
+        hub.on_request(RequestSpan {
+            id: 3,
+            enqueue_us: 0,
+            admit_us: 1_000,
+            complete_us: 12_000,
+            prefill_s: 0.010,
+            decode_s: 0.002,
+            decode_tokens: 1,
+        });
+        let doc = render(&hub.snapshot());
+        // round-trips through the strict parser
+        let parsed = Json::parse(&doc.render()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let request_spans: Vec<_> = evs
+            .iter()
+            .filter(|e| {
+                e.get("name").and_then(Json::as_str) == Some("request")
+                    && e.get("ph").and_then(Json::as_str) == Some("X")
+            })
+            .collect();
+        assert_eq!(request_spans.len(), 1);
+        assert_eq!(request_spans[0].get("dur").unwrap().as_f64(), Some(12_000.0));
+        // token span got paired
+        assert!(evs.iter().any(|e| {
+            e.get("name").and_then(Json::as_str) == Some("token")
+                && e.get("dur").and_then(Json::as_f64) == Some(2_000.0)
+        }));
+        // dropped_events present at top level
+        assert_eq!(parsed.get("dropped_events").unwrap().as_f64(), Some(0.0));
+        assert!(parsed.get("series").unwrap().as_arr().unwrap().len() >= 1);
+    }
+}

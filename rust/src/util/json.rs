@@ -166,6 +166,10 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+    Json::Arr(items.into_iter().collect())
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,

@@ -12,6 +12,10 @@
 //!
 //! Cells new in the candidate are reported but never fail the diff —
 //! growing the sweep must not require regenerating old baselines.
+//! `…/telemetry` rows (flight-recorder observability series) are
+//! informational in BOTH directions: they carry no gated metrics, and
+//! their appearance or disappearance (telemetry toggled on/off between
+//! runs) never fails the gate.
 //! Degenerate baselines (zero, missing, or non-finite values — the
 //! Reporter serializes non-finite as `null`) skip the relative check.
 //! The reverse is NOT symmetric: a candidate that reports `null` (or
@@ -89,6 +93,12 @@ fn value(values: &Json, key: &str) -> Option<f64> {
     values.get(key).and_then(|v| v.as_f64()).filter(|v| v.is_finite())
 }
 
+/// Observability rows ride along without gating: telemetry can be
+/// toggled per run, so these cells may come and go freely.
+fn is_informational(name: &str) -> bool {
+    name.ends_with("/telemetry")
+}
+
 /// Compare two serialized `BENCH_workload.json` documents.
 /// `threshold` is the tolerated relative worsening (0.10 = 10%).
 pub fn diff_workload_reports(
@@ -108,6 +118,9 @@ pub fn diff_workload_reports(
         }
     }
     for (name, base_vals) in &base_rows {
+        if is_informational(name) {
+            continue; // never gated, in either direction
+        }
         let Some((_, cand_vals)) = cand_rows.iter().find(|(n, _)| n == name) else {
             diff.missing.push(name.clone());
             continue;
@@ -289,6 +302,27 @@ mod tests {
         let d = diff_workload_reports(&base, &cand, 0.10).unwrap();
         assert!(!d.is_regression(), "{d:?}");
         assert_eq!(d.added, vec!["steady/lanes4/sharded4/wave".to_string()]);
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn telemetry_rows_are_informational_in_both_directions() {
+        // telemetry toggled ON in the candidate: new row, no gate
+        let base = report(&[("steady/lanes4/sharded4", 0.1, 500.0)]);
+        let with_tel = format!(
+            "{{\"title\":\"t\",\"results\":[],\"metrics\":[{},{}]}}",
+            "{\"name\":\"steady/lanes4/sharded4\",\"values\":{\"e2e_p99_s\":0.1,\"goodput_tok_s\":500.0}}",
+            "{\"name\":\"steady/lanes4/sharded4/telemetry\",\"values\":{\"events\":42,\"dropped_events\":0}}"
+        );
+        let d = diff_workload_reports(&base, &with_tel, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.added, vec!["steady/lanes4/sharded4/telemetry".to_string()]);
+
+        // telemetry toggled OFF in the candidate: the vanished row must
+        // not count as a missing (gated) cell
+        let d = diff_workload_reports(&with_tel, &base, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert!(d.missing.is_empty());
         assert_eq!(d.compared, 1);
     }
 

@@ -19,26 +19,33 @@
 //!   separately as `submit_lag_s`).
 
 use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::server::{combined_miss_rate, Response, ServerHandle};
+use crate::telemetry::Clock;
 use crate::util::stats;
 
 use super::scenario::TraceRequest;
 
 /// Harness knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct OpenLoopOpts {
     /// Multiplier from trace (virtual) seconds to host seconds — < 1
     /// compresses a long trace into a short run, > 1 stretches it.
     pub time_scale: f64,
+    /// Timebase for every harness wall reading (scheduled arrivals,
+    /// e2e latency, run wall time). Share it with the server under test
+    /// (see [`ServerHandle::clock`]) so harness latency splits and
+    /// telemetry spans sit on one axis; tests can substitute a manual
+    /// clock. Pacing sleeps remain real-time regardless.
+    pub clock: Clock,
 }
 
 impl Default for OpenLoopOpts {
     fn default() -> Self {
-        OpenLoopOpts { time_scale: 1.0 }
+        OpenLoopOpts { time_scale: 1.0, clock: Clock::default() }
     }
 }
 
@@ -164,7 +171,9 @@ pub fn run_open_loop<F>(
 where
     F: FnMut(&TraceRequest) -> Vec<u8>,
 {
-    let t0 = Instant::now();
+    let clock = opts.clock.clone();
+    let t0_us = clock.now_us();
+    let now_s = move || clock.now_us().saturating_sub(t0_us) as f64 / 1e6;
     let mut report = LoadReport::default();
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
     let mut outstanding = 0usize;
@@ -199,8 +208,8 @@ where
         loop {
             match handle.try_recv() {
                 Ok(Some(res)) => {
-                    let now_s = t0.elapsed().as_secs_f64();
-                    record(res, &mut inflight, &mut report, now_s);
+                    let now = now_s();
+                    record(res, &mut inflight, &mut report, now);
                     outstanding = outstanding.saturating_sub(1);
                     continue;
                 }
@@ -217,12 +226,12 @@ where
                     continue;
                 }
             }
-            let now_s = t0.elapsed().as_secs_f64();
-            if now_s >= target_s {
+            let now = now_s();
+            if now >= target_s {
                 break;
             }
             std::thread::sleep(Duration::from_secs_f64(
-                (target_s - now_s).min(1e-3),
+                (target_s - now).min(1e-3),
             ));
         }
         // non-blocking submit loop: while the admission queue pushes
@@ -236,8 +245,8 @@ where
                     waiting = Some(back);
                     match handle.try_recv() {
                         Ok(Some(res)) => {
-                            let now_s = t0.elapsed().as_secs_f64();
-                            record(res, &mut inflight, &mut report, now_s);
+                            let now = now_s();
+                            record(res, &mut inflight, &mut report, now);
                             outstanding = outstanding.saturating_sub(1);
                         }
                         Ok(None) => std::thread::sleep(Duration::from_micros(200)),
@@ -257,7 +266,7 @@ where
                 }
             }
         }
-        let after_s = t0.elapsed().as_secs_f64();
+        let after_s = now_s();
         inflight.insert(
             tr.id,
             Inflight { scheduled_s: target_s, submit_lag_s: (after_s - target_s).max(0.0) },
@@ -269,15 +278,15 @@ where
     while outstanding > 0 {
         match handle.recv() {
             Ok(res) => {
-                let now_s = t0.elapsed().as_secs_f64();
-                record(res, &mut inflight, &mut report, now_s);
+                let now = now_s();
+                record(res, &mut inflight, &mut report, now);
             }
             Err(e) => report.errors.push(format!("{e:#}")),
         }
         outstanding -= 1;
     }
 
-    report.wall_s = t0.elapsed().as_secs_f64();
+    report.wall_s = now_s();
     report.outcomes.sort_by_key(|o| o.id);
     Ok(report)
 }
@@ -286,6 +295,7 @@ where
 mod tests {
     use super::*;
     use crate::server::{Backend, Request};
+    use std::time::Instant;
 
     /// Fixed-delay mock lane (mirrors the scheduler's unit-test mock).
     struct SleepyBackend {
@@ -398,7 +408,7 @@ mod tests {
     fn time_scale_stretches_the_run() {
         let h = ServerHandle::start(2, 8, |_| Ok(SleepyBackend { delay_ms: 1 }));
         let trace = toy_trace(5, 1.0); // 4 virtual seconds of trace
-        let opts = OpenLoopOpts { time_scale: 0.01 }; // → 40 ms
+        let opts = OpenLoopOpts { time_scale: 0.01, ..Default::default() }; // → 40 ms
         let t0 = Instant::now();
         let report = run_open_loop(&h, &trace, &opts, |_| vec![0u8; 4]).unwrap();
         let wall = t0.elapsed().as_secs_f64();

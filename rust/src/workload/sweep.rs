@@ -18,6 +18,7 @@ use crate::serve::ServeConfig;
 use crate::server::{request_seed, CostModelServerBackend, ServerHandle, SharedCacheHandle};
 use crate::sim::trace::TraceParams;
 use crate::sim::workload::WorkloadParams;
+use crate::telemetry::{Clock, TelemetryHub, TelemetryReport};
 use crate::util::bench::Reporter;
 
 use super::harness::{run_open_loop, OpenLoopOpts, WorkloadSummary};
@@ -98,6 +99,11 @@ pub struct SweepConfig {
     pub seed: u64,
     /// When set, write each scenario's trace as `trace_<name>.smwt`.
     pub trace_dir: Option<PathBuf>,
+    /// Record flight-recorder telemetry per cell and append one
+    /// `{cell}/telemetry` metrics row (event/drop counts plus the
+    /// time-binned serving series, flattened per bin). Off by default:
+    /// the rows are informational — `bench-diff` never gates on them.
+    pub telemetry: bool,
 }
 
 impl SweepConfig {
@@ -124,6 +130,7 @@ impl SweepConfig {
             span_s: 1.5,
             seed: 0x10AD,
             trace_dir: None,
+            telemetry: false,
         }
     }
 
@@ -203,20 +210,34 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                         _ => mode,
                     };
                     let mode_label = actual_mode.label();
+                    // one clock per cell, shared by server, harness, and
+                    // (when enabled) the telemetry hub — one timebase
+                    let clock = Clock::default();
+                    let hub = cfg
+                        .telemetry
+                        .then(|| Arc::new(TelemetryHub::new(clock.clone())));
                     let handle = match decode_mode {
-                        DecodeMode::Lanes => ServerHandle::start(
-                            lanes.max(1),
-                            cfg.queue_depth.max(1),
-                            move |_lane| {
-                                let mut b = CostModelServerBackend::new(
-                                    template.clone(),
-                                    trace_params,
-                                    base_seed,
-                                );
-                                b.shared_cache = shared_cache.clone();
-                                Ok(b)
-                            },
-                        ),
+                        DecodeMode::Lanes => {
+                            let lane_hub = hub.clone();
+                            ServerHandle::start_ex(
+                                lanes.max(1),
+                                cfg.queue_depth.max(1),
+                                clock.clone(),
+                                hub.clone(),
+                                move |_lane| {
+                                    let mut b = CostModelServerBackend::new(
+                                        template.clone(),
+                                        trace_params,
+                                        base_seed,
+                                    );
+                                    b.shared_cache = shared_cache.clone();
+                                    if let Some(h) = &lane_hub {
+                                        b = b.with_telemetry(Arc::clone(h));
+                                    }
+                                    Ok(b)
+                                },
+                            )
+                        }
                         DecodeMode::Wave => {
                             let cache = match &shared_cache {
                                 Some(SharedCacheHandle::Sharded(c)) => Arc::clone(c),
@@ -227,10 +248,12 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                                 trace_params,
                                 base_seed,
                             );
-                            ServerHandle::start_wave(
+                            ServerHandle::start_wave_ex(
                                 lanes.max(1),
                                 cfg.queue_depth.max(1),
                                 cache,
+                                clock.clone(),
+                                hub.clone(),
                                 move |req| Ok(factory.wave_lane(req)),
                             )
                         }
@@ -238,7 +261,7 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     let report = run_open_loop(
                         &handle,
                         &reqs,
-                        &OpenLoopOpts { time_scale },
+                        &OpenLoopOpts { time_scale, clock },
                         |tr| vec![0u8; tr.prefill_tokens as usize],
                     )?;
                     handle.shutdown();
@@ -274,6 +297,9 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                             ("wall_s", s.wall_s),
                         ],
                     );
+                    if let Some(hub) = hub {
+                        record_telemetry_row(rep, &name, &hub.snapshot());
+                    }
                     cells.push(SweepCell {
                         scenario: sc.name(),
                         lanes,
@@ -286,6 +312,55 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
         }
     }
     Ok(cells)
+}
+
+/// Bin cap for the flattened per-cell series row.
+const MAX_SERIES_BINS: usize = 16;
+
+/// Flatten one cell's telemetry snapshot into a `{cell}/telemetry`
+/// metrics row: run-level counters plus the time-binned serving series
+/// (per-bin miss rate, fetch bytes/s, goodput, occupancy flow), capped
+/// at [`MAX_SERIES_BINS`] bins with the overflow counted — never
+/// silently truncated.
+fn record_telemetry_row(rep: &mut Reporter, cell: &str, t: &TelemetryReport) {
+    let width = t.bins.width_s().max(1e-9);
+    let mut vals: Vec<(String, f64)> = vec![
+        ("events".to_string(), t.events.len() as f64),
+        ("dropped_events".to_string(), t.dropped_events as f64),
+        ("request_spans".to_string(), t.requests.len() as f64),
+        ("tokens".to_string(), t.attrib.tokens as f64),
+        ("flash_bytes".to_string(), t.attrib.flash_bytes as f64),
+        ("flash_fetches".to_string(), t.attrib.flash_fetches as f64),
+        ("msb_misses".to_string(), t.attrib.msb_misses as f64),
+        ("evictions".to_string(), t.attrib.evictions as f64),
+        ("energy_j".to_string(), t.attrib.total_energy_j()),
+        ("expert_rows".to_string(), t.attrib.n_rows() as f64),
+        ("bin_width_s".to_string(), t.bins.width_s()),
+        ("bins".to_string(), t.bins.n_bins() as f64),
+    ];
+    for (i, (start_s, b)) in t.bins.iter().enumerate().take(MAX_SERIES_BINS) {
+        let miss_rate = if b.msb_lookups > 0 {
+            b.msb_misses as f64 / b.msb_lookups as f64
+        } else {
+            0.0
+        };
+        vals.push((format!("bin{i}_t_s"), start_s));
+        vals.push((format!("bin{i}_miss_rate"), miss_rate));
+        vals.push((format!("bin{i}_fetch_Bps"), b.fetch_bytes as f64 / width));
+        vals.push((format!("bin{i}_tok_s"), b.tokens as f64 / width));
+        vals.push((
+            format!("bin{i}_occupancy_delta_b"),
+            b.insert_bytes as f64 - b.evict_bytes as f64,
+        ));
+    }
+    if t.bins.n_bins() > MAX_SERIES_BINS {
+        vals.push((
+            "bins_truncated".to_string(),
+            (t.bins.n_bins() - MAX_SERIES_BINS) as f64,
+        ));
+    }
+    let refs: Vec<(&str, f64)> = vals.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    rep.record_metrics(&format!("{cell}/telemetry"), &refs);
 }
 
 #[cfg(test)]
@@ -376,6 +451,67 @@ mod tests {
         assert!(names.iter().any(|n| n.ends_with("/sharded4")), "{names:?}");
         assert!(names.iter().any(|n| n.ends_with("/sharded1/wave")), "{names:?}");
         assert!(names.iter().any(|n| n.ends_with("/sharded4/wave")), "{names:?}");
+    }
+
+    #[test]
+    fn telemetry_sweep_adds_informational_rows_without_changing_results() {
+        let shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        let mut base = SweepConfig::smoke(tiny_template());
+        base.scenarios = vec![Scenario::Steady];
+        base.lanes = vec![1];
+        base.cache_modes = vec![CacheMode::Sharded(2)];
+        base.requests = 4;
+        base.span_s = 0.05;
+        base.shape = shape;
+        let mut with_tel = base.clone();
+        with_tel.telemetry = true;
+
+        let mut rep_off = Reporter::new("sweep-tel-off");
+        let cells_off = run_sweep(&base, &mut rep_off).unwrap();
+        let mut rep_on = Reporter::new("sweep-tel-on");
+        let cells_on = run_sweep(&with_tel, &mut rep_on).unwrap();
+
+        // simulated results are deterministic — telemetry must not
+        // perturb them (wall-clock metrics are excluded; they are real)
+        assert_eq!(cells_off.len(), cells_on.len());
+        for (a, b) in cells_off.iter().zip(&cells_on) {
+            assert_eq!(a.summary.decode_tokens, b.summary.decode_tokens);
+            assert_eq!(a.summary.miss_rate, b.summary.miss_rate);
+            assert_eq!(a.summary.energy_per_token_j, b.summary.energy_per_token_j);
+            assert_eq!(a.summary.fetches_per_token, b.summary.fetches_per_token);
+        }
+        // one extra `/telemetry` row per cell, with the series flattened
+        assert_eq!(rep_on.metrics().len(), rep_off.metrics().len() * 2);
+        let tel: Vec<_> = rep_on
+            .metrics()
+            .iter()
+            .filter(|m| m.name.ends_with("/telemetry"))
+            .collect();
+        assert_eq!(tel.len(), cells_on.len());
+        for row in tel {
+            let get = |k: &str| {
+                row.values
+                    .iter()
+                    .find(|(n, _)| n == k)
+                    .map(|(_, v)| *v)
+                    .unwrap_or_else(|| panic!("{}: missing key {k}", row.name))
+            };
+            assert!(get("events") > 0.0);
+            assert_eq!(get("dropped_events"), 0.0);
+            assert_eq!(get("request_spans"), 4.0);
+            assert!(get("tokens") > 0.0);
+            assert!(get("bins") >= 1.0);
+            assert!(get("bin0_tok_s") >= 0.0);
+        }
     }
 
     #[test]

@@ -1,0 +1,283 @@
+//! Flight-recorder parity + attribution reconciliation.
+//!
+//! Two contracts anchor the telemetry subsystem:
+//!
+//! * **observation-only**: a `ServeLoop`/`WaveEngine` run produces the
+//!   bit-identical op sequence — token counts, expert counters, miss/hit
+//!   statistics, simulated energies, cache stats — with the recorder
+//!   disabled, enabled, or enabled on a ring so small every event after
+//!   the first handful is dropped. No hook returns a value the pipeline
+//!   consumes, so "approximately equal" would already be a bug;
+//! * **exact reconciliation**: the attribution table's run-level totals
+//!   EQUAL the pipeline's own aggregates — flash bytes/fetches and the
+//!   six per-phase component joules against `Ledger` (the recorder
+//!   recomputes each charge from identical inputs in identical order, so
+//!   the f64 sums match to the last bit), plane hit/miss/eviction counts
+//!   against `CacheStats` deltas. Reconciliation must survive ring
+//!   saturation: the ring drops events, the tables drop nothing.
+
+use std::sync::Arc;
+
+use slicemoe::cache::{ShardedSliceCache, WarmupStrategy};
+use slicemoe::model::ModelDesc;
+use slicemoe::serve::{CostModelBackend, ServeConfig, ServeLoop, WaveEngine};
+use slicemoe::sim::TraceParams;
+use slicemoe::telemetry::{Clock, Recorder, TelemetryHub};
+
+const PREFILL_TOKENS: usize = 32;
+const DECODE_TOKENS: usize = 24;
+
+fn tiny_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+    cfg.cache_bytes = cfg.unit_bytes() * 8;
+    cfg
+}
+
+fn sharded(cfg: &ServeConfig, shards: usize) -> Arc<ShardedSliceCache> {
+    let mut c = ShardedSliceCache::new(cfg.cache_bytes, shards);
+    c.set_heterogeneous(cfg.heterogeneous_lsb);
+    Arc::new(c)
+}
+
+/// One full request (32 prefill + 24 decode tokens) on a fresh sharded
+/// cache, with `recorder` riding inside the loop.
+fn run_loop(
+    cfg: &ServeConfig,
+    shards: usize,
+    recorder: Recorder,
+) -> (ServeLoop, Arc<ShardedSliceCache>) {
+    let cache = sharded(cfg, shards);
+    let mut lp = ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&cache));
+    lp.recorder = recorder;
+    let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed);
+    lp.prefill(&mut be, PREFILL_TOKENS).unwrap();
+    for _ in 0..DECODE_TOKENS {
+        lp.decode_token(&mut be).unwrap();
+    }
+    (lp, cache)
+}
+
+/// The full bit-exact comparison list `wave_decode_parity` pins for the
+/// batch-of-one reduction, reused here for the recorder on/off axis.
+fn assert_loops_bit_exact(a: &mut ServeLoop, b: &mut ServeLoop, ctx: &str) {
+    assert_eq!(a.ledger.decode_steps, b.ledger.decode_steps, "{ctx}");
+    assert_eq!(a.prefill_tokens, b.prefill_tokens, "{ctx}");
+    assert_eq!(a.counters.n_high, b.counters.n_high, "{ctx}");
+    assert_eq!(a.counters.n_low, b.counters.n_low, "{ctx}");
+    assert_eq!(a.counters.n_dropped, b.counters.n_dropped, "{ctx}");
+    assert_eq!(a.counters.n_substituted, b.counters.n_substituted, "{ctx}");
+    assert_eq!(a.counters.n_degraded, b.counters.n_degraded, "{ctx}");
+    assert_eq!(a.counters.n_critical, b.counters.n_critical, "{ctx}");
+    assert_eq!(a.steady_accesses, b.steady_accesses, "{ctx}");
+    assert_eq!(a.steady_flash, b.steady_flash, "{ctx}");
+    assert_eq!(a.decode_flash_fetches, b.decode_flash_fetches, "{ctx}");
+    assert_eq!(a.miss_rate(), b.miss_rate(), "{ctx}");
+    assert_eq!(a.ledger.decode_energy_j(), b.ledger.decode_energy_j(), "{ctx}");
+    assert_eq!(a.ledger.prefill_energy_j(), b.ledger.prefill_energy_j(), "{ctx}");
+    assert_eq!(a.ledger.flash_bytes, b.ledger.flash_bytes, "{ctx}");
+    assert_eq!(a.ledger.flash_fetches, b.ledger.flash_fetches, "{ctx}");
+    assert_eq!(a.hit_rates(), b.hit_rates(), "{ctx}");
+}
+
+#[test]
+fn serve_loop_is_bit_exact_with_telemetry_off_on_and_saturated() {
+    for shards in [1usize, 4] {
+        for constraint in [f64::INFINITY, 0.05] {
+            let ctx = format!("shards {shards}, constraint {constraint}");
+            let mut cfg = tiny_cfg();
+            cfg.constraint = constraint;
+
+            let (mut off, off_cache) = run_loop(&cfg, shards, Recorder::disabled());
+            let (clock, _hand) = Clock::manual();
+            let (mut on, on_cache) =
+                run_loop(&cfg, shards, Recorder::enabled(1, clock.clone(), 65_536, 0.1));
+            // an 8-slot ring saturates within the first prefill layer
+            let (mut sat, sat_cache) =
+                run_loop(&cfg, shards, Recorder::enabled(2, clock, 8, 0.1));
+
+            assert_loops_bit_exact(&mut off, &mut on, &ctx);
+            assert_loops_bit_exact(&mut off, &mut sat, &ctx);
+            assert_eq!(off_cache.stats(), on_cache.stats(), "{ctx}");
+            assert_eq!(off_cache.stats(), sat_cache.stats(), "{ctx}");
+            on_cache.check_invariants().unwrap();
+            sat_cache.check_invariants().unwrap();
+
+            // the healthy ring dropped nothing; the tiny ring dropped
+            // events (counted, never reallocated) yet observed the same run
+            assert_eq!(on.recorder.dropped_events(), 0, "{ctx}");
+            assert!(sat.recorder.dropped_events() > 0, "{ctx}");
+            assert!(sat.recorder.ring().len() <= 8, "{ctx}");
+
+            // attribution is table-kept, not ring-kept: saturation loses
+            // events but NO attribution — both recorders reconcile with
+            // their own (identical) ledgers
+            for lp in [&on, &sat] {
+                assert_eq!(lp.recorder.attrib.flash_bytes, lp.ledger.flash_bytes, "{ctx}");
+                assert_eq!(lp.recorder.attrib.flash_fetches, lp.ledger.flash_fetches, "{ctx}");
+                assert_eq!(lp.recorder.attrib.tokens, lp.ledger.decode_steps, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wave_engine_is_bit_exact_with_telemetry_attached() {
+    for shards in [1usize, 4] {
+        let ctx = format!("shards {shards}");
+        let cfg = tiny_cfg();
+
+        // reference: two requests waved with no telemetry
+        let ref_cache = sharded(&cfg, shards);
+        let mut eng = WaveEngine::new(Arc::clone(&ref_cache), 2);
+        for id in 0..2u64 {
+            let be =
+                CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed + id);
+            eng.admit(id, cfg.clone(), be, PREFILL_TOKENS, DECODE_TOKENS).unwrap();
+        }
+        let mut reference = Vec::new();
+        while !eng.is_idle() {
+            reference.extend(eng.step_wave().unwrap());
+        }
+        reference.sort_by_key(|d| d.id);
+
+        // identical wave with a hub attached (manual clock: deterministic)
+        let (clock, _hand) = Clock::manual();
+        let hub = Arc::new(TelemetryHub::new(clock));
+        let cache = sharded(&cfg, shards);
+        let mut eng =
+            WaveEngine::new(Arc::clone(&cache), 2).with_telemetry(Arc::clone(&hub));
+        for id in 0..2u64 {
+            let be =
+                CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed + id);
+            eng.admit(id, cfg.clone(), be, PREFILL_TOKENS, DECODE_TOKENS).unwrap();
+        }
+        let mut done = Vec::new();
+        while !eng.is_idle() {
+            done.extend(eng.step_wave().unwrap());
+        }
+        done.sort_by_key(|d| d.id);
+
+        assert_eq!(reference.len(), 2, "{ctx}");
+        assert_eq!(done.len(), 2, "{ctx}");
+        for (r, t) in reference.iter_mut().zip(&mut done) {
+            assert_eq!(r.id, t.id, "{ctx}");
+            assert_eq!(r.decode_tokens, t.decode_tokens, "{ctx}");
+            assert!(t.lane.recorder.is_enabled(), "{ctx}: hub plants recorders");
+            assert_loops_bit_exact(&mut r.lane, &mut t.lane, &ctx);
+        }
+        assert_eq!(ref_cache.stats(), cache.stats(), "{ctx}");
+        cache.check_invariants().unwrap();
+
+        // absorbing both lanes gives hub totals that reconcile with the
+        // SUM of the per-request ledgers (cross-request aggregation)
+        let mut flash_bytes = 0u64;
+        let mut tokens = 0u64;
+        for d in &mut done {
+            flash_bytes += d.lane.ledger.flash_bytes;
+            tokens += d.lane.ledger.decode_steps;
+            hub.absorb(std::mem::take(&mut d.lane.recorder));
+        }
+        let snap = hub.snapshot();
+        assert_eq!(snap.absorbed_requests, 2, "{ctx}");
+        assert_eq!(snap.dropped_events, 0, "{ctx}");
+        assert_eq!(snap.attrib.flash_bytes, flash_bytes, "{ctx}");
+        assert_eq!(snap.attrib.tokens, tokens, "{ctx}");
+        assert!(!snap.events.is_empty(), "{ctx}");
+    }
+}
+
+#[test]
+fn attribution_reconciles_with_ledger_and_cache_stats() {
+    // Pcw's reshape re-admits planned slices via `ensure` (insertions the
+    // walk never sees), so the insertions reconciliation is Empty-only;
+    // everything else must hold under both. Random/LastLayer evict via
+    // `remove` — outside the walk, hence outside the contract.
+    for (warmup, check_insertions) in
+        [(WarmupStrategy::Pcw, false), (WarmupStrategy::Empty, true)]
+    {
+        for shards in [1usize, 4] {
+            let ctx = format!("warmup {warmup:?}, shards {shards}");
+            let mut cfg = tiny_cfg();
+            cfg.warmup = warmup;
+
+            let (clock, hand) = Clock::manual();
+            let hub = Arc::new(TelemetryHub::new(clock));
+            let cache = sharded(&cfg, shards);
+            let mut lp = ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&cache));
+            lp.recorder = hub.recorder(9);
+            let mut be =
+                CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed);
+            lp.prefill(&mut be, PREFILL_TOKENS).unwrap();
+            for _ in 0..DECODE_TOKENS {
+                hand.advance_us(1_000);
+                lp.decode_token(&mut be).unwrap();
+            }
+
+            let a = &lp.recorder.attrib;
+
+            // -- Ledger: flash traffic, token count, per-phase energies.
+            // EXACT equality: same inputs, same arithmetic, same order.
+            assert_eq!(a.flash_bytes, lp.ledger.flash_bytes, "{ctx}");
+            assert_eq!(a.flash_fetches, lp.ledger.flash_fetches, "{ctx}");
+            assert_eq!(a.tokens, lp.ledger.decode_steps, "{ctx}");
+            assert_eq!(a.prefill_compute_j, lp.ledger.prefill_compute.joules, "{ctx}");
+            assert_eq!(a.prefill_dram_j, lp.ledger.prefill_dram.joules, "{ctx}");
+            assert_eq!(a.prefill_flash_j, lp.ledger.prefill_flash.joules, "{ctx}");
+            assert_eq!(a.decode_compute_j, lp.ledger.decode_compute.joules, "{ctx}");
+            assert_eq!(a.decode_dram_j, lp.ledger.decode_dram.joules, "{ctx}");
+            assert_eq!(a.decode_flash_j, lp.ledger.decode_flash.joules, "{ctx}");
+            // (whole-run energy reconciles too, but only component-wise:
+            // summing six f64s in a different association order than the
+            // ledger's phase subtotals would not be bit-identical)
+
+            // -- CacheStats: the walk observes every lookup/fill/eviction
+            // the cache counted (fresh cache, so totals ARE the deltas)
+            let s = cache.stats();
+            assert_eq!(a.msb_hits, s.msb_hits, "{ctx}");
+            assert_eq!(a.msb_misses, s.msb_misses, "{ctx}");
+            assert_eq!(a.lsb_hits, s.lsb_hits, "{ctx}");
+            assert_eq!(a.lsb_misses, s.lsb_misses, "{ctx}");
+            assert_eq!(a.evictions, s.evictions, "{ctx}");
+            if check_insertions {
+                assert_eq!(a.flash_fetches, s.insertions, "{ctx}");
+            }
+
+            // -- per-expert rows sum back to the table-level totals
+            let row_bytes: u64 = a.iter().map(|(_, r)| r.fetched_bytes).sum();
+            let row_fetches: u64 = a.iter().map(|(_, r)| r.fetches).sum();
+            let row_evictions: u64 = a.iter().map(|(_, r)| r.evictions).sum();
+            assert_eq!(row_bytes, a.flash_bytes, "{ctx}");
+            assert_eq!(row_fetches, a.flash_fetches, "{ctx}");
+            assert_eq!(row_evictions, a.evictions, "{ctx}");
+            assert!(a.n_rows() > 0, "{ctx}");
+
+            // -- the run actually exercised the interesting paths
+            assert!(a.flash_fetches > 0, "{ctx}");
+            assert!(a.evictions > 0, "{ctx}: 8-unit cache must evict");
+
+            // -- hub absorption preserves every total bit-exactly
+            let (fb, ff, tok, ev, energy) = (
+                a.flash_bytes,
+                a.flash_fetches,
+                a.tokens,
+                a.evictions,
+                a.total_energy_j(),
+            );
+            hub.absorb(std::mem::take(&mut lp.recorder));
+            let snap = hub.snapshot();
+            assert_eq!(snap.absorbed_requests, 1, "{ctx}");
+            assert_eq!(snap.dropped_events, 0, "{ctx}");
+            assert_eq!(snap.attrib.flash_bytes, fb, "{ctx}");
+            assert_eq!(snap.attrib.flash_fetches, ff, "{ctx}");
+            assert_eq!(snap.attrib.tokens, tok, "{ctx}");
+            assert_eq!(snap.attrib.evictions, ev, "{ctx}");
+            assert_eq!(snap.attrib.total_energy_j(), energy, "{ctx}");
+
+            // the binned series conserves the same token/byte totals
+            let bin_tokens: u64 = snap.bins.iter().map(|(_, b)| b.tokens).sum();
+            let bin_fetch_bytes: u64 = snap.bins.iter().map(|(_, b)| b.fetch_bytes).sum();
+            assert_eq!(bin_tokens, tok, "{ctx}");
+            assert_eq!(bin_fetch_bytes, fb, "{ctx}");
+        }
+    }
+}

@@ -210,7 +210,7 @@ fn open_loop_replay_of_a_loaded_trace_completes() {
     let report = run_open_loop(
         &h,
         &loaded.requests,
-        &OpenLoopOpts { time_scale: 0.05 / span.max(1e-9) },
+        &OpenLoopOpts { time_scale: 0.05 / span.max(1e-9), ..Default::default() },
         |tr| vec![0u8; tr.prefill_tokens as usize],
     )
     .unwrap();
