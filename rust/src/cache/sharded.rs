@@ -26,6 +26,11 @@
 //!   ascending shard order (deadlock-free), and expose the [`CacheOps`]
 //!   view the routing walk runs against — one lock acquisition per
 //!   touched shard per (token, layer), instead of one per cache op.
+//! * **Poison containment** — a lane that panics while holding a shard
+//!   lock no longer kills the fleet: the next locker recovers the
+//!   poisoned mutex, wipes that one shard's contents (a cache shard is
+//!   a performance hint, never a correctness dependency — see
+//!   `lock_shard`), and keeps serving. Other shards are untouched.
 //!
 //! With `shards = 1` every key maps to shard 0 and every transaction
 //! degenerates to "lock the one SliceCache, run the identical op
@@ -52,6 +57,7 @@ struct AtomicStats {
     lsb_misses: AtomicU64,
     evictions: AtomicU64,
     insertions: AtomicU64,
+    fill_failures: AtomicU64,
 }
 
 impl AtomicStats {
@@ -67,6 +73,7 @@ impl AtomicStats {
         add(&self.lsb_misses, before.lsb_misses, after.lsb_misses);
         add(&self.evictions, before.evictions, after.evictions);
         add(&self.insertions, before.insertions, after.insertions);
+        add(&self.fill_failures, before.fill_failures, after.fill_failures);
     }
 
     fn snapshot(&self) -> CacheStats {
@@ -77,6 +84,7 @@ impl AtomicStats {
             lsb_misses: self.lsb_misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
             insertions: self.insertions.load(Ordering::Relaxed),
+            fill_failures: self.fill_failures.load(Ordering::Relaxed),
         }
     }
 }
@@ -112,6 +120,8 @@ pub struct ShardedSliceCache {
     /// feed the rebalancer's pressure signal too.
     too_large: Vec<AtomicU64>,
     rebal: Mutex<RebalanceState>,
+    /// Shard-lock poison recoveries (each wiped one shard; `lock_shard`).
+    recovered_locks: AtomicU64,
 }
 
 impl ShardedSliceCache {
@@ -133,7 +143,61 @@ impl ShardedSliceCache {
                 last_evictions: vec![0; n as usize],
                 last_denials: vec![0; n as usize],
             }),
+            recovered_locks: AtomicU64::new(0),
         }
+    }
+
+    /// Lock shard `i`, RECOVERING lock poisoning instead of propagating
+    /// it. A lane that panics while holding a shard lock (a bug in that
+    /// one request, a panicking backend) poisons the mutex; unwrapping
+    /// the poison — the old `.expect("sharded slice cache poisoned")` —
+    /// cascaded one request's death into fleet death, since every other
+    /// lane unwraps the same lock on its next cache op.
+    ///
+    /// Recovery is sound because a cache shard is a performance hint,
+    /// never a correctness dependency: the interrupted operation may
+    /// have left the shard's internal structures (recency lists, byte
+    /// accounting) half-updated, so we quarantine by discarding the
+    /// shard's CONTENTS entirely — resetting it to an empty cache with
+    /// the same budget and replacement policy — and let subsequent
+    /// misses refill it from flash at ordinary miss cost. Aggregate
+    /// statistics live outside the lock in monotone atomic counters and
+    /// keep every delta folded before the panic; nothing is un-counted.
+    /// The global budget invariant (`Σ shard.capacity == capacity`)
+    /// holds because the wiped shard keeps its exact byte budget.
+    fn lock_shard(&self, i: usize) -> MutexGuard<'_, SliceCache> {
+        match self.shards[i].lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                let mut g = poisoned.into_inner();
+                let het = g.heterogeneous;
+                *g = SliceCache::new(g.capacity());
+                g.heterogeneous = het;
+                self.shards[i].clear_poison();
+                self.recovered_locks.fetch_add(1, Ordering::Relaxed);
+                g
+            }
+        }
+    }
+
+    /// Lock the rebalance baselines, recovering poisoning. The state
+    /// holds only counter SNAPSHOTS from the last pass and every reader
+    /// subtracts them saturating, so any torn value is safe — at worst
+    /// the next pass under-reads pressure for one interval.
+    fn lock_rebal(&self) -> MutexGuard<'_, RebalanceState> {
+        match self.rebal.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.rebal.clear_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
+    /// Shard-lock poison recoveries since construction (each one wiped a
+    /// single shard's contents; see [`lock_shard`](Self::lock_shard)).
+    pub fn recovered_shards(&self) -> u64 {
+        self.recovered_locks.load(Ordering::Relaxed)
     }
 
     /// Record a `TooLarge` denial against `shard` (rebalance pressure).
@@ -144,8 +208,8 @@ impl ShardedSliceCache {
     /// Toggle §4.1 heterogeneous replacement on every shard (construction
     /// -time knob, before the cache is shared).
     pub fn set_heterogeneous(&mut self, on: bool) {
-        for s in &self.shards {
-            s.lock().expect("sharded slice cache poisoned").heterogeneous = on;
+        for i in 0..self.shards.len() {
+            self.lock_shard(i).heterogeneous = on;
         }
     }
 
@@ -168,9 +232,7 @@ impl ShardedSliceCache {
 
     /// Run `f` under `key`'s shard lock, folding the stats delta.
     fn with_shard<R>(&self, key: SliceKey, f: impl FnOnce(&mut SliceCache) -> R) -> R {
-        let mut g = self.shards[self.shard_of(key)]
-            .lock()
-            .expect("sharded slice cache poisoned");
+        let mut g = self.lock_shard(self.shard_of(key));
         let before = g.stats;
         let out = f(&mut g);
         self.stats.fold_delta(&before, &g.stats);
@@ -181,8 +243,8 @@ impl ShardedSliceCache {
     /// Whole-cache maintenance (warmup reshape, rebalancing, tests) —
     /// NOT atomic across shards: locks are taken one at a time.
     pub fn for_each_shard(&self, mut f: impl FnMut(usize, &mut SliceCache)) {
-        for (i, m) in self.shards.iter().enumerate() {
-            let mut g = m.lock().expect("sharded slice cache poisoned");
+        for i in 0..self.shards.len() {
+            let mut g = self.lock_shard(i);
             let before = g.stats;
             f(i, &mut g);
             self.stats.fold_delta(&before, &g.stats);
@@ -196,10 +258,7 @@ impl ShardedSliceCache {
     }
 
     pub fn peek(&self, key: SliceKey) -> bool {
-        self.shards[self.shard_of(key)]
-            .lock()
-            .expect("sharded slice cache poisoned")
-            .peek(key)
+        self.lock_shard(self.shard_of(key)).peek(key)
     }
 
     pub fn contains(&self, key: SliceKey) -> bool {
@@ -257,10 +316,7 @@ impl ShardedSliceCache {
     }
 
     pub fn is_pinned(&self, key: SliceKey) -> bool {
-        self.shards[self.shard_of(key)]
-            .lock()
-            .expect("sharded slice cache poisoned")
-            .is_pinned(key)
+        self.lock_shard(self.shard_of(key)).is_pinned(key)
     }
 
     // -- aggregate views ---------------------------------------------------
@@ -272,17 +328,11 @@ impl ShardedSliceCache {
     }
 
     pub fn used_bytes(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|m| m.lock().expect("sharded slice cache poisoned").used_bytes())
-            .sum()
+        (0..self.shards.len()).map(|i| self.lock_shard(i).used_bytes()).sum()
     }
 
     pub fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|m| m.lock().expect("sharded slice cache poisoned").len())
-            .sum()
+        (0..self.shards.len()).map(|i| self.lock_shard(i).len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -293,8 +343,8 @@ impl ShardedSliceCache {
     /// index order (at `shards = 1` this IS the global recency order).
     pub fn keys_mru(&self) -> Vec<SliceKey> {
         let mut out = Vec::new();
-        for m in &self.shards {
-            out.extend(m.lock().expect("sharded slice cache poisoned").keys_mru());
+        for i in 0..self.shards.len() {
+            out.extend(self.lock_shard(i).keys_mru());
         }
         out
     }
@@ -304,8 +354,8 @@ impl ShardedSliceCache {
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut cap_sum = 0u64;
         let mut used_sum = 0u64;
-        for (i, m) in self.shards.iter().enumerate() {
-            let g = m.lock().expect("sharded slice cache poisoned");
+        for i in 0..self.shards.len() {
+            let g = self.lock_shard(i);
             g.check_invariants().map_err(|e| format!("shard {i}: {e}"))?;
             cap_sum += g.capacity();
             used_sum += g.used_bytes();
@@ -331,7 +381,7 @@ impl ShardedSliceCache {
         let mut guards = Vec::with_capacity(ids.len());
         let mut entry_stats = Vec::with_capacity(ids.len());
         for i in ids {
-            let g = self.shards[i].lock().expect("sharded slice cache poisoned");
+            let g = self.lock_shard(i);
             entry_stats.push(g.stats);
             guards.push((i, g));
         }
@@ -350,8 +400,8 @@ impl ShardedSliceCache {
     /// mutation of the token-layer, so a snapshot is equivalent).
     pub fn residency_mask(&self, layer: usize, n_experts: usize) -> Vec<bool> {
         let mut mask = vec![false; n_experts];
-        for (s, m) in self.shards.iter().enumerate() {
-            let g = m.lock().expect("sharded slice cache poisoned");
+        for s in 0..self.shards.len() {
+            let g = self.lock_shard(s);
             for e in (0..n_experts).filter(|&e| self.shard_of_expert(e) == s) {
                 mask[e] = g.peek(SliceKey::msb(layer, e));
             }
@@ -390,12 +440,9 @@ impl ShardedSliceCache {
         if n == 1 {
             return RebalanceSummary::default();
         }
-        let mut rb = self.rebal.lock().expect("rebalance state poisoned");
-        let mut guards: Vec<MutexGuard<'_, SliceCache>> = self
-            .shards
-            .iter()
-            .map(|m| m.lock().expect("sharded slice cache poisoned"))
-            .collect();
+        let mut rb = self.lock_rebal();
+        let mut guards: Vec<MutexGuard<'_, SliceCache>> =
+            (0..n).map(|i| self.lock_shard(i)).collect();
         let entry_stats: Vec<CacheStats> = guards.iter().map(|g| g.stats).collect();
         let used: Vec<u64> = guards.iter().map(|g| g.used_bytes()).collect();
         let evictions: Vec<u64> = guards.iter().map(|g| g.stats.evictions).collect();
@@ -476,7 +523,7 @@ impl ShardedSliceCache {
     pub(crate) fn reshape_budgets(&self, caps: &[u64]) {
         debug_assert_eq!(caps.len(), self.shards.len());
         debug_assert_eq!(caps.iter().sum::<u64>(), self.capacity);
-        let _rb = self.rebal.lock().expect("rebalance state poisoned");
+        let _rb = self.lock_rebal();
         self.for_each_shard(|i, c| c.set_capacity(caps[i]));
     }
 }
@@ -529,6 +576,15 @@ impl CacheOps for ShardTxn<'_> {
             self.owner.note_too_large(self.owner.shard_of(key));
         }
         out
+    }
+
+    fn on_fill_failure(&mut self) {
+        // No key reaches this hook, and nothing was inserted anywhere,
+        // so per-shard attribution is meaningless — charge the atomic
+        // aggregate directly (fold_delta never double-counts it: the
+        // per-shard `stats.fill_failures` this transaction sees stays
+        // untouched).
+        self.owner.stats.fill_failures.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -704,6 +760,44 @@ mod tests {
             o => panic!("{o:?}"),
         }
         assert!(c.contains(k(0, 0, false)));
+    }
+
+    #[test]
+    fn mid_transaction_panic_poisons_one_shard_not_the_fleet() {
+        use std::sync::Arc;
+        let c = Arc::new(ShardedSliceCache::new(400, 4));
+        c.ensure(k(0, 1, true), 40); // shard 1: the "other lane's" resident
+        c.ensure(k(0, 0, true), 40); // shard 0: will be lost to recovery
+
+        // lane dies while holding shard 0's lock, mid-transaction
+        let c2 = Arc::clone(&c);
+        let lane = std::thread::spawn(move || {
+            let mut scratch = Vec::new();
+            let mut txn = c2.txn([0usize]);
+            txn.ensure_into(k(2, 0, true), 40, &mut scratch);
+            panic!("injected lane death");
+        });
+        assert!(lane.join().is_err());
+
+        // other lanes keep serving: untouched shards never see the poison
+        assert!(c.lookup(k(0, 1, true)));
+        assert_eq!(c.recovered_shards(), 0, "no recovery before shard 0 is touched");
+
+        // the poisoned shard recovers on next contact: quarantined (contents
+        // wiped), budget intact, immediately serving again
+        assert!(!c.lookup(k(0, 0, true)));
+        assert_eq!(c.recovered_shards(), 1);
+        let mut scratch = Vec::new();
+        {
+            let mut txn = c.txn([0usize]);
+            assert_eq!(
+                txn.ensure_into(k(0, 0, true), 40, &mut scratch),
+                EnsureOutcome::Inserted
+            );
+        }
+        assert!(c.contains(k(0, 0, true)));
+        assert_eq!(c.recovered_shards(), 1, "recovery happens once, not per lock");
+        c.check_invariants().unwrap();
     }
 
     #[test]

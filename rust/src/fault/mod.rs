@@ -1,0 +1,472 @@
+//! Deterministic fault injection and recovery for the flash-fetch path.
+//!
+//! On-device flash is not the ideal device the cost model assumes: reads
+//! exhibit latency spikes, transient failures, and (rarely) bit errors.
+//! This module injects those faults *deterministically* so chaos runs
+//! replay bit-identically, and defines the recovery policy the walk
+//! applies — bounded retry with backoff, then graceful degradation.
+//!
+//! Design rules:
+//!
+//! * **Off by default, bit-exact when off.** No injector (or a plan with
+//!   `fault_rate == 0 && spike_rate == 0`) must leave the serving
+//!   pipeline byte-for-byte identical to a build without this module.
+//!   The walk only consults the injector behind an `Option`, mirroring
+//!   how the telemetry [`Recorder`](crate::telemetry::Recorder) is
+//!   threaded through.
+//! * **Deterministic by construction.** Every sample is a pure
+//!   [`SplitMix64`] hash of `(injector seed, layer, expert, plane,
+//!   persistence window, attempt)` — no mutable RNG state. The injector
+//!   seed mixes the plan seed with the per-request seed
+//!   ([`request_seed`](crate::server::request_seed) derived), so the
+//!   same request replays the same fault sites in lane *and* wave decode
+//!   modes, while different requests see independent faults.
+//! * **Faults cost real energy.** Every failed attempt and every retry
+//!   moved (or re-moved) bytes over flash; the walk charges them through
+//!   the ordinary `AccessOutcome -> Ledger::record` chain so robustness
+//!   shows up in the joule accounting instead of disappearing.
+//!
+//! Fault taxonomy (see `serve/README.md` for the full model):
+//!
+//! * **Latency spike** — the fetch succeeds but at a multiple of its
+//!   nominal cost, charged as extra flash traffic.
+//! * **Transient read failure** — the fetch returns garbage/errors; a
+//!   flaky site stays flaky for a whole persistence window of decode
+//!   steps, so immediate retries are genuinely risky, not free.
+//! * **Slice corruption** — the fetched slice fails its per-slice
+//!   checksum at fill time (detected before insert; the cache never
+//!   holds a corrupt slice). Counted separately but recovered the same
+//!   way: the fill is abandoned and the fetch retried.
+//!
+//! Recovery: [`FetchPolicy`] retries up to `max_retries` times with a
+//! linear backoff penalty; if every attempt fails the failure is
+//! *persistent* for this access and the walk falls back — a failed LSB
+//! (refinement-plane) fetch degrades the expert to the resident MSB
+//! prefix (the paper's AMAT truncation: a low-bit prefix is always a
+//! valid expert), while a failed MSB fetch falls into the existing
+//! salvage/substitution/drop arms.
+
+use crate::util::rng::SplitMix64;
+
+/// Slice plane tags for fault keying (MSB prefix vs LSB refinement).
+pub const PLANE_MSB: u8 = 0;
+pub const PLANE_LSB: u8 = 1;
+
+/// A seeded chaos scenario: what faults exist and how recovery is bounded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Plan seed, mixed with the per-request seed by [`FaultInjector::new`].
+    pub seed: u64,
+    /// Probability a (layer, expert, plane) fetch site is flaky within a
+    /// given persistence window. 0.0 disables failure injection.
+    pub fault_rate: f64,
+    /// Probability each *retry* at a flaky site fails again.
+    pub retry_fail_p: f64,
+    /// Fraction of failed attempts that manifest as checksum corruption
+    /// at fill time (vs a plain transient read error).
+    pub corruption_fraction: f64,
+    /// Probability a fetch suffers a latency spike. 0.0 disables spikes.
+    pub spike_rate: f64,
+    /// Cost multiplier for spiked fetches (>= 1.0); the excess is
+    /// charged as extra flash bytes.
+    pub spike_multiplier: f64,
+    /// Decode steps a flaky site stays flaky: faults are keyed by
+    /// `step / persistence_window`, so a site that failed at step t
+    /// keeps failing until the window rolls over.
+    pub persistence_window: u64,
+    /// Bounded retry budget per fetch (attempts beyond the first).
+    pub max_retries: u32,
+}
+
+impl FaultPlan {
+    /// The inert plan: injects nothing, retries nothing.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            fault_rate: 0.0,
+            retry_fail_p: 0.0,
+            corruption_fraction: 0.0,
+            spike_rate: 0.0,
+            spike_multiplier: 1.0,
+            persistence_window: 1,
+            max_retries: 0,
+        }
+    }
+
+    /// The CI chaos preset: enough injected trouble to exercise every
+    /// recovery arm on a smoke-sized run without drowning it.
+    pub fn smoke() -> FaultPlan {
+        FaultPlan {
+            seed: 0xC4A0_5C4A,
+            fault_rate: 0.08,
+            retry_fail_p: 0.5,
+            corruption_fraction: 0.25,
+            spike_rate: 0.03,
+            spike_multiplier: 3.0,
+            persistence_window: 8,
+            max_retries: 3,
+        }
+    }
+
+    /// Whether this plan can inject anything at all. Inactive plans are
+    /// never consulted by the walk (the bit-exactness contract).
+    pub fn is_active(&self) -> bool {
+        self.fault_rate > 0.0 || self.spike_rate > 0.0
+    }
+}
+
+/// Bounded-retry policy applied to every faultable flash fetch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FetchPolicy {
+    /// Retry attempts permitted after the first failure.
+    pub max_retries: u32,
+}
+
+impl FetchPolicy {
+    pub fn from_plan(plan: &FaultPlan) -> FetchPolicy {
+        FetchPolicy { max_retries: plan.max_retries }
+    }
+
+    /// Backoff penalty for retry `k` (1-based), charged as flash-
+    /// equivalent bytes: the device sits idle for half a slice-transfer
+    /// per prior failure, a linear bounded backoff.
+    pub fn backoff_bytes(bytes: u64, retry: u32) -> u64 {
+        bytes.saturating_mul(retry.saturating_sub(1) as u64) / 2
+    }
+}
+
+/// What one (possibly retried) fetch came to.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FetchOutcome {
+    /// Total fetch attempts performed (1 = clean first try).
+    pub attempts: u32,
+    /// Flash bytes charged beyond the one nominal fetch: retried
+    /// transfers, backoff idle time, and spike excess.
+    pub extra_bytes: u64,
+    /// Attempts that failed the per-slice checksum at fill time.
+    pub corruptions: u32,
+    /// The fetch hit a latency spike (succeeded at inflated cost).
+    pub spiked: bool,
+    /// False = persistent failure: the retry budget is exhausted and
+    /// the caller must take the degradation fallback.
+    pub succeeded: bool,
+}
+
+impl FetchOutcome {
+    /// A clean, uninjected fetch.
+    pub fn clean() -> FetchOutcome {
+        FetchOutcome { attempts: 1, succeeded: true, ..FetchOutcome::default() }
+    }
+
+    /// Retries performed beyond the first attempt.
+    pub fn retries(&self) -> u32 {
+        self.attempts.saturating_sub(1)
+    }
+}
+
+/// Stateless per-request fault sampler. Cheap to copy around; every
+/// decision is a pure hash of the site coordinates.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    seed: u64,
+}
+
+/// Borrowed injector + decode step, the unit the walk receives. The
+/// step rides along because persistence windows are step-keyed and
+/// `walk_layer` itself has no notion of time.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultCtx<'a> {
+    pub inj: &'a FaultInjector,
+    /// Decode step (per-request token index) of this access.
+    pub step: u64,
+}
+
+/// Map a hash to [0, 1) (same construction as `Rng::f64`).
+fn unit(h: u64) -> f64 {
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Hash a site coordinate tuple under `seed` — one SplitMix64 scramble
+/// per component keeps distinct tuples statistically independent.
+fn mix(seed: u64, parts: &[u64]) -> u64 {
+    let mut h = seed;
+    for &p in parts {
+        h = SplitMix64::new(h ^ p.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64();
+    }
+    h
+}
+
+impl FaultInjector {
+    /// Build the per-request injector. Mixing the request seed in means
+    /// each request sees an independent — but replayable — fault stream,
+    /// identical across lane and wave decode modes.
+    pub fn new(plan: FaultPlan, request_seed: u64) -> FaultInjector {
+        FaultInjector {
+            plan,
+            seed: SplitMix64::new(plan.seed ^ request_seed.rotate_left(17)).next_u64(),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    fn window(&self, step: u64) -> u64 {
+        step / self.plan.persistence_window.max(1)
+    }
+
+    /// Whether the (layer, expert, plane) site is flaky in this window.
+    fn site_flaky(&self, l: u64, e: u64, p: u64, w: u64) -> bool {
+        unit(mix(self.seed, &[1, l, e, p, w])) < self.plan.fault_rate
+    }
+
+    /// Run one fetch of `bytes` for slice (layer, expert, plane) at
+    /// decode step `step` through the fault model and retry policy.
+    ///
+    /// Charging contract: the caller always charges
+    /// `bytes + outcome.extra_bytes` flash bytes and `outcome.attempts`
+    /// flash fetches — failed transfers still moved (garbage) bytes. On
+    /// `!succeeded` the caller must NOT fill the cache and takes the
+    /// degradation fallback instead.
+    pub fn fetch(
+        &self,
+        layer: usize,
+        expert: usize,
+        plane: u8,
+        step: u64,
+        bytes: u64,
+    ) -> FetchOutcome {
+        let mut out = FetchOutcome::clean();
+        let (l, e, p) = (layer as u64, expert as u64, plane as u64);
+        let w = self.window(step);
+        if unit(mix(self.seed, &[2, l, e, p, w])) < self.plan.spike_rate {
+            out.spiked = true;
+            let excess = (self.plan.spike_multiplier - 1.0).max(0.0);
+            out.extra_bytes += (excess * bytes as f64) as u64;
+        }
+        if !self.site_flaky(l, e, p, w) {
+            return out;
+        }
+        let policy = FetchPolicy::from_plan(&self.plan);
+        // The first attempt at a flaky site always fails — that IS the
+        // injected fault. Each subsequent retry independently succeeds
+        // with probability 1 - retry_fail_p.
+        let mut failed = 0u32;
+        loop {
+            failed += 1;
+            let corrupt =
+                unit(mix(self.seed, &[3, l, e, p, w, failed as u64])) < self.plan.corruption_fraction;
+            if corrupt {
+                out.corruptions += 1;
+            }
+            if failed > policy.max_retries {
+                // retry budget exhausted: persistent failure
+                out.attempts = failed;
+                out.succeeded = false;
+                return out;
+            }
+            // schedule retry #`failed`: recharge the slice + backoff idle
+            out.extra_bytes += bytes + FetchPolicy::backoff_bytes(bytes, failed);
+            let ok =
+                unit(mix(self.seed, &[4, l, e, p, w, failed as u64])) >= self.plan.retry_fail_p;
+            if ok {
+                out.attempts = failed + 1;
+                return out;
+            }
+        }
+    }
+}
+
+/// Run-level fault/recovery counters a [`ServeLoop`](crate::serve::ServeLoop)
+/// accumulates across its decode walk. All-zero when injection is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultCounters {
+    /// Retry attempts performed (beyond first attempts).
+    pub retries: u64,
+    /// Fetches that hit a latency spike.
+    pub spikes: u64,
+    /// Attempts failing the per-slice checksum at fill time.
+    pub corruptions: u64,
+    /// Persistent failures (retry budget exhausted, fallback taken).
+    pub failed: u64,
+    /// Expert activations degraded High -> Low by the AMAT fallback
+    /// after a persistent LSB-plane failure.
+    pub degraded: u64,
+    /// Flash bytes charged beyond nominal (retries + backoff + spikes).
+    pub extra_flash_bytes: u64,
+    /// Energy of those extra bytes — the measured cost of robustness.
+    pub retry_energy_j: f64,
+}
+
+impl FaultCounters {
+    pub fn any(&self) -> bool {
+        self.retries != 0
+            || self.spikes != 0
+            || self.corruptions != 0
+            || self.failed != 0
+            || self.degraded != 0
+            || self.extra_flash_bytes != 0
+    }
+
+    pub fn merge(&mut self, o: &FaultCounters) {
+        self.retries += o.retries;
+        self.spikes += o.spikes;
+        self.corruptions += o.corruptions;
+        self.failed += o.failed;
+        self.degraded += o.degraded;
+        self.extra_flash_bytes += o.extra_flash_bytes;
+        self.retry_energy_j += o.retry_energy_j;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heavy_plan() -> FaultPlan {
+        FaultPlan {
+            seed: 7,
+            fault_rate: 1.0,
+            retry_fail_p: 1.0,
+            corruption_fraction: 0.5,
+            spike_rate: 0.0,
+            spike_multiplier: 1.0,
+            persistence_window: 4,
+            max_retries: 2,
+        }
+    }
+
+    #[test]
+    fn disabled_plan_is_inert() {
+        assert!(!FaultPlan::disabled().is_active());
+        assert!(FaultPlan::smoke().is_active());
+    }
+
+    #[test]
+    fn clean_fetch_when_rate_zero() {
+        let inj = FaultInjector::new(FaultPlan::disabled(), 42);
+        for step in 0..64 {
+            let fo = inj.fetch(3, 17, PLANE_MSB, step, 1000);
+            assert_eq!(fo, FetchOutcome::clean());
+        }
+    }
+
+    #[test]
+    fn same_seed_replays_identical_fault_sites() {
+        let a = FaultInjector::new(FaultPlan::smoke(), 99);
+        let b = FaultInjector::new(FaultPlan::smoke(), 99);
+        for step in 0..32 {
+            for layer in 0..4 {
+                for expert in 0..8 {
+                    for plane in [PLANE_MSB, PLANE_LSB] {
+                        assert_eq!(
+                            a.fetch(layer, expert, plane, step, 512),
+                            b.fetch(layer, expert, plane, step, 512)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_request_seeds_give_different_streams() {
+        let a = FaultInjector::new(FaultPlan::smoke(), 1);
+        let b = FaultInjector::new(FaultPlan::smoke(), 2);
+        let mut differs = false;
+        for step in 0..64 {
+            for layer in 0..8 {
+                for expert in 0..16 {
+                    if a.fetch(layer, expert, PLANE_LSB, step, 512)
+                        != b.fetch(layer, expert, PLANE_LSB, step, 512)
+                    {
+                        differs = true;
+                    }
+                }
+            }
+        }
+        assert!(differs, "independent requests should see independent faults");
+    }
+
+    #[test]
+    fn always_failing_site_exhausts_bounded_retries() {
+        let inj = FaultInjector::new(heavy_plan(), 5);
+        let fo = inj.fetch(0, 0, PLANE_LSB, 0, 1000);
+        assert!(!fo.succeeded);
+        // first attempt + max_retries retries, all failed
+        assert_eq!(fo.attempts, 3);
+        assert_eq!(fo.retries(), 2);
+        // each retry recharges the slice plus linear backoff
+        let expect = (1000 + FetchPolicy::backoff_bytes(1000, 1))
+            + (1000 + FetchPolicy::backoff_bytes(1000, 2));
+        assert_eq!(fo.extra_bytes, expect);
+    }
+
+    #[test]
+    fn faults_persist_within_window_and_reroll_across() {
+        let plan = FaultPlan { fault_rate: 0.5, ..heavy_plan() };
+        let inj = FaultInjector::new(plan, 11);
+        // within one window every step sees the same verdict
+        for (l, e) in [(0usize, 0usize), (1, 3), (2, 7)] {
+            let first = inj.fetch(l, e, PLANE_MSB, 0, 100);
+            for step in 1..plan.persistence_window {
+                assert_eq!(inj.fetch(l, e, PLANE_MSB, step, 100), first);
+            }
+        }
+        // across windows at least one site changes verdict at rate 0.5
+        let mut changed = false;
+        for e in 0..32 {
+            let a = inj.fetch(0, e, PLANE_MSB, 0, 100).succeeded;
+            let b = inj.fetch(0, e, PLANE_MSB, plan.persistence_window, 100).succeeded;
+            if a != b {
+                changed = true;
+            }
+        }
+        assert!(changed, "windows should reroll fault sites");
+    }
+
+    #[test]
+    fn retried_to_success_charges_each_retry() {
+        let plan = FaultPlan { retry_fail_p: 0.0, ..heavy_plan() };
+        let inj = FaultInjector::new(plan, 13);
+        let fo = inj.fetch(2, 4, PLANE_MSB, 0, 1000);
+        assert!(fo.succeeded);
+        assert_eq!(fo.attempts, 2);
+        assert_eq!(fo.extra_bytes, 1000 + FetchPolicy::backoff_bytes(1000, 1));
+    }
+
+    #[test]
+    fn spike_inflates_cost_without_failing() {
+        let plan = FaultPlan {
+            fault_rate: 0.0,
+            spike_rate: 1.0,
+            spike_multiplier: 3.0,
+            ..FaultPlan::disabled()
+        };
+        let inj = FaultInjector::new(plan, 21);
+        let fo = inj.fetch(1, 2, PLANE_LSB, 0, 1000);
+        assert!(fo.succeeded && fo.spiked);
+        assert_eq!(fo.attempts, 1);
+        assert_eq!(fo.extra_bytes, 2000);
+    }
+
+    #[test]
+    fn fault_counters_merge_adds() {
+        let mut a = FaultCounters {
+            retries: 1,
+            spikes: 2,
+            corruptions: 3,
+            failed: 4,
+            degraded: 5,
+            extra_flash_bytes: 6,
+            retry_energy_j: 0.5,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.extra_flash_bytes, 12);
+        assert!(a.any());
+        assert!(!FaultCounters::default().any());
+    }
+}

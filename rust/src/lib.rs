@@ -27,6 +27,10 @@
 //!   - [`telemetry`] — the disabled-by-default flight recorder: per-token
 //!     spans, per-expert miss/energy attribution, time-binned serving
 //!     series, and the `serve-trace` Chrome-trace export;
+//!   - [`fault`] — deterministic, seeded fault injection on the
+//!     flash-fetch path (latency spikes, transient failures, checksum
+//!     corruption) with bounded retry/backoff and AMAT degraded
+//!     fallback — off by default and bit-exact when off;
 //!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
 //!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
 //!     Fig 7 cost model, AMAT quantization);
@@ -45,6 +49,7 @@ pub mod cache;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod experiments;
+pub mod fault;
 pub mod memhier;
 pub mod model;
 pub mod quant;

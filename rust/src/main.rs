@@ -390,6 +390,17 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             "telemetry",
             "record flight-recorder telemetry per cell (informational {cell}/telemetry rows)",
         )
+        .switch(
+            "chaos",
+            "deterministic fault injection on the flash-fetch path (smoke preset; adds informational {cell}/chaos rows)",
+        )
+        .opt("fault-rate", "", "per-fetch fault probability override (implies --chaos)")
+        .opt("fault-seed", "", "fault-plan seed override (implies --chaos)")
+        .opt(
+            "slo",
+            "",
+            "per-request SLO in seconds: shed blown deadlines, defer projected violations",
+        )
         .parse(rest, "serve-bench")?;
 
     let desc = model_flag(&a)?;
@@ -406,6 +417,19 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
     cfg.seed = a.usize("seed")? as u64;
     cfg.queue_depth = a.usize("queue")?.max(1);
     cfg.telemetry = a.bool("telemetry");
+    if a.bool("chaos") || a.is_set("fault-rate") || a.is_set("fault-seed") {
+        let mut plan = slicemoe::fault::FaultPlan::smoke();
+        if a.is_set("fault-rate") {
+            plan.fault_rate = a.f64("fault-rate")?;
+        }
+        if a.is_set("fault-seed") {
+            plan.seed = a.usize("fault-seed")? as u64;
+        }
+        cfg.fault = Some(plan);
+    }
+    if a.is_set("slo") {
+        cfg.slo_s = Some(a.f64("slo")?);
+    }
     // explicit flags always win; --smoke only changes the DEFAULTS of
     // requests/span/lanes
     if !a.bool("smoke") || a.is_set("requests") {
@@ -580,7 +604,7 @@ fn serve_trace_cmd(rest: &[String]) -> Result<()> {
         }
         m => bail!("bad --decode-mode '{m}' (wave|lanes)"),
     };
-    let report = run_open_loop(&handle, &reqs, &OpenLoopOpts { time_scale, clock }, |tr| {
+    let report = run_open_loop(&handle, &reqs, &OpenLoopOpts { time_scale, clock, slo_s: None }, |tr| {
         vec![0u8; tr.prefill_tokens as usize]
     })?;
     handle.shutdown();

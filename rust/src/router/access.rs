@@ -12,16 +12,27 @@
 //! MSB lookup ── hit ──────────────────────────────► execute (Low or High)
 //!     │ miss
 //!     ├─ budget admits msb fetch ─► flash fetch ──► execute
+//!     │       └─ persistent fault ─► salvage (same as denied)
 //!     └─ denied ─► substitute best cached expert (Cache-Prior salvage)
 //!                  └─ none cached ─► drop (gate mass lost)
 //! if precision == High:
 //!   LSB lookup ── hit ─► High
 //!       │ miss
 //!       ├─ budget admits lsb fetch ─► flash fetch ─► High
+//!       │       └─ persistent fault ─► degrade to Low (AMAT fallback)
 //!       └─ denied ─► degrade to Low (MSB-only compute, no drop)
 //! ```
+//!
+//! When a [`FaultCtx`] is threaded in, every admitted flash fetch runs
+//! through the deterministic fault model (`fault::FaultInjector`): a
+//! transiently failing fetch is retried with bounded backoff, each
+//! attempt charged as real flash traffic; a *persistently* failing fetch
+//! takes the fallback arm shown above. With no fault context the walk is
+//! bit-exact with the pre-fault pipeline — the clean-path op sequence is
+//! unchanged.
 
 use crate::cache::{CacheOps, HotnessTable, RebalanceSummary, ShardedSliceCache, SliceCache};
+use crate::fault::{FaultCtx, FetchOutcome, PLANE_LSB, PLANE_MSB};
 use crate::model::descriptor::{ModelDesc, SliceKey};
 use crate::quant::MatConfig;
 
@@ -81,6 +92,25 @@ pub struct AccessOutcome {
     pub degraded_experts: Vec<u16>,
     /// Set when this access triggered a shard rebalance (sharded path).
     pub rebalanced: Option<RebalanceSummary>,
+    /// Fault-injection outcomes; all zero/empty when no injector is
+    /// threaded (the bit-exactness contract).
+    ///
+    /// Retry attempts performed beyond first fetch attempts.
+    pub fault_retries: u32,
+    /// Fetches that hit an injected latency spike.
+    pub fault_spikes: u32,
+    /// Fetch attempts failing the per-slice checksum at fill time.
+    pub fault_corruptions: u32,
+    /// Persistent fetch failures (retry budget exhausted, fallback taken).
+    pub fault_failed: u32,
+    /// Experts degraded High→Low by the AMAT fault fallback — a subset
+    /// of `n_degraded`/`degraded_experts`.
+    pub fault_degraded: u32,
+    /// Flash bytes charged beyond nominal due to faults (retries,
+    /// backoff, spike excess); already included in `flash_bytes`.
+    pub fault_extra_flash_bytes: u64,
+    /// The experts behind `fault_degraded` (attribution).
+    pub fault_degraded_experts: Vec<u16>,
 }
 
 /// The selection-phase product: routed experts plus the routing-quality
@@ -145,11 +175,12 @@ pub fn access_layer(
     hot: Option<&mut HotnessTable>,
 ) -> AccessOutcome {
     let mut scratch = Vec::new();
-    access_layer_scratch(cfg, probs, layer, desc, mat, cache, budget, hot, &mut scratch)
+    access_layer_scratch(cfg, probs, layer, desc, mat, cache, budget, hot, &mut scratch, None)
 }
 
 /// [`access_layer`] with a caller-owned eviction scratch buffer (reused
-/// across token-layers — zero steady-state allocation on the fill path).
+/// across token-layers — zero steady-state allocation on the fill path)
+/// and an optional fault-injection context.
 #[allow(clippy::too_many_arguments)]
 pub fn access_layer_scratch(
     cfg: &RouterConfig,
@@ -161,9 +192,10 @@ pub fn access_layer_scratch(
     budget: &mut MissBudget,
     hot: Option<&mut HotnessTable>,
     evict_scratch: &mut Vec<SliceKey>,
+    fault: Option<FaultCtx>,
 ) -> AccessOutcome {
     let route = route_layer(cfg, probs, budget, |e| cache.peek(SliceKey::msb(layer, e)));
-    walk_layer(cfg, route, probs, layer, desc, mat, cache, budget, hot, evict_scratch)
+    walk_layer(cfg, route, probs, layer, desc, mat, cache, budget, hot, evict_scratch, fault)
 }
 
 /// [`access_layer`] against a lock-striped [`ShardedSliceCache`]: the
@@ -185,6 +217,7 @@ pub fn access_layer_sharded(
     budget: &mut MissBudget,
     hot: Option<&mut HotnessTable>,
     evict_scratch: &mut Vec<SliceKey>,
+    fault: Option<FaultCtx>,
 ) -> AccessOutcome {
     let mask = match effective_policy(cfg, budget) {
         Policy::TopK => None,
@@ -199,16 +232,51 @@ pub fn access_layer_sharded(
         } else {
             cache.txn(route.routed.iter().map(|r| cache.shard_of_expert(r.expert)))
         };
-        walk_layer(cfg, route, probs, layer, desc, mat, &mut txn, budget, hot, evict_scratch)
+        walk_layer(cfg, route, probs, layer, desc, mat, &mut txn, budget, hot, evict_scratch, fault)
     };
     out.rebalanced = cache.maybe_rebalance();
     out
 }
 
+/// Run one admitted flash fetch through the fault model (or cleanly when
+/// no injector is threaded) and fold the charges into `out`. The caller
+/// fills the cache only when the returned outcome succeeded.
+fn fault_fetch<C: CacheOps>(
+    fault: Option<FaultCtx>,
+    layer: usize,
+    expert: usize,
+    plane: u8,
+    bytes: u64,
+    out: &mut AccessOutcome,
+    cache: &mut C,
+) -> FetchOutcome {
+    let fo = match fault {
+        Some(f) => f.inj.fetch(layer, expert, plane, f.step, bytes),
+        None => FetchOutcome::clean(),
+    };
+    // failed attempts still moved bytes over flash; retries recharge the
+    // slice plus backoff — all real time/energy in the cost model
+    out.flash_bytes += bytes + fo.extra_bytes;
+    out.flash_fetches += fo.attempts as u64;
+    out.fault_retries += fo.retries();
+    out.fault_extra_flash_bytes += fo.extra_bytes;
+    out.fault_corruptions += fo.corruptions;
+    if fo.spiked {
+        out.fault_spikes += 1;
+    }
+    // corruption is detected by the per-slice checksum at fill time —
+    // the cache observed (and rejected) those fills
+    for _ in 0..fo.corruptions {
+        cache.on_fill_failure();
+    }
+    fo
+}
+
 /// The per-expert cache walk for one (token, layer): budget admission,
-/// miss fills, Cache-Prior salvage, LSB precision resolution. Generic
-/// over [`CacheOps`] so the single LRU and a sharded transaction run the
-/// IDENTICAL op sequence (`shards = 1` bit-exactness is structural).
+/// miss fills, fault retry/fallback, Cache-Prior salvage, LSB precision
+/// resolution. Generic over [`CacheOps`] so the single LRU and a sharded
+/// transaction run the IDENTICAL op sequence (`shards = 1` bit-exactness
+/// is structural).
 #[allow(clippy::too_many_arguments)]
 pub fn walk_layer<C: CacheOps>(
     cfg: &RouterConfig,
@@ -221,6 +289,7 @@ pub fn walk_layer<C: CacheOps>(
     budget: &mut MissBudget,
     hot: Option<&mut HotnessTable>,
     evict_scratch: &mut Vec<SliceKey>,
+    fault: Option<FaultCtx>,
 ) -> AccessOutcome {
     let mut out = AccessOutcome {
         ideal_mass: route.ideal_mass,
@@ -250,14 +319,25 @@ pub fn walk_layer<C: CacheOps>(
             out.msb_hits += 1;
         } else {
             out.msb_misses += 1;
+            let mut filled = false;
             if budget.try_fetch(msb_bytes) {
-                out.flash_bytes += msb_bytes;
-                out.flash_fetches += 1;
-                out.fills.push(msb_key);
-                // TooLarge = pathological capacity; execute streaming from
-                // flash (already charged), do not cache
-                let _ = cache.ensure_into(msb_key, msb_bytes, evict_scratch);
-            } else {
+                let fo = fault_fetch(
+                    fault, layer, r.expert, PLANE_MSB, msb_bytes, &mut out, cache,
+                );
+                if fo.succeeded {
+                    out.fills.push(msb_key);
+                    // TooLarge = pathological capacity; execute streaming
+                    // from flash (already charged), do not cache
+                    let _ = cache.ensure_into(msb_key, msb_bytes, evict_scratch);
+                    filled = true;
+                } else {
+                    // the MSB prefix is the expert's foundation — with it
+                    // unfetchable, fall through to the salvage arm the
+                    // budget-denied path already takes
+                    out.fault_failed += 1;
+                }
+            }
+            if !filled {
                 // salvage: best cached expert in this layer not yet selected
                 let mut best: Option<(usize, f64)> = None;
                 for (e, &p) in probs.iter().enumerate() {
@@ -309,15 +389,32 @@ pub fn walk_layer<C: CacheOps>(
                 } else {
                     budget.try_fetch(lsb_bytes)
                 };
+                let mut upgraded = false;
+                let mut fault_failed_here = false;
                 if admitted {
-                    out.flash_bytes += lsb_bytes;
-                    out.flash_fetches += 1;
-                    out.fills.push(lsb_key);
-                    let _ = cache.ensure_into(lsb_key, lsb_bytes, evict_scratch);
-                } else if precision == Precision::High {
+                    let fo = fault_fetch(
+                        fault, layer, expert, PLANE_LSB, lsb_bytes, &mut out, cache,
+                    );
+                    if fo.succeeded {
+                        out.fills.push(lsb_key);
+                        let _ = cache.ensure_into(lsb_key, lsb_bytes, evict_scratch);
+                        upgraded = true;
+                    } else {
+                        out.fault_failed += 1;
+                        fault_failed_here = true;
+                    }
+                }
+                if !upgraded && precision == Precision::High {
+                    // AMAT truncation: the resident MSB prefix is a valid
+                    // low-precision expert, so a lost refinement plane
+                    // degrades instead of stalling or dropping
                     precision = Precision::Low;
                     out.n_degraded += 1;
                     out.degraded_experts.push(expert as u16);
+                    if fault_failed_here {
+                        out.fault_degraded += 1;
+                        out.fault_degraded_experts.push(expert as u16);
+                    }
                 }
             }
         }
@@ -456,9 +553,9 @@ mod tests {
             budget_b.tick();
             let layer = i % 4;
             let a = access_layer_scratch(&cfg, probs, layer, &desc, mat, &mut cache,
-                                         &mut budget_a, None, &mut scratch_a);
+                                         &mut budget_a, None, &mut scratch_a, None);
             let b = access_layer_sharded(&cfg, probs, layer, &desc, mat, &sharded,
-                                         &mut budget_b, None, &mut scratch_b);
+                                         &mut budget_b, None, &mut scratch_b, None);
             assert_eq!(a.execs, b.execs, "step {i}");
             assert_eq!(a.flash_bytes, b.flash_bytes, "step {i}");
             assert_eq!(a.flash_fetches, b.flash_fetches, "step {i}");
@@ -487,7 +584,7 @@ mod tests {
         for (i, probs) in prob_stream(0xBEE, 80, 8).iter().enumerate() {
             budget.tick();
             let out = access_layer_sharded(&cfg, probs, i % 4, &desc, mat, &sharded,
-                                           &mut budget, None, &mut scratch);
+                                           &mut budget, None, &mut scratch, None);
             // every routed expert executes or drops
             assert_eq!(out.execs.len() + out.n_dropped, cfg.top_k, "step {i}");
             total += out.execs.len();
@@ -506,6 +603,123 @@ mod tests {
                                &mut budget, None);
         let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
         assert_eq!(out.dram_bytes, 2 * unit); // both experts at High
+    }
+
+    /// A plan whose every fetch persistently fails (first attempt plus
+    /// both retries), so the fallback arms are forced on every miss.
+    fn always_failing_ctx() -> crate::fault::FaultInjector {
+        crate::fault::FaultInjector::new(
+            crate::fault::FaultPlan {
+                seed: 3,
+                fault_rate: 1.0,
+                retry_fail_p: 1.0,
+                corruption_fraction: 0.0,
+                spike_rate: 0.0,
+                spike_multiplier: 1.0,
+                persistence_window: 64,
+                max_retries: 2,
+            },
+            77,
+        )
+    }
+
+    #[test]
+    fn persistent_msb_fault_takes_salvage_arm_and_charges_retries() {
+        let (desc, mat, mut cache, mut budget) = setup(8);
+        // expert 5 pre-cached so salvage has a candidate
+        cache.ensure(SliceKey::msb(0, 5), desc.msb_slice_bytes(mat));
+        let mut cfg = RouterConfig::dbsc(2);
+        cfg.policy = Policy::TopK;
+        let inj = always_failing_ctx();
+        let route = route_layer(&cfg, &steep_probs(), &budget, |e| {
+            cache.peek(SliceKey::msb(0, e))
+        });
+        let mut scratch = Vec::new();
+        let out = walk_layer(
+            &cfg, route, &steep_probs(), 0, &desc, mat, &mut cache, &mut budget,
+            None, &mut scratch,
+            Some(crate::fault::FaultCtx { inj: &inj, step: 0 }),
+        );
+        // both routed MSB fetches persistently failed: one salvaged to the
+        // resident expert 5, one dropped (no second candidate). The
+        // salvaged critical expert then failed its LSB upgrade fetch too
+        // and degraded onto the resident MSB prefix — 3 failed sites.
+        assert_eq!(out.fault_failed, 3);
+        assert_eq!(out.n_substituted, 1);
+        assert_eq!(out.n_dropped, 1);
+        assert_eq!(out.fault_degraded, 1);
+        assert_eq!(out.n_degraded, 1);
+        assert!(out.execs.iter().any(|e| e.expert == 5));
+        assert!(out.execs.iter().all(|e| e.precision == Precision::Low));
+        // retries were charged as real flash traffic even though no fill
+        // landed: 3 sites x (1 first attempt + 2 retries)
+        assert_eq!(out.fault_retries, 6);
+        assert_eq!(out.flash_fetches, 9);
+        assert!(out.fault_extra_flash_bytes > 0);
+        assert_eq!(
+            out.flash_bytes,
+            2 * desc.msb_slice_bytes(mat)
+                + desc.lsb_slice_bytes(mat)
+                + out.fault_extra_flash_bytes
+        );
+        assert!(out.fills.is_empty(), "no fill may land on persistent failure");
+    }
+
+    #[test]
+    fn persistent_lsb_fault_degrades_via_amat_fallback() {
+        let (desc, mat, mut cache, mut budget) = setup(8);
+        // all MSB prefixes resident: only LSB refinement fetches remain
+        for e in 0..8 {
+            cache.ensure(SliceKey::msb(0, e), desc.msb_slice_bytes(mat));
+        }
+        let cfg = RouterConfig::dbsc(2);
+        let inj = always_failing_ctx();
+        let route = route_layer(&cfg, &steep_probs(), &budget, |e| {
+            cache.peek(SliceKey::msb(0, e))
+        });
+        let mut scratch = Vec::new();
+        let out = walk_layer(
+            &cfg, route, &steep_probs(), 0, &desc, mat, &mut cache, &mut budget,
+            None, &mut scratch,
+            Some(crate::fault::FaultCtx { inj: &inj, step: 0 }),
+        );
+        // the critical expert's LSB fetch failed persistently -> it runs
+        // Low on the resident MSB prefix instead of dropping
+        assert_eq!(out.n_dropped, 0);
+        assert_eq!(out.fault_degraded, 1);
+        assert_eq!(out.n_degraded, 1);
+        assert_eq!(out.fault_degraded_experts, out.degraded_experts);
+        assert!(out.execs.iter().all(|e| e.precision == Precision::Low));
+        assert!(!cache.contains(SliceKey::lsb(0, 0)));
+    }
+
+    #[test]
+    fn inactive_fault_ctx_matches_no_ctx_bit_exactly() {
+        let (desc, mat, mut cache_a, _) = setup(4);
+        let (_, _, mut cache_b, _) = setup(4);
+        let unit = desc.msb_slice_bytes(mat) + desc.lsb_slice_bytes(mat);
+        let mut budget_a = MissBudget::new(0.3, unit);
+        let mut budget_b = MissBudget::new(0.3, unit);
+        let cfg = RouterConfig::dbsc(2);
+        let inj =
+            crate::fault::FaultInjector::new(crate::fault::FaultPlan::disabled(), 9);
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        for (i, probs) in prob_stream(0xFAB, 60, 8).iter().enumerate() {
+            budget_a.tick();
+            budget_b.tick();
+            let a = access_layer_scratch(&cfg, probs, i % 4, &desc, mat, &mut cache_a,
+                                         &mut budget_a, None, &mut sa, None);
+            let b = access_layer_scratch(&cfg, probs, i % 4, &desc, mat, &mut cache_b,
+                                         &mut budget_b, None, &mut sb,
+                                         Some(crate::fault::FaultCtx { inj: &inj, step: i as u64 }));
+            assert_eq!(a.execs, b.execs, "step {i}");
+            assert_eq!(a.flash_bytes, b.flash_bytes, "step {i}");
+            assert_eq!(a.flash_fetches, b.flash_fetches, "step {i}");
+            assert_eq!(b.fault_retries, 0);
+            assert_eq!(b.fault_extra_flash_bytes, 0);
+        }
+        assert_eq!(cache_a.stats, cache_b.stats);
+        assert_eq!(cache_a.keys_mru(), cache_b.keys_mru());
     }
 
     #[test]

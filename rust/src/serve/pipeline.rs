@@ -29,6 +29,7 @@ use crate::cache::{
     warmup::{apply_ex, apply_sharded},
     CacheOps, CacheStats, HotnessTable, ShardedSliceCache, SliceCache, WarmupStrategy,
 };
+use crate::fault::{FaultCounters, FaultCtx, FaultInjector, FaultPlan};
 use crate::memhier::{HwSpec, Ledger, Phase};
 use crate::model::descriptor::{ModelDesc, Plane, SliceKey};
 use crate::quant::MatConfig;
@@ -66,6 +67,12 @@ pub struct ServeConfig {
     /// Sampling temperature for token generation (engine path; greedy
     /// when `None`). Ignored by cost-model backends.
     pub temperature: Option<f64>,
+    /// Deterministic flash-fault plan (`None` or an inert plan = the
+    /// fault path is never consulted and the walk is bit-exact with
+    /// pre-fault builds). Faults are injected on DECODE fetches only:
+    /// prefill streams every expert sequentially and is not on the
+    /// latency-critical recovery path this layer models.
+    pub fault: Option<FaultPlan>,
     pub seed: u64,
 }
 
@@ -84,6 +91,7 @@ impl ServeConfig {
             background: true,
             heterogeneous_lsb: true,
             temperature: None,
+            fault: None,
             seed: 0xD15C,
             desc,
         }
@@ -103,6 +111,7 @@ impl ServeConfig {
             background: false,
             heterogeneous_lsb: true,
             temperature: None,
+            fault: None,
             seed: 7,
             mat,
             desc,
@@ -130,8 +139,29 @@ impl LaneCache {
     pub fn stats(&mut self) -> CacheStats {
         match self {
             LaneCache::Private(c) => c.stats,
-            LaneCache::Shared(m) => m.lock().expect("shared slice cache poisoned").stats,
+            LaneCache::Shared(m) => lock_shared(m).stats,
             LaneCache::Sharded(s) => s.stats(),
+        }
+    }
+}
+
+/// Lock the lanes' shared mutex-guarded cache, RECOVERING lock
+/// poisoning instead of propagating it — the same containment argument
+/// as `ShardedSliceCache`'s shard locks: a panicking lane must not take
+/// every other lane down with it. The cache is a performance hint, not
+/// a correctness dependency, so recovery discards the (possibly
+/// half-updated) contents, keeps the byte budget and replacement
+/// policy, and lets misses refill from flash at ordinary cost.
+fn lock_shared(m: &Mutex<SliceCache>) -> std::sync::MutexGuard<'_, SliceCache> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            let mut g = poisoned.into_inner();
+            let het = g.heterogeneous;
+            *g = SliceCache::new(g.capacity());
+            g.heterogeneous = het;
+            m.clear_poison();
+            g
         }
     }
 }
@@ -268,6 +298,13 @@ pub struct ServeLoop {
     /// into the `TelemetryHub` on completion. Observation-only: the loop
     /// never reads it back.
     pub recorder: Recorder,
+    /// Deterministic fault injector, built from `cfg.fault` when the plan
+    /// is active and seeded per request by `cfg.seed`. `None` = the walk
+    /// takes the identical (pre-fault) op sequence.
+    pub fault: Option<FaultInjector>,
+    /// Whole-request fault/recovery accounting (all zero when `fault` is
+    /// `None`).
+    pub fault_counters: FaultCounters,
     msb_bytes: u64,
     lsb_bytes: u64,
     /// Reused eviction scratch buffer: `ensure_into` appends evicted keys
@@ -300,6 +337,10 @@ impl ServeLoop {
     fn build(cfg: ServeConfig, cache: LaneCache) -> ServeLoop {
         let msb_bytes = cfg.desc.msb_slice_bytes(cfg.mat);
         let lsb_bytes = cfg.desc.lsb_slice_bytes(cfg.mat);
+        let fault = cfg
+            .fault
+            .filter(|p| p.is_active())
+            .map(|p| FaultInjector::new(p, cfg.seed));
         ServeLoop {
             budget: MissBudget::new(cfg.constraint, msb_bytes + lsb_bytes),
             hot: HotnessTable::new(),
@@ -311,6 +352,8 @@ impl ServeLoop {
             decode_flash_fetches: 0,
             prefill_tokens: 0,
             recorder: Recorder::disabled(),
+            fault,
+            fault_counters: FaultCounters::default(),
             msb_bytes,
             lsb_bytes,
             evict_scratch: Vec::new(),
@@ -397,7 +440,7 @@ impl ServeLoop {
                     stream_layer_fill(c, layer, 0..e_n, msb_b, lsb_b, scratch, &mut fills)
                 }
                 LaneCache::Shared(m) => {
-                    let mut g = m.lock().expect("shared slice cache poisoned");
+                    let mut g = lock_shared(m);
                     stream_layer_fill(&mut *g, layer, 0..e_n, msb_b, lsb_b, scratch, &mut fills)
                 }
                 LaneCache::Sharded(s) => {
@@ -470,7 +513,7 @@ impl ServeLoop {
                 apply_ex(c, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
             }
             LaneCache::Shared(m) => {
-                let mut g = m.lock().expect("shared slice cache poisoned");
+                let mut g = lock_shared(m);
                 apply_ex(&mut g, warmup, hot, target, desc.n_layers, slice_bytes, single_head)
             }
             LaneCache::Sharded(s) => {
@@ -506,19 +549,20 @@ impl ServeLoop {
                 let hot = &mut self.hot;
                 let scratch = &mut self.evict_scratch;
                 let router = &self.cfg.router;
+                let fault = self.fault.as_ref().map(|inj| FaultCtx { inj, step: t });
                 match &mut self.cache {
                     LaneCache::Private(c) => access_layer_scratch(
-                        router, probs, layer, &desc, mat, c, budget, Some(hot), scratch,
+                        router, probs, layer, &desc, mat, c, budget, Some(hot), scratch, fault,
                     ),
                     LaneCache::Shared(m) => {
-                        let mut g = m.lock().expect("shared slice cache poisoned");
+                        let mut g = lock_shared(m);
                         access_layer_scratch(
                             router, probs, layer, &desc, mat, &mut g, budget, Some(hot),
-                            scratch,
+                            scratch, fault,
                         )
                     }
                     LaneCache::Sharded(s) => access_layer_sharded(
-                        router, probs, layer, &desc, mat, s, budget, Some(hot), scratch,
+                        router, probs, layer, &desc, mat, s, budget, Some(hot), scratch, fault,
                     ),
                 }
             };
@@ -593,6 +637,14 @@ impl ServeLoop {
         step.n_degraded += out.n_degraded;
         self.counters.n_critical += out.n_critical as u64;
 
+        // fault/recovery accounting (all-zero unless an injector is live)
+        self.fault_counters.retries += u64::from(out.fault_retries);
+        self.fault_counters.spikes += u64::from(out.fault_spikes);
+        self.fault_counters.corruptions += u64::from(out.fault_corruptions);
+        self.fault_counters.failed += u64::from(out.fault_failed);
+        self.fault_counters.degraded += u64::from(out.fault_degraded);
+        self.fault_counters.extra_flash_bytes += out.fault_extra_flash_bytes;
+
         if t >= self.budget.warmup_steps {
             self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
             self.steady_flash += out.flash_bytes;
@@ -608,6 +660,14 @@ impl ServeLoop {
         } else {
             (0.0, 0)
         };
+        // `out.flash_bytes` already includes retry/spike traffic, so the
+        // ledger charges recovery at real flash cost; the energy of just
+        // the extra traffic is tracked separately (the linear fetch model
+        // makes the split exact).
+        if out.fault_extra_flash_bytes > 0 {
+            self.fault_counters.retry_energy_j +=
+                self.cfg.hw.flash_fetch(out.fault_extra_flash_bytes).1;
+        }
         self.ledger.record(
             Phase::Decode,
             &self.cfg.hw,
@@ -745,6 +805,44 @@ mod tests {
         } else {
             panic!("lane lost its sharded cache");
         }
+    }
+
+    #[test]
+    fn fault_plan_none_and_inert_are_bit_exact() {
+        let cfg = tiny_cfg();
+        let base = run(&cfg, 32, 24);
+        let mut cfg2 = tiny_cfg();
+        cfg2.fault = Some(FaultPlan::disabled());
+        let inert = run(&cfg2, 32, 24);
+        assert!(inert.fault.is_none(), "inert plan must not build an injector");
+        assert_eq!(base.ledger.decode_energy_j(), inert.ledger.decode_energy_j());
+        assert_eq!(base.miss_rate(), inert.miss_rate());
+        assert_eq!(base.counters.n_dropped, inert.counters.n_dropped);
+        assert_eq!(inert.fault_counters, FaultCounters::default());
+    }
+
+    #[test]
+    fn active_fault_plan_charges_recovery_and_serves_every_token() {
+        let mut cfg = tiny_cfg();
+        let mut plan = FaultPlan::smoke();
+        plan.fault_rate = 0.5; // make fault sites certain at this scale
+        plan.spike_rate = 0.2;
+        cfg.fault = Some(plan);
+        let lane = run(&cfg, 32, 48);
+        assert_eq!(lane.ledger.decode_steps, 48, "chaos must not lose tokens");
+        let fc = lane.fault_counters;
+        assert!(fc.any(), "half the fault sites flaky: events must occur");
+        assert!(fc.extra_flash_bytes > 0, "retries/spikes move real bytes");
+        assert!(fc.retry_energy_j > 0.0, "recovery traffic costs real energy");
+        // conservation holds under chaos: every routed expert still
+        // executes, substitutes, or drops
+        let total = lane.counters.n_high + lane.counters.n_low + lane.counters.n_dropped;
+        assert_eq!(total, (48 * cfg.desc.n_layers * cfg.desc.top_k) as u64);
+        // a persistent failure must resolve to a degrade or a salvage arm
+        assert!(
+            fc.failed <= fc.degraded + lane.counters.n_substituted + lane.counters.n_dropped,
+            "every persistent failure resolves: {fc:?}"
+        );
     }
 
     #[test]

@@ -38,6 +38,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::cache::ShardedSliceCache;
+use crate::fault::FaultCtx;
 use crate::memhier::Phase;
 use crate::model::descriptor::SliceKey;
 use crate::router::{
@@ -275,8 +276,14 @@ impl<B: ExpertBackend> WaveEngine<B> {
                     .into_iter()
                     .zip(self.slots.iter_mut())
                     .zip(&probs)
-                    .map(|((route, slot), p)| {
+                    .zip(&ts)
+                    .map(|(((route, slot), p), &t)| {
                         let lane = &mut slot.lane;
+                        // per-request injector + per-request token index:
+                        // fault sites replay identically whether a request
+                        // is waved or served alone
+                        let fault =
+                            lane.fault.as_ref().map(|inj| FaultCtx { inj, step: t });
                         walk_layer(
                             &lane.cfg.router,
                             route,
@@ -288,6 +295,7 @@ impl<B: ExpertBackend> WaveEngine<B> {
                             &mut lane.budget,
                             Some(&mut lane.hot),
                             scratch,
+                            fault,
                         )
                     })
                     .collect()

@@ -51,6 +51,9 @@ pub struct ExpertRow {
     pub evictions: u64,
     /// Estimated flash energy share (linear in `fetched_bytes`).
     pub flash_j_est: f64,
+    /// High→low degradations caused by an injected persistent LSB fetch
+    /// failure (disjoint from budget-denied `degraded`).
+    pub fault_degraded: u64,
 }
 
 impl ExpertRow {
@@ -67,6 +70,7 @@ impl ExpertRow {
         self.fetches += o.fetches;
         self.evictions += o.evictions;
         self.flash_j_est += o.flash_j_est;
+        self.fault_degraded += o.fault_degraded;
     }
 }
 
@@ -98,6 +102,17 @@ pub struct AttributionTable {
     pub decode_compute_j: f64,
     pub decode_dram_j: f64,
     pub decode_flash_j: f64,
+    /// Injected-fault recovery totals. Note: the extra flash bytes retry
+    /// and persistent-failure charging add to the `Ledger` are *not*
+    /// folded into `flash_bytes` above (which counts fill traffic only),
+    /// so under active fault injection `flash_bytes` reconciles with the
+    /// ledger minus this recovery traffic; fault-free runs are unchanged
+    /// and the parity tests pin that.
+    pub fault_retries: u64,
+    pub fault_corruptions: u64,
+    pub fault_failed: u64,
+    pub fault_degraded: u64,
+    pub fault_extra_flash_bytes: u64,
 }
 
 impl AttributionTable {
@@ -169,6 +184,11 @@ impl AttributionTable {
         self.decode_compute_j += o.decode_compute_j;
         self.decode_dram_j += o.decode_dram_j;
         self.decode_flash_j += o.decode_flash_j;
+        self.fault_retries += o.fault_retries;
+        self.fault_corruptions += o.fault_corruptions;
+        self.fault_failed += o.fault_failed;
+        self.fault_degraded += o.fault_degraded;
+        self.fault_extra_flash_bytes += o.fault_extra_flash_bytes;
     }
 
     pub fn total_energy_j(&self) -> f64 {

@@ -46,6 +46,26 @@ pub enum Event {
     Reshape { strategy_retained: u64, retained_bytes: u64 },
     /// A sharded-cache slack rebalance pass.
     Rebalance { moved_bytes: u64, pressured_shards: u32 },
+    /// One (token, layer) access that saw injected faults: retry /
+    /// corruption / spike / persistent-failure counts and the extra
+    /// flash bytes the recovery charged. Emitted only when any counter
+    /// is nonzero, so fault-free runs produce identical streams.
+    Fault {
+        step: u64,
+        layer: u16,
+        retries: u16,
+        spikes: u16,
+        corruptions: u16,
+        failed: u16,
+        degraded: u16,
+        extra_bytes: u64,
+    },
+    /// A request was shed at admission (its SLO deadline was already
+    /// blown by queue delay).
+    Shed,
+    /// A request was deferred (requeued once) because projected
+    /// completion would violate its SLO.
+    Defer,
 }
 
 /// An [`Event`] stamped with its [`Clock`](super::Clock) time.

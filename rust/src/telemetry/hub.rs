@@ -43,6 +43,10 @@ struct HubInner {
     bins: Option<TimeBins>,
     requests: Vec<RequestSpan>,
     absorbed: u64,
+    /// Requests shed at admission (SLO deadline blown in queue).
+    shed: u64,
+    /// Requests requeued once on projected SLO violation.
+    deferred: u64,
 }
 
 /// Shared telemetry sink for one serving run.
@@ -135,6 +139,33 @@ impl TelemetryHub {
         inner.requests.push(span);
     }
 
+    /// A request was shed at admission: its SLO deadline was already
+    /// blown by queue delay, so the scheduler refused to serve it.
+    pub fn on_shed(&self) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        inner.shed += 1;
+        if inner.events.len() < self.max_events {
+            inner.events.push((NO_REQUEST, Stamped { t_us: t, ev: Event::Shed }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// A request was requeued once because its projected completion
+    /// (queue delay so far + estimated service time) would violate its
+    /// SLO.
+    pub fn on_defer(&self) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        inner.deferred += 1;
+        if inner.events.len() < self.max_events {
+            inner.events.push((NO_REQUEST, Stamped { t_us: t, ev: Event::Defer }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
     /// Engine-level rebalance observed outside any request's walk.
     pub fn on_rebalance(&self, moved_bytes: u64, pressured_shards: u32) {
         let t = self.clock.now_us();
@@ -158,6 +189,8 @@ impl TelemetryHub {
             attrib: inner.attrib.clone(),
             bins: inner.bins.clone().unwrap_or_else(|| TimeBins::new(self.bin_width_s)),
             requests: inner.requests.clone(),
+            shed: inner.shed,
+            deferred: inner.deferred,
         }
     }
 }
@@ -173,6 +206,10 @@ pub struct TelemetryReport {
     pub attrib: AttributionTable,
     pub bins: TimeBins,
     pub requests: Vec<RequestSpan>,
+    /// Requests shed at admission by the SLO admission gate.
+    pub shed: u64,
+    /// Requests requeued once on projected SLO violation.
+    pub deferred: u64,
 }
 
 #[cfg(test)]
@@ -216,6 +253,25 @@ mod tests {
         let rep = hub.snapshot();
         assert_eq!(rep.events.len(), 3);
         assert_eq!(rep.dropped_events, 2);
+    }
+
+    #[test]
+    fn shed_and_defer_are_counted_and_streamed() {
+        let (clock, hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock);
+        hub.on_defer();
+        hand.advance_us(2_000);
+        hub.on_shed();
+        hub.on_shed();
+        let rep = hub.snapshot();
+        assert_eq!((rep.shed, rep.deferred), (2, 1));
+        let shed_events = rep
+            .events
+            .iter()
+            .filter(|(id, st)| *id == NO_REQUEST && st.ev == Event::Shed)
+            .count();
+        assert_eq!(shed_events, 2);
+        assert!(rep.events.iter().any(|(_, st)| st.ev == Event::Defer));
     }
 
     #[test]

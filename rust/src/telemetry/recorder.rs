@@ -240,6 +240,37 @@ impl Recorder {
             row.degraded += 1;
             row.lsb_misses += 1;
         }
+        for &e in &out.fault_degraded_experts {
+            self.attrib.row_mut(layer, e).fault_degraded += 1;
+        }
+
+        // injected-fault recovery summary (absent in fault-free runs, so
+        // the disabled-injector event stream is bit-identical)
+        if out.fault_retries > 0
+            || out.fault_spikes > 0
+            || out.fault_corruptions > 0
+            || out.fault_failed > 0
+            || out.fault_degraded > 0
+        {
+            self.attrib.fault_retries += u64::from(out.fault_retries);
+            self.attrib.fault_corruptions += u64::from(out.fault_corruptions);
+            self.attrib.fault_failed += u64::from(out.fault_failed);
+            self.attrib.fault_degraded += u64::from(out.fault_degraded);
+            self.attrib.fault_extra_flash_bytes += out.fault_extra_flash_bytes;
+            self.ring.push(
+                t,
+                Event::Fault {
+                    step,
+                    layer,
+                    retries: out.fault_retries as u16,
+                    spikes: out.fault_spikes as u16,
+                    corruptions: out.fault_corruptions as u16,
+                    failed: out.fault_failed as u16,
+                    degraded: out.fault_degraded as u16,
+                    extra_bytes: out.fault_extra_flash_bytes,
+                },
+            );
+        }
 
         let plane_bytes = |k: SliceKey| match k.plane {
             Plane::Msb => msb_b,

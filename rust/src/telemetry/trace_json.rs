@@ -201,6 +201,29 @@ pub fn render(report: &TelemetryReport) -> Json {
                     ]),
                 ));
             }
+            Event::Fault { step, layer, retries, spikes, corruptions, failed, degraded, extra_bytes } => {
+                events.push(instant(
+                    "fault",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("step", num(step as f64)),
+                        ("layer", num(layer as f64)),
+                        ("retries", num(retries as f64)),
+                        ("spikes", num(spikes as f64)),
+                        ("corruptions", num(corruptions as f64)),
+                        ("failed", num(failed as f64)),
+                        ("degraded", num(degraded as f64)),
+                        ("extra_bytes", num(extra_bytes as f64)),
+                    ]),
+                ));
+            }
+            Event::Shed => {
+                events.push(instant("shed", st.t_us, tid, obj([])));
+            }
+            Event::Defer => {
+                events.push(instant("defer", st.t_us, tid, obj([])));
+            }
         }
     }
 
@@ -244,6 +267,7 @@ pub fn render(report: &TelemetryReport) -> Json {
             ("fetches", num(row.fetches as f64)),
             ("evictions", num(row.evictions as f64)),
             ("flash_j_est", num(row.flash_j_est)),
+            ("fault_degraded", num(row.fault_degraded as f64)),
         ])
     }));
     let series = arr(report.bins.iter().map(|(t_s, bin)| {
@@ -270,6 +294,13 @@ pub fn render(report: &TelemetryReport) -> Json {
             ("flash_bytes", num(report.attrib.flash_bytes as f64)),
             ("flash_fetches", num(report.attrib.flash_fetches as f64)),
             ("decode_tokens", num(report.attrib.tokens as f64)),
+            ("fault_retries", num(report.attrib.fault_retries as f64)),
+            ("fault_corruptions", num(report.attrib.fault_corruptions as f64)),
+            ("fault_failed", num(report.attrib.fault_failed as f64)),
+            ("fault_degraded", num(report.attrib.fault_degraded as f64)),
+            ("fault_extra_flash_bytes", num(report.attrib.fault_extra_flash_bytes as f64)),
+            ("shed_requests", num(report.shed as f64)),
+            ("deferred_requests", num(report.deferred as f64)),
         ])),
         ("attribution", attribution),
         ("series", series),

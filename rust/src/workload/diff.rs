@@ -93,10 +93,11 @@ fn value(values: &Json, key: &str) -> Option<f64> {
     values.get(key).and_then(|v| v.as_f64()).filter(|v| v.is_finite())
 }
 
-/// Observability rows ride along without gating: telemetry can be
-/// toggled per run, so these cells may come and go freely.
+/// Observability rows ride along without gating: telemetry and the
+/// chaos axis can be toggled per run, so these cells may come and go
+/// freely (and chaos metrics measure injected damage, not regressions).
 fn is_informational(name: &str) -> bool {
-    name.ends_with("/telemetry")
+    name.ends_with("/telemetry") || name.ends_with("/chaos")
 }
 
 /// Compare two serialized `BENCH_workload.json` documents.
@@ -321,6 +322,26 @@ mod tests {
         // telemetry toggled OFF in the candidate: the vanished row must
         // not count as a missing (gated) cell
         let d = diff_workload_reports(&with_tel, &base, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert!(d.missing.is_empty());
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn chaos_rows_are_informational_in_both_directions() {
+        let base = report(&[("steady/lanes4/sharded4", 0.1, 500.0)]);
+        let with_chaos = format!(
+            "{{\"title\":\"t\",\"results\":[],\"metrics\":[{},{}]}}",
+            "{\"name\":\"steady/lanes4/sharded4\",\"values\":{\"e2e_p99_s\":0.1,\"goodput_tok_s\":500.0}}",
+            "{\"name\":\"steady/lanes4/sharded4/chaos\",\"values\":{\"error_rate\":0,\"shed_rate\":0.25,\"fault_retries\":12}}"
+        );
+        // chaos toggled ON: new row, never gated
+        let d = diff_workload_reports(&base, &with_chaos, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.added, vec!["steady/lanes4/sharded4/chaos".to_string()]);
+
+        // chaos toggled OFF: the vanished row is not a missing cell
+        let d = diff_workload_reports(&with_chaos, &base, 0.10).unwrap();
         assert!(!d.is_regression(), "{d:?}");
         assert!(d.missing.is_empty());
         assert_eq!(d.compared, 1);

@@ -41,11 +41,15 @@ pub struct OpenLoopOpts {
     /// telemetry spans sit on one axis; tests can substitute a manual
     /// clock. Pacing sleeps remain real-time regardless.
     pub clock: Clock,
+    /// When set, every submitted request carries this per-request SLO
+    /// (seconds), arming the scheduler's deadline-aware admission gate
+    /// (shed blown deadlines, defer projected violations once).
+    pub slo_s: Option<f64>,
 }
 
 impl Default for OpenLoopOpts {
     fn default() -> Self {
-        OpenLoopOpts { time_scale: 1.0, clock: Clock::default() }
+        OpenLoopOpts { time_scale: 1.0, clock: Clock::default(), slo_s: None }
     }
 }
 
@@ -75,6 +79,9 @@ pub struct LoadReport {
     pub errors: Vec<String>,
     /// Host wall time of the whole run (first submit wait → last recv).
     pub wall_s: f64,
+    /// Submissions that hit a full admission queue at least once and
+    /// went through the bounded-backoff retry loop before landing.
+    pub deferred_submits: u64,
 }
 
 /// Aggregate latency-under-load metrics (the `BENCH_workload.json` row).
@@ -100,6 +107,22 @@ pub struct WorkloadSummary {
     /// wave-mode cross-request aggregation drives down vs lane mode.
     pub fetches_per_token: f64,
     pub wall_s: f64,
+    /// Submissions that saw a full admission queue and retried with
+    /// bounded backoff (client-side backpressure indicator).
+    pub deferred_submits: u64,
+    /// Requests the SLO admission gate refused to serve.
+    pub shed: usize,
+    /// Server-side defer-once requeues on projected SLO violation.
+    pub deferred: u64,
+    /// Fraction of executed experts degraded High→Low by injected
+    /// persistent LSB-fetch failures (0 in fault-free runs).
+    pub degraded_fraction: f64,
+    /// Injected-fault retry / persistent-failure totals.
+    pub fault_retries: u64,
+    pub fault_failed: u64,
+    /// Flash energy charged to fault recovery (retries + failed
+    /// attempts), already included in the per-token energy.
+    pub retry_energy_j: f64,
 }
 
 impl LoadReport {
@@ -117,6 +140,10 @@ impl LoadReport {
             .iter()
             .map(|o| o.response.decode_flash_fetches)
             .sum();
+        let shed = self.outcomes.iter().filter(|o| o.response.shed).count();
+        let deferred: u64 = self.outcomes.iter().map(|o| u64::from(o.response.deferred)).sum();
+        let n_degraded: u64 = self.outcomes.iter().map(|o| o.response.n_degraded).sum();
+        let n_experts: u64 = self.outcomes.iter().map(|o| o.response.n_experts).sum();
         WorkloadSummary {
             requests: self.outcomes.len(),
             errors: self.errors.len(),
@@ -148,6 +175,17 @@ impl LoadReport {
                 0.0
             },
             wall_s: self.wall_s,
+            deferred_submits: self.deferred_submits,
+            shed,
+            deferred,
+            degraded_fraction: if n_experts > 0 {
+                n_degraded as f64 / n_experts as f64
+            } else {
+                0.0
+            },
+            fault_retries: self.outcomes.iter().map(|o| o.response.fault_retries).sum(),
+            fault_failed: self.outcomes.iter().map(|o| o.response.fault_failed).sum(),
+            retry_energy_j: self.outcomes.iter().map(|o| o.response.retry_energy_j).sum(),
         }
     }
 }
@@ -237,11 +275,20 @@ where
         // non-blocking submit loop: while the admission queue pushes
         // back, keep draining completions so their e2e timestamps stay
         // accurate instead of pooling behind a blocked `submit`
-        let mut waiting = Some(tr.to_request(make_prompt(tr)));
+        let mut req = tr.to_request(make_prompt(tr));
+        if let Some(slo) = opts.slo_s {
+            req = req.with_slo(slo);
+        }
+        let mut waiting = Some(req);
+        let mut full_retries = 0u32;
         while let Some(req) = waiting.take() {
             match handle.try_submit(req) {
                 Ok(None) => {}
                 Ok(Some(back)) => {
+                    if full_retries == 0 {
+                        report.deferred_submits += 1;
+                    }
+                    full_retries += 1;
                     waiting = Some(back);
                     match handle.try_recv() {
                         Ok(Some(res)) => {
@@ -249,7 +296,12 @@ where
                             record(res, &mut inflight, &mut report, now);
                             outstanding = outstanding.saturating_sub(1);
                         }
-                        Ok(None) => std::thread::sleep(Duration::from_micros(200)),
+                        // no completion to drain: back off with bounded
+                        // exponential growth (200 µs … 5 ms) instead of
+                        // hammering the queue lock at a fixed cadence
+                        Ok(None) => std::thread::sleep(Duration::from_micros(
+                            (200u64 << (full_retries - 1).min(5)).min(5_000),
+                        )),
                         Err(e) => {
                             report.errors.push(format!("{e:#}"));
                             outstanding = outstanding.saturating_sub(1);
@@ -318,6 +370,13 @@ mod tests {
                 steady_flash_bytes: 1,
                 steady_norm_bytes: 10.0,
                 decode_flash_fetches: 2 * req.decode_tokens as u64,
+                shed: false,
+                deferred: 0,
+                n_degraded: 0,
+                n_experts: 0,
+                fault_retries: 0,
+                fault_failed: 0,
+                retry_energy_j: 0.0,
             })
         }
     }
@@ -402,6 +461,10 @@ mod tests {
             "full queue must show submit lag: {}",
             s.submit_lag_max_s
         );
+        assert!(
+            s.deferred_submits > 0,
+            "depth-1 queue under 6 simultaneous arrivals must defer submits"
+        );
     }
 
     #[test]
@@ -431,5 +494,8 @@ mod tests {
         assert_eq!(s.energy_per_token_j, 0.0);
         assert_eq!(s.fetches_per_token, 0.0);
         assert!(s.miss_rate == 0.0, "no NaN from empty runs");
+        assert_eq!((s.deferred_submits, s.shed, s.deferred), (0, 0, 0));
+        assert_eq!(s.degraded_fraction, 0.0);
+        assert_eq!(s.retry_energy_j, 0.0);
     }
 }

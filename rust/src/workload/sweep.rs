@@ -14,6 +14,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::fault::FaultPlan;
 use crate::serve::ServeConfig;
 use crate::server::{request_seed, CostModelServerBackend, ServerHandle, SharedCacheHandle};
 use crate::sim::trace::TraceParams;
@@ -104,6 +105,14 @@ pub struct SweepConfig {
     /// time-binned serving series, flattened per bin). Off by default:
     /// the rows are informational — `bench-diff` never gates on them.
     pub telemetry: bool,
+    /// Deterministic fault-injection plan applied to every cell's
+    /// serving template (chaos axis). `None` (the default) leaves the
+    /// sweep bit-identical to a fault-free run; when set, each cell also
+    /// records an informational `{cell}/chaos` metrics row.
+    pub fault: Option<FaultPlan>,
+    /// Per-request SLO (seconds) applied to every submitted request —
+    /// turns on deadline-aware admission (shed/defer) in the scheduler.
+    pub slo_s: Option<f64>,
 }
 
 impl SweepConfig {
@@ -131,6 +140,8 @@ impl SweepConfig {
             seed: 0x10AD,
             trace_dir: None,
             telemetry: false,
+            fault: None,
+            slo_s: None,
         }
     }
 
@@ -187,7 +198,10 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     {
                         continue;
                     }
-                    let template = cfg.template.clone();
+                    let mut template = cfg.template.clone();
+                    if let Some(plan) = cfg.fault {
+                        template.fault = Some(plan);
+                    }
                     let trace_params = cfg.trace;
                     let base_seed = cfg.seed;
                     let shared_cache: Option<SharedCacheHandle> = match mode {
@@ -261,7 +275,7 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     let report = run_open_loop(
                         &handle,
                         &reqs,
-                        &OpenLoopOpts { time_scale, clock },
+                        &OpenLoopOpts { time_scale, clock, slo_s: cfg.slo_s },
                         |tr| vec![0u8; tr.prefill_tokens as usize],
                     )?;
                     handle.shutdown();
@@ -300,6 +314,12 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     if let Some(hub) = hub {
                         record_telemetry_row(rep, &name, &hub.snapshot());
                     }
+                    // chaos rows only exist when the chaos axis is
+                    // engaged, so default sweeps keep their exact
+                    // pre-chaos row set (baseline compatibility)
+                    if cfg.fault.map_or(false, |p| p.is_active()) || cfg.slo_s.is_some() {
+                        record_chaos_row(rep, &name, &s);
+                    }
                     cells.push(SweepCell {
                         scenario: sc.name(),
                         lanes,
@@ -312,6 +332,26 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
         }
     }
     Ok(cells)
+}
+
+/// Flatten one cell's robustness outcome into an informational
+/// `{cell}/chaos` metrics row (recorded only when fault injection or
+/// SLO admission is engaged; `bench-diff` never gates on these rows).
+fn record_chaos_row(rep: &mut Reporter, cell: &str, s: &WorkloadSummary) {
+    let n = s.requests.max(1) as f64;
+    rep.record_metrics(
+        &format!("{cell}/chaos"),
+        &[
+            ("error_rate", s.errors as f64 / n),
+            ("shed_rate", s.shed as f64 / n),
+            ("deferred", s.deferred as f64),
+            ("deferred_submits", s.deferred_submits as f64),
+            ("degraded_fraction", s.degraded_fraction),
+            ("fault_retries", s.fault_retries as f64),
+            ("fault_failed", s.fault_failed as f64),
+            ("retry_energy_j", s.retry_energy_j),
+        ],
+    );
 }
 
 /// Bin cap for the flattened per-cell series row.
@@ -511,6 +551,61 @@ mod tests {
             assert!(get("tokens") > 0.0);
             assert!(get("bins") >= 1.0);
             assert!(get("bin0_tok_s") >= 0.0);
+        }
+    }
+
+    #[test]
+    fn chaos_sweep_serves_every_request_and_records_chaos_rows() {
+        let mut cfg = SweepConfig::smoke(tiny_template());
+        cfg.scenarios = vec![Scenario::Steady];
+        cfg.lanes = vec![2];
+        cfg.cache_modes = vec![CacheMode::Sharded(2)];
+        cfg.requests = 4;
+        cfg.span_s = 0.05;
+        cfg.shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        // aggressive deterministic plan: fault sampling is a pure hash
+        // of fixed seeds, so this run (and its assertions) replay
+        // bit-identically
+        cfg.fault = Some(FaultPlan { fault_rate: 0.5, ..FaultPlan::smoke() });
+        let mut rep = Reporter::new("sweep-chaos-unit");
+        let cells = run_sweep(&cfg, &mut rep).unwrap();
+        // lanes + wave over one sharded topology
+        assert_eq!(cells.len(), 2);
+        let mut saw_faults = false;
+        for c in &cells {
+            assert_eq!(c.summary.errors, 0, "chaos must degrade, not error");
+            assert_eq!(c.summary.requests, 4, "every request still completes");
+            assert!(c.summary.decode_tokens > 0);
+            saw_faults |= c.summary.fault_retries > 0;
+        }
+        assert!(saw_faults, "a 50% fault rate over this grid must fire");
+        let chaos: Vec<_> = rep
+            .metrics()
+            .iter()
+            .filter(|m| m.name.ends_with("/chaos"))
+            .collect();
+        assert_eq!(chaos.len(), cells.len(), "one chaos row per cell");
+        for row in chaos {
+            let get = |k: &str| {
+                row.values
+                    .iter()
+                    .find(|(n, _)| n == k)
+                    .map(|(_, v)| *v)
+                    .unwrap_or_else(|| panic!("{}: missing key {k}", row.name))
+            };
+            assert_eq!(get("error_rate"), 0.0);
+            assert_eq!(get("shed_rate"), 0.0, "no SLO configured, nothing sheds");
+            assert!(get("degraded_fraction") >= 0.0);
+            assert!(get("retry_energy_j") >= 0.0);
         }
     }
 

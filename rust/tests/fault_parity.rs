@@ -1,0 +1,223 @@
+//! Fault-injection parity + chaos accounting (mirrors
+//! `telemetry_parity.rs` for the fault subsystem).
+//!
+//! Three contracts anchor the fault layer:
+//!
+//! * **off-by-default bit-exactness**: a run with `cfg.fault = None`,
+//!   `Some(FaultPlan::disabled())`, or any inert plan (zero rates)
+//!   produces the bit-identical op sequence — counters, miss rates,
+//!   energies, cache stats — in BOTH decode modes at shards {1, 4};
+//! * **deterministic replay**: the injector is a pure hash of
+//!   (plan seed, request seed, layer, expert, plane, window, attempt) —
+//!   the same seeded plan replayed twice yields identical fault
+//!   counters and identical ledgers, and the same request served
+//!   lane-mode or waved hits the same fault sites (the wave passes the
+//!   per-request token index as the fault step);
+//! * **graceful degradation**: under an aggressive seeded plan every
+//!   token is still served — persistent failures land in the AMAT
+//!   degrade / substitute / drop arms, never in an error.
+
+use std::sync::Arc;
+
+use slicemoe::cache::ShardedSliceCache;
+use slicemoe::fault::FaultPlan;
+use slicemoe::model::ModelDesc;
+use slicemoe::serve::{CostModelBackend, ServeConfig, ServeLoop, WaveEngine};
+use slicemoe::sim::TraceParams;
+
+const PREFILL_TOKENS: usize = 32;
+const DECODE_TOKENS: usize = 24;
+
+fn tiny_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+    cfg.cache_bytes = cfg.unit_bytes() * 8;
+    cfg
+}
+
+fn sharded(cfg: &ServeConfig, shards: usize) -> Arc<ShardedSliceCache> {
+    let mut c = ShardedSliceCache::new(cfg.cache_bytes, shards);
+    c.set_heterogeneous(cfg.heterogeneous_lsb);
+    Arc::new(c)
+}
+
+/// One full request on a fresh sharded cache with the given fault plan.
+fn run_loop(
+    cfg: &ServeConfig,
+    shards: usize,
+    fault: Option<FaultPlan>,
+) -> (ServeLoop, Arc<ShardedSliceCache>) {
+    let mut cfg = cfg.clone();
+    cfg.fault = fault;
+    let cache = sharded(&cfg, shards);
+    let mut lp = ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&cache));
+    let mut be = CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed);
+    lp.prefill(&mut be, PREFILL_TOKENS).unwrap();
+    for _ in 0..DECODE_TOKENS {
+        lp.decode_token(&mut be).unwrap();
+    }
+    (lp, cache)
+}
+
+/// The same bit-exact comparison list `telemetry_parity.rs` pins.
+fn assert_loops_bit_exact(a: &ServeLoop, b: &ServeLoop, ctx: &str) {
+    assert_eq!(a.ledger.decode_steps, b.ledger.decode_steps, "{ctx}");
+    assert_eq!(a.prefill_tokens, b.prefill_tokens, "{ctx}");
+    assert_eq!(a.counters.n_high, b.counters.n_high, "{ctx}");
+    assert_eq!(a.counters.n_low, b.counters.n_low, "{ctx}");
+    assert_eq!(a.counters.n_dropped, b.counters.n_dropped, "{ctx}");
+    assert_eq!(a.counters.n_substituted, b.counters.n_substituted, "{ctx}");
+    assert_eq!(a.counters.n_degraded, b.counters.n_degraded, "{ctx}");
+    assert_eq!(a.counters.n_critical, b.counters.n_critical, "{ctx}");
+    assert_eq!(a.steady_accesses, b.steady_accesses, "{ctx}");
+    assert_eq!(a.steady_flash, b.steady_flash, "{ctx}");
+    assert_eq!(a.decode_flash_fetches, b.decode_flash_fetches, "{ctx}");
+    assert_eq!(a.miss_rate(), b.miss_rate(), "{ctx}");
+    assert_eq!(a.ledger.decode_energy_j(), b.ledger.decode_energy_j(), "{ctx}");
+    assert_eq!(a.ledger.prefill_energy_j(), b.ledger.prefill_energy_j(), "{ctx}");
+    assert_eq!(a.ledger.flash_bytes, b.ledger.flash_bytes, "{ctx}");
+    assert_eq!(a.ledger.flash_fetches, b.ledger.flash_fetches, "{ctx}");
+    assert_eq!(a.hit_rates(), b.hit_rates(), "{ctx}");
+}
+
+#[test]
+fn serve_loop_is_bit_exact_with_faults_off_disabled_and_inert() {
+    // an inert plan: nonzero seed, every rate zeroed — must not even
+    // construct an injector
+    let inert = FaultPlan { seed: 77, ..FaultPlan::disabled() };
+    assert!(!inert.is_active());
+    for shards in [1usize, 4] {
+        for constraint in [f64::INFINITY, 0.05] {
+            let ctx = format!("shards {shards}, constraint {constraint}");
+            let mut cfg = tiny_cfg();
+            cfg.constraint = constraint;
+
+            let (none, none_cache) = run_loop(&cfg, shards, None);
+            let (off, off_cache) = run_loop(&cfg, shards, Some(FaultPlan::disabled()));
+            let (inrt, inert_cache) = run_loop(&cfg, shards, Some(inert));
+
+            assert_loops_bit_exact(&none, &off, &ctx);
+            assert_loops_bit_exact(&none, &inrt, &ctx);
+            assert_eq!(none_cache.stats(), off_cache.stats(), "{ctx}");
+            assert_eq!(none_cache.stats(), inert_cache.stats(), "{ctx}");
+            off_cache.check_invariants().unwrap();
+            inert_cache.check_invariants().unwrap();
+
+            for lp in [&none, &off, &inrt] {
+                assert!(!lp.fault_counters.any(), "{ctx}: no faults without a plan");
+                assert_eq!(lp.fault_counters.retry_energy_j, 0.0, "{ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wave_engine_is_bit_exact_with_faults_disabled() {
+    for shards in [1usize, 4] {
+        let ctx = format!("shards {shards}");
+        let run_wave = |fault: Option<FaultPlan>| {
+            let mut cfg = tiny_cfg();
+            cfg.fault = fault;
+            let cache = sharded(&cfg, shards);
+            let mut eng = WaveEngine::new(Arc::clone(&cache), 2);
+            for id in 0..2u64 {
+                let mut rcfg = cfg.clone();
+                rcfg.seed = cfg.seed + id;
+                let be = CostModelBackend::new(
+                    &rcfg.desc,
+                    TraceParams::default(),
+                    PREFILL_TOKENS,
+                    rcfg.seed,
+                );
+                eng.admit(id, rcfg, be, PREFILL_TOKENS, DECODE_TOKENS).unwrap();
+            }
+            let mut done = Vec::new();
+            while !eng.is_idle() {
+                done.extend(eng.step_wave().unwrap());
+            }
+            done.sort_by_key(|d| d.id);
+            (done, cache)
+        };
+
+        let (reference, ref_cache) = run_wave(None);
+        let (disabled, dis_cache) = run_wave(Some(FaultPlan::disabled()));
+        assert_eq!(reference.len(), 2, "{ctx}");
+        assert_eq!(disabled.len(), 2, "{ctx}");
+        for (r, d) in reference.iter().zip(&disabled) {
+            assert_eq!(r.id, d.id, "{ctx}");
+            assert_eq!(r.decode_tokens, d.decode_tokens, "{ctx}");
+            assert_loops_bit_exact(&r.lane, &d.lane, &ctx);
+            assert!(!d.lane.fault_counters.any(), "{ctx}");
+        }
+        assert_eq!(ref_cache.stats(), dis_cache.stats(), "{ctx}");
+        dis_cache.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn fault_seed_determinism_and_lane_wave_fault_site_parity() {
+    let plan = FaultPlan { fault_rate: 0.3, ..FaultPlan::smoke() };
+    let cfg = tiny_cfg();
+
+    // same seeded plan, served twice lane-mode: identical everything
+    let (a, a_cache) = run_loop(&cfg, 4, Some(plan));
+    let (b, b_cache) = run_loop(&cfg, 4, Some(plan));
+    assert!(a.fault_counters.any(), "a 30% plan over this run must fire");
+    assert_eq!(a.fault_counters, b.fault_counters, "replay determinism");
+    assert_loops_bit_exact(&a, &b, "replay");
+    assert_eq!(a_cache.stats(), b_cache.stats());
+
+    // the same request waved (batch of one) hits the same fault sites:
+    // the injector is keyed by the per-request seed and per-request
+    // token index, not by engine mode
+    let mut wcfg = cfg.clone();
+    wcfg.fault = Some(plan);
+    let cache = sharded(&wcfg, 4);
+    let mut eng = WaveEngine::new(Arc::clone(&cache), 1);
+    let be =
+        CostModelBackend::new(&wcfg.desc, TraceParams::default(), PREFILL_TOKENS, wcfg.seed);
+    eng.admit(0, wcfg, be, PREFILL_TOKENS, DECODE_TOKENS).unwrap();
+    let mut done = Vec::new();
+    while !eng.is_idle() {
+        done.extend(eng.step_wave().unwrap());
+    }
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].lane.fault_counters, a.fault_counters, "lane/wave fault parity");
+    assert_loops_bit_exact(&done[0].lane, &a, "lane/wave under faults");
+
+    // a different plan seed is a different chaos trace
+    let other = FaultPlan { seed: plan.seed ^ 0xDEAD_BEEF, ..plan };
+    let (c, _) = run_loop(&cfg, 4, Some(other));
+    assert_ne!(
+        c.fault_counters, a.fault_counters,
+        "distinct plan seeds must sample distinct fault sites"
+    );
+}
+
+#[test]
+fn seeded_chaos_run_completes_clean_with_every_failure_accounted() {
+    for shards in [1usize, 4] {
+        let ctx = format!("shards {shards}");
+        let plan = FaultPlan { fault_rate: 0.5, spike_rate: 0.2, ..FaultPlan::smoke() };
+        let (lp, cache) = run_loop(&tiny_cfg(), shards, Some(plan));
+        cache.check_invariants().unwrap();
+
+        // every decode step completed despite the injected chaos
+        assert_eq!(lp.ledger.decode_steps, DECODE_TOKENS as u64, "{ctx}");
+        let fc = &lp.fault_counters;
+        assert!(fc.any(), "{ctx}: a 50% plan must fire");
+        assert!(fc.retries > 0, "{ctx}: flaky sites always cost one retry");
+        assert!(fc.extra_flash_bytes > 0, "{ctx}");
+        assert!(fc.retry_energy_j > 0.0, "{ctx}: recovery is charged, not free");
+        // every persistent failure resolved through a graceful arm
+        assert!(
+            fc.failed <= fc.degraded + lp.counters.n_substituted + lp.counters.n_dropped,
+            "{ctx}: failed {} degraded {} substituted {} dropped {}",
+            fc.failed,
+            fc.degraded,
+            lp.counters.n_substituted,
+            lp.counters.n_dropped
+        );
+        // recovery traffic is inside the ledger, not a side channel
+        assert!(lp.ledger.flash_bytes >= fc.extra_flash_bytes, "{ctx}");
+    }
+}
