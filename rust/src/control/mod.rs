@@ -1,0 +1,558 @@
+//! Adaptive overload control plane: degradation ladder, admission token
+//! bucket, and lane heartbeat primitives.
+//!
+//! SliceMoE serves under a miss-rate *constraint*, but the constraint,
+//! cache budget, and lane count are static per run — under a `bursty`
+//! or `diurnal` overload the stock server can only shed at the deadline,
+//! never adapt before it. This module closes the loop: a [`Controller`]
+//! samples live signals the stack already produces (queue occupancy,
+//! EWMA service time, shed counts) on a fixed [`telemetry::Clock`] tick
+//! and actuates a **graceful degradation ladder**:
+//!
+//! | level | actuation                                                  |
+//! |-------|------------------------------------------------------------|
+//! | 0     | nominal — controller is a pure observer                    |
+//! | 1     | tighten the effective `MissBudget` constraint so routing   |
+//! |       | prefers resident slices (fewer flash fills per token)      |
+//! | 2     | + bias new admissions to low-bit AMAT precision (the MSB   |
+//! |       | prefix is always a valid expert, so this is lossless to    |
+//! |       | upgrade once pressure clears)                              |
+//! | 3     | + admission token bucket ahead of the queue: overload is   |
+//! |       | refused early instead of shed late at the SLO deadline     |
+//!
+//! Stepping up requires `up_ticks` *consecutive* hot ticks; stepping
+//! down requires `down_ticks` consecutive calm ticks and moves one
+//! level at a time — classic hysteresis, so a load hovering at the
+//! watermark cannot make the ladder oscillate. Between the two
+//! watermarks neither streak accumulates and the ladder holds.
+//!
+//! Design rules (the repo-wide contract for optional subsystems):
+//!
+//! * **Disabled by default, bit-exact when off.** Nothing constructs a
+//!   [`Controller`] unless asked (`serve-bench --controller`); with no
+//!   controller attached the server and walk run byte-identical to a
+//!   build without this module (pinned by `tests/control_parity.rs`).
+//! * **Deterministic under `Clock::Manual`.** The tick is driven by
+//!   caller-supplied timestamps — [`Controller::observe`] never reads a
+//!   wall clock — so a scripted overload replays the exact ladder
+//!   trajectory.
+//! * **Every intervention is accounted.** Refusals are counted here and
+//!   surfaced as [`Response::refused`](crate::server::Response) plus
+//!   telemetry `Refused` events; ladder residency/transitions land in
+//!   the `{cell}/control` benchmark row.
+//!
+//! The lane/wave watchdog shares this module: [`LaneBeat`] is the
+//! per-lane heartbeat slot the server stamps on the shared clock, and
+//! `ServerHandle::poll_watchdog` uses [`LaneBeat::stale`] to declare a
+//! lane wedged, answer its in-flight request through the existing
+//! failure-response arm, and spawn a replacement. The third leg of the
+//! plane — the fetch circuit breaker — lives in [`crate::fault`] next
+//! to the retry policy it guards.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+
+use crate::router::{MissBudget, Precision};
+use crate::serve::ServeConfig;
+
+/// Highest ladder level (token-bucket admission control).
+pub const MAX_LEVEL: u8 = 3;
+
+/// Static gains and watermarks of the feedback loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControlConfig {
+    /// Control tick period in microseconds (on the serving `Clock`).
+    pub tick_us: u64,
+    /// Queue occupancy fraction at/above which a tick counts as hot.
+    pub queue_high: f64,
+    /// Queue occupancy fraction at/below which a tick counts as calm.
+    pub queue_low: f64,
+    /// Consecutive hot ticks required to step the ladder up one level.
+    pub up_ticks: u32,
+    /// Consecutive calm ticks required to step down one level
+    /// (hysteresis: larger than `up_ticks` so release is deliberate).
+    pub down_ticks: u32,
+    /// Effective miss-rate constraint cap applied at level >= 1.
+    pub overload_constraint: f64,
+    /// Admission token bucket capacity (level 3).
+    pub bucket_capacity: u32,
+    /// Tokens restored to the bucket per control tick.
+    pub refill_per_tick: u32,
+    /// A lane whose in-flight request has not heartbeat for this long
+    /// is declared wedged by `poll_watchdog`.
+    pub watchdog_timeout_us: u64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> ControlConfig {
+        ControlConfig {
+            tick_us: 1_000,
+            queue_high: 0.75,
+            queue_low: 0.25,
+            up_ticks: 2,
+            down_ticks: 4,
+            overload_constraint: 0.05,
+            bucket_capacity: 8,
+            refill_per_tick: 2,
+            watchdog_timeout_us: 2_000_000,
+        }
+    }
+}
+
+/// One sample of the live signals the ladder steers on. All fields are
+/// cheap counters the stack already maintains; `Default` (all zero)
+/// reads as an idle system.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ControlSignals {
+    /// Requests currently waiting in the bounded admission queue.
+    pub queue_len: usize,
+    /// Capacity of that queue.
+    pub queue_capacity: usize,
+    /// EWMA per-request service estimate in microseconds (0 = no
+    /// completion observed yet). Advisory; the ladder steers on
+    /// occupancy and shed pressure, which lead service time.
+    pub service_est_us: u64,
+    /// Cumulative SLO-shed count (deadline misses at admission/pop).
+    pub shed: u64,
+    /// Cumulative defer count (requeued once under pressure).
+    pub deferred: u64,
+}
+
+impl ControlSignals {
+    /// Queue occupancy in [0, 1]; an unsized queue reads as empty.
+    pub fn occupancy(&self) -> f64 {
+        if self.queue_capacity == 0 {
+            0.0
+        } else {
+            self.queue_len as f64 / self.queue_capacity as f64
+        }
+    }
+}
+
+/// Cumulative controller telemetry, surfaced in the `{cell}/control`
+/// benchmark row and asserted by the CI overload smoke.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ControlStats {
+    /// Control ticks processed.
+    pub ticks: u64,
+    /// Upward ladder steps taken (engagements).
+    pub engagements: u64,
+    /// Full releases: transitions back to level 0.
+    pub releases: u64,
+    /// Admissions refused by the level-3 token bucket.
+    pub refused: u64,
+    /// Highest level reached.
+    pub max_level: u8,
+    /// Ticks spent at each level (residency, indexed by level).
+    pub level_ticks: [u64; 4],
+}
+
+struct Inner {
+    /// Clock value at/after which the next tick fires (0 = unstarted).
+    next_tick_us: u64,
+    hot_streak: u32,
+    calm_streak: u32,
+    tokens: u32,
+    last_shed: u64,
+    stats: ControlStats,
+}
+
+/// The feedback controller. Shared across submitters and workers as an
+/// `Arc`; the published level is a lock-free atomic so the hot admission
+/// path pays one relaxed load when the ladder is disengaged.
+pub struct Controller {
+    cfg: ControlConfig,
+    level: AtomicU8,
+    inner: Mutex<Inner>,
+}
+
+impl Controller {
+    pub fn new(cfg: ControlConfig) -> Controller {
+        Controller {
+            cfg,
+            level: AtomicU8::new(0),
+            inner: Mutex::new(Inner {
+                next_tick_us: 0,
+                hot_streak: 0,
+                calm_streak: 0,
+                tokens: cfg.bucket_capacity,
+                last_shed: 0,
+                stats: ControlStats::default(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ControlConfig {
+        &self.cfg
+    }
+
+    /// Current ladder level (lock-free).
+    pub fn level(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    /// A controller observation never has partially-applied state worth
+    /// discarding, so a poisoned inner lock is recovered, not spread.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|poisoned| {
+            self.inner.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
+    /// Feed one signal sample at clock time `now_us`. At most one
+    /// control tick is processed per call (the tick gate); between
+    /// ticks this is a cheap no-op. Returns `Some(new_level)` when the
+    /// ladder stepped, `None` otherwise.
+    pub fn observe(&self, now_us: u64, sig: &ControlSignals) -> Option<u8> {
+        let mut inner = self.lock();
+        if inner.next_tick_us == 0 {
+            // first observation arms the tick; no decision yet
+            inner.next_tick_us = now_us.saturating_add(self.cfg.tick_us).max(1);
+            inner.last_shed = sig.shed;
+            return None;
+        }
+        if now_us < inner.next_tick_us {
+            return None;
+        }
+        inner.next_tick_us = now_us.saturating_add(self.cfg.tick_us).max(1);
+
+        let level = self.level.load(Ordering::Relaxed);
+        inner.stats.ticks += 1;
+        inner.stats.level_ticks[level.min(MAX_LEVEL) as usize] += 1;
+        inner.tokens = (inner.tokens + self.cfg.refill_per_tick).min(self.cfg.bucket_capacity);
+
+        let shed_delta = sig.shed.saturating_sub(inner.last_shed);
+        inner.last_shed = sig.shed;
+        let occ = sig.occupancy();
+        // shed pressure counts as hot even below the queue watermark:
+        // deadline misses mean the system is already too slow
+        let hot = occ >= self.cfg.queue_high || shed_delta > 0;
+        let calm = occ <= self.cfg.queue_low && shed_delta == 0;
+        if hot {
+            inner.hot_streak += 1;
+            inner.calm_streak = 0;
+        } else if calm {
+            inner.calm_streak += 1;
+            inner.hot_streak = 0;
+        } else {
+            // hysteresis band: hold level, restart both streaks
+            inner.hot_streak = 0;
+            inner.calm_streak = 0;
+        }
+
+        let mut next = level;
+        if hot && inner.hot_streak >= self.cfg.up_ticks && level < MAX_LEVEL {
+            next = level + 1;
+            inner.hot_streak = 0;
+            inner.stats.engagements += 1;
+        } else if calm && inner.calm_streak >= self.cfg.down_ticks && level > 0 {
+            next = level - 1;
+            inner.calm_streak = 0;
+            if next == 0 {
+                inner.stats.releases += 1;
+            }
+        }
+        if next != level {
+            inner.stats.max_level = inner.stats.max_level.max(next);
+            self.level.store(next, Ordering::Relaxed);
+            return Some(next);
+        }
+        None
+    }
+
+    /// Admission gate, consulted *before* the queue. Below level 3 this
+    /// is free; at level 3 each admission spends a bucket token and an
+    /// empty bucket refuses (counted). Refill happens on control ticks.
+    pub fn try_admit(&self) -> bool {
+        if self.level() < MAX_LEVEL {
+            return true;
+        }
+        let mut inner = self.lock();
+        if inner.tokens > 0 {
+            inner.tokens -= 1;
+            true
+        } else {
+            inner.stats.refused += 1;
+            false
+        }
+    }
+
+    /// Apply the current ladder level to a per-request serve config.
+    /// Level 0 leaves `cfg` untouched (the bit-exactness contract);
+    /// level 3's token bucket acts at admission, not here.
+    pub fn shape_config(&self, cfg: &mut ServeConfig) {
+        let level = self.level();
+        if level == 0 {
+            return;
+        }
+        // level >= 1: prefer resident slices over flash fills
+        cfg.constraint =
+            MissBudget::tightened_constraint(cfg.constraint, self.cfg.overload_constraint);
+        if level >= 2 {
+            // level >= 2: admit at the low-bit AMAT prefix; truncation
+            // makes this lossless to upgrade once pressure clears
+            match cfg.router.dbsc.as_mut() {
+                Some(d) => d.max_critical = 0,
+                None => cfg.router.uniform_precision = Precision::Low,
+            }
+        }
+    }
+
+    pub fn stats(&self) -> ControlStats {
+        self.lock().stats
+    }
+}
+
+/// Sentinel: no request in flight on this lane.
+pub const NO_INFLIGHT: u64 = u64::MAX;
+
+/// Per-lane heartbeat slot for the watchdog. Workers stamp it on the
+/// shared serving clock around each request; `poll_watchdog` reads it
+/// from the client side, so wedge detection needs no extra thread and
+/// is deterministic under `Clock::Manual`.
+pub struct LaneBeat {
+    /// Clock value of the lane's last sign of progress.
+    last_beat_us: AtomicU64,
+    /// Request id currently being served, or [`NO_INFLIGHT`].
+    inflight: AtomicU64,
+    /// Set by the watchdog: the lane is presumed wedged, its in-flight
+    /// request already answered; on wake it must discard its result
+    /// and retire instead of double-answering.
+    condemned: AtomicBool,
+}
+
+impl LaneBeat {
+    pub fn new() -> LaneBeat {
+        LaneBeat {
+            last_beat_us: AtomicU64::new(0),
+            inflight: AtomicU64::new(NO_INFLIGHT),
+            condemned: AtomicBool::new(false),
+        }
+    }
+
+    /// Stamp progress with no in-flight change (idle heartbeat).
+    pub fn beat(&self, now_us: u64) {
+        self.last_beat_us.store(now_us, Ordering::Release);
+    }
+
+    /// Mark `id` in flight on this lane, stamping the clock.
+    pub fn start(&self, id: u64, now_us: u64) {
+        self.last_beat_us.store(now_us, Ordering::Release);
+        self.inflight.store(id, Ordering::Release);
+    }
+
+    /// Clear the in-flight request (completed or handed off).
+    pub fn finish(&self, now_us: u64) {
+        self.last_beat_us.store(now_us, Ordering::Release);
+        self.inflight.store(NO_INFLIGHT, Ordering::Release);
+    }
+
+    /// The request id currently in flight, if any.
+    pub fn inflight(&self) -> Option<u64> {
+        match self.inflight.load(Ordering::Acquire) {
+            NO_INFLIGHT => None,
+            id => Some(id),
+        }
+    }
+
+    pub fn condemn(&self) {
+        self.condemned.store(true, Ordering::Release);
+    }
+
+    pub fn is_condemned(&self) -> bool {
+        self.condemned.load(Ordering::Acquire)
+    }
+
+    /// If a request has been in flight without a heartbeat for longer
+    /// than `timeout_us`, return its id (the lane is wedged).
+    pub fn stale(&self, now_us: u64, timeout_us: u64) -> Option<u64> {
+        let id = self.inflight.load(Ordering::Acquire);
+        if id == NO_INFLIGHT || self.is_condemned() {
+            return None;
+        }
+        let beat = self.last_beat_us.load(Ordering::Acquire);
+        if now_us.saturating_sub(beat) > timeout_us {
+            Some(id)
+        } else {
+            None
+        }
+    }
+}
+
+impl Default for LaneBeat {
+    fn default() -> LaneBeat {
+        LaneBeat::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelDesc;
+
+    fn tiny_cfg() -> ControlConfig {
+        ControlConfig {
+            tick_us: 10,
+            up_ticks: 2,
+            down_ticks: 3,
+            bucket_capacity: 2,
+            refill_per_tick: 1,
+            ..ControlConfig::default()
+        }
+    }
+
+    fn hot_sig() -> ControlSignals {
+        ControlSignals { queue_len: 8, queue_capacity: 8, ..ControlSignals::default() }
+    }
+
+    fn calm_sig() -> ControlSignals {
+        ControlSignals { queue_len: 0, queue_capacity: 8, ..ControlSignals::default() }
+    }
+
+    /// Drive `n` ticks of `sig`, returning the level after each tick.
+    fn drive(c: &Controller, t0: &mut u64, sig: ControlSignals, n: usize) -> Vec<u8> {
+        let mut levels = Vec::new();
+        for _ in 0..n {
+            *t0 += 10;
+            c.observe(*t0, &sig);
+            levels.push(c.level());
+        }
+        levels
+    }
+
+    #[test]
+    fn ladder_engages_level_by_level_and_releases_with_hysteresis() {
+        let c = Controller::new(tiny_cfg());
+        let mut t = 0u64;
+        c.observe(t, &calm_sig()); // arm the tick
+        // 2 hot ticks per upward step: 6 ticks to reach level 3
+        let up = drive(&c, &mut t, hot_sig(), 6);
+        assert_eq!(up, vec![0, 1, 1, 2, 2, 3]);
+        assert_eq!(c.stats().engagements, 3);
+        assert_eq!(c.stats().max_level, 3);
+        // 3 calm ticks per downward step: 9 ticks to fully release
+        let down = drive(&c, &mut t, calm_sig(), 9);
+        assert_eq!(down, vec![3, 3, 2, 2, 2, 1, 1, 1, 0]);
+        assert_eq!(c.stats().releases, 1);
+        assert_eq!(c.stats().ticks, 15);
+    }
+
+    #[test]
+    fn hysteresis_band_holds_level_without_oscillation() {
+        let c = Controller::new(tiny_cfg());
+        let mut t = 0u64;
+        c.observe(t, &calm_sig());
+        drive(&c, &mut t, hot_sig(), 2);
+        assert_eq!(c.level(), 1);
+        // occupancy between the watermarks: no streak accumulates
+        let mid = ControlSignals { queue_len: 4, queue_capacity: 8, ..Default::default() };
+        let held = drive(&c, &mut t, mid, 20);
+        assert!(held.iter().all(|&l| l == 1), "band must hold the level");
+        assert_eq!(c.stats().engagements, 1);
+        assert_eq!(c.stats().releases, 0);
+    }
+
+    #[test]
+    fn shed_pressure_counts_as_hot_below_watermark() {
+        let c = Controller::new(tiny_cfg());
+        let mut t = 0u64;
+        c.observe(t, &calm_sig());
+        let mut sig = calm_sig();
+        for step in 0..2 {
+            sig.shed = step + 1; // shed delta > 0 each tick
+            t += 10;
+            c.observe(t, &sig);
+        }
+        assert_eq!(c.level(), 1);
+    }
+
+    #[test]
+    fn tick_gate_processes_at_most_one_tick_per_period() {
+        let c = Controller::new(tiny_cfg());
+        c.observe(0, &hot_sig());
+        // many observations inside one tick period: no tick fires
+        for _ in 0..50 {
+            c.observe(5, &hot_sig());
+        }
+        assert_eq!(c.stats().ticks, 0);
+        c.observe(10, &hot_sig());
+        assert_eq!(c.stats().ticks, 1);
+    }
+
+    #[test]
+    fn token_bucket_refuses_only_at_level_3_and_refills_on_ticks() {
+        let cfg = tiny_cfg();
+        let c = Controller::new(cfg);
+        // below level 3 admission is free
+        for _ in 0..100 {
+            assert!(c.try_admit());
+        }
+        let mut t = 0u64;
+        c.observe(t, &calm_sig());
+        drive(&c, &mut t, hot_sig(), 6);
+        assert_eq!(c.level(), 3);
+        // bucket capacity 2: two admissions then refusal
+        assert!(c.try_admit());
+        assert!(c.try_admit());
+        assert!(!c.try_admit());
+        assert_eq!(c.stats().refused, 1);
+        // one tick refills one token
+        t += 10;
+        c.observe(t, &hot_sig());
+        assert!(c.try_admit());
+        assert!(!c.try_admit());
+        assert_eq!(c.stats().refused, 2);
+    }
+
+    #[test]
+    fn shape_config_is_identity_at_level_0() {
+        let c = Controller::new(tiny_cfg());
+        let base = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        let mut shaped = base.clone();
+        c.shape_config(&mut shaped);
+        assert_eq!(shaped.constraint, base.constraint);
+        assert_eq!(shaped.router.dbsc, base.router.dbsc);
+        assert_eq!(shaped.router.uniform_precision, base.router.uniform_precision);
+    }
+
+    #[test]
+    fn shape_config_tightens_then_biases_precision() {
+        let cfg = tiny_cfg();
+        let c = Controller::new(cfg);
+        let mut t = 0u64;
+        c.observe(t, &calm_sig());
+        drive(&c, &mut t, hot_sig(), 2); // level 1
+        let mut l1 = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        let dbsc_before = l1.router.dbsc;
+        c.shape_config(&mut l1);
+        assert!(l1.constraint <= cfg.overload_constraint);
+        assert_eq!(l1.router.dbsc, dbsc_before, "level 1 leaves precision alone");
+        drive(&c, &mut t, hot_sig(), 2); // level 2
+        let mut l2 = ServeConfig::gsm8k_default(ModelDesc::tiny());
+        c.shape_config(&mut l2);
+        match l2.router.dbsc {
+            Some(d) => assert_eq!(d.max_critical, 0),
+            None => assert_eq!(l2.router.uniform_precision, Precision::Low),
+        }
+    }
+
+    #[test]
+    fn lane_beat_tracks_inflight_and_staleness() {
+        let b = LaneBeat::new();
+        assert_eq!(b.inflight(), None);
+        assert_eq!(b.stale(1_000_000, 100), None, "idle lane is never stale");
+        b.start(42, 1_000);
+        assert_eq!(b.inflight(), Some(42));
+        assert_eq!(b.stale(1_050, 100), None, "within timeout");
+        assert_eq!(b.stale(2_000, 100), Some(42), "past timeout -> wedged");
+        b.condemn();
+        assert!(b.is_condemned());
+        assert_eq!(b.stale(2_000, 100), None, "condemned lanes report once");
+        let b2 = LaneBeat::new();
+        b2.start(7, 0);
+        b2.finish(10);
+        assert_eq!(b2.inflight(), None);
+        assert_eq!(b2.stale(1_000_000, 100), None);
+    }
+}

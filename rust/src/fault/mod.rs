@@ -46,6 +46,9 @@
 //! valid expert), while a failed MSB fetch falls into the existing
 //! salvage/substitution/drop arms.
 
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
 use crate::util::rng::SplitMix64;
 
 /// Slice plane tags for fault keying (MSB prefix vs LSB refinement).
@@ -180,6 +183,9 @@ pub struct FaultCtx<'a> {
     pub inj: &'a FaultInjector,
     /// Decode step (per-request token index) of this access.
     pub step: u64,
+    /// Optional fetch circuit breaker (overload control plane). `None`
+    /// keeps the walk bit-exact with the pre-breaker pipeline.
+    pub breaker: Option<&'a FetchBreaker>,
 }
 
 /// Map a hash to [0, 1) (same construction as `Rng::f64`).
@@ -278,6 +284,144 @@ impl FaultInjector {
     }
 }
 
+/// Circuit-breaker knobs (overload control plane). Defaults tuned so a
+/// persistently failing site — `max_retries + 1` wasted transfers per
+/// touch — is cut off after two consecutive persistent failures and
+/// re-probed a couple of persistence windows later.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BreakerConfig {
+    /// Consecutive persistent fetch failures at one (layer, expert,
+    /// plane) site that trip the breaker open.
+    pub fail_threshold: u32,
+    /// Decode steps the breaker stays open before a half-open probe.
+    pub cooldown_steps: u64,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig { fail_threshold: 2, cooldown_steps: 16 }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum BreakerState {
+    /// Normal operation; counts consecutive persistent failures.
+    Closed { fails: u32 },
+    /// Tripped: fetches at this site are skipped (straight to the AMAT
+    /// degrade/substitute arm) until `until_step`, when one half-open
+    /// probe fetch is let through. Probe success closes the breaker;
+    /// probe failure re-arms the cooldown.
+    Open { until_step: u64 },
+}
+
+/// Cumulative breaker telemetry (per serve loop; folded into the
+/// response like the other fault counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BreakerStats {
+    /// Transitions into the open state (including probe-failure re-arms).
+    pub trips: u64,
+    /// Open states cleared by a successful half-open probe.
+    pub closes: u64,
+    /// Half-open probe fetches let through.
+    pub probes: u64,
+    /// Fetches skipped while open (retry energy saved).
+    pub skips: u64,
+}
+
+/// Per-site fetch circuit breaker. A persistent-failure storm on one
+/// expert otherwise burns `max_retries + 1` flash transfers on *every*
+/// touch for a whole persistence window; the breaker trips open after
+/// `fail_threshold` consecutive persistent failures and routes the walk
+/// straight to its existing fallback arms (salvage/substitute for MSB,
+/// AMAT degrade for LSB) at zero fetch cost, probing again after a
+/// step-keyed cooldown. Step-keyed means the whole state machine is
+/// deterministic and replayable, like the injector it guards.
+///
+/// Owned by one serve loop (interior mutability, not `Sync`): the walk
+/// only sees `&FetchBreaker` through [`FaultCtx`].
+#[derive(Debug)]
+pub struct FetchBreaker {
+    cfg: BreakerConfig,
+    sites: RefCell<HashMap<(usize, usize, u8), BreakerState>>,
+    trips: Cell<u64>,
+    closes: Cell<u64>,
+    probes: Cell<u64>,
+    skips: Cell<u64>,
+}
+
+impl FetchBreaker {
+    pub fn new(cfg: BreakerConfig) -> FetchBreaker {
+        FetchBreaker {
+            cfg,
+            sites: RefCell::new(HashMap::new()),
+            trips: Cell::new(0),
+            closes: Cell::new(0),
+            probes: Cell::new(0),
+            skips: Cell::new(0),
+        }
+    }
+
+    /// Should a fetch at this site be attempted at `step`? `false`
+    /// means the caller must skip straight to its degradation fallback
+    /// (and charges nothing). An open site past its cooldown admits the
+    /// call as a half-open probe.
+    pub fn allow(&self, layer: usize, expert: usize, plane: u8, step: u64) -> bool {
+        let sites = self.sites.borrow();
+        match sites.get(&(layer, expert, plane)) {
+            Some(BreakerState::Open { until_step }) if step < *until_step => {
+                self.skips.set(self.skips.get() + 1);
+                false
+            }
+            Some(BreakerState::Open { .. }) => {
+                self.probes.set(self.probes.get() + 1);
+                true
+            }
+            _ => true,
+        }
+    }
+
+    /// Report a successful (possibly retried-to-success) fetch.
+    pub fn on_success(&self, layer: usize, expert: usize, plane: u8) {
+        let mut sites = self.sites.borrow_mut();
+        let prev = sites.insert((layer, expert, plane), BreakerState::Closed { fails: 0 });
+        if let Some(BreakerState::Open { .. }) = prev {
+            self.closes.set(self.closes.get() + 1);
+        }
+    }
+
+    /// Report a persistent fetch failure (retry budget exhausted).
+    pub fn on_failure(&self, layer: usize, expert: usize, plane: u8, step: u64) {
+        let mut sites = self.sites.borrow_mut();
+        let entry = sites
+            .entry((layer, expert, plane))
+            .or_insert(BreakerState::Closed { fails: 0 });
+        let open = BreakerState::Open { until_step: step + self.cfg.cooldown_steps };
+        match entry {
+            BreakerState::Closed { fails } => {
+                *fails += 1;
+                if *fails >= self.cfg.fail_threshold {
+                    *entry = open;
+                    self.trips.set(self.trips.get() + 1);
+                }
+            }
+            // failed half-open probe: re-arm the cooldown from this step
+            BreakerState::Open { .. } => {
+                *entry = open;
+                self.trips.set(self.trips.get() + 1);
+            }
+        }
+    }
+
+    pub fn stats(&self) -> BreakerStats {
+        BreakerStats {
+            trips: self.trips.get(),
+            closes: self.closes.get(),
+            probes: self.probes.get(),
+            skips: self.skips.get(),
+        }
+    }
+}
+
 /// Run-level fault/recovery counters a [`ServeLoop`](crate::serve::ServeLoop)
 /// accumulates across its decode walk. All-zero when injection is off.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -297,6 +441,9 @@ pub struct FaultCounters {
     pub extra_flash_bytes: u64,
     /// Energy of those extra bytes — the measured cost of robustness.
     pub retry_energy_j: f64,
+    /// Fetches skipped by an open circuit breaker (the walk went
+    /// straight to its fallback arm at zero fetch cost).
+    pub breaker_skips: u64,
 }
 
 impl FaultCounters {
@@ -307,6 +454,7 @@ impl FaultCounters {
             || self.failed != 0
             || self.degraded != 0
             || self.extra_flash_bytes != 0
+            || self.breaker_skips != 0
     }
 
     pub fn merge(&mut self, o: &FaultCounters) {
@@ -317,6 +465,7 @@ impl FaultCounters {
         self.degraded += o.degraded;
         self.extra_flash_bytes += o.extra_flash_bytes;
         self.retry_energy_j += o.retry_energy_j;
+        self.breaker_skips += o.breaker_skips;
     }
 }
 
@@ -461,12 +610,59 @@ mod tests {
             degraded: 5,
             extra_flash_bytes: 6,
             retry_energy_j: 0.5,
+            breaker_skips: 7,
         };
         let b = a;
         a.merge(&b);
         assert_eq!(a.retries, 2);
         assert_eq!(a.extra_flash_bytes, 12);
+        assert_eq!(a.breaker_skips, 14);
         assert!(a.any());
         assert!(!FaultCounters::default().any());
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_and_skips_while_open() {
+        let b = FetchBreaker::new(BreakerConfig { fail_threshold: 2, cooldown_steps: 4 });
+        // closed: every fetch allowed, failures accumulate
+        assert!(b.allow(0, 3, PLANE_MSB, 0));
+        b.on_failure(0, 3, PLANE_MSB, 0);
+        assert!(b.allow(0, 3, PLANE_MSB, 1));
+        b.on_failure(0, 3, PLANE_MSB, 1); // second consecutive: trips
+        assert_eq!(b.stats().trips, 1);
+        // open: skipped until step 1 + 4 = 5
+        for step in 2..5 {
+            assert!(!b.allow(0, 3, PLANE_MSB, step));
+        }
+        assert_eq!(b.stats().skips, 3);
+        // other sites are unaffected
+        assert!(b.allow(0, 4, PLANE_MSB, 3));
+        assert!(b.allow(1, 3, PLANE_MSB, 3));
+        assert!(b.allow(0, 3, PLANE_LSB, 3));
+    }
+
+    #[test]
+    fn breaker_half_open_probe_closes_on_success() {
+        let b = FetchBreaker::new(BreakerConfig { fail_threshold: 1, cooldown_steps: 4 });
+        b.on_failure(2, 1, PLANE_LSB, 0); // threshold 1: trips at once
+        assert!(!b.allow(2, 1, PLANE_LSB, 3));
+        // cooldown elapsed: one probe is admitted
+        assert!(b.allow(2, 1, PLANE_LSB, 4));
+        assert_eq!(b.stats().probes, 1);
+        b.on_success(2, 1, PLANE_LSB);
+        assert_eq!(b.stats().closes, 1);
+        // closed again: fetches flow and the fail streak restarted
+        assert!(b.allow(2, 1, PLANE_LSB, 5));
+    }
+
+    #[test]
+    fn breaker_failed_probe_rearms_cooldown() {
+        let b = FetchBreaker::new(BreakerConfig { fail_threshold: 1, cooldown_steps: 4 });
+        b.on_failure(0, 0, PLANE_MSB, 0);
+        assert!(b.allow(0, 0, PLANE_MSB, 4)); // probe
+        b.on_failure(0, 0, PLANE_MSB, 4); // probe failed: re-arm
+        assert_eq!(b.stats().trips, 2);
+        assert!(!b.allow(0, 0, PLANE_MSB, 7), "cooldown restarted from probe step");
+        assert!(b.allow(0, 0, PLANE_MSB, 8));
     }
 }

@@ -31,6 +31,10 @@
 //!     flash-fetch path (latency spikes, transient failures, checksum
 //!     corruption) with bounded retry/backoff and AMAT degraded
 //!     fallback — off by default and bit-exact when off;
+//!   - [`control`] — the disabled-by-default overload control plane: a
+//!     feedback degradation ladder (tighten the miss budget, bias to
+//!     low-bit AMAT precision, token-bucket admission) plus the lane
+//!     watchdog heartbeat and the fetch circuit breaker's config knobs;
 //!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
 //!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
 //!     Fig 7 cost model, AMAT quantization);
@@ -46,6 +50,7 @@
 //! crate, see Cargo.toml) for the real execution engine.
 
 pub mod cache;
+pub mod control;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod experiments;

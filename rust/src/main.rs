@@ -394,6 +394,10 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             "chaos",
             "deterministic fault injection on the flash-fetch path (smoke preset; adds informational {cell}/chaos rows)",
         )
+        .switch(
+            "controller",
+            "attach the overload control plane (degradation ladder, lane watchdog, fetch breaker; adds informational {cell}/control rows)",
+        )
         .opt("fault-rate", "", "per-fetch fault probability override (implies --chaos)")
         .opt("fault-seed", "", "fault-plan seed override (implies --chaos)")
         .opt(
@@ -430,6 +434,7 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
     if a.is_set("slo") {
         cfg.slo_s = Some(a.f64("slo")?);
     }
+    cfg.controller = a.bool("controller");
     // explicit flags always win; --smoke only changes the DEFAULTS of
     // requests/span/lanes
     if !a.bool("smoke") || a.is_set("requests") {

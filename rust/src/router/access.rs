@@ -111,6 +111,11 @@ pub struct AccessOutcome {
     pub fault_extra_flash_bytes: u64,
     /// The experts behind `fault_degraded` (attribution).
     pub fault_degraded_experts: Vec<u16>,
+    /// Fetches skipped by an open circuit breaker: the walk took its
+    /// fallback arm directly, charging no flash traffic and consuming
+    /// no budget credit. Zero unless a breaker is threaded via
+    /// [`FaultCtx`].
+    pub breaker_skips: u32,
 }
 
 /// The selection-phase product: routed experts plus the routing-quality
@@ -241,6 +246,16 @@ pub fn access_layer_sharded(
 /// Run one admitted flash fetch through the fault model (or cleanly when
 /// no injector is threaded) and fold the charges into `out`. The caller
 /// fills the cache only when the returned outcome succeeded.
+/// Whether the circuit breaker (if any) admits a fetch at this site.
+/// `false` means the caller takes its degradation fallback directly,
+/// before any budget credit is spent.
+fn breaker_allows(fault: Option<FaultCtx>, layer: usize, expert: usize, plane: u8) -> bool {
+    match fault {
+        Some(FaultCtx { breaker: Some(b), step, .. }) => b.allow(layer, expert, plane, step),
+        _ => true,
+    }
+}
+
 fn fault_fetch<C: CacheOps>(
     fault: Option<FaultCtx>,
     layer: usize,
@@ -254,6 +269,15 @@ fn fault_fetch<C: CacheOps>(
         Some(f) => f.inj.fetch(layer, expert, plane, f.step, bytes),
         None => FetchOutcome::clean(),
     };
+    // the breaker learns from every admitted fetch: persistent failure
+    // feeds the trip counter, success closes a half-open probe
+    if let Some(FaultCtx { breaker: Some(b), step, .. }) = fault {
+        if fo.succeeded {
+            b.on_success(layer, expert, plane);
+        } else {
+            b.on_failure(layer, expert, plane, step);
+        }
+    }
     // failed attempts still moved bytes over flash; retries recharge the
     // slice plus backoff — all real time/energy in the cost model
     out.flash_bytes += bytes + fo.extra_bytes;
@@ -320,7 +344,12 @@ pub fn walk_layer<C: CacheOps>(
         } else {
             out.msb_misses += 1;
             let mut filled = false;
-            if budget.try_fetch(msb_bytes) {
+            if !breaker_allows(fault, layer, r.expert, PLANE_MSB) {
+                // open breaker: skip the doomed fetch entirely (no
+                // budget credit, no flash traffic) and fall through to
+                // the same salvage arm a denied fetch takes
+                out.breaker_skips += 1;
+            } else if budget.try_fetch(msb_bytes) {
                 let fo = fault_fetch(
                     fault, layer, r.expert, PLANE_MSB, msb_bytes, &mut out, cache,
                 );
@@ -384,7 +413,12 @@ pub fn walk_layer<C: CacheOps>(
                 // uniform high-bit baseline is monolithic (no slice
                 // choice), so its residual plane fetches at normal
                 // priority.
-                let admitted = if cfg.dbsc.is_some() {
+                let admitted = if !breaker_allows(fault, layer, expert, PLANE_LSB) {
+                    // open breaker: degrade straight onto the resident
+                    // MSB prefix instead of burning retry energy
+                    out.breaker_skips += 1;
+                    false
+                } else if cfg.dbsc.is_some() {
                     budget.try_fetch_low_priority(lsb_bytes)
                 } else {
                     budget.try_fetch(lsb_bytes)
@@ -638,7 +672,7 @@ mod tests {
         let out = walk_layer(
             &cfg, route, &steep_probs(), 0, &desc, mat, &mut cache, &mut budget,
             None, &mut scratch,
-            Some(crate::fault::FaultCtx { inj: &inj, step: 0 }),
+            Some(crate::fault::FaultCtx { inj: &inj, step: 0, breaker: None }),
         );
         // both routed MSB fetches persistently failed: one salvaged to the
         // resident expert 5, one dropped (no second candidate). The
@@ -681,7 +715,7 @@ mod tests {
         let out = walk_layer(
             &cfg, route, &steep_probs(), 0, &desc, mat, &mut cache, &mut budget,
             None, &mut scratch,
-            Some(crate::fault::FaultCtx { inj: &inj, step: 0 }),
+            Some(crate::fault::FaultCtx { inj: &inj, step: 0, breaker: None }),
         );
         // the critical expert's LSB fetch failed persistently -> it runs
         // Low on the resident MSB prefix instead of dropping
@@ -711,7 +745,7 @@ mod tests {
                                          &mut budget_a, None, &mut sa, None);
             let b = access_layer_scratch(&cfg, probs, i % 4, &desc, mat, &mut cache_b,
                                          &mut budget_b, None, &mut sb,
-                                         Some(crate::fault::FaultCtx { inj: &inj, step: i as u64 }));
+                                         Some(crate::fault::FaultCtx { inj: &inj, step: i as u64, breaker: None }));
             assert_eq!(a.execs, b.execs, "step {i}");
             assert_eq!(a.flash_bytes, b.flash_bytes, "step {i}");
             assert_eq!(a.flash_fetches, b.flash_fetches, "step {i}");
@@ -720,6 +754,63 @@ mod tests {
         }
         assert_eq!(cache_a.stats, cache_b.stats);
         assert_eq!(cache_a.keys_mru(), cache_b.keys_mru());
+    }
+
+    #[test]
+    fn breaker_skips_failure_storm_then_probes_after_cooldown() {
+        let (desc, mat, mut cache, mut budget) = setup(8);
+        // expert 5 pre-cached so the salvage arm has a candidate
+        cache.ensure(SliceKey::msb(0, 5), desc.msb_slice_bytes(mat));
+        let mut cfg = RouterConfig::dbsc(2);
+        cfg.policy = Policy::TopK;
+        let inj = always_failing_ctx(); // window 64: flaky at every step below
+        let breaker = crate::fault::FetchBreaker::new(crate::fault::BreakerConfig {
+            fail_threshold: 1,
+            cooldown_steps: 4,
+        });
+        let mut scratch = Vec::new();
+        let mut walk = |step: u64| {
+            let route = route_layer(&cfg, &steep_probs(), &budget, |e| {
+                cache.peek(SliceKey::msb(0, e))
+            });
+            walk_layer(
+                &cfg, route, &steep_probs(), 0, &desc, mat, &mut cache, &mut budget,
+                None, &mut scratch,
+                Some(crate::fault::FaultCtx { inj: &inj, step, breaker: Some(&breaker) }),
+            )
+        };
+        // step 0: 3 persistent failures (MSB e0, MSB e1, LSB of salvage
+        // e5), each tripping its site breaker at threshold 1
+        let out0 = walk(0);
+        assert_eq!(out0.fault_failed, 3);
+        assert_eq!(out0.breaker_skips, 0);
+        assert_eq!(breaker.stats().trips, 3);
+        let fetched_after_0 = (out0.flash_fetches, out0.flash_bytes);
+        assert!(fetched_after_0.0 > 0);
+        // step 1: every tripped site skips — no fetch attempted, no
+        // flash charged, no budget credit consumed; the walk still
+        // lands on the same salvage/degrade fallbacks
+        let out1 = walk(1);
+        assert_eq!(out1.breaker_skips, 3);
+        assert_eq!(out1.flash_fetches, 0);
+        assert_eq!(out1.flash_bytes, 0);
+        assert_eq!(out1.fault_failed, 0);
+        assert_eq!(out1.fault_retries, 0);
+        assert_eq!(out1.n_substituted, 1);
+        assert_eq!(out1.n_dropped, 1);
+        assert_eq!(out1.n_degraded, 1);
+        assert_eq!(breaker.stats().skips, 3);
+        // step 4: cooldown (trip step + 4) elapsed — half-open probes
+        // are admitted, fail again, and re-arm the cooldown
+        let out4 = walk(4);
+        assert_eq!(out4.breaker_skips, 0);
+        assert_eq!(out4.fault_failed, 3);
+        assert_eq!(breaker.stats().probes, 3);
+        assert_eq!(breaker.stats().trips, 6);
+        // step 5: re-armed — skipping again
+        let out5 = walk(5);
+        assert_eq!(out5.breaker_skips, 3);
+        assert_eq!(out5.flash_fetches, 0);
     }
 
     #[test]

@@ -102,6 +102,17 @@ impl MissBudget {
         }
     }
 
+    /// Overload tightening (control plane, level >= 1): the effective
+    /// constraint is the configured one capped by the controller's
+    /// overload ceiling. Applied to the *config* constraint before the
+    /// budget is built, so an unconstrained run (`inf`) becomes
+    /// constrained under pressure while an already-tighter run keeps
+    /// its own target. Negative caps clamp to 0 (deny everything past
+    /// warmup).
+    pub fn tightened_constraint(base: f64, cap: f64) -> f64 {
+        base.min(cap).max(0.0)
+    }
+
     /// Measured high-bit-normalized miss rate so far.
     pub fn measured_miss_rate(&self) -> f64 {
         if self.accesses == 0 {
@@ -176,6 +187,14 @@ mod tests {
             b.on_access();
             assert!(b.try_fetch(1 << 20));
         }
+    }
+
+    #[test]
+    fn tightened_constraint_caps_without_loosening() {
+        assert_eq!(MissBudget::tightened_constraint(f64::INFINITY, 0.05), 0.05);
+        assert_eq!(MissBudget::tightened_constraint(0.20, 0.05), 0.05);
+        assert_eq!(MissBudget::tightened_constraint(0.02, 0.05), 0.02);
+        assert_eq!(MissBudget::tightened_constraint(0.02, -1.0), 0.0);
     }
 
     #[test]

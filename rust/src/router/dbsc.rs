@@ -9,7 +9,7 @@
 
 use super::{Precision, Routed};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DbscConfig {
     /// Single-head threshold θ: expert critical iff prob >= θ * max_prob.
     pub theta: f64,

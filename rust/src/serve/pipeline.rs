@@ -29,7 +29,7 @@ use crate::cache::{
     warmup::{apply_ex, apply_sharded},
     CacheOps, CacheStats, HotnessTable, ShardedSliceCache, SliceCache, WarmupStrategy,
 };
-use crate::fault::{FaultCounters, FaultCtx, FaultInjector, FaultPlan};
+use crate::fault::{BreakerConfig, FaultCounters, FaultCtx, FaultInjector, FaultPlan, FetchBreaker};
 use crate::memhier::{HwSpec, Ledger, Phase};
 use crate::model::descriptor::{ModelDesc, Plane, SliceKey};
 use crate::quant::MatConfig;
@@ -73,6 +73,11 @@ pub struct ServeConfig {
     /// prefill streams every expert sequentially and is not on the
     /// latency-critical recovery path this layer models.
     pub fault: Option<FaultPlan>,
+    /// Fetch circuit breaker (overload control plane). Only consulted
+    /// when a fault injector is live — persistent failures are what it
+    /// trips on — and `None` (the default) keeps the walk bit-exact
+    /// with pre-breaker builds even under an active fault plan.
+    pub breaker: Option<BreakerConfig>,
     pub seed: u64,
 }
 
@@ -92,6 +97,7 @@ impl ServeConfig {
             heterogeneous_lsb: true,
             temperature: None,
             fault: None,
+            breaker: None,
             seed: 0xD15C,
             desc,
         }
@@ -112,6 +118,7 @@ impl ServeConfig {
             heterogeneous_lsb: true,
             temperature: None,
             fault: None,
+            breaker: None,
             seed: 7,
             mat,
             desc,
@@ -305,6 +312,10 @@ pub struct ServeLoop {
     /// Whole-request fault/recovery accounting (all zero when `fault` is
     /// `None`).
     pub fault_counters: FaultCounters,
+    /// Per-site fetch circuit breaker (overload control plane). Built
+    /// only when `cfg.breaker` is set AND a fault injector is live;
+    /// `None` leaves the walk bit-exact.
+    pub breaker: Option<FetchBreaker>,
     msb_bytes: u64,
     lsb_bytes: u64,
     /// Reused eviction scratch buffer: `ensure_into` appends evicted keys
@@ -341,6 +352,11 @@ impl ServeLoop {
             .fault
             .filter(|p| p.is_active())
             .map(|p| FaultInjector::new(p, cfg.seed));
+        let breaker = if fault.is_some() {
+            cfg.breaker.map(FetchBreaker::new)
+        } else {
+            None
+        };
         ServeLoop {
             budget: MissBudget::new(cfg.constraint, msb_bytes + lsb_bytes),
             hot: HotnessTable::new(),
@@ -354,6 +370,7 @@ impl ServeLoop {
             recorder: Recorder::disabled(),
             fault,
             fault_counters: FaultCounters::default(),
+            breaker,
             msb_bytes,
             lsb_bytes,
             evict_scratch: Vec::new(),
@@ -549,7 +566,8 @@ impl ServeLoop {
                 let hot = &mut self.hot;
                 let scratch = &mut self.evict_scratch;
                 let router = &self.cfg.router;
-                let fault = self.fault.as_ref().map(|inj| FaultCtx { inj, step: t });
+                let breaker = self.breaker.as_ref();
+                let fault = self.fault.as_ref().map(|inj| FaultCtx { inj, step: t, breaker });
                 match &mut self.cache {
                     LaneCache::Private(c) => access_layer_scratch(
                         router, probs, layer, &desc, mat, c, budget, Some(hot), scratch, fault,
@@ -644,6 +662,7 @@ impl ServeLoop {
         self.fault_counters.failed += u64::from(out.fault_failed);
         self.fault_counters.degraded += u64::from(out.fault_degraded);
         self.fault_counters.extra_flash_bytes += out.fault_extra_flash_bytes;
+        self.fault_counters.breaker_skips += u64::from(out.breaker_skips);
 
         if t >= self.budget.warmup_steps {
             self.steady_accesses += (out.execs.len() + out.n_dropped) as u64;
@@ -843,6 +862,38 @@ mod tests {
             fc.failed <= fc.degraded + lane.counters.n_substituted + lane.counters.n_dropped,
             "every persistent failure resolves: {fc:?}"
         );
+    }
+
+    #[test]
+    fn breaker_cuts_retry_storms_and_still_serves() {
+        // a persistent-failure storm: every flaky site exhausts its
+        // retry budget on every touch until the window rolls over
+        let mut cfg = tiny_cfg();
+        let mut plan = FaultPlan::smoke();
+        plan.fault_rate = 0.6;
+        plan.retry_fail_p = 1.0;
+        plan.persistence_window = 64;
+        cfg.fault = Some(plan);
+        let base = run(&cfg, 32, 48);
+        assert!(base.breaker.is_none(), "breaker must be opt-in");
+
+        let mut cfg_b = cfg.clone();
+        cfg_b.breaker = Some(BreakerConfig::default());
+        let guarded = run(&cfg_b, 32, 48);
+        assert_eq!(guarded.ledger.decode_steps, 48, "breaker must not lose tokens");
+        let fc = guarded.fault_counters;
+        assert!(fc.breaker_skips > 0, "storm must trip and skip");
+        let stats = guarded.breaker.as_ref().unwrap().stats();
+        assert!(stats.trips > 0);
+        assert_eq!(stats.skips, fc.breaker_skips, "breaker and walk agree");
+        // the point of the breaker: stop burning retry energy on doomed
+        // fetches (every skipped touch saves max_retries + 1 transfers)
+        assert!(fc.retries < base.fault_counters.retries);
+        assert!(fc.retry_energy_j < base.fault_counters.retry_energy_j);
+        // conservation still holds under the breaker
+        let total =
+            guarded.counters.n_high + guarded.counters.n_low + guarded.counters.n_dropped;
+        assert_eq!(total, (48 * cfg.desc.n_layers * cfg.desc.top_k) as u64);
     }
 
     #[test]

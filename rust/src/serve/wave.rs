@@ -281,9 +281,13 @@ impl<B: ExpertBackend> WaveEngine<B> {
                         let lane = &mut slot.lane;
                         // per-request injector + per-request token index:
                         // fault sites replay identically whether a request
-                        // is waved or served alone
-                        let fault =
-                            lane.fault.as_ref().map(|inj| FaultCtx { inj, step: t });
+                        // is waved or served alone (the breaker is likewise
+                        // per-request state riding on the lane)
+                        let breaker = lane.breaker.as_ref();
+                        let fault = lane
+                            .fault
+                            .as_ref()
+                            .map(|inj| FaultCtx { inj, step: t, breaker });
                         walk_layer(
                             &lane.cfg.router,
                             route,

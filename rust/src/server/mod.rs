@@ -22,14 +22,16 @@
 //! With more than one lane, responses arrive in COMPLETION order; the
 //! per-response `id` and `lane` fields identify them.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::cache::{ShardedSliceCache, SliceCache};
+use crate::control::{ControlSignals, Controller, LaneBeat};
 use crate::serve::{CostModelBackend, ExpertBackend, ServeConfig, ServeLoop, WaveEngine};
 use crate::sim::trace::{RoutingBias, TraceParams};
 use crate::telemetry::{Clock, RequestSpan, TelemetryHub};
@@ -91,6 +93,9 @@ pub struct Response {
     pub decode_flash_fetches: u64,
     /// Shed by SLO admission: never served, zero tokens, zero energy.
     pub shed: bool,
+    /// Refused ahead of the queue by the overload controller's admission
+    /// token bucket (ladder level 3): never queued, zero served work.
+    pub refused: bool,
     /// Times the scheduler deferred (requeued) this request before it was
     /// finally served or shed.
     pub deferred: u32,
@@ -105,6 +110,11 @@ pub struct Response {
     pub fault_failed: u64,
     /// Flash energy spent on retry/spike recovery traffic alone.
     pub retry_energy_j: f64,
+    /// Fetches skipped by an open fetch circuit breaker on the serving
+    /// lane (zero unless a breaker is configured and faults are live).
+    pub breaker_skips: u64,
+    /// Circuit-breaker trips observed on the serving lane.
+    pub breaker_trips: u64,
 }
 
 impl Response {
@@ -134,12 +144,15 @@ impl Response {
             steady_norm_bytes: lane.steady_norm_bytes(),
             decode_flash_fetches: lane.decode_flash_fetches,
             shed: false,
+            refused: false,
             deferred: 0,
             n_degraded: lane.counters.n_degraded,
             n_experts: lane.counters.n_high + lane.counters.n_low,
             fault_retries: lane.fault_counters.retries,
             fault_failed: lane.fault_counters.failed,
             retry_energy_j: lane.fault_counters.retry_energy_j,
+            breaker_skips: lane.fault_counters.breaker_skips,
+            breaker_trips: lane.breaker.as_ref().map_or(0, |b| b.stats().trips),
         }
     }
 
@@ -160,13 +173,26 @@ impl Response {
             steady_norm_bytes: 0.0,
             decode_flash_fetches: 0,
             shed: true,
+            refused: false,
             deferred: 0,
             n_degraded: 0,
             n_experts: 0,
             fault_retries: 0,
             fault_failed: 0,
             retry_energy_j: 0.0,
+            breaker_skips: 0,
+            breaker_trips: 0,
         }
+    }
+
+    /// A request refused ahead of the queue by the overload controller's
+    /// admission token bucket: one paired recv outcome, zero served work
+    /// and zero queueing (it never entered the queue).
+    pub fn refused(id: u64) -> Response {
+        let mut r = Response::shed(id, 0.0);
+        r.shed = false;
+        r.refused = true;
+        r
     }
 
     pub fn tokens_per_s(&self) -> f64 {
@@ -211,6 +237,9 @@ pub struct BatchSummary {
     /// Requests shed by SLO admission (counted in `requests`, excluded
     /// from the latency percentiles and token/energy totals).
     pub shed: usize,
+    /// Requests refused up-front by the overload controller (counted in
+    /// `requests`, excluded from the same aggregates as `shed`).
+    pub refused: usize,
     /// Total deferrals (requeues) across the batch.
     pub deferred: u64,
     /// Degraded-precision executions over total executed experts.
@@ -219,6 +248,10 @@ pub struct BatchSummary {
     pub fault_retries: u64,
     pub fault_failed: u64,
     pub retry_energy_j: f64,
+    /// Fetches skipped by open circuit breakers across served requests.
+    pub breaker_skips: u64,
+    /// Circuit-breaker trips across served requests.
+    pub breaker_trips: u64,
 }
 
 /// Total over empty/zero-token response sets is well-defined: every field
@@ -227,10 +260,12 @@ pub struct BatchSummary {
 /// empty sample is 0.0 (`summarize_of_empty_and_zero_token_batches_is_zero`
 /// pins all of this).
 pub fn summarize(responses: &[Response]) -> BatchSummary {
-    // shed responses carry no served work: keep them out of the latency
-    // sample (their 0-second walls would deflate every percentile) and
-    // out of the token/energy totals; they still count as requests
-    let served: Vec<&Response> = responses.iter().filter(|r| !r.shed).collect();
+    // shed/refused responses carry no served work: keep them out of the
+    // latency sample (their 0-second walls would deflate every
+    // percentile) and out of the token/energy totals; they still count
+    // as requests
+    let served: Vec<&Response> =
+        responses.iter().filter(|r| !r.shed && !r.refused).collect();
     let lat: Vec<f64> = served
         .iter()
         .map(|r| r.decode_wall_s / r.decode_tokens.max(1) as f64)
@@ -246,7 +281,8 @@ pub fn summarize(responses: &[Response]) -> BatchSummary {
         latency_p90_s: p90,
         latency_p99_s: p99,
         combined_miss_rate: combined_miss_rate(responses),
-        shed: responses.len() - served.len(),
+        shed: responses.iter().filter(|r| r.shed).count(),
+        refused: responses.iter().filter(|r| r.refused).count(),
         deferred: responses.iter().map(|r| u64::from(r.deferred)).sum(),
         degraded_fraction: if n_exec == 0 {
             0.0
@@ -256,6 +292,8 @@ pub fn summarize(responses: &[Response]) -> BatchSummary {
         fault_retries: served.iter().map(|r| r.fault_retries).sum(),
         fault_failed: served.iter().map(|r| r.fault_failed).sum(),
         retry_energy_j: served.iter().map(|r| r.retry_energy_j).sum(),
+        breaker_skips: served.iter().map(|r| r.breaker_skips).sum(),
+        breaker_trips: served.iter().map(|r| r.breaker_trips).sum(),
     }
 }
 
@@ -286,11 +324,20 @@ struct QueueState<T> {
 
 /// Bounded MPMC queue: `push` blocks while full (backpressure), `pop`
 /// blocks while empty, `close` drains producers and wakes everyone.
+///
+/// Poison containment: a worker that panics while holding the state
+/// lock poisons it for every other lane and submitter. Every `VecDeque`
+/// mutation here completes before any code that can panic, so the
+/// queued items are always valid — the lock is recovered via
+/// `clear_poison` and the recovery counted instead of cascading the
+/// panic across the fleet.
 struct BoundedQueue<T> {
     state: Mutex<QueueState<T>>,
     not_empty: Condvar,
     not_full: Condvar,
     capacity: usize,
+    /// Times a poisoned state lock was recovered.
+    recovered: AtomicU64,
 }
 
 /// Outcome of a non-blocking queue push.
@@ -309,12 +356,44 @@ impl<T> BoundedQueue<T> {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity: capacity.max(1),
+            recovered: AtomicU64::new(0),
         }
+    }
+
+    /// Lock the queue state, recovering (and counting) a poisoned lock.
+    fn lock(&self) -> MutexGuard<'_, QueueState<T>> {
+        self.state.lock().unwrap_or_else(|poisoned| {
+            self.state.clear_poison();
+            self.recovered.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        })
+    }
+
+    /// Condvar wait with the same poison recovery as [`Self::lock`].
+    fn wait<'a>(
+        &self,
+        cv: &Condvar,
+        guard: MutexGuard<'a, QueueState<T>>,
+    ) -> MutexGuard<'a, QueueState<T>> {
+        cv.wait(guard).unwrap_or_else(|poisoned| {
+            self.state.clear_poison();
+            self.recovered.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        })
+    }
+
+    /// Poisoned-lock recoveries since construction.
+    fn recovered(&self) -> u64 {
+        self.recovered.load(Ordering::Relaxed)
+    }
+
+    fn len(&self) -> usize {
+        self.lock().items.len()
     }
 
     /// Non-blocking push.
     fn try_push(&self, item: T) -> TryPush<T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         if st.closed {
             return TryPush::Closed(item);
         }
@@ -328,9 +407,9 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking push; `Err(item)` if the queue was closed.
     fn push(&self, item: T) -> std::result::Result<(), T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         while st.items.len() >= self.capacity && !st.closed {
-            st = self.not_full.wait(st).expect("queue poisoned");
+            st = self.wait(&self.not_full, st);
         }
         if st.closed {
             return Err(item);
@@ -343,7 +422,7 @@ impl<T> BoundedQueue<T> {
     /// Non-blocking pop; `None` when the queue is momentarily empty
     /// (closed or not — callers that must distinguish use `pop`).
     fn try_pop(&self) -> Option<T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         let item = st.items.pop_front();
         if item.is_some() {
             self.not_full.notify_one();
@@ -353,7 +432,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop; `None` once the queue is closed AND drained.
     fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         loop {
             if let Some(item) = st.items.pop_front() {
                 self.not_full.notify_one();
@@ -362,12 +441,12 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).expect("queue poisoned");
+            st = self.wait(&self.not_empty, st);
         }
     }
 
     fn close(&self) {
-        let mut st = self.state.lock().expect("queue poisoned");
+        let mut st = self.lock();
         st.closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
@@ -467,6 +546,7 @@ fn serve_one<B: Backend>(
     (enqueue_us, admit_us): (u64, u64),
     clock: &Clock,
     hub: &Option<Arc<TelemetryHub>>,
+    beat: &LaneBeat,
     tx: &mpsc::Sender<Result<Response>>,
 ) -> Option<f64> {
     let outcome =
@@ -496,14 +576,22 @@ fn serve_one<B: Backend>(
             // the popped request would otherwise vanish (a client doing
             // one recv per submit would hang): report it, then let the
             // lane die — its backend state is suspect after an unwind
-            let _ = tx.send(Err(anyhow::anyhow!(
-                "lane {lane} panicked serving request {}: {}",
-                req.id,
-                panic_text(payload.as_ref())
-            )));
+            if !beat.is_condemned() {
+                let _ = tx.send(Err(anyhow::anyhow!(
+                    "lane {lane} panicked serving request {}: {}",
+                    req.id,
+                    panic_text(payload.as_ref())
+                )));
+            }
             std::panic::resume_unwind(payload);
         }
     };
+    if beat.is_condemned() {
+        // the watchdog declared this lane wedged, answered its in-flight
+        // request, and spawned a replacement: retire without
+        // double-answering
+        return None;
+    }
     if tx.send(result).is_err() {
         None
     } else {
@@ -540,16 +628,312 @@ impl Drop for LaneGuard {
     }
 }
 
+/// The lane worker body, shared by [`ServerHandle::start_ex`] and the
+/// watchdog's replacement lanes. Runs ON the worker thread (backends
+/// need not be `Send`); stamps `beat` around every served request so
+/// the client-driven watchdog can detect a wedge.
+#[allow(clippy::too_many_arguments)]
+fn lane_worker<F, B>(
+    lane: usize,
+    queue: Arc<BoundedQueue<Queued>>,
+    tx: mpsc::Sender<Result<Response>>,
+    make: Arc<F>,
+    live: Arc<AtomicUsize>,
+    clock: Clock,
+    hub: Option<Arc<TelemetryHub>>,
+    beat: Arc<LaneBeat>,
+) where
+    F: Fn(usize) -> Result<B>,
+    B: Backend,
+{
+    // Drop guard: runs on EVERY exit path, including a panic unwinding
+    // out of backend.serve, so a dead fleet always closes the queue.
+    let _guard = LaneGuard { live, queue: Arc::clone(&queue) };
+    // Responses must pair one-to-one with requests (a client doing one
+    // recv per submit relies on it), so a construction failure is
+    // reported out-of-band: stderr here, and — once the LAST lane is
+    // gone — a closed queue/channel at the client.
+    let mut backend = match make(lane) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("slicemoe-lane-{lane}: backend construction failed: {e:#}");
+            return;
+        }
+    };
+    // EWMA of this lane's measured service walls — the completion
+    // projection SLO admission tests against. Starts at 0 (no
+    // estimate): a fresh lane never defers, so manual-clock runs stay
+    // deterministic.
+    let mut est_service_s = 0.0f64;
+    while let Some(q) = queue.pop() {
+        let Queued { req, enqueue_us, deferred } = q;
+        let admit_us = clock.now_us();
+        let queued = admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
+        if let Some(slo) = req.slo {
+            // deadline already blown: shed (one paired outcome, zero
+            // served work)
+            if queued >= slo {
+                let mut r = Response::shed(req.id, queued);
+                r.lane = lane;
+                r.deferred = deferred;
+                if let Some(hub) = &hub {
+                    hub.on_shed();
+                }
+                if tx.send(Ok(r)).is_err() {
+                    break;
+                }
+                continue;
+            }
+            // projected violation: defer once to the back of the queue
+            // (later arrivals with slack go first); with no room to
+            // defer, serve it now rather than spin
+            if deferred == 0 && est_service_s > 0.0 && queued + est_service_s > slo {
+                let back = Queued { req, enqueue_us, deferred: deferred + 1 };
+                match queue.try_push(back) {
+                    TryPush::Pushed => {
+                        if let Some(hub) = &hub {
+                            hub.on_defer();
+                        }
+                        continue;
+                    }
+                    TryPush::Full(q) | TryPush::Closed(q) => {
+                        beat.start(q.req.id, admit_us);
+                        let outcome = serve_one(
+                            &mut backend,
+                            &q.req,
+                            queued,
+                            lane,
+                            q.deferred - 1,
+                            (enqueue_us, admit_us),
+                            &clock,
+                            &hub,
+                            &beat,
+                            &tx,
+                        );
+                        beat.finish(clock.now_us());
+                        match outcome {
+                            Some(s) => est_service_s = ewma(est_service_s, s),
+                            None => break,
+                        }
+                        continue;
+                    }
+                }
+            }
+        }
+        beat.start(req.id, admit_us);
+        let outcome = serve_one(
+            &mut backend,
+            &req,
+            queued,
+            lane,
+            deferred,
+            (enqueue_us, admit_us),
+            &clock,
+            &hub,
+            &beat,
+            &tx,
+        );
+        beat.finish(clock.now_us());
+        match outcome {
+            Some(s) => est_service_s = ewma(est_service_s, s),
+            None => break,
+        }
+    }
+}
+
+/// The wave worker body, shared by [`ServerHandle::start_wave_ex`] and
+/// the watchdog's replacement workers. `inflight` (id → enqueue µs) is
+/// shared with the client handle so a watchdog can answer every
+/// in-flight request of a wedged worker; `make_lane` is behind a mutex
+/// so a replacement worker can keep admitting through the same factory.
+#[allow(clippy::too_many_arguments)]
+fn wave_worker<F, B>(
+    max_batch: usize,
+    cache: Arc<ShardedSliceCache>,
+    queue: Arc<BoundedQueue<Queued>>,
+    tx: mpsc::Sender<Result<Response>>,
+    make_lane: Arc<Mutex<F>>,
+    live: Arc<AtomicUsize>,
+    clock: Clock,
+    hub: Option<Arc<TelemetryHub>>,
+    beat: Arc<LaneBeat>,
+    inflight: Arc<Mutex<HashMap<u64, u64>>>,
+) where
+    F: FnMut(&Request) -> Result<(ServeConfig, B)>,
+    B: ExpertBackend,
+{
+    let _guard = LaneGuard { live, queue: Arc::clone(&queue) };
+    let admit_clock = clock.clone();
+    let mut engine: WaveEngine<B> =
+        WaveEngine::new(cache, max_batch).with_clock(clock.clone());
+    if let Some(hub) = &hub {
+        engine = engine.with_telemetry(Arc::clone(hub));
+    }
+    let lock_inflight = || {
+        inflight.lock().unwrap_or_else(|poisoned| {
+            inflight.clear_poison();
+            poisoned.into_inner()
+        })
+    };
+    loop {
+        if beat.is_condemned() {
+            return;
+        }
+        // admit: block only when idle; otherwise take what is ready and
+        // get back to stepping the wave
+        if engine.is_idle() {
+            match queue.pop() {
+                Some(item) => {
+                    let mut mk = make_lane.lock().expect("wave factory poisoned");
+                    let mut inf = lock_inflight();
+                    admit_waved(
+                        &mut engine,
+                        &mut *mk,
+                        item,
+                        &tx,
+                        &mut inf,
+                        &admit_clock,
+                        &hub,
+                    );
+                }
+                None => return, // closed and drained
+            }
+        }
+        while engine.has_room() {
+            match queue.try_pop() {
+                Some(item) => {
+                    let mut mk = make_lane.lock().expect("wave factory poisoned");
+                    let mut inf = lock_inflight();
+                    admit_waved(
+                        &mut engine,
+                        &mut *mk,
+                        item,
+                        &tx,
+                        &mut inf,
+                        &admit_clock,
+                        &hub,
+                    );
+                }
+                None => break,
+            }
+        }
+        if engine.is_idle() {
+            continue; // every admission failed; block again
+        }
+
+        // heartbeat: mark the oldest in-flight request before the step
+        // so a wedged step is attributable
+        {
+            let inf = lock_inflight();
+            let oldest = inf.keys().min().copied().unwrap_or(0);
+            beat.start(oldest, clock.now_us());
+        }
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.step_wave()));
+        beat.finish(clock.now_us());
+        if beat.is_condemned() {
+            // the watchdog answered every in-flight request while this
+            // step was wedged: retire without double-answering
+            return;
+        }
+        match outcome {
+            Ok(Ok(done)) => {
+                for mut d in done {
+                    let enqueue_us = lock_inflight().remove(&d.id).unwrap_or(d.admit_us);
+                    let queued = d.admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
+                    let mut r = Response::from_lane(
+                        &d.lane,
+                        d.id,
+                        Vec::new(),
+                        d.prefill_wall_s,
+                        d.decode_wall_s,
+                        d.decode_tokens,
+                    );
+                    r.queue_wall_s = queued;
+                    if let Some(hub) = &hub {
+                        hub.absorb(std::mem::take(&mut d.lane.recorder));
+                        hub.on_request(RequestSpan {
+                            id: d.id,
+                            enqueue_us,
+                            admit_us: d.admit_us,
+                            complete_us: d.complete_us,
+                            prefill_s: d.prefill_wall_s,
+                            decode_s: d.decode_wall_s,
+                            decode_tokens: d.decode_tokens,
+                        });
+                    }
+                    if tx.send(Ok(r)).is_err() {
+                        return;
+                    }
+                }
+            }
+            Ok(Err(e)) => {
+                // a failed wave step poisons every in-flight request;
+                // report each so request/response pairing holds, then
+                // retire the worker
+                let mut inf = lock_inflight();
+                for (&id, _) in inf.iter() {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "wave step failed serving request {id}: {e:#}"
+                    )));
+                }
+                inf.clear();
+                return;
+            }
+            Err(payload) => {
+                let mut inf = lock_inflight();
+                for (&id, _) in inf.iter() {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "wave worker panicked serving request {id}: {}",
+                        panic_text(payload.as_ref())
+                    )));
+                }
+                inf.clear();
+                drop(inf);
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+}
+
 /// Client handle to a running multi-lane server.
 ///
 /// Queue items carry their enqueue timestamp in µs on the server
 /// [`Clock`], so queueing delay and telemetry request spans share one
 /// timebase (and tests can drive both with a manual clock).
+///
+/// With a [`Controller`] attached ([`Self::attach_controller`]) the
+/// handle becomes the control plane's actuation point: every
+/// submit/recv samples the queue into the controller (`control_tick`),
+/// level-3 overload refuses requests ahead of the queue, and blocked
+/// `recv` calls poll the lane watchdog. Without a controller all of
+/// that is dormant and the handle behaves exactly as before.
 pub struct ServerHandle {
     queue: Arc<BoundedQueue<Queued>>,
     rx: mpsc::Receiver<Result<Response>>,
     workers: Vec<thread::JoinHandle<()>>,
     clock: Clock,
+    hub: Option<Arc<TelemetryHub>>,
+    /// Live worker count (shared with every LaneGuard). The respawner
+    /// below keeps a sender clone alive, so fleet death is detected via
+    /// this counter rather than channel disconnect.
+    live: Arc<AtomicUsize>,
+    /// Client-side outcome buffer: refusals and watchdog answers are
+    /// delivered through here so every submit still pairs with exactly
+    /// one recv outcome. Drained before the response channel.
+    pending: Mutex<VecDeque<Result<Response>>>,
+    controller: Option<Arc<Controller>>,
+    /// Current heartbeat slot per lane (swapped on replacement; the old
+    /// condemned beat stays with the wedged thread).
+    beats: Mutex<Vec<Arc<LaneBeat>>>,
+    /// Spawn a replacement worker for lane `i` with a fresh beat.
+    #[allow(clippy::type_complexity)]
+    respawn: Option<Box<dyn Fn(usize, Arc<LaneBeat>) -> thread::JoinHandle<()> + Send>>,
+    /// Replacement workers spawned by the watchdog (joined on shutdown).
+    extra_workers: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Wave mode only: the shared in-flight map, so the watchdog can
+    /// answer every request wedged inside a wave step.
+    wave_inflight: Option<Arc<Mutex<HashMap<u64, u64>>>>,
 }
 
 impl ServerHandle {
@@ -590,6 +974,8 @@ impl ServerHandle {
         let (tx_resp, rx) = mpsc::channel();
         let make = Arc::new(make_backend);
         let live = Arc::new(AtomicUsize::new(lanes));
+        let beats: Vec<Arc<LaneBeat>> =
+            (0..lanes).map(|_| Arc::new(LaneBeat::new())).collect();
         let workers: Vec<_> = (0..lanes)
             .map(|lane| {
                 let queue = Arc::clone(&queue);
@@ -598,115 +984,48 @@ impl ServerHandle {
                 let live = Arc::clone(&live);
                 let clock = clock.clone();
                 let hub = hub.clone();
+                let beat = Arc::clone(&beats[lane]);
                 thread::Builder::new()
                     .name(format!("slicemoe-lane-{lane}"))
-                    .spawn(move || {
-                        // Drop guard: runs on EVERY exit path, including a
-                        // panic unwinding out of backend.serve, so a dead
-                        // fleet always closes the queue.
-                        let _guard = LaneGuard { live, queue: Arc::clone(&queue) };
-                        // Responses must pair one-to-one with requests (a
-                        // client doing one recv per submit relies on it),
-                        // so a construction failure is reported out-of-band:
-                        // stderr here, and — once the LAST lane is gone —
-                        // a closed queue/channel at the client.
-                        let mut backend = match make(lane) {
-                            Ok(b) => b,
-                            Err(e) => {
-                                eprintln!(
-                                    "slicemoe-lane-{lane}: backend construction failed: {e:#}"
-                                );
-                                return;
-                            }
-                        };
-                        // EWMA of this lane's measured service walls — the
-                        // completion projection SLO admission tests against.
-                        // Starts at 0 (no estimate): a fresh lane never
-                        // defers, so manual-clock runs stay deterministic.
-                        let mut est_service_s = 0.0f64;
-                        while let Some(q) = queue.pop() {
-                            let Queued { req, enqueue_us, deferred } = q;
-                            let admit_us = clock.now_us();
-                            let queued =
-                                admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
-                            if let Some(slo) = req.slo {
-                                // deadline already blown: shed (one paired
-                                // outcome, zero served work)
-                                if queued >= slo {
-                                    let mut r = Response::shed(req.id, queued);
-                                    r.lane = lane;
-                                    r.deferred = deferred;
-                                    if let Some(hub) = &hub {
-                                        hub.on_shed();
-                                    }
-                                    if tx.send(Ok(r)).is_err() {
-                                        break;
-                                    }
-                                    continue;
-                                }
-                                // projected violation: defer once to the
-                                // back of the queue (later arrivals with
-                                // slack go first); with no room to defer,
-                                // serve it now rather than spin
-                                if deferred == 0
-                                    && est_service_s > 0.0
-                                    && queued + est_service_s > slo
-                                {
-                                    let back = Queued {
-                                        req,
-                                        enqueue_us,
-                                        deferred: deferred + 1,
-                                    };
-                                    match queue.try_push(back) {
-                                        TryPush::Pushed => {
-                                            if let Some(hub) = &hub {
-                                                hub.on_defer();
-                                            }
-                                            continue;
-                                        }
-                                        TryPush::Full(q) | TryPush::Closed(q) => {
-                                            let outcome = serve_one(
-                                                &mut backend,
-                                                &q.req,
-                                                queued,
-                                                lane,
-                                                q.deferred - 1,
-                                                (enqueue_us, admit_us),
-                                                &clock,
-                                                &hub,
-                                                &tx,
-                                            );
-                                            match outcome {
-                                                Some(s) => est_service_s = ewma(est_service_s, s),
-                                                None => break,
-                                            }
-                                            continue;
-                                        }
-                                    }
-                                }
-                            }
-                            let outcome = serve_one(
-                                &mut backend,
-                                &req,
-                                queued,
-                                lane,
-                                deferred,
-                                (enqueue_us, admit_us),
-                                &clock,
-                                &hub,
-                                &tx,
-                            );
-                            match outcome {
-                                Some(s) => est_service_s = ewma(est_service_s, s),
-                                None => break,
-                            }
-                        }
-                    })
+                    .spawn(move || lane_worker(lane, queue, tx, make, live, clock, hub, beat))
                     .expect("spawn server lane")
             })
             .collect();
+        let respawn: Box<dyn Fn(usize, Arc<LaneBeat>) -> thread::JoinHandle<()> + Send> = {
+            let queue = Arc::clone(&queue);
+            let tx = tx_resp.clone();
+            let make = Arc::clone(&make);
+            let live = Arc::clone(&live);
+            let clock = clock.clone();
+            let hub = hub.clone();
+            Box::new(move |lane, beat| {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let make = Arc::clone(&make);
+                let live = Arc::clone(&live);
+                let clock = clock.clone();
+                let hub = hub.clone();
+                thread::Builder::new()
+                    .name(format!("slicemoe-lane-{lane}r"))
+                    .spawn(move || lane_worker(lane, queue, tx, make, live, clock, hub, beat))
+                    .expect("spawn replacement lane")
+            })
+        };
         drop(tx_resp);
-        ServerHandle { queue, rx, workers, clock }
+        ServerHandle {
+            queue,
+            rx,
+            workers,
+            clock,
+            hub,
+            live,
+            pending: Mutex::new(VecDeque::new()),
+            controller: None,
+            beats: Mutex::new(beats),
+            respawn: Some(respawn),
+            extra_workers: Mutex::new(Vec::new()),
+            wave_inflight: None,
+        }
     }
 
     /// Start a WAVE-MODE server: one worker thread drives a
@@ -748,7 +1067,7 @@ impl ServerHandle {
         cache: Arc<ShardedSliceCache>,
         clock: Clock,
         hub: Option<Arc<TelemetryHub>>,
-        mut make_lane: F,
+        make_lane: F,
     ) -> ServerHandle
     where
         F: FnMut(&Request) -> Result<(ServeConfig, B)> + Send + 'static,
@@ -757,120 +1076,72 @@ impl ServerHandle {
         let queue = Arc::new(BoundedQueue::new(queue_depth));
         let (tx_resp, rx) = mpsc::channel();
         let live = Arc::new(AtomicUsize::new(1));
-        let worker_queue = Arc::clone(&queue);
-        let worker_clock = clock.clone();
-        let worker = thread::Builder::new()
-            .name("slicemoe-wave".to_string())
-            .spawn(move || {
-                let _guard = LaneGuard { live, queue: Arc::clone(&worker_queue) };
-                let admit_clock = worker_clock.clone();
-                let mut engine: WaveEngine<B> =
-                    WaveEngine::new(cache, max_batch).with_clock(worker_clock);
-                if let Some(hub) = &hub {
-                    engine = engine.with_telemetry(Arc::clone(hub));
-                }
-                // id → enqueue timestamp (µs) of every in-flight request,
-                // so a mid-wave failure still yields one outcome per
-                // request and completions can reconstruct queueing delay
-                let mut inflight: std::collections::HashMap<u64, u64> =
-                    std::collections::HashMap::new();
-                let tx = tx_resp;
-                loop {
-                    // admit: block only when idle; otherwise take what is
-                    // ready and get back to stepping the wave
-                    if engine.is_idle() {
-                        match worker_queue.pop() {
-                            Some(item) => admit_waved(
-                                &mut engine,
-                                &mut make_lane,
-                                item,
-                                &tx,
-                                &mut inflight,
-                                &admit_clock,
-                                &hub,
-                            ),
-                            None => return, // closed and drained
-                        }
-                    }
-                    while engine.has_room() {
-                        match worker_queue.try_pop() {
-                            Some(item) => admit_waved(
-                                &mut engine,
-                                &mut make_lane,
-                                item,
-                                &tx,
-                                &mut inflight,
-                                &admit_clock,
-                                &hub,
-                            ),
-                            None => break,
-                        }
-                    }
-                    if engine.is_idle() {
-                        continue; // every admission failed; block again
-                    }
-
-                    let outcome = std::panic::catch_unwind(
-                        std::panic::AssertUnwindSafe(|| engine.step_wave()),
-                    );
-                    match outcome {
-                        Ok(Ok(done)) => {
-                            for mut d in done {
-                                let enqueue_us =
-                                    inflight.remove(&d.id).unwrap_or(d.admit_us);
-                                let queued =
-                                    d.admit_us.saturating_sub(enqueue_us) as f64 / 1e6;
-                                let mut r = Response::from_lane(
-                                    &d.lane,
-                                    d.id,
-                                    Vec::new(),
-                                    d.prefill_wall_s,
-                                    d.decode_wall_s,
-                                    d.decode_tokens,
-                                );
-                                r.queue_wall_s = queued;
-                                if let Some(hub) = &hub {
-                                    hub.absorb(std::mem::take(&mut d.lane.recorder));
-                                    hub.on_request(RequestSpan {
-                                        id: d.id,
-                                        enqueue_us,
-                                        admit_us: d.admit_us,
-                                        complete_us: d.complete_us,
-                                        prefill_s: d.prefill_wall_s,
-                                        decode_s: d.decode_wall_s,
-                                        decode_tokens: d.decode_tokens,
-                                    });
-                                }
-                                if tx.send(Ok(r)).is_err() {
-                                    return;
-                                }
-                            }
-                        }
-                        Ok(Err(e)) => {
-                            // a failed wave step poisons every in-flight
-                            // request; report each so request/response
-                            // pairing holds, then retire the worker
-                            for (&id, _) in inflight.iter() {
-                                let _ = tx.send(Err(anyhow::anyhow!(
-                                    "wave step failed serving request {id}: {e:#}"
-                                )));
-                            }
-                            return;
-                        }
-                        Err(payload) => {
-                            for (&id, _) in inflight.iter() {
-                                let _ = tx.send(Err(anyhow::anyhow!(
-                                    "wave worker panicked serving request {id}: {}",
-                                    panic_text(payload.as_ref())
-                                )));
-                            }
-                            std::panic::resume_unwind(payload);
-                        }
-                    }
-                }
+        let make = Arc::new(Mutex::new(make_lane));
+        // id → enqueue timestamp (µs) of every in-flight request, so a
+        // mid-wave failure (or the watchdog) still yields one outcome
+        // per request and completions can reconstruct queueing delay
+        let inflight: Arc<Mutex<HashMap<u64, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+        let beat = Arc::new(LaneBeat::new());
+        let worker = {
+            let queue = Arc::clone(&queue);
+            let tx = tx_resp.clone();
+            let make = Arc::clone(&make);
+            let live = Arc::clone(&live);
+            let clock = clock.clone();
+            let hub = hub.clone();
+            let cache = Arc::clone(&cache);
+            let beat = Arc::clone(&beat);
+            let inflight = Arc::clone(&inflight);
+            thread::Builder::new()
+                .name("slicemoe-wave".to_string())
+                .spawn(move || {
+                    wave_worker(
+                        max_batch, cache, queue, tx, make, live, clock, hub, beat, inflight,
+                    )
+                })
+                .expect("spawn wave worker")
+        };
+        let respawn: Box<dyn Fn(usize, Arc<LaneBeat>) -> thread::JoinHandle<()> + Send> = {
+            let queue = Arc::clone(&queue);
+            let tx = tx_resp.clone();
+            let live = Arc::clone(&live);
+            let clock = clock.clone();
+            let hub = hub.clone();
+            let inflight = Arc::clone(&inflight);
+            Box::new(move |_lane, beat| {
+                let queue = Arc::clone(&queue);
+                let tx = tx.clone();
+                let make = Arc::clone(&make);
+                let live = Arc::clone(&live);
+                let clock = clock.clone();
+                let hub = hub.clone();
+                let cache = Arc::clone(&cache);
+                let inflight = Arc::clone(&inflight);
+                thread::Builder::new()
+                    .name("slicemoe-wave-r".to_string())
+                    .spawn(move || {
+                        wave_worker(
+                            max_batch, cache, queue, tx, make, live, clock, hub, beat, inflight,
+                        )
+                    })
+                    .expect("spawn replacement wave worker")
             })
-            .expect("spawn wave worker");
-        ServerHandle { queue, rx, workers: vec![worker], clock }
+        };
+        drop(tx_resp);
+        ServerHandle {
+            queue,
+            rx,
+            workers: vec![worker],
+            clock,
+            hub,
+            live,
+            pending: Mutex::new(VecDeque::new()),
+            controller: None,
+            beats: Mutex::new(vec![beat]),
+            respawn: Some(respawn),
+            extra_workers: Mutex::new(Vec::new()),
+            wave_inflight: Some(inflight),
+        }
     }
 
     /// The clock queue timestamps are taken on (shared with the workers).
@@ -878,8 +1149,127 @@ impl ServerHandle {
         &self.clock
     }
 
+    /// Attach an overload [`Controller`]. From here on every
+    /// submit/recv samples queue signals into it, level-3 overload
+    /// refuses admissions up-front, and blocked `recv` calls poll the
+    /// lane watchdog with the controller's timeout. A controller that
+    /// never engages (level 0 throughout) leaves served results
+    /// bit-exact (pinned by `tests/control_parity.rs`).
+    pub fn attach_controller(&mut self, ctl: Arc<Controller>) {
+        self.controller = Some(ctl);
+    }
+
+    /// Poisoned queue-lock recoveries since start (see [`BoundedQueue`]).
+    pub fn recovered_queue(&self) -> u64 {
+        self.queue.recovered()
+    }
+
+    fn pending(&self) -> MutexGuard<'_, VecDeque<Result<Response>>> {
+        self.pending.lock().unwrap_or_else(|poisoned| {
+            self.pending.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
+    /// Feed one queue-signal sample to the attached controller (at most
+    /// one control tick per configured period; a no-op otherwise).
+    pub fn control_tick(&self) {
+        let Some(ctl) = &self.controller else { return };
+        let (shed, deferred) = match &self.hub {
+            Some(h) => {
+                let (s, d, _) = h.admission_counts();
+                (s, d)
+            }
+            None => (0, 0),
+        };
+        let sig = ControlSignals {
+            queue_len: self.queue.len(),
+            queue_capacity: self.queue.capacity,
+            service_est_us: 0,
+            shed,
+            deferred,
+        };
+        if let Some(level) = ctl.observe(self.clock.now_us(), &sig) {
+            if let Some(h) = &self.hub {
+                h.on_ladder(level);
+            }
+        }
+    }
+
+    /// Client-driven lane watchdog: any lane whose in-flight request has
+    /// gone `watchdog_timeout_us` without a heartbeat is declared
+    /// wedged — its in-flight request(s) are answered through the
+    /// failure-response arm and a replacement lane is spawned. A no-op
+    /// without an attached controller. Returns lanes replaced.
+    pub fn poll_watchdog(&self) -> usize {
+        let Some(ctl) = &self.controller else { return 0 };
+        let Some(respawn) = &self.respawn else { return 0 };
+        let timeout = ctl.config().watchdog_timeout_us;
+        let now = self.clock.now_us();
+        let mut replaced = 0;
+        let mut beats = self.beats.lock().unwrap_or_else(|p| {
+            self.beats.clear_poison();
+            p.into_inner()
+        });
+        for (lane, slot) in beats.iter_mut().enumerate() {
+            let Some(id) = slot.stale(now, timeout) else { continue };
+            slot.condemn();
+            {
+                let mut pending = self.pending();
+                match &self.wave_inflight {
+                    Some(map) => {
+                        // a wedged wave step strands EVERY in-flight
+                        // request of the wave; answer them all
+                        let mut inf = map.lock().unwrap_or_else(|p| {
+                            map.clear_poison();
+                            p.into_inner()
+                        });
+                        let mut ids: Vec<u64> = inf.keys().copied().collect();
+                        ids.sort_unstable();
+                        for rid in ids {
+                            pending.push_back(Err(anyhow::anyhow!(
+                                "wave worker wedged on request {id}; request {rid} abandoned"
+                            )));
+                        }
+                        inf.clear();
+                    }
+                    None => pending.push_back(Err(anyhow::anyhow!(
+                        "lane {lane} wedged serving request {id}; request abandoned"
+                    ))),
+                }
+            }
+            let fresh = Arc::new(LaneBeat::new());
+            fresh.beat(now);
+            self.live.fetch_add(1, Ordering::AcqRel);
+            let handle = respawn(lane, Arc::clone(&fresh));
+            self.extra_workers
+                .lock()
+                .unwrap_or_else(|p| {
+                    self.extra_workers.clear_poison();
+                    p.into_inner()
+                })
+                .push(handle);
+            *slot = fresh;
+            replaced += 1;
+        }
+        replaced
+    }
+
     /// Submit a request (blocks while the queue is full — backpressure).
+    /// At controller ladder level 3 the admission token bucket runs
+    /// FIRST: a refused request never enters the queue and its paired
+    /// outcome (a [`Response::refused`]) is delivered through `recv`.
     pub fn submit(&self, req: Request) -> Result<()> {
+        self.control_tick();
+        if let Some(ctl) = &self.controller {
+            if !ctl.try_admit() {
+                if let Some(hub) = &self.hub {
+                    hub.on_refused();
+                }
+                self.pending().push_back(Ok(Response::refused(req.id)));
+                return Ok(());
+            }
+        }
         self.queue
             .push(Queued { req, enqueue_us: self.clock.now_us(), deferred: 0 })
             .map_err(|_| anyhow::anyhow!("server closed"))
@@ -889,8 +1279,19 @@ impl ServerHandle {
     /// admission queue is full and the request is handed back for a later
     /// retry, `Err` = server closed. Lets an open-loop driver keep
     /// draining completions while backpressure holds instead of parking
-    /// inside `submit`.
+    /// inside `submit`. A controller refusal reads as accepted (`Ok(None)`)
+    /// with the refused outcome delivered through `recv`/`try_recv`.
     pub fn try_submit(&self, req: Request) -> Result<Option<Request>> {
+        self.control_tick();
+        if let Some(ctl) = &self.controller {
+            if !ctl.try_admit() {
+                if let Some(hub) = &self.hub {
+                    hub.on_refused();
+                }
+                self.pending().push_back(Ok(Response::refused(req.id)));
+                return Ok(None);
+            }
+        }
         let item = Queued { req, enqueue_us: self.clock.now_us(), deferred: 0 };
         match self.queue.try_push(item) {
             TryPush::Pushed => Ok(None),
@@ -900,22 +1301,63 @@ impl ServerHandle {
     }
 
     /// Receive the next completed response, in completion order (FIFO
-    /// only when running a single lane).
+    /// only when running a single lane). Client-side outcomes (refusals,
+    /// watchdog answers) are drained before worker responses. While
+    /// blocked, ticks the controller and polls the watchdog.
     pub fn recv(&self) -> Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server workers gone"))?
+        self.control_tick();
+        loop {
+            if let Some(out) = self.pending().pop_front() {
+                return out;
+            }
+            match self.rx.recv_timeout(Duration::from_millis(1)) {
+                Ok(out) => return out,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.control_tick();
+                    if self.poll_watchdog() > 0 {
+                        continue; // the watchdog pushed pending outcomes
+                    }
+                    if self.live.load(Ordering::Acquire) == 0 && self.pending().is_empty() {
+                        // drain any straggler the channel still buffers
+                        // (the respawner's sender clone keeps it open)
+                        if let Ok(out) = self.rx.try_recv() {
+                            return out;
+                        }
+                        return Err(anyhow::anyhow!("server workers gone"));
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow::anyhow!("server workers gone"));
+                }
+            }
+        }
     }
 
     /// Non-blocking receive: `Ok(None)` when no response is ready yet.
     /// `Some(Err(_))` outcomes are per-request serving errors, exactly as
-    /// `recv` would return them; a closed response channel (every lane
-    /// dead) is also surfaced as an error. Lets an open-loop driver drain
-    /// completions between timed submissions without parking.
+    /// `recv` would return them; a dead fleet (every lane gone) is also
+    /// surfaced as an error. Lets an open-loop driver drain completions
+    /// between timed submissions without parking.
     pub fn try_recv(&self) -> Result<Option<Response>> {
+        self.control_tick();
+        if let Some(out) = self.pending().pop_front() {
+            return out.map(Some);
+        }
         match self.rx.try_recv() {
             Ok(res) => res.map(Some),
-            Err(mpsc::TryRecvError::Empty) => Ok(None),
+            Err(mpsc::TryRecvError::Empty) => {
+                self.poll_watchdog();
+                if let Some(out) = self.pending().pop_front() {
+                    return out.map(Some);
+                }
+                if self.live.load(Ordering::Acquire) == 0 {
+                    if let Ok(res) = self.rx.try_recv() {
+                        return res.map(Some);
+                    }
+                    return Err(anyhow::anyhow!("server workers gone"));
+                }
+                Ok(None)
+            }
             Err(mpsc::TryRecvError::Disconnected) => {
                 Err(anyhow::anyhow!("server workers gone"))
             }
@@ -928,8 +1370,23 @@ impl ServerHandle {
     }
 
     fn close_and_join(&mut self) {
+        // drop the respawner first: it holds the long-lived sender
+        // clone, so the response channel can disconnect once lanes exit
+        self.respawn = None;
         self.queue.close();
         for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let extras: Vec<_> = self
+            .extra_workers
+            .lock()
+            .unwrap_or_else(|p| {
+                self.extra_workers.clear_poison();
+                p.into_inner()
+            })
+            .drain(..)
+            .collect();
+        for w in extras {
             let _ = w.join();
         }
     }
@@ -970,6 +1427,10 @@ pub struct CostModelServerBackend {
     /// absorbed into this hub on completion. Wall-clock splits are taken
     /// on the hub's clock so spans and latency share one timebase.
     pub hub: Option<Arc<TelemetryHub>>,
+    /// When set, the overload controller's current ladder level shapes
+    /// every per-request config ([`Controller::shape_config`]; level 0
+    /// leaves the config untouched — the bit-exactness contract).
+    pub controller: Option<Arc<Controller>>,
     clock: Clock,
 }
 
@@ -981,6 +1442,7 @@ impl CostModelServerBackend {
             shared_cache: None,
             seed,
             hub: None,
+            controller: None,
             clock: Clock::default(),
         }
     }
@@ -990,6 +1452,12 @@ impl CostModelServerBackend {
     pub fn with_telemetry(mut self, hub: Arc<TelemetryHub>) -> CostModelServerBackend {
         self.clock = hub.clock().clone();
         self.hub = Some(hub);
+        self
+    }
+
+    /// Shape every per-request config by the controller's ladder level.
+    pub fn with_controller(mut self, ctl: Arc<Controller>) -> CostModelServerBackend {
+        self.controller = Some(ctl);
         self
     }
 
@@ -1038,6 +1506,9 @@ impl CostModelServerBackend {
         let prefill_tokens = req.prompt.len().max(1);
         let mut cfg = self.cfg.clone();
         cfg.seed = request_seed(self.seed, req.id);
+        if let Some(ctl) = &self.controller {
+            ctl.shape_config(&mut cfg);
+        }
         let backend = match &req.bias {
             Some(b) => {
                 CostModelBackend::with_bias(&cfg.desc, self.trace, b, prefill_tokens, cfg.seed)
@@ -1116,12 +1587,15 @@ mod tests {
                 steady_norm_bytes: 0.0,
                 decode_flash_fetches: 0,
                 shed: false,
+                refused: false,
                 deferred: 0,
                 n_degraded: 0,
                 n_experts: 0,
                 fault_retries: 0,
                 fault_failed: 0,
                 retry_energy_j: 0.0,
+                breaker_skips: 0,
+                breaker_trips: 0,
             })
         }
     }
@@ -1412,12 +1886,15 @@ mod tests {
             steady_norm_bytes: 0.0,
             decode_flash_fetches: 0,
             shed: false,
+            refused: false,
             deferred: 0,
             n_degraded: 0,
             n_experts: 0,
             fault_retries: 0,
             fault_failed: 0,
             retry_energy_j: 0.0,
+            breaker_skips: 0,
+            breaker_trips: 0,
         };
         assert_eq!(zero.tokens_per_s(), 0.0);
         let s = summarize(&[zero.clone(), zero]);
@@ -1705,5 +2182,113 @@ mod tests {
             contended > private,
             "contended miss rate {contended:.4} should exceed private {private:.4}"
         );
+    }
+
+    #[test]
+    fn poisoned_queue_recovers_and_fleet_keeps_serving() {
+        let h = ServerHandle::start(1, 4, |_| Ok(MockBackend { delay_ms: 1 }));
+        h.submit(Request::new(0, vec![1], 1)).unwrap();
+        assert!(h.recv().is_ok());
+        // poison the queue mutex mid-operation: a thread panics while
+        // holding the state lock
+        let q = Arc::clone(&h.queue);
+        let _ = thread::spawn(move || {
+            let _st = q.state.lock().unwrap();
+            panic!("poisoning the admission queue");
+        })
+        .join();
+        // every queue op recovers instead of unwinding the whole fleet
+        for id in 1..4 {
+            h.submit(Request::new(id, vec![1], 1)).unwrap();
+        }
+        for _ in 1..4 {
+            assert!(h.recv().is_ok());
+        }
+        assert!(h.recovered_queue() >= 1, "recovery must be counted");
+        h.shutdown();
+    }
+
+    #[test]
+    fn controller_refuses_at_level_3_with_paired_outcomes() {
+        use crate::control::{ControlConfig, Controller};
+        let (clock, _hand) = Clock::manual();
+        let hub = Arc::new(TelemetryHub::new(clock.clone()));
+        let ctl = Arc::new(Controller::new(ControlConfig {
+            tick_us: 10,
+            up_ticks: 1,
+            down_ticks: 2,
+            bucket_capacity: 1,
+            refill_per_tick: 0,
+            ..ControlConfig::default()
+        }));
+        let mut h = ServerHandle::start_ex(1, 4, clock, Some(Arc::clone(&hub)), |_| {
+            Ok(MockBackend { delay_ms: 1 })
+        });
+        h.attach_controller(Arc::clone(&ctl));
+        // scripted overload drives the ladder straight to level 3 (the
+        // frozen manual clock keeps the handle's own control ticks from
+        // ever firing, so the trajectory is fully scripted here)
+        let hot = ControlSignals { queue_len: 4, queue_capacity: 4, ..Default::default() };
+        ctl.observe(0, &hot);
+        for k in 1..=3u64 {
+            ctl.observe(k * 10, &hot);
+        }
+        assert_eq!(ctl.level(), 3);
+        // bucket of 1, no refills: the first submit is admitted, the
+        // second refused up-front — both still pair with one recv each
+        h.submit(Request::new(0, vec![1], 1)).unwrap();
+        h.submit(Request::new(1, vec![1], 1)).unwrap();
+        let mut got = vec![h.recv().unwrap(), h.recv().unwrap()];
+        got.sort_by_key(|r| r.id);
+        assert!(!got[0].refused, "admitted request served normally");
+        assert_eq!(got[0].decode_tokens, 1);
+        assert!(got[1].refused, "second submit refused by the token bucket");
+        assert_eq!(got[1].decode_tokens, 0);
+        assert_eq!(ctl.stats().refused, 1);
+        assert_eq!(hub.snapshot().refused, 1);
+        let s = summarize(&got);
+        assert_eq!((s.requests, s.refused, s.shed), (2, 1, 0));
+        assert_eq!(s.decode_tokens, 1, "refused work excluded from totals");
+        h.shutdown();
+    }
+
+    /// Sleeps far past the watchdog timeout on request 0 (a wedge),
+    /// instant otherwise.
+    struct WedgedBackend;
+
+    impl Backend for WedgedBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            if req.id == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(400));
+            }
+            MockBackend { delay_ms: 0 }.serve(req)
+        }
+    }
+
+    #[test]
+    fn watchdog_answers_wedged_lane_and_respawns_replacement() {
+        use crate::control::{ControlConfig, Controller};
+        let ctl = Arc::new(Controller::new(ControlConfig {
+            watchdog_timeout_us: 30_000, // 30 ms against a 400 ms wedge
+            ..ControlConfig::default()
+        }));
+        let mut h = ServerHandle::start(1, 4, |_| Ok(WedgedBackend));
+        h.attach_controller(Arc::clone(&ctl));
+        h.submit(Request::new(0, vec![1], 1)).unwrap(); // wedges the lane
+        h.submit(Request::new(1, vec![1], 1)).unwrap(); // replacement's work
+        let mut outcomes = Vec::new();
+        for _ in 0..2 {
+            outcomes.push(h.recv());
+        }
+        let errs: Vec<_> = outcomes.iter().filter(|o| o.is_err()).collect();
+        assert_eq!(errs.len(), 1, "wedged request answered through the failure arm");
+        let msg = format!("{:#}", errs[0].as_ref().unwrap_err());
+        assert!(msg.contains("wedged"), "unexpected error: {msg}");
+        let served: Vec<_> = outcomes.iter().filter_map(|o| o.as_ref().ok()).collect();
+        assert_eq!(served.len(), 1);
+        assert_eq!(served[0].id, 1, "replacement lane served the queued request");
+        // the condemned lane wakes, discards its result, and retires —
+        // shutdown joins both generations without hanging
+        h.shutdown();
     }
 }

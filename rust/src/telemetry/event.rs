@@ -66,6 +66,11 @@ pub enum Event {
     /// A request was deferred (requeued once) because projected
     /// completion would violate its SLO.
     Defer,
+    /// A request was refused ahead of the queue by the overload
+    /// controller's admission token bucket (ladder level 3).
+    Refused,
+    /// The overload controller's degradation ladder stepped to `level`.
+    Ladder { level: u8 },
 }
 
 /// An [`Event`] stamped with its [`Clock`](super::Clock) time.

@@ -47,6 +47,9 @@ struct HubInner {
     shed: u64,
     /// Requests requeued once on projected SLO violation.
     deferred: u64,
+    /// Requests refused ahead of the queue by the overload controller's
+    /// admission token bucket.
+    refused: u64,
 }
 
 /// Shared telemetry sink for one serving run.
@@ -166,6 +169,37 @@ impl TelemetryHub {
         }
     }
 
+    /// A request was refused ahead of the queue by the overload
+    /// controller's admission token bucket (ladder level 3).
+    pub fn on_refused(&self) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        inner.refused += 1;
+        if inner.events.len() < self.max_events {
+            inner.events.push((NO_REQUEST, Stamped { t_us: t, ev: Event::Refused }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// The overload controller's degradation ladder stepped to `level`.
+    pub fn on_ladder(&self, level: u8) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        if inner.events.len() < self.max_events {
+            inner.events.push((NO_REQUEST, Stamped { t_us: t, ev: Event::Ladder { level } }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// Running (shed, deferred, refused) admission counters — the
+    /// overload controller samples these each tick to sense pressure.
+    pub fn admission_counts(&self) -> (u64, u64, u64) {
+        let inner = self.inner.lock().expect("telemetry hub poisoned");
+        (inner.shed, inner.deferred, inner.refused)
+    }
+
     /// Engine-level rebalance observed outside any request's walk.
     pub fn on_rebalance(&self, moved_bytes: u64, pressured_shards: u32) {
         let t = self.clock.now_us();
@@ -191,6 +225,7 @@ impl TelemetryHub {
             requests: inner.requests.clone(),
             shed: inner.shed,
             deferred: inner.deferred,
+            refused: inner.refused,
         }
     }
 }
@@ -210,6 +245,8 @@ pub struct TelemetryReport {
     pub shed: u64,
     /// Requests requeued once on projected SLO violation.
     pub deferred: u64,
+    /// Requests refused ahead of the queue by the overload controller.
+    pub refused: u64,
 }
 
 #[cfg(test)]
@@ -272,6 +309,34 @@ mod tests {
             .count();
         assert_eq!(shed_events, 2);
         assert!(rep.events.iter().any(|(_, st)| st.ev == Event::Defer));
+    }
+
+    #[test]
+    fn refused_and_ladder_are_counted_and_streamed() {
+        let (clock, hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock);
+        hub.on_ladder(1);
+        hand.advance_us(1_000);
+        hub.on_refused();
+        hub.on_refused();
+        hub.on_ladder(0);
+        let rep = hub.snapshot();
+        assert_eq!(rep.refused, 2);
+        let refused_events = rep
+            .events
+            .iter()
+            .filter(|(id, st)| *id == NO_REQUEST && st.ev == Event::Refused)
+            .count();
+        assert_eq!(refused_events, 2);
+        let ladder_levels: Vec<u8> = rep
+            .events
+            .iter()
+            .filter_map(|(_, st)| match st.ev {
+                Event::Ladder { level } => Some(level),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(ladder_levels, vec![1, 0]);
     }
 
     #[test]

@@ -224,6 +224,12 @@ pub fn render(report: &TelemetryReport) -> Json {
             Event::Defer => {
                 events.push(instant("defer", st.t_us, tid, obj([])));
             }
+            Event::Refused => {
+                events.push(instant("refused", st.t_us, tid, obj([])));
+            }
+            Event::Ladder { level } => {
+                events.push(instant("ladder", st.t_us, tid, obj([("level", num(level as f64))])));
+            }
         }
     }
 
@@ -301,6 +307,7 @@ pub fn render(report: &TelemetryReport) -> Json {
             ("fault_extra_flash_bytes", num(report.attrib.fault_extra_flash_bytes as f64)),
             ("shed_requests", num(report.shed as f64)),
             ("deferred_requests", num(report.deferred as f64)),
+            ("refused_requests", num(report.refused as f64)),
         ])),
         ("attribution", attribution),
         ("series", series),

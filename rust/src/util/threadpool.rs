@@ -3,7 +3,16 @@
 //! Fixed worker pool over an mpsc channel, plus a `scope`-style parallel
 //! map used by the sweep drivers (fig8/fig9 run many independent simulator
 //! configurations).
+//!
+//! Hardened against job panics: a panicking job is caught and counted
+//! instead of killing its worker (which would silently shrink the pool
+//! and strand queued jobs), a poisoned receiver lock is recovered rather
+//! than unwound, and `execute` falls back to running the job inline if
+//! every worker has somehow retired — work is never dropped on the
+//! floor.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -13,6 +22,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+    panicked: Arc<AtomicUsize>,
 }
 
 impl ThreadPool {
@@ -20,30 +30,55 @@ impl ThreadPool {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
+        let panicked = Arc::new(AtomicUsize::new(0));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let panicked = Arc::clone(&panicked);
                 thread::Builder::new()
                     .name(format!("slicemoe-worker-{i}"))
                     .spawn(move || loop {
-                        let job = rx.lock().unwrap().recv();
+                        // the guard is held only across recv(), never
+                        // across a job, so poison here can only come
+                        // from outside interference — recover and keep
+                        // draining
+                        let job = rx
+                            .lock()
+                            .unwrap_or_else(|poisoned| {
+                                rx.clear_poison();
+                                poisoned.into_inner()
+                            })
+                            .recv();
                         match job {
-                            Ok(job) => job(),
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
                             Err(_) => break,
                         }
                     })
                     .expect("spawn worker")
             })
             .collect();
-        Self { tx: Some(tx), workers }
+        Self { tx: Some(tx), workers, panicked }
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+        let Some(tx) = self.tx.as_ref() else {
+            f();
+            return;
+        };
+        if let Err(back) = tx.send(Box::new(f)) {
+            // every worker retired (receiver dropped): run inline so the
+            // caller still gets the work done
+            (back.0)();
+        }
+    }
+
+    /// Jobs that panicked and were contained (their workers survived).
+    pub fn panicked_jobs(&self) -> usize {
+        self.panicked.load(Ordering::Relaxed)
     }
 }
 
@@ -57,6 +92,11 @@ impl Drop for ThreadPool {
 }
 
 /// Parallel map preserving input order. Falls back to sequential for n<=1.
+///
+/// A panicking `f` no longer kills an anonymous worker thread: the panic
+/// is captured at the job site and re-raised on the *calling* thread
+/// after every worker has been joined, so the caller sees the original
+/// payload deterministically and the pool shuts down clean.
 pub fn par_map<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
 where
     T: Send + 'static,
@@ -68,7 +108,7 @@ where
     }
     let f = Arc::new(f);
     let n = items.len();
-    let results: Arc<Mutex<Vec<Option<U>>>> =
+    let results: Arc<Mutex<Vec<Option<thread::Result<U>>>>> =
         Arc::new(Mutex::new((0..n).map(|_| None).collect()));
     {
         let pool = ThreadPool::new(threads.min(n));
@@ -76,19 +116,29 @@ where
             let f = Arc::clone(&f);
             let results = Arc::clone(&results);
             pool.execute(move || {
-                let out = f(item);
-                results.lock().unwrap()[i] = Some(out);
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let mut slots = results.lock().unwrap_or_else(|poisoned| {
+                    results.clear_poison();
+                    poisoned.into_inner()
+                });
+                slots[i] = Some(out);
             });
         }
         // pool Drop joins all workers
     }
-    Arc::try_unwrap(results)
+    let slots = Arc::try_unwrap(results)
         .unwrap_or_else(|_| panic!("results still shared"))
         .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|o| o.expect("worker panicked before producing result"))
-        .collect()
+        .unwrap_or_else(|poisoned| poisoned.into_inner());
+    let mut out = Vec::with_capacity(n);
+    for slot in slots {
+        match slot {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(payload)) => resume_unwind(payload),
+            None => unreachable!("par_map job retired without writing its slot"),
+        }
+    }
+    out
 }
 
 /// Hardware parallelism with a sane floor.
@@ -99,7 +149,7 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
 
     #[test]
     fn executes_all_jobs() {
@@ -117,6 +167,31 @@ mod tests {
     }
 
     #[test]
+    fn panicking_jobs_are_contained_and_the_pool_keeps_working() {
+        // 2 workers, 4 panicking jobs interleaved with 16 real ones:
+        // without containment the panics would kill both workers and
+        // strand the rest of the queue
+        let counter = Arc::new(AtomicUsize::new(0));
+        let pool = ThreadPool::new(2);
+        for i in 0..20u32 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 5 == 0 {
+                    panic!("job {i} goes down");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let t0 = Instant::now();
+        while counter.load(Ordering::SeqCst) < 16 && t0.elapsed() < Duration::from_secs(10) {
+            thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+        assert_eq!(pool.panicked_jobs(), 4);
+        drop(pool); // both workers still alive to join
+    }
+
+    #[test]
     fn par_map_preserves_order() {
         let out = par_map((0..64).collect::<Vec<_>>(), 8, |x| x * x);
         assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
@@ -126,5 +201,24 @@ mod tests {
     fn par_map_sequential_fallback() {
         let out = par_map(vec![1, 2, 3], 1, |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_reraises_job_panic_on_the_caller() {
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            par_map(vec![1, 2, 3, 4], 2, |x| {
+                if x == 3 {
+                    panic!("item three is cursed");
+                }
+                x * 10
+            })
+        }));
+        let payload = res.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+            .unwrap_or("<non-string payload>");
+        assert!(msg.contains("cursed"), "original payload preserved: {msg}");
     }
 }

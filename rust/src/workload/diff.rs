@@ -93,11 +93,12 @@ fn value(values: &Json, key: &str) -> Option<f64> {
     values.get(key).and_then(|v| v.as_f64()).filter(|v| v.is_finite())
 }
 
-/// Observability rows ride along without gating: telemetry and the
-/// chaos axis can be toggled per run, so these cells may come and go
-/// freely (and chaos metrics measure injected damage, not regressions).
+/// Observability rows ride along without gating: telemetry, the chaos
+/// axis, and the overload control plane can be toggled per run, so these
+/// cells may come and go freely (and chaos/control metrics measure
+/// injected damage and deliberate degradation, not regressions).
 fn is_informational(name: &str) -> bool {
-    name.ends_with("/telemetry") || name.ends_with("/chaos")
+    name.ends_with("/telemetry") || name.ends_with("/chaos") || name.ends_with("/control")
 }
 
 /// Compare two serialized `BENCH_workload.json` documents.
@@ -342,6 +343,26 @@ mod tests {
 
         // chaos toggled OFF: the vanished row is not a missing cell
         let d = diff_workload_reports(&with_chaos, &base, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert!(d.missing.is_empty());
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn control_rows_are_informational_in_both_directions() {
+        let base = report(&[("bursty/lanes2/sharded4", 0.1, 500.0)]);
+        let with_control = format!(
+            "{{\"title\":\"t\",\"results\":[],\"metrics\":[{},{}]}}",
+            "{\"name\":\"bursty/lanes2/sharded4\",\"values\":{\"e2e_p99_s\":0.1,\"goodput_tok_s\":500.0}}",
+            "{\"name\":\"bursty/lanes2/sharded4/control\",\"values\":{\"engagements\":3,\"final_level\":0,\"refused\":2}}"
+        );
+        // controller toggled ON: new row, never gated
+        let d = diff_workload_reports(&base, &with_control, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.added, vec!["bursty/lanes2/sharded4/control".to_string()]);
+
+        // controller toggled OFF: the vanished row is not a missing cell
+        let d = diff_workload_reports(&with_control, &base, 0.10).unwrap();
         assert!(!d.is_regression(), "{d:?}");
         assert!(d.missing.is_empty());
         assert_eq!(d.compared, 1);

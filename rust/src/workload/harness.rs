@@ -114,6 +114,10 @@ pub struct WorkloadSummary {
     pub shed: usize,
     /// Server-side defer-once requeues on projected SLO violation.
     pub deferred: u64,
+    /// Requests refused ahead of the queue by the overload controller's
+    /// admission token bucket (ladder level 3); zero without a
+    /// controller attached.
+    pub refused: usize,
     /// Fraction of executed experts degraded High→Low by injected
     /// persistent LSB-fetch failures (0 in fault-free runs).
     pub degraded_fraction: f64,
@@ -123,6 +127,11 @@ pub struct WorkloadSummary {
     /// Flash energy charged to fault recovery (retries + failed
     /// attempts), already included in the per-token energy.
     pub retry_energy_j: f64,
+    /// Fetches skipped by open fetch circuit breakers (served straight
+    /// from the degrade/substitute arms instead of retried).
+    pub breaker_skips: u64,
+    /// Circuit-breaker trip events observed across served requests.
+    pub breaker_trips: u64,
 }
 
 impl LoadReport {
@@ -141,6 +150,7 @@ impl LoadReport {
             .map(|o| o.response.decode_flash_fetches)
             .sum();
         let shed = self.outcomes.iter().filter(|o| o.response.shed).count();
+        let refused = self.outcomes.iter().filter(|o| o.response.refused).count();
         let deferred: u64 = self.outcomes.iter().map(|o| u64::from(o.response.deferred)).sum();
         let n_degraded: u64 = self.outcomes.iter().map(|o| o.response.n_degraded).sum();
         let n_experts: u64 = self.outcomes.iter().map(|o| o.response.n_experts).sum();
@@ -178,6 +188,7 @@ impl LoadReport {
             deferred_submits: self.deferred_submits,
             shed,
             deferred,
+            refused,
             degraded_fraction: if n_experts > 0 {
                 n_degraded as f64 / n_experts as f64
             } else {
@@ -186,6 +197,8 @@ impl LoadReport {
             fault_retries: self.outcomes.iter().map(|o| o.response.fault_retries).sum(),
             fault_failed: self.outcomes.iter().map(|o| o.response.fault_failed).sum(),
             retry_energy_j: self.outcomes.iter().map(|o| o.response.retry_energy_j).sum(),
+            breaker_skips: self.outcomes.iter().map(|o| o.response.breaker_skips).sum(),
+            breaker_trips: self.outcomes.iter().map(|o| o.response.breaker_trips).sum(),
         }
     }
 }
@@ -371,12 +384,15 @@ mod tests {
                 steady_norm_bytes: 10.0,
                 decode_flash_fetches: 2 * req.decode_tokens as u64,
                 shed: false,
+                refused: false,
                 deferred: 0,
                 n_degraded: 0,
                 n_experts: 0,
                 fault_retries: 0,
                 fault_failed: 0,
                 retry_energy_j: 0.0,
+                breaker_skips: 0,
+                breaker_trips: 0,
             })
         }
     }
@@ -495,7 +511,9 @@ mod tests {
         assert_eq!(s.fetches_per_token, 0.0);
         assert!(s.miss_rate == 0.0, "no NaN from empty runs");
         assert_eq!((s.deferred_submits, s.shed, s.deferred), (0, 0, 0));
+        assert_eq!(s.refused, 0);
         assert_eq!(s.degraded_fraction, 0.0);
         assert_eq!(s.retry_energy_j, 0.0);
+        assert_eq!((s.breaker_skips, s.breaker_trips), (0, 0));
     }
 }

@@ -11,10 +11,12 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::fault::FaultPlan;
+use crate::control::{ControlConfig, ControlSignals, Controller};
+use crate::fault::{BreakerConfig, FaultPlan};
 use crate::serve::ServeConfig;
 use crate::server::{request_seed, CostModelServerBackend, ServerHandle, SharedCacheHandle};
 use crate::sim::trace::TraceParams;
@@ -113,6 +115,14 @@ pub struct SweepConfig {
     /// Per-request SLO (seconds) applied to every submitted request —
     /// turns on deadline-aware admission (shed/defer) in the scheduler.
     pub slo_s: Option<f64>,
+    /// Attach the overload control plane to every cell: the feedback
+    /// ladder (constraint tightening → low-bit bias → admission token
+    /// bucket), the lane watchdog, and the fetch circuit breaker. Off by
+    /// default — cells then run bit-identically to a controller-free
+    /// sweep. When on, each cell appends an informational `{cell}/control`
+    /// metrics row (ladder residency, refused admissions, breaker
+    /// activity) that `bench-diff` never gates on.
+    pub controller: bool,
 }
 
 impl SweepConfig {
@@ -142,6 +152,7 @@ impl SweepConfig {
             telemetry: false,
             fault: None,
             slo_s: None,
+            controller: false,
         }
     }
 
@@ -202,6 +213,21 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     if let Some(plan) = cfg.fault {
                         template.fault = Some(plan);
                     }
+                    // the control plane rides with a fetch breaker: under
+                    // a fault storm the lane stops hammering a failing
+                    // plane and serves from the degrade/substitute arms
+                    let controller = cfg.controller.then(|| {
+                        if template.breaker.is_none() {
+                            template.breaker = Some(BreakerConfig::default());
+                        }
+                        // slightly more sensitive than the library default
+                        // so short sweep cells can exercise the ladder
+                        Arc::new(Controller::new(ControlConfig {
+                            tick_us: 500,
+                            queue_high: 0.5,
+                            ..ControlConfig::default()
+                        }))
+                    });
                     let trace_params = cfg.trace;
                     let base_seed = cfg.seed;
                     let shared_cache: Option<SharedCacheHandle> = match mode {
@@ -230,9 +256,10 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     let hub = cfg
                         .telemetry
                         .then(|| Arc::new(TelemetryHub::new(clock.clone())));
-                    let handle = match decode_mode {
+                    let mut handle = match decode_mode {
                         DecodeMode::Lanes => {
                             let lane_hub = hub.clone();
+                            let lane_ctl = controller.clone();
                             ServerHandle::start_ex(
                                 lanes.max(1),
                                 cfg.queue_depth.max(1),
@@ -248,6 +275,9 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                                     if let Some(h) = &lane_hub {
                                         b = b.with_telemetry(Arc::clone(h));
                                     }
+                                    if let Some(c) = &lane_ctl {
+                                        b = b.with_controller(Arc::clone(c));
+                                    }
                                     Ok(b)
                                 },
                             )
@@ -257,11 +287,14 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                                 Some(SharedCacheHandle::Sharded(c)) => Arc::clone(c),
                                 _ => unreachable!("wave cells run only on sharded caches"),
                             };
-                            let factory = CostModelServerBackend::new(
+                            let mut factory = CostModelServerBackend::new(
                                 template,
                                 trace_params,
                                 base_seed,
                             );
+                            if let Some(c) = &controller {
+                                factory = factory.with_controller(Arc::clone(c));
+                            }
                             ServerHandle::start_wave_ex(
                                 lanes.max(1),
                                 cfg.queue_depth.max(1),
@@ -272,13 +305,36 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                             )
                         }
                     };
+                    if let Some(c) = &controller {
+                        handle.attach_controller(Arc::clone(c));
+                    }
+                    let ctl_clock = clock.clone();
                     let report = run_open_loop(
                         &handle,
                         &reqs,
                         &OpenLoopOpts { time_scale, clock, slo_s: cfg.slo_s },
                         |tr| vec![0u8; tr.prefill_tokens as usize],
                     )?;
+                    let recovered_queue = handle.recovered_queue();
                     handle.shutdown();
+                    if let Some(c) = &controller {
+                        // drain-to-calm: every request has completed, so
+                        // keep ticking with empty-queue signals until the
+                        // ladder fully releases (hysteresis makes this a
+                        // handful of ticks, the guard bounds pathology)
+                        let calm = ControlSignals {
+                            queue_len: 0,
+                            queue_capacity: cfg.queue_depth.max(1),
+                            ..Default::default()
+                        };
+                        let tick = Duration::from_micros(c.config().tick_us.max(1));
+                        let mut guard = 0;
+                        while c.level() > 0 && guard < 256 {
+                            c.observe(ctl_clock.now_us(), &calm);
+                            std::thread::sleep(tick);
+                            guard += 1;
+                        }
+                    }
                     let s = report.summary();
                     // lane-mode cells keep their pre-wave names so
                     // bench-diff tracks existing baselines; wave cells add
@@ -313,6 +369,9 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     );
                     if let Some(hub) = hub {
                         record_telemetry_row(rep, &name, &hub.snapshot());
+                    }
+                    if let Some(c) = &controller {
+                        record_control_row(rep, &name, c, &s, recovered_queue);
                     }
                     // chaos rows only exist when the chaos axis is
                     // engaged, so default sweeps keep their exact
@@ -350,6 +409,37 @@ fn record_chaos_row(rep: &mut Reporter, cell: &str, s: &WorkloadSummary) {
             ("fault_retries", s.fault_retries as f64),
             ("fault_failed", s.fault_failed as f64),
             ("retry_energy_j", s.retry_energy_j),
+        ],
+    );
+}
+
+/// Flatten one cell's overload-control outcome into an informational
+/// `{cell}/control` metrics row (recorded only when the controller axis
+/// is engaged; `bench-diff` never gates on these rows).
+fn record_control_row(
+    rep: &mut Reporter,
+    cell: &str,
+    ctl: &Controller,
+    s: &WorkloadSummary,
+    recovered_queue: u64,
+) {
+    let st = ctl.stats();
+    rep.record_metrics(
+        &format!("{cell}/control"),
+        &[
+            ("ticks", st.ticks as f64),
+            ("engagements", st.engagements as f64),
+            ("releases", st.releases as f64),
+            ("max_level", st.max_level as f64),
+            ("final_level", ctl.level() as f64),
+            ("refused", s.refused as f64),
+            ("level0_ticks", st.level_ticks[0] as f64),
+            ("level1_ticks", st.level_ticks[1] as f64),
+            ("level2_ticks", st.level_ticks[2] as f64),
+            ("level3_ticks", st.level_ticks[3] as f64),
+            ("breaker_skips", s.breaker_skips as f64),
+            ("breaker_trips", s.breaker_trips as f64),
+            ("recovered_queue", recovered_queue as f64),
         ],
     );
 }
@@ -606,6 +696,54 @@ mod tests {
             assert_eq!(get("shed_rate"), 0.0, "no SLO configured, nothing sheds");
             assert!(get("degraded_fraction") >= 0.0);
             assert!(get("retry_energy_j") >= 0.0);
+        }
+    }
+
+    #[test]
+    fn controller_sweep_serves_everyone_and_fully_releases() {
+        let mut cfg = SweepConfig::smoke(tiny_template());
+        cfg.scenarios = vec![Scenario::Bursty];
+        cfg.lanes = vec![2];
+        cfg.cache_modes = vec![CacheMode::Sharded(2)];
+        cfg.requests = 6;
+        cfg.span_s = 0.05;
+        cfg.queue_depth = 2; // tiny queue: overload is visible to the ladder
+        cfg.shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        cfg.controller = true;
+        let mut rep = Reporter::new("sweep-control-unit");
+        let cells = run_sweep(&cfg, &mut rep).unwrap();
+        assert_eq!(cells.len(), 2, "lanes + wave over one sharded topology");
+        for c in &cells {
+            assert_eq!(c.summary.errors, 0, "control plane must not error");
+            // refused requests still produce paired outcomes
+            assert_eq!(c.summary.requests, 6, "{:?}", c.decode_mode);
+        }
+        let control: Vec<_> = rep
+            .metrics()
+            .iter()
+            .filter(|m| m.name.ends_with("/control"))
+            .collect();
+        assert_eq!(control.len(), cells.len(), "one control row per cell");
+        for row in control {
+            let get = |k: &str| {
+                row.values
+                    .iter()
+                    .find(|(n, _)| n == k)
+                    .map(|(_, v)| *v)
+                    .unwrap_or_else(|| panic!("{}: missing key {k}", row.name))
+            };
+            assert_eq!(get("final_level"), 0.0, "ladder fully released");
+            assert!(get("engagements") >= get("releases"));
+            assert!(get("recovered_queue") == 0.0, "no poison in a clean run");
         }
     }
 

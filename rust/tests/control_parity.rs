@@ -1,0 +1,310 @@
+//! Overload-control parity + scripted ladder dynamics + breaker storm
+//! (mirrors `fault_parity.rs` for the control plane).
+//!
+//! Three contracts anchor the controller:
+//!
+//! * **off/idle bit-exactness**: a fleet with a controller attached but
+//!   never engaged (level 0) produces the bit-identical simulated
+//!   results — energies, miss rates, fetch counts — as a fleet built
+//!   without one, lane-mode and waved, at shards {1, 4};
+//! * **deterministic ladder dynamics**: a `Clock::Manual`-scripted
+//!   overload engages the degradation ladder level by level, holds in
+//!   the hysteresis band without oscillating, actuates (constraint
+//!   tightening, precision bias, token-bucket refusal), and releases
+//!   one level at a time back to identity shaping;
+//! * **breaker storm accounting**: a seeded persistent-failure storm
+//!   trips the fetch circuit breaker, skips while open, half-open
+//!   probes after cooldown, closes on recovery, replays bit-identically,
+//!   and every retry joule it saves reconciles against the Ledger.
+
+use std::sync::Arc;
+
+use slicemoe::cache::ShardedSliceCache;
+use slicemoe::control::{ControlConfig, ControlSignals, Controller};
+use slicemoe::fault::{BreakerConfig, FaultPlan};
+use slicemoe::model::ModelDesc;
+use slicemoe::router::Precision;
+use slicemoe::serve::{CostModelBackend, ServeConfig, ServeLoop, WaveEngine};
+use slicemoe::server::{
+    request_seed, summarize, CostModelServerBackend, Request, Response, ServerHandle,
+    SharedCacheHandle,
+};
+use slicemoe::sim::TraceParams;
+use slicemoe::telemetry::Clock;
+
+const PREFILL_TOKENS: usize = 24;
+const DECODE_TOKENS: usize = 16;
+const N_REQUESTS: u64 = 6;
+
+fn tiny_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+    cfg.cache_bytes = cfg.unit_bytes() * 8;
+    cfg
+}
+
+fn sharded(cfg: &ServeConfig, shards: usize) -> Arc<ShardedSliceCache> {
+    let mut c = ShardedSliceCache::new(cfg.cache_bytes, shards);
+    c.set_heterogeneous(cfg.heterogeneous_lsb);
+    Arc::new(c)
+}
+
+/// A single-lane fleet over a shared sharded cache (one lane so the
+/// serving order — and therefore the shared-cache trajectory — is
+/// deterministic), optionally with a controller attached.
+fn lane_fleet(shards: usize, ctl: Option<Arc<Controller>>) -> Vec<Response> {
+    let cfg = tiny_cfg();
+    let cache = SharedCacheHandle::Sharded(CostModelServerBackend::sharded_cache_for(
+        &cfg, shards,
+    ));
+    let factory_ctl = ctl.clone();
+    let mut h = ServerHandle::start(1, 16, move |_lane| {
+        let mut b = CostModelServerBackend::new(cfg.clone(), TraceParams::default(), 0xC0DE);
+        b.shared_cache = Some(cache.clone());
+        if let Some(c) = &factory_ctl {
+            b = b.with_controller(Arc::clone(c));
+        }
+        Ok(b)
+    });
+    if let Some(c) = &ctl {
+        h.attach_controller(Arc::clone(c));
+    }
+    for id in 0..N_REQUESTS {
+        h.submit(Request::new(id, vec![0u8; PREFILL_TOKENS], DECODE_TOKENS))
+            .unwrap();
+    }
+    let mut out: Vec<Response> = (0..N_REQUESTS).map(|_| h.recv().unwrap()).collect();
+    h.shutdown();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+/// Every deterministic (simulated, non-wall-clock) response field.
+fn assert_responses_bit_exact(a: &[Response], b: &[Response], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{ctx}");
+        assert_eq!(x.decode_tokens, y.decode_tokens, "{ctx} req {}", x.id);
+        assert_eq!(x.decode_energy_j, y.decode_energy_j, "{ctx} req {}", x.id);
+        assert_eq!(x.miss_rate, y.miss_rate, "{ctx} req {}", x.id);
+        assert_eq!(x.steady_flash_bytes, y.steady_flash_bytes, "{ctx} req {}", x.id);
+        assert_eq!(x.steady_norm_bytes, y.steady_norm_bytes, "{ctx} req {}", x.id);
+        assert_eq!(x.decode_flash_fetches, y.decode_flash_fetches, "{ctx} req {}", x.id);
+        assert_eq!(x.n_experts, y.n_experts, "{ctx} req {}", x.id);
+        assert_eq!(x.n_degraded, y.n_degraded, "{ctx} req {}", x.id);
+        assert_eq!(x.fault_retries, y.fault_retries, "{ctx} req {}", x.id);
+        assert_eq!(x.fault_failed, y.fault_failed, "{ctx} req {}", x.id);
+        assert_eq!(x.retry_energy_j, y.retry_energy_j, "{ctx} req {}", x.id);
+        assert_eq!(x.breaker_skips, y.breaker_skips, "{ctx} req {}", x.id);
+        assert_eq!(x.breaker_trips, y.breaker_trips, "{ctx} req {}", x.id);
+        assert!(!x.shed && !y.shed, "{ctx}");
+        assert!(!x.refused && !y.refused, "{ctx}");
+    }
+    let (sa, sb) = (summarize(a), summarize(b));
+    assert_eq!(sa.decode_energy_j, sb.decode_energy_j, "{ctx}");
+    assert_eq!(sa.combined_miss_rate, sb.combined_miss_rate, "{ctx}");
+    assert_eq!(sa.decode_tokens, sb.decode_tokens, "{ctx}");
+}
+
+#[test]
+fn lane_fleet_is_bit_exact_with_controller_attached_but_disengaged() {
+    for shards in [1usize, 4] {
+        let ctx = format!("shards {shards}");
+        let plain = lane_fleet(shards, None);
+        // default watermarks: 6 requests over a 16-deep queue peak in
+        // the hysteresis band, so the ladder never engages
+        let ctl = Arc::new(Controller::new(ControlConfig::default()));
+        let attached = lane_fleet(shards, Some(Arc::clone(&ctl)));
+        assert_responses_bit_exact(&plain, &attached, &ctx);
+        assert_eq!(ctl.level(), 0, "{ctx}: the ladder must not have engaged");
+        assert_eq!(ctl.stats().engagements, 0, "{ctx}");
+        assert_eq!(ctl.stats().refused, 0, "{ctx}");
+    }
+}
+
+/// The same bit-exact loop comparison `fault_parity.rs` pins.
+fn assert_loops_bit_exact(a: &ServeLoop, b: &ServeLoop, ctx: &str) {
+    assert_eq!(a.ledger.decode_steps, b.ledger.decode_steps, "{ctx}");
+    assert_eq!(a.counters.n_high, b.counters.n_high, "{ctx}");
+    assert_eq!(a.counters.n_low, b.counters.n_low, "{ctx}");
+    assert_eq!(a.counters.n_dropped, b.counters.n_dropped, "{ctx}");
+    assert_eq!(a.counters.n_substituted, b.counters.n_substituted, "{ctx}");
+    assert_eq!(a.counters.n_degraded, b.counters.n_degraded, "{ctx}");
+    assert_eq!(a.steady_accesses, b.steady_accesses, "{ctx}");
+    assert_eq!(a.steady_flash, b.steady_flash, "{ctx}");
+    assert_eq!(a.decode_flash_fetches, b.decode_flash_fetches, "{ctx}");
+    assert_eq!(a.miss_rate(), b.miss_rate(), "{ctx}");
+    assert_eq!(a.ledger.decode_energy_j(), b.ledger.decode_energy_j(), "{ctx}");
+    assert_eq!(a.ledger.flash_bytes, b.ledger.flash_bytes, "{ctx}");
+    assert_eq!(a.ledger.flash_fetches, b.ledger.flash_fetches, "{ctx}");
+    assert_eq!(a.hit_rates(), b.hit_rates(), "{ctx}");
+}
+
+#[test]
+fn wave_engine_is_bit_exact_under_level_0_shaping() {
+    // the wave path applies `shape_config` per admission; at level 0
+    // that must be the identity, co-residency and fetch aggregation
+    // included
+    for shards in [1usize, 4] {
+        let ctx = format!("shards {shards}");
+        let run = |ctl: Option<&Controller>| {
+            let cfg = tiny_cfg();
+            let cache = sharded(&cfg, shards);
+            let mut eng = WaveEngine::new(Arc::clone(&cache), 2);
+            for id in 0..2u64 {
+                let mut rcfg = cfg.clone();
+                rcfg.seed = request_seed(cfg.seed, id);
+                if let Some(c) = ctl {
+                    c.shape_config(&mut rcfg);
+                }
+                let be = CostModelBackend::new(
+                    &rcfg.desc,
+                    TraceParams::default(),
+                    PREFILL_TOKENS,
+                    rcfg.seed,
+                );
+                eng.admit(id, rcfg, be, PREFILL_TOKENS, DECODE_TOKENS).unwrap();
+            }
+            let mut done = Vec::new();
+            while !eng.is_idle() {
+                done.extend(eng.step_wave().unwrap());
+            }
+            done.sort_by_key(|d| d.id);
+            (done, cache)
+        };
+        let idle = Controller::new(ControlConfig::default());
+        let (plain, plain_cache) = run(None);
+        let (shaped, shaped_cache) = run(Some(&idle));
+        assert_eq!(plain.len(), 2, "{ctx}");
+        for (p, s) in plain.iter().zip(&shaped) {
+            assert_eq!(p.id, s.id, "{ctx}");
+            assert_eq!(p.decode_tokens, s.decode_tokens, "{ctx}");
+            assert_loops_bit_exact(&p.lane, &s.lane, &ctx);
+        }
+        assert_eq!(plain_cache.stats(), shaped_cache.stats(), "{ctx}");
+        shaped_cache.check_invariants().unwrap();
+    }
+}
+
+#[test]
+fn scripted_overload_walks_the_ladder_and_releases_with_hysteresis() {
+    let (clock, hand) = Clock::manual();
+    let ccfg = ControlConfig {
+        tick_us: 100,
+        up_ticks: 2,
+        down_ticks: 3,
+        bucket_capacity: 2,
+        refill_per_tick: 1,
+        ..ControlConfig::default()
+    };
+    let ctl = Controller::new(ccfg);
+    let hot = ControlSignals { queue_len: 8, queue_capacity: 8, ..Default::default() };
+    let calm = ControlSignals { queue_len: 0, queue_capacity: 8, ..Default::default() };
+    let mid = ControlSignals { queue_len: 4, queue_capacity: 8, ..Default::default() };
+    let base = ServeConfig::gsm8k_default(ModelDesc::tiny());
+
+    ctl.observe(clock.now_us(), &calm); // arm the tick
+    // engage level by level: 2 hot ticks per upward step
+    let mut trajectory = Vec::new();
+    for _ in 0..6 {
+        hand.advance_us(100);
+        ctl.observe(clock.now_us(), &hot);
+        trajectory.push(ctl.level());
+    }
+    assert_eq!(trajectory, vec![0, 1, 1, 2, 2, 3], "level-by-level engagement");
+
+    // level 3 actuation: tightened constraint, low-bit bias, token bucket
+    let mut shaped = base.clone();
+    ctl.shape_config(&mut shaped);
+    assert!(shaped.constraint <= ccfg.overload_constraint, "constraint tightened");
+    match shaped.router.dbsc {
+        Some(d) => assert_eq!(d.max_critical, 0, "DBSC biased to the MSB prefix"),
+        None => assert_eq!(shaped.router.uniform_precision, Precision::Low),
+    }
+    assert!(ctl.try_admit() && ctl.try_admit(), "bucket capacity 2");
+    assert!(!ctl.try_admit(), "dry bucket refuses");
+    assert_eq!(ctl.stats().refused, 1);
+
+    // hysteresis band: mid occupancy holds level 3 indefinitely
+    for _ in 0..8 {
+        hand.advance_us(100);
+        ctl.observe(clock.now_us(), &mid);
+        assert_eq!(ctl.level(), 3, "band must hold, not oscillate");
+    }
+
+    // release: one level per 3 calm ticks, 9 ticks to fully clear
+    let mut release = Vec::new();
+    for _ in 0..9 {
+        hand.advance_us(100);
+        ctl.observe(clock.now_us(), &calm);
+        release.push(ctl.level());
+    }
+    assert_eq!(release, vec![3, 3, 2, 2, 2, 1, 1, 1, 0], "stepwise release");
+    let st = ctl.stats();
+    assert_eq!((st.engagements, st.releases, st.max_level), (3, 1, 3));
+
+    // a single post-release hot blip (below up_ticks) must not re-engage
+    hand.advance_us(100);
+    ctl.observe(clock.now_us(), &hot);
+    hand.advance_us(100);
+    ctl.observe(clock.now_us(), &calm);
+    assert_eq!(ctl.level(), 0, "blip shorter than up_ticks is ignored");
+    assert_eq!(ctl.stats().engagements, 3);
+
+    // back at level 0 the shaping is the identity again
+    let mut again = base.clone();
+    ctl.shape_config(&mut again);
+    assert_eq!(again.constraint, base.constraint);
+    assert_eq!(again.router.dbsc, base.router.dbsc);
+    assert_eq!(again.router.uniform_precision, base.router.uniform_precision);
+}
+
+#[test]
+fn seeded_storm_trips_half_opens_closes_and_reconciles_the_ledger() {
+    // persistent-failure storm: every flaky site exhausts its retries
+    let storm = FaultPlan { fault_rate: 0.4, retry_fail_p: 1.0, ..FaultPlan::smoke() };
+    let decode = 48usize;
+    let run = |breaker: Option<BreakerConfig>| {
+        let mut cfg = tiny_cfg();
+        cfg.fault = Some(storm);
+        cfg.breaker = breaker;
+        let cache = sharded(&cfg, 4);
+        let mut lp = ServeLoop::with_sharded_cache(cfg.clone(), Arc::clone(&cache));
+        let mut be =
+            CostModelBackend::new(&cfg.desc, TraceParams::default(), PREFILL_TOKENS, cfg.seed);
+        lp.prefill(&mut be, PREFILL_TOKENS).unwrap();
+        for _ in 0..decode {
+            lp.decode_token(&mut be).unwrap();
+        }
+        lp
+    };
+
+    let bcfg = BreakerConfig { fail_threshold: 1, cooldown_steps: 2 };
+    let unguarded = run(None);
+    let a = run(Some(bcfg));
+    let b = run(Some(bcfg));
+
+    // every token still served through the storm
+    assert_eq!(a.ledger.decode_steps, decode as u64);
+
+    // the full breaker cycle fired: trip -> skip while open -> half-open
+    // probe after cooldown -> close once the site's flaky window ends
+    let st = a.breaker.as_ref().expect("breaker is live under an active plan").stats();
+    assert!(st.trips > 0, "storm must trip: {st:?}");
+    assert!(st.skips > 0, "open breaker must skip fetches: {st:?}");
+    assert!(st.probes > 0, "cooldown must half-open: {st:?}");
+    assert!(st.closes > 0, "recovered sites must close: {st:?}");
+    assert_eq!(st.skips, a.fault_counters.breaker_skips, "breaker and walk agree");
+
+    // deterministic replay: identical chaos, identical breaker cycle,
+    // identical ledger — bit-exact
+    assert_eq!(a.fault_counters, b.fault_counters, "storm replay");
+    assert_eq!(st, b.breaker.as_ref().unwrap().stats(), "breaker replay");
+    assert_loops_bit_exact(&a, &b, "storm replay");
+
+    // the saved retries are real and the remaining retry joules
+    // reconcile against the Ledger (recovery traffic is charged inside
+    // flash_bytes, never a side channel)
+    assert!(a.fault_counters.retries < unguarded.fault_counters.retries);
+    assert!(a.fault_counters.retry_energy_j <= unguarded.fault_counters.retry_energy_j);
+    assert!(a.ledger.flash_bytes >= a.fault_counters.extra_flash_bytes);
+}
