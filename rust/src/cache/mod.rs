@@ -10,5 +10,8 @@ pub mod slice_cache;
 pub mod warmup;
 
 pub use sharded::{RebalanceSummary, ShardTxn, ShardedSliceCache};
-pub use slice_cache::{CacheOps, CacheStats, Ensure, EnsureOutcome, SliceCache};
-pub use warmup::{apply as apply_warmup, apply_sharded, HotnessTable, ReshapeSummary, WarmupStrategy};
+pub use slice_cache::{CacheOps, CacheStats, Ensure, EnsureOutcome, ResidentEntry, SliceCache};
+pub use warmup::{
+    apply as apply_warmup, apply_manifest, apply_manifest_sharded, apply_sharded, HotnessTable,
+    ReshapeSummary, RestoreSummary, WarmupStrategy,
+};

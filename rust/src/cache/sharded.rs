@@ -43,7 +43,7 @@ use std::sync::{Mutex, MutexGuard};
 
 use crate::model::descriptor::SliceKey;
 
-use super::slice_cache::{CacheOps, Ensure, EnsureOutcome, SliceCache};
+use super::slice_cache::{CacheOps, Ensure, EnsureOutcome, ResidentEntry, SliceCache};
 use super::CacheStats;
 
 /// Rebalance slack every this many transactions (`maybe_rebalance`).
@@ -525,6 +525,41 @@ impl ShardedSliceCache {
         debug_assert_eq!(caps.iter().sum::<u64>(), self.capacity);
         let _rb = self.lock_rebal();
         self.for_each_shard(|i, c| c.set_capacity(caps[i]));
+    }
+
+    // -- crash-safety residency export ------------------------------------
+
+    /// Capture every shard's residency under ONE consistent lock pass:
+    /// the rebalance mutex plus all shard locks (ascending — the global
+    /// lock order) are held before any entry is read, so the manifest is
+    /// a true point-in-time cut of the whole cache — budgets that sum to
+    /// the global capacity and recency orders no concurrent fill or
+    /// rebalance can tear — not a stitched sequence of per-shard views.
+    /// Returns per-shard (byte budget, entries MRU→LRU). Read-only.
+    pub fn export_residency(&self) -> Vec<(u64, Vec<ResidentEntry>)> {
+        let _rb = self.lock_rebal();
+        let guards: Vec<MutexGuard<'_, SliceCache>> =
+            (0..self.shards.len()).map(|i| self.lock_shard(i)).collect();
+        guards.iter().map(|g| (g.capacity(), g.export_residency())).collect()
+    }
+
+    /// Residency of one shard only (budget, entries MRU→LRU) under just
+    /// that shard's lock — the scrubber's view. Unlike
+    /// [`export_residency`](Self::export_residency) this is NOT a
+    /// consistent cut of the whole cache; the scrubber tolerates that
+    /// (an entry that moved shards between tick and verify simply scans
+    /// as absent).
+    pub fn export_shard_residency(&self, shard: usize) -> (u64, Vec<ResidentEntry>) {
+        let g = self.lock_shard(shard % self.shards.len().max(1));
+        (g.capacity(), g.export_residency())
+    }
+
+    /// Install per-shard byte budgets from a restored manifest. Same
+    /// serialization as [`reshape_budgets`](Self::reshape_budgets);
+    /// budgets must sum to this cache's global capacity (callers verify
+    /// against the manifest header before asking).
+    pub fn restore_budgets(&self, caps: &[u64]) {
+        self.reshape_budgets(caps);
     }
 }
 

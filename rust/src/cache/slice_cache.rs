@@ -77,6 +77,22 @@ impl CacheStats {
     }
 }
 
+/// One resident slice as captured for the crash-safety residency
+/// manifest (`recover/snapshot.rs`): everything needed to rehydrate the
+/// entry by replaying its fill — never the weight bytes themselves.
+/// `rank` is the recency position (0 = MRU) so a restore can rebuild the
+/// exact LRU order; `checksum` is the integrity stamp the scrubber and
+/// the manifest CRC verify against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResidentEntry {
+    pub key: SliceKey,
+    pub bytes: u64,
+    /// Recency position at capture time: 0 = MRU, len-1 = LRU victim side.
+    pub rank: u32,
+    pub pinned: bool,
+    pub checksum: u64,
+}
+
 /// Outcome of `ensure`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Ensure {
@@ -422,6 +438,29 @@ impl SliceCache {
         while i != NIL {
             out.push(self.entries[i as usize].key);
             i = self.entries[i as usize].next;
+        }
+        out
+    }
+
+    /// Capture the resident set for the residency manifest: every entry
+    /// in recency order (rank 0 = MRU) with its pin state and integrity
+    /// checksum. Read-only — no stats, no reordering — so a snapshot
+    /// never perturbs the serving state it captures.
+    pub fn export_residency(&self) -> Vec<ResidentEntry> {
+        let mut out = Vec::with_capacity(self.index.len());
+        let mut i = self.head;
+        let mut rank = 0u32;
+        while i != NIL {
+            let e = &self.entries[i as usize];
+            out.push(ResidentEntry {
+                key: e.key,
+                bytes: e.bytes,
+                rank,
+                pinned: e.pinned,
+                checksum: e.checksum,
+            });
+            rank += 1;
+            i = e.next;
         }
         out
     }

@@ -22,7 +22,7 @@ use crate::model::descriptor::{Plane, SliceKey};
 use crate::util::rng::Rng;
 
 use super::sharded::ShardedSliceCache;
-use super::slice_cache::SliceCache;
+use super::slice_cache::{ResidentEntry, SliceCache};
 
 /// Per-slice access frequency accumulated over prefill (survives eviction —
 /// the paper reorders on *accumulated* statistics, not just on residency).
@@ -422,6 +422,155 @@ pub fn apply_sharded<S: Fn(SliceKey) -> u64>(
     }
 }
 
+/// What a manifest restore rehydrated (the PCW-from-manifest warmup of
+/// `recover/snapshot.rs`). `dropped` counts manifest entries the restore
+/// budget forced out of the plan — the AMAT graceful-degradation path:
+/// LSB residuals go first, so every expert the truncated restore keeps
+/// is still executable at its low-bit MSB prefix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RestoreSummary {
+    /// Entries made resident again.
+    pub restored: u64,
+    /// Bytes refetched to rehydrate them.
+    pub restored_bytes: u64,
+    /// Manifest entries dropped by the restore budget.
+    pub dropped: u64,
+    /// Bytes of the dropped entries.
+    pub dropped_bytes: u64,
+}
+
+/// The FromManifest retention decision, sharing the `pcw_plan` shape:
+/// a class-ordered admission list cut at a byte budget. Admission order
+/// is pinned entries first (they are load-bearing by declaration), then
+/// MSB slices, then LSB slices — each class in manifest recency order —
+/// so a short restore budget degrades to the AMAT low-bit prefix (MSB
+/// coverage survives, LSB residuals are sacrificed) instead of slicing
+/// experts out entirely.
+fn manifest_plan(
+    entries: &[ResidentEntry],
+    restore_budget: Option<u64>,
+) -> (Vec<ResidentEntry>, u64, u64) {
+    let class = |e: &ResidentEntry| -> u8 {
+        if e.pinned {
+            0
+        } else if e.key.plane == Plane::Msb {
+            1
+        } else {
+            2
+        }
+    };
+    let mut ordered: Vec<ResidentEntry> = entries.to_vec();
+    // stable: within a class the caller's (recency) order is preserved
+    ordered.sort_by_key(|e| class(e));
+    let mut admitted = Vec::with_capacity(ordered.len());
+    let (mut fetched, mut dropped, mut dropped_bytes) = (0u64, 0u64, 0u64);
+    for e in ordered {
+        let fits = match restore_budget {
+            Some(b) => fetched + e.bytes <= b,
+            None => true,
+        };
+        if fits {
+            fetched += e.bytes;
+            admitted.push(e);
+        } else {
+            dropped += 1;
+            dropped_bytes += e.bytes;
+        }
+    }
+    (admitted, dropped, dropped_bytes)
+}
+
+/// Rehydrate `cache` from a residency manifest's entries (recency order,
+/// rank 0 first): the restore replays each admitted entry's fill and
+/// rebuilds the captured LRU order and pin set exactly. With
+/// `restore_budget = None` and matching capacity this is an identity —
+/// re-exporting yields the same manifest. A budget short of the manifest
+/// degrades per [`manifest_plan`]. Follows the PCW apply shape: clear
+/// (stats preserved), ensure, re-pin, reorder, reset freq.
+pub fn apply_manifest(
+    cache: &mut SliceCache,
+    entries: &[ResidentEntry],
+    restore_budget: Option<u64>,
+) -> RestoreSummary {
+    let (admitted, dropped, dropped_bytes) = manifest_plan(entries, restore_budget);
+    let stats = cache.stats;
+    cache.clear();
+    cache.stats = stats;
+    for e in &admitted {
+        let _ = cache.ensure(e.key, e.bytes);
+        if e.pinned {
+            cache.pin(e.key, true);
+        }
+    }
+    // captured recency: rank 0 was MRU, so higher rank scores lower
+    let rank: HashMap<SliceKey, u32> = admitted.iter().map(|e| (e.key, e.rank)).collect();
+    cache.reorder_by(|k| -(rank.get(&k).copied().unwrap_or(u32::MAX) as f64));
+    cache.reset_freq();
+    RestoreSummary {
+        restored: cache.len() as u64,
+        restored_bytes: cache.used_bytes(),
+        dropped,
+        dropped_bytes,
+    }
+}
+
+/// [`apply_manifest`] for the lock-striped cache. The plan is computed
+/// under a GLOBAL view: per-shard entry lists are interleaved by rank
+/// (the best reconstruction of global recency a per-shard capture
+/// permits), the admission cut is taken once over the whole set, and
+/// entries are re-split by the TARGET cache's own expert→shard map — so
+/// a manifest captured at one shard count restores correctly into
+/// another. Captured shard budgets are re-installed only when they are
+/// compatible (same shard count, budgets summing to this cache's
+/// capacity); otherwise the cache keeps its current carve.
+pub fn apply_manifest_sharded(
+    cache: &ShardedSliceCache,
+    shards: &[(u64, Vec<ResidentEntry>)],
+    restore_budget: Option<u64>,
+) -> RestoreSummary {
+    let caps: Vec<u64> = shards.iter().map(|(cap, _)| *cap).collect();
+    if caps.len() == cache.n_shards() && caps.iter().sum::<u64>() == cache.capacity() {
+        cache.restore_budgets(&caps);
+    }
+    // global recency reconstruction: interleave shards by rank
+    let mut global: Vec<ResidentEntry> = Vec::new();
+    for (si, (_, entries)) in shards.iter().enumerate() {
+        global.extend(entries.iter().copied().map(|mut e| {
+            // disambiguate equal ranks across shards deterministically
+            e.rank = e.rank * shards.len() as u32 + si as u32;
+            e
+        }));
+    }
+    global.sort_by_key(|e| e.rank);
+    for (i, e) in global.iter_mut().enumerate() {
+        e.rank = i as u32;
+    }
+    let (admitted, dropped, dropped_bytes) = manifest_plan(&global, restore_budget);
+    let rank: HashMap<SliceKey, u32> = admitted.iter().map(|e| (e.key, e.rank)).collect();
+    cache.for_each_shard(|i, c| {
+        let stats = c.stats;
+        c.clear();
+        c.stats = stats;
+        for e in admitted
+            .iter()
+            .filter(|e| cache.shard_of_expert(e.key.expert as usize) == i)
+        {
+            let _ = c.ensure(e.key, e.bytes);
+            if e.pinned {
+                c.pin(e.key, true);
+            }
+        }
+        c.reorder_by(|k| -(rank.get(&k).copied().unwrap_or(u32::MAX) as f64));
+        c.reset_freq();
+    });
+    RestoreSummary {
+        restored: cache.len() as u64,
+        restored_bytes: cache.used_bytes(),
+        dropped,
+        dropped_bytes,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -603,5 +752,70 @@ mod tests {
         h.touch(SliceKey::msb(0, 0));
         h.touch(SliceKey::lsb(0, 0));
         assert!(h.score(SliceKey::msb(0, 0)) > h.score(SliceKey::lsb(0, 0)));
+    }
+
+    #[test]
+    fn manifest_restore_is_identity_without_budget() {
+        let (mut c, _) = filled_cache();
+        c.lookup(SliceKey::msb(2, 1)); // churn recency
+        c.pin(SliceKey::msb(0, 0), true);
+        let captured = c.export_residency();
+        let mut fresh = SliceCache::new(1000);
+        let sum = apply_manifest(&mut fresh, &captured, None);
+        assert_eq!(fresh.export_residency(), captured);
+        assert_eq!(sum.restored, captured.len() as u64);
+        assert_eq!(sum.dropped, 0);
+        assert!(fresh.is_pinned(SliceKey::msb(0, 0)));
+        fresh.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn manifest_restore_budget_degrades_lsb_first() {
+        let (mut c, _) = filled_cache();
+        let captured = c.export_residency();
+        let msb_bytes: u64 =
+            captured.iter().filter(|e| e.key.plane == Plane::Msb).map(|e| e.bytes).sum();
+        // budget covers exactly the MSB prefix: every LSB residual drops,
+        // every MSB (expert coverage) survives
+        let mut fresh = SliceCache::new(1000);
+        let sum = apply_manifest(&mut fresh, &captured, Some(msb_bytes));
+        assert_eq!(sum.restored_bytes, msb_bytes);
+        assert!(fresh.keys_mru().iter().all(|k| k.plane == Plane::Msb));
+        assert_eq!(
+            sum.dropped as usize,
+            captured.iter().filter(|e| e.key.plane == Plane::Lsb).count()
+        );
+        fresh.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sharded_manifest_roundtrip_and_cross_shard_restore() {
+        for n in [1usize, 4] {
+            let (sharded, _) = filled_sharded(n);
+            sharded.lookup(SliceKey::msb(1, 1));
+            sharded.pin(SliceKey::msb(0, 0), true);
+            let captured = sharded.export_residency();
+            let fresh = ShardedSliceCache::new(1000, n);
+            apply_manifest_sharded(&fresh, &captured, None);
+            assert_eq!(fresh.export_residency(), captured, "shards = {n}");
+            fresh.check_invariants().unwrap();
+            // the same manifest restores into a different shard count
+            let other = ShardedSliceCache::new(1000, 5 - n);
+            let sum = apply_manifest_sharded(&other, &captured, None);
+            assert_eq!(sum.restored as usize, other.len());
+            assert_eq!(
+                {
+                    let mut k = other.keys_mru();
+                    k.sort();
+                    k
+                },
+                {
+                    let mut k = sharded.keys_mru();
+                    k.sort();
+                    k
+                }
+            );
+            other.check_invariants().unwrap();
+        }
     }
 }

@@ -35,6 +35,11 @@
 //!     feedback degradation ladder (tighten the miss budget, bias to
 //!     low-bit AMAT precision, token-bucket admission) plus the lane
 //!     watchdog heartbeat and the fetch circuit breaker's config knobs;
+//!   - [`recover`] — disabled-by-default crash safety: the SMRM
+//!     residency-manifest snapshot (warm restart without weight bytes),
+//!     the SMRJ admission journal (bit-exact re-execution of requests
+//!     interrupted by a crash or a condemned lane), and the calm-tick
+//!     cache scrubber;
 //!   - [`cache`], [`router`], [`memhier`], [`quant`] — the paper's
 //!     mechanisms (DBSC slice cache, cache-aware routing + miss budget,
 //!     Fig 7 cost model, AMAT quantization);
@@ -58,6 +63,7 @@ pub mod fault;
 pub mod memhier;
 pub mod model;
 pub mod quant;
+pub mod recover;
 pub mod router;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

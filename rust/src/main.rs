@@ -405,6 +405,20 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
             "",
             "per-request SLO in seconds: shed blown deadlines, defer projected violations",
         )
+        .opt(
+            "snapshot-dir",
+            "",
+            "crash safety: journal admissions + periodic residency manifests per sharded cell under this directory",
+        )
+        .switch(
+            "restore",
+            "restart mode: replay --snapshot-dir's journal-pending requests cold vs manifest-warm (adds informational {cell}/recover rows)",
+        )
+        .opt(
+            "kill-after",
+            "",
+            "crash drill: hard-abort the process before the Nth delivered response (requires --snapshot-dir)",
+        )
         .parse(rest, "serve-bench")?;
 
     let desc = model_flag(&a)?;
@@ -435,6 +449,21 @@ fn serve_bench_cmd(rest: &[String]) -> Result<()> {
         cfg.slo_s = Some(a.f64("slo")?);
     }
     cfg.controller = a.bool("controller");
+    let snapshot_dir = a.str("snapshot-dir");
+    if !snapshot_dir.is_empty() {
+        cfg.recover = Some(slicemoe::workload::RecoverAxis {
+            snapshot_dir: snapshot_dir.into(),
+            restore: a.bool("restore"),
+            kill_after: if a.is_set("kill-after") {
+                Some(a.usize("kill-after")? as u64)
+            } else {
+                None
+            },
+            snapshot_every: 2,
+        });
+    } else if a.bool("restore") || a.is_set("kill-after") {
+        bail!("--restore and --kill-after require --snapshot-dir");
+    }
     // explicit flags always win; --smoke only changes the DEFAULTS of
     // requests/span/lanes
     if !a.bool("smoke") || a.is_set("requests") {

@@ -1,0 +1,415 @@
+//! SMRJ — "SliceMoE Request Journal", the append-only admission journal.
+//!
+//! Every admitted request appends an *admit* record (id, per-request
+//! seed, decode budget, SLO, routing bias, prompt bytes) the moment it
+//! enters the queue; every delivered response appends a *completion
+//! mark*. The set difference — admitted minus completed — is exactly
+//! the requests a crash (or a condemned lane) left un-answered, and
+//! because decode is deterministic by construction (per-request seeds,
+//! pure-hash fault injection) re-driving an admit record reproduces the
+//! original response **bit-exactly**.
+//!
+//! Two consumers:
+//! * **restart** — [`Journal::load`] replays the file and returns the
+//!   un-completed admissions in admission order for re-execution;
+//! * **the lane watchdog** — a live [`Journal`] keeps the open set in
+//!   memory, so a condemned lane's request can be re-admitted (once)
+//!   instead of answered with failure.
+//!
+//! Records are framed with a per-record CRC ([`fold_checksum`]) and
+//! parsed strictly: truncation, a bad kind byte, or a CRC mismatch is a
+//! hard error, mirroring the SMWT/SMRM containers.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SMRJ" | u16 version (=1) | u16 reserved (=0) | u64 base_seed |
+//! records × {
+//!   u8 kind (1 = admit, 2 = complete) |
+//!   kind 1: u64 id | u64 seed | u32 decode_tokens |
+//!           u8 has_slo | f64 slo | u8 has_bias |
+//!           f64 popularity_alpha | f64 popularity_weight |
+//!           u64 affinity_seed | u32 prompt_len | prompt bytes
+//!   kind 2: u64 id
+//!   | u64 crc (fold_checksum of this record from its kind byte)
+//! }
+//! ```
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::trace::RoutingBias;
+use crate::util::bytes;
+
+use super::snapshot::fold_checksum;
+
+const MAGIC: &[u8; 4] = b"SMRJ";
+const VERSION: u16 = 1;
+const KIND_ADMIT: u8 = 1;
+const KIND_COMPLETE: u8 = 2;
+
+/// One journaled admission: everything needed to rebuild the original
+/// `server::Request` and its derived per-request seed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PendingRequest {
+    pub id: u64,
+    /// The derived per-request seed (`server::request_seed(base, id)`),
+    /// journaled explicitly so replay never depends on the live
+    /// process's base seed staying put.
+    pub seed: u64,
+    pub prompt: Vec<u8>,
+    pub decode_tokens: u32,
+    pub slo: Option<f64>,
+    pub bias: Option<RoutingBias>,
+}
+
+/// What a journal replay found on disk.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JournalState {
+    pub base_seed: u64,
+    /// Total admit records.
+    pub admitted: u64,
+    /// Total completion marks.
+    pub completed: u64,
+    /// Admitted-but-never-completed requests, in admission order — the
+    /// re-execution work list.
+    pub pending: Vec<PendingRequest>,
+}
+
+/// Book-keeping for one open (admitted, un-completed) request in a live
+/// journal.
+#[derive(Debug)]
+struct OpenEntry {
+    req: PendingRequest,
+    /// The watchdog re-admits each condemned request at most once.
+    redriven: bool,
+}
+
+/// A live append-only journal. All methods take `&self`; appends and
+/// the open-set map are mutex-guarded with poison recovery (a panicking
+/// writer must not cascade into fleet death — at worst one record is
+/// torn, which the strict reader rejects loudly on the next restart).
+#[derive(Debug)]
+pub struct Journal {
+    file: Mutex<File>,
+    open: Mutex<HashMap<u64, OpenEntry>>,
+    base_seed: u64,
+}
+
+fn lock_recovering<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+fn admit_record_bytes(p: &PendingRequest) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(1 + 8 + 8 + 4 + 1 + 8 + 1 + 24 + 4 + p.prompt.len() + 8);
+    rec.push(KIND_ADMIT);
+    rec.extend_from_slice(&p.id.to_le_bytes());
+    rec.extend_from_slice(&p.seed.to_le_bytes());
+    rec.extend_from_slice(&p.decode_tokens.to_le_bytes());
+    match p.slo {
+        Some(s) => {
+            rec.push(1);
+            rec.extend_from_slice(&s.to_le_bytes());
+        }
+        None => {
+            rec.push(0);
+            rec.extend_from_slice(&0f64.to_le_bytes());
+        }
+    }
+    match &p.bias {
+        Some(b) => {
+            rec.push(1);
+            rec.extend_from_slice(&b.popularity_alpha.to_le_bytes());
+            rec.extend_from_slice(&b.popularity_weight.to_le_bytes());
+            rec.extend_from_slice(&b.affinity_seed.to_le_bytes());
+        }
+        None => {
+            rec.push(0);
+            rec.extend_from_slice(&[0u8; 24]);
+        }
+    }
+    rec.extend_from_slice(&(p.prompt.len() as u32).to_le_bytes());
+    rec.extend_from_slice(&p.prompt);
+    let crc = fold_checksum(&rec);
+    rec.extend_from_slice(&crc.to_le_bytes());
+    rec
+}
+
+fn complete_record_bytes(id: u64) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(1 + 8 + 8);
+    rec.push(KIND_COMPLETE);
+    rec.extend_from_slice(&id.to_le_bytes());
+    let crc = fold_checksum(&rec);
+    rec.extend_from_slice(&crc.to_le_bytes());
+    rec
+}
+
+impl Journal {
+    /// Conventional journal file name inside a snapshot directory.
+    pub const FILE_NAME: &'static str = "requests.smrj";
+
+    /// Create (truncating any previous file) and write the header.
+    pub fn create(path: &Path, base_seed: u64) -> Result<Journal> {
+        let mut file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("create journal {}", path.display()))?;
+        let mut header = Vec::with_capacity(16);
+        header.extend_from_slice(MAGIC);
+        header.extend_from_slice(&VERSION.to_le_bytes());
+        header.extend_from_slice(&0u16.to_le_bytes());
+        header.extend_from_slice(&base_seed.to_le_bytes());
+        file.write_all(&header)
+            .with_context(|| format!("write journal header {}", path.display()))?;
+        Ok(Journal { file: Mutex::new(file), open: Mutex::new(HashMap::new()), base_seed })
+    }
+
+    pub fn base_seed(&self) -> u64 {
+        self.base_seed
+    }
+
+    /// Append an admit record (one `write_all` — records are framed, so
+    /// a crash between appends leaves a readable journal; a crash *in*
+    /// an append leaves a torn tail the strict reader rejects loudly).
+    pub fn record_admit(&self, p: &PendingRequest) -> Result<()> {
+        let rec = admit_record_bytes(p);
+        {
+            let mut f = lock_recovering(&self.file);
+            f.write_all(&rec).context("append admit record")?;
+        }
+        lock_recovering(&self.open)
+            .insert(p.id, OpenEntry { req: p.clone(), redriven: false });
+        Ok(())
+    }
+
+    /// Append a completion mark and close the open entry.
+    pub fn record_complete(&self, id: u64) -> Result<()> {
+        let rec = complete_record_bytes(id);
+        {
+            let mut f = lock_recovering(&self.file);
+            f.write_all(&rec).context("append completion mark")?;
+        }
+        lock_recovering(&self.open).remove(&id);
+        Ok(())
+    }
+
+    /// Hand out `id`'s admission for watchdog re-execution — at most
+    /// once per id (the bound that keeps a request wedging every lane
+    /// it touches from re-admitting forever). `None` if the id is
+    /// unknown, already completed, or already re-driven.
+    pub fn take_for_redrive(&self, id: u64) -> Option<PendingRequest> {
+        let mut open = lock_recovering(&self.open);
+        match open.get_mut(&id) {
+            Some(e) if !e.redriven => {
+                e.redriven = true;
+                Some(e.req.clone())
+            }
+            _ => None,
+        }
+    }
+
+    /// Open (admitted, un-completed) request count.
+    pub fn open_requests(&self) -> usize {
+        lock_recovering(&self.open).len()
+    }
+
+    /// Replay a journal file: strict parse, then fold completion marks
+    /// over admissions to recover the pending work list.
+    pub fn load(path: &Path) -> Result<JournalState> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("open journal {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parse journal {}", path.display()))
+    }
+
+    /// Parse an SMRJ buffer (see [`Journal::load`]).
+    pub fn parse(buf: &[u8]) -> Result<JournalState> {
+        let mut pos = 0usize;
+        let take =
+            |pos: &mut usize, n: usize| -> Result<&[u8]> { bytes::take(buf, pos, n, "journal") };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not an SMRJ request journal)");
+        }
+        let version = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported journal version {version} (this reader speaks {VERSION})");
+        }
+        let _reserved = take(&mut pos, 2)?;
+        let base_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let mut order: Vec<u64> = Vec::new();
+        let mut by_id: HashMap<u64, PendingRequest> = HashMap::new();
+        let (mut admitted, mut completed) = (0u64, 0u64);
+        while pos < buf.len() {
+            let rec_start = pos;
+            let kind = take(&mut pos, 1)?[0];
+            match kind {
+                KIND_ADMIT => {
+                    let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let decode_tokens = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+                    let has_slo = take(&mut pos, 1)?[0];
+                    let slo_bits = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let slo = match has_slo {
+                        0 => None,
+                        1 => Some(slo_bits),
+                        b => bail!("bad slo flag {b} (journal corrupt)"),
+                    };
+                    let has_bias = take(&mut pos, 1)?[0];
+                    let popularity_alpha = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let popularity_weight = f64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let affinity_seed = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let bias = match has_bias {
+                        0 => None,
+                        1 => Some(RoutingBias {
+                            popularity_alpha,
+                            popularity_weight,
+                            affinity_seed,
+                        }),
+                        b => bail!("bad bias flag {b} (journal corrupt)"),
+                    };
+                    let prompt_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+                    // prompt_len is attacker^W corruption-controlled:
+                    // bound the read by the buffer before allocating
+                    let prompt = take(&mut pos, prompt_len)?.to_vec();
+                    let crc = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    if crc != fold_checksum(&buf[rec_start..pos - 8]) {
+                        bail!("admit record CRC mismatch at byte {rec_start}");
+                    }
+                    admitted += 1;
+                    if by_id
+                        .insert(id, PendingRequest { id, seed, prompt, decode_tokens, slo, bias })
+                        .is_none()
+                    {
+                        order.push(id);
+                    }
+                }
+                KIND_COMPLETE => {
+                    let id = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    let crc = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                    if crc != fold_checksum(&buf[rec_start..pos - 8]) {
+                        bail!("completion mark CRC mismatch at byte {rec_start}");
+                    }
+                    completed += 1;
+                    by_id.remove(&id);
+                }
+                k => bail!("bad record kind {k} at byte {rec_start} (journal corrupt)"),
+            }
+        }
+        let pending = order.into_iter().filter_map(|id| by_id.remove(&id)).collect();
+        Ok(JournalState { base_seed, admitted, completed, pending })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64) -> PendingRequest {
+        PendingRequest {
+            id,
+            seed: 0x1000 + id,
+            prompt: vec![7u8; 16 + id as usize],
+            decode_tokens: 8,
+            slo: if id % 2 == 0 { Some(1.5) } else { None },
+            bias: if id == 1 {
+                Some(RoutingBias {
+                    popularity_alpha: 1.25,
+                    popularity_weight: 0.5,
+                    affinity_seed: 99,
+                })
+            } else {
+                None
+            },
+        }
+    }
+
+    fn journal_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("smrj_{tag}_{}.smrj", std::process::id()))
+    }
+
+    #[test]
+    fn admit_complete_replay_recovers_pending_in_order() {
+        let path = journal_path("replay");
+        let j = Journal::create(&path, 0xBEEF).unwrap();
+        for id in 0..4 {
+            j.record_admit(&pending(id)).unwrap();
+        }
+        j.record_complete(1).unwrap();
+        j.record_complete(3).unwrap();
+        assert_eq!(j.open_requests(), 2);
+        drop(j);
+        let st = Journal::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(st.base_seed, 0xBEEF);
+        assert_eq!((st.admitted, st.completed), (4, 2));
+        assert_eq!(
+            st.pending,
+            vec![pending(0), pending(2)],
+            "pending preserves admission order"
+        );
+    }
+
+    #[test]
+    fn take_for_redrive_is_bounded_to_once() {
+        let path = journal_path("redrive");
+        let j = Journal::create(&path, 1).unwrap();
+        j.record_admit(&pending(5)).unwrap();
+        assert_eq!(j.take_for_redrive(5), Some(pending(5)));
+        assert_eq!(j.take_for_redrive(5), None, "second re-drive is refused");
+        assert_eq!(j.take_for_redrive(6), None, "unknown id is refused");
+        j.record_complete(7).unwrap(); // unknown completion is harmless
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_kind_and_crc() {
+        let path = journal_path("corrupt");
+        let j = Journal::create(&path, 2).unwrap();
+        j.record_admit(&pending(0)).unwrap();
+        j.record_complete(0).unwrap();
+        drop(j);
+        let buf = std::fs::read(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        assert!(format!("{:#}", Journal::parse(&bad).unwrap_err()).contains("magic"));
+
+        let mut v2 = buf.clone();
+        v2[4] = 2;
+        assert!(format!("{:#}", Journal::parse(&v2).unwrap_err()).contains("version 2"));
+
+        for cut in [3, 10, buf.len() - 1] {
+            let e = Journal::parse(&buf[..cut]).unwrap_err();
+            assert!(format!("{e:#}").contains("truncated"), "cut {cut}: {e:#}");
+        }
+
+        let mut bad_kind = buf.clone();
+        bad_kind[16] = 9; // first record's kind byte
+        assert!(format!("{:#}", Journal::parse(&bad_kind).unwrap_err()).contains("kind"));
+
+        let mut flipped = buf.clone();
+        flipped[20] ^= 0x01; // inside the first admit record's id
+        assert!(format!("{:#}", Journal::parse(&flipped).unwrap_err()).contains("CRC"));
+
+        // an absurd prompt length must error as truncation, not allocate:
+        // prompt_len sits 47 bytes into the admit record (after kind, id,
+        // seed, decode, slo flag+f64, bias flag+3 fields)
+        let mut huge = buf.clone();
+        let off = 16 + 47;
+        huge[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e = Journal::parse(&huge).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+    }
+}

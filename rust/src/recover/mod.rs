@@ -1,0 +1,39 @@
+//! Crash-safe serving: durable warm-restart snapshots, journaled
+//! request re-execution, and the online cache scrubber.
+//!
+//! The paper's PCW exists because early-decode cold misses are the
+//! dominant tail hazard — and a process restart recreates that hazard
+//! wholesale: the DBSC residency, every in-flight request, and the
+//! attribution state all evaporate. This module turns restart into a
+//! *warm* event:
+//!
+//! * [`snapshot`] — the SMRM **residency manifest**: a versioned binary
+//!   capture of per-shard cache contents (key, plane, pin, recency
+//!   rank, checksum) plus shard budgets — never the weight bytes.
+//!   Restore replays the fills as a PCW-from-manifest warmup
+//!   (`cache::apply_manifest_sharded`), degrading to the AMAT low-bit
+//!   prefix when the restore budget is short.
+//! * [`journal`] — the SMRJ **admission journal**: append-only admit
+//!   records (id, seed, bias, SLO, prompt) with completion marks. On
+//!   restart every un-completed request is re-driven **bit-exactly**
+//!   (request seeds plus the pure-hash fault injector make decode
+//!   deterministic); in-process, the lane watchdog uses the same
+//!   journal to re-admit a condemned lane's request instead of
+//!   answering with failure.
+//! * [`scrub`] — the calm-tick **integrity scrubber**: walks shards
+//!   when the overload ladder sits at level 0, verifies per-entry
+//!   checksums against a deterministic at-rest corruption oracle, and
+//!   evicts-and-refetches corrupt slices through the fault model so a
+//!   bad slice never serves a token.
+//!
+//! Everything here is disabled by default; with no snapshot dir, no
+//! journal, and no scrubber attached, every serving path is bit-exact
+//! with the pre-recovery behavior.
+
+pub mod journal;
+pub mod scrub;
+pub mod snapshot;
+
+pub use journal::{Journal, JournalState, PendingRequest};
+pub use scrub::{ScrubConfig, ScrubStats, ScrubTick, Scrubber};
+pub use snapshot::{fold_checksum, ResidencyManifest, SnapshotSink};

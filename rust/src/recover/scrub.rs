@@ -1,0 +1,374 @@
+//! The online cache scrubber: calm-tick integrity verification with
+//! evict-and-refetch repair.
+//!
+//! DRAM-resident slices can rot between uses — at-rest bit flips the
+//! fill-time checksum never sees. The scrubber walks the sharded cache
+//! a bounded number of entries per control-plane tick, **only while the
+//! overload ladder sits at level 0** (any degradation level means the
+//! serving path needs every byte of Flash bandwidth more than hygiene
+//! does), verifies each resident entry, and repairs corrupt slices by
+//! evicting and re-fetching them **through the fault model** — a repair
+//! fetch can itself retry, spike, or persistently fail, exactly like a
+//! demand miss. A persistent repair failure leaves the slice evicted;
+//! the next demand access refetches it through the normal
+//! degrade/substitute arms, so a bad slice never serves a token either
+//! way.
+//!
+//! Detection: the simulator's entries carry `slice_checksum(key)` by
+//! construction, so a literal re-hash would never mismatch. At-rest
+//! corruption is therefore modeled the same way fetch faults are — a
+//! pure hash of (scrub seed, key, scan epoch) against a configured
+//! rate — plus a forced-corruption set for tests and chaos drills.
+//! Determinism: given the same cache contents, seed, and tick sequence,
+//! the scrubber makes identical repairs.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::cache::{Ensure, ShardedSliceCache};
+use crate::fault::{FaultInjector, FaultPlan};
+use crate::memhier::{HwSpec, Ledger, Phase};
+use crate::model::descriptor::{Plane, SliceKey};
+use crate::util::rng::SplitMix64;
+
+/// Scrubber knobs. Disabled scrubbing is simply "no scrubber attached";
+/// a constructed scrubber always scans, and corrupts at `at_rest_corruption`.
+#[derive(Clone, Copy, Debug)]
+pub struct ScrubConfig {
+    /// Seed for the at-rest corruption oracle.
+    pub seed: u64,
+    /// Per-entry-per-epoch probability that the oracle declares an
+    /// entry rotted. 0.0 = only forced corruptions are ever found.
+    pub at_rest_corruption: f64,
+    /// Scan budget per calm tick (bounds tick latency).
+    pub entries_per_tick: u32,
+}
+
+impl Default for ScrubConfig {
+    fn default() -> Self {
+        ScrubConfig { seed: 0x5C2B_0000_D1A6_0515, at_rest_corruption: 0.0, entries_per_tick: 64 }
+    }
+}
+
+/// Where the scan cursor sits: entry `offset` of `shard`, on full pass
+/// number `epoch` (epoch advances when the cursor wraps shard 0 again,
+/// re-arming the corruption oracle for every entry).
+#[derive(Clone, Copy, Debug, Default)]
+struct Cursor {
+    shard: usize,
+    offset: usize,
+    epoch: u64,
+}
+
+/// One tick's work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubTick {
+    pub scanned: u32,
+    pub repaired: u32,
+    pub repaired_bytes: u64,
+}
+
+/// Lifetime scrubber counters (monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubStats {
+    /// Ticks that actually scanned (ladder at level 0).
+    pub ticks: u64,
+    /// Ticks skipped because the ladder was engaged.
+    pub skipped_busy: u64,
+    pub scanned: u64,
+    pub repaired: u64,
+    pub repaired_bytes: u64,
+    /// Corrupt entries whose repair fetch persistently failed (slice
+    /// left evicted for demand-path refetch).
+    pub repair_failed: u64,
+}
+
+fn lock_recovering<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+fn packed(key: SliceKey) -> u64 {
+    ((key.layer as u64) << 20)
+        | ((key.expert as u64) << 4)
+        | match key.plane {
+            Plane::Msb => 0,
+            Plane::Lsb => 1,
+        }
+}
+
+/// Background integrity scrubber over a shared sharded cache. All
+/// methods take `&self`; the cursor and forced-corruption set are
+/// mutex-guarded (poison-recovered), counters are atomics.
+#[derive(Debug)]
+pub struct Scrubber {
+    cache: Arc<ShardedSliceCache>,
+    cfg: ScrubConfig,
+    /// Repair fetches go through the fault model like any demand miss.
+    injector: FaultInjector,
+    hw: HwSpec,
+    cursor: Mutex<Cursor>,
+    /// Keys deliberately corrupted (tests, chaos drills); found exactly
+    /// once each.
+    forced: Mutex<HashSet<SliceKey>>,
+    /// Repair traffic charged here (Flash bytes + fetch attempts), kept
+    /// separate from serving ledgers so benchmarks can report scrub
+    /// overhead on its own line and tests can reconcile byte-for-byte.
+    ledger: Mutex<Ledger>,
+    ticks: AtomicU64,
+    skipped_busy: AtomicU64,
+    scanned: AtomicU64,
+    repaired: AtomicU64,
+    repaired_bytes: AtomicU64,
+    repair_failed: AtomicU64,
+}
+
+impl Scrubber {
+    /// `fault_plan` governs repair fetches; pass `FaultPlan::disabled()`
+    /// for always-clean repairs.
+    pub fn new(
+        cache: Arc<ShardedSliceCache>,
+        cfg: ScrubConfig,
+        fault_plan: FaultPlan,
+        hw: HwSpec,
+    ) -> Scrubber {
+        Scrubber {
+            injector: FaultInjector::new(fault_plan, cfg.seed.rotate_left(31)),
+            cache,
+            cfg,
+            hw,
+            cursor: Mutex::new(Cursor::default()),
+            forced: Mutex::new(HashSet::new()),
+            ledger: Mutex::new(Ledger::default()),
+            ticks: AtomicU64::new(0),
+            skipped_busy: AtomicU64::new(0),
+            scanned: AtomicU64::new(0),
+            repaired: AtomicU64::new(0),
+            repaired_bytes: AtomicU64::new(0),
+            repair_failed: AtomicU64::new(0),
+        }
+    }
+
+    /// Mark `key` rotted; the scrubber will find it on its next pass
+    /// over that entry (if still resident).
+    pub fn inject_corruption(&self, key: SliceKey) {
+        lock_recovering(&self.forced).insert(key);
+    }
+
+    /// Deterministic at-rest corruption oracle (the fetch-fault idiom:
+    /// pure hash vs rate, no RNG state).
+    fn rotted(&self, key: SliceKey, epoch: u64) -> bool {
+        if self.cfg.at_rest_corruption <= 0.0 {
+            return false;
+        }
+        let h = SplitMix64::new(
+            self.cfg.seed ^ packed(key).rotate_left(23) ^ epoch.wrapping_mul(0x9E37_79B9),
+        )
+        .next_u64();
+        (h as f64 / u64::MAX as f64) < self.cfg.at_rest_corruption
+    }
+
+    /// Run one scrub tick at overload-ladder `level`. Scans only at
+    /// level 0 — an engaged ladder means Flash bandwidth is already
+    /// rationed, and scrub repairs would compete with demand fetches.
+    pub fn tick(&self, level: u8) -> ScrubTick {
+        if level != 0 {
+            self.skipped_busy.fetch_add(1, Ordering::Relaxed);
+            return ScrubTick::default();
+        }
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        let mut out = ScrubTick::default();
+        let n_shards = self.cache.n_shards();
+        let mut cur = *lock_recovering(&self.cursor);
+        let mut budget = self.cfg.entries_per_tick;
+        // At most one full lap per tick, even if every shard is empty.
+        let mut shards_visited = 0usize;
+        while budget > 0 && shards_visited <= n_shards {
+            let (_, entries) = self.cache.export_shard_residency(cur.shard);
+            if cur.offset >= entries.len() {
+                cur.offset = 0;
+                cur.shard += 1;
+                shards_visited += 1;
+                if cur.shard >= n_shards {
+                    cur.shard = 0;
+                    cur.epoch += 1;
+                }
+                continue;
+            }
+            let end = (cur.offset + budget as usize).min(entries.len());
+            for e in &entries[cur.offset..end] {
+                out.scanned += 1;
+                let forced = lock_recovering(&self.forced).remove(&e.key);
+                if forced || self.rotted(e.key, cur.epoch) {
+                    if self.repair(e.key, e.bytes, e.pinned, cur.epoch) {
+                        out.repaired += 1;
+                        out.repaired_bytes += e.bytes;
+                    }
+                }
+            }
+            budget -= (end - cur.offset) as u32;
+            cur.offset = end;
+        }
+        *lock_recovering(&self.cursor) = cur;
+        self.scanned.fetch_add(out.scanned as u64, Ordering::Relaxed);
+        self.repaired.fetch_add(out.repaired as u64, Ordering::Relaxed);
+        self.repaired_bytes.fetch_add(out.repaired_bytes, Ordering::Relaxed);
+        out
+    }
+
+    /// Evict + refetch one rotted slice through the fault model. True if
+    /// the slice is resident-and-clean again; false if the repair fetch
+    /// persistently failed (slice stays out, demand path will retry).
+    fn repair(&self, key: SliceKey, bytes: u64, pinned: bool, epoch: u64) -> bool {
+        // Unpin first or the DBSC policy may refuse to make room later.
+        if pinned {
+            self.cache.pin(key, false);
+        }
+        self.cache.remove(key);
+        let plane = match key.plane {
+            Plane::Msb => 0u8,
+            Plane::Lsb => 1u8,
+        };
+        let fo =
+            self.injector.fetch(key.layer as usize, key.expert as usize, plane, epoch, bytes);
+        if !fo.succeeded {
+            self.repair_failed.fetch_add(1, Ordering::Relaxed);
+            // Even the failed attempts moved bytes; charge them.
+            lock_recovering(&self.ledger).record(
+                Phase::Decode,
+                &self.hw,
+                0.0,
+                0,
+                fo.extra_bytes,
+                fo.attempts as u64,
+            );
+            return false;
+        }
+        let ok = !matches!(self.cache.ensure(key, bytes), Ensure::TooLarge);
+        if ok && pinned {
+            self.cache.pin(key, true);
+        }
+        lock_recovering(&self.ledger).record(
+            Phase::Decode,
+            &self.hw,
+            0.0,
+            0,
+            bytes + fo.extra_bytes,
+            fo.attempts as u64,
+        );
+        ok
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> ScrubStats {
+        ScrubStats {
+            ticks: self.ticks.load(Ordering::Relaxed),
+            skipped_busy: self.skipped_busy.load(Ordering::Relaxed),
+            scanned: self.scanned.load(Ordering::Relaxed),
+            repaired: self.repaired.load(Ordering::Relaxed),
+            repaired_bytes: self.repaired_bytes.load(Ordering::Relaxed),
+            repair_failed: self.repair_failed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Snapshot of the repair-traffic ledger (for scrub-overhead rows
+    /// and byte-for-byte reconciliation in tests).
+    pub fn ledger(&self) -> Ledger {
+        lock_recovering(&self.ledger).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled_cache(shards: usize) -> Arc<ShardedSliceCache> {
+        let cache = Arc::new(ShardedSliceCache::new(1 << 20, shards));
+        for layer in 0..2usize {
+            for expert in 0..8usize {
+                cache.ensure(SliceKey::msb(layer, expert), 1024);
+                cache.ensure(SliceKey::lsb(layer, expert), 512);
+            }
+        }
+        cache
+    }
+
+    fn scrubber(cache: Arc<ShardedSliceCache>, cfg: ScrubConfig) -> Scrubber {
+        Scrubber::new(cache, cfg, FaultPlan::disabled(), HwSpec::paper())
+    }
+
+    #[test]
+    fn engaged_ladder_skips_scanning() {
+        let s = scrubber(filled_cache(4), ScrubConfig::default());
+        assert_eq!(s.tick(2), ScrubTick::default());
+        assert_eq!(s.stats().skipped_busy, 1);
+        assert_eq!(s.stats().ticks, 0);
+    }
+
+    #[test]
+    fn clean_cache_scans_everything_without_repairs() {
+        let cache = filled_cache(4);
+        let total: u64 =
+            cache.export_residency().iter().map(|(_, v)| v.len() as u64).sum();
+        let s = scrubber(cache, ScrubConfig { entries_per_tick: 7, ..ScrubConfig::default() });
+        let mut scanned = 0u64;
+        for _ in 0..64 {
+            scanned += s.tick(0).scanned as u64;
+        }
+        assert!(scanned >= total, "cursor must lap the cache ({scanned} < {total})");
+        let st = s.stats();
+        assert_eq!((st.repaired, st.repair_failed), (0, 0));
+    }
+
+    #[test]
+    fn forced_corruption_is_repaired_and_ledger_reconciles() {
+        let cache = filled_cache(4);
+        let victim = SliceKey::msb(1, 3);
+        let pinned_victim = SliceKey::lsb(0, 5);
+        cache.pin(pinned_victim, true);
+        let s = scrubber(cache.clone(), ScrubConfig::default());
+        s.inject_corruption(victim);
+        s.inject_corruption(pinned_victim);
+        let mut tick = ScrubTick::default();
+        for _ in 0..8 {
+            let t = s.tick(0);
+            tick.repaired += t.repaired;
+            tick.repaired_bytes += t.repaired_bytes;
+        }
+        assert_eq!(tick.repaired, 2);
+        assert_eq!(tick.repaired_bytes, 1024 + 512);
+        assert!(cache.peek(victim), "repaired slice is resident again");
+        assert!(cache.is_pinned(pinned_victim), "pin survives repair");
+        let led = s.ledger();
+        assert_eq!(led.flash_bytes, 1024 + 512, "repair bytes reconcile with the ledger");
+        assert_eq!(led.flash_fetches, 2);
+        // Forced set drains: a second lap finds nothing new.
+        let before = s.stats().repaired;
+        for _ in 0..8 {
+            s.tick(0);
+        }
+        assert_eq!(s.stats().repaired, before);
+    }
+
+    #[test]
+    fn oracle_corruption_is_deterministic() {
+        let cfg = ScrubConfig { at_rest_corruption: 0.25, ..ScrubConfig::default() };
+        let run = || {
+            let s = scrubber(filled_cache(2), cfg);
+            let mut repaired = 0u64;
+            for _ in 0..16 {
+                repaired += s.tick(0).repaired as u64;
+            }
+            (repaired, s.ledger().flash_bytes)
+        };
+        let a = run();
+        assert_eq!(a, run(), "same seed + contents + ticks => same repairs");
+        assert!(a.0 > 0, "25% rate over 32 entries should rot something");
+    }
+}

@@ -1,0 +1,397 @@
+//! SMRM — "SliceMoE Residency Manifest", the durable warm-restart
+//! snapshot.
+//!
+//! A manifest captures *which* slices were resident — per shard, in
+//! recency order, with pin state and integrity checksums — plus the
+//! shard byte budgets. It deliberately carries **no weight bytes**:
+//! restore rehydrates by replaying the fills (flash fetches at ordinary
+//! cost) as a PCW-from-manifest warmup, so the snapshot is tiny (tens
+//! of bytes per resident slice), write-cheap enough to refresh on every
+//! few completions, and can never serve stale weights.
+//!
+//! Sibling of the SMWT workload trace and SMWB blob containers: same
+//! conventions (little-endian, explicit sizes, hard errors on
+//! truncation/trailing bytes), plus a whole-file CRC trailer — a torn
+//! or bit-flipped manifest must fail loudly at load, never restore a
+//! half-cache.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic "SMRM" | u16 version (=1) | u16 reserved (=0) |
+//! u64 capacity | u32 n_shards |
+//! n_shards × {
+//!   u64 budget | u32 count |
+//!   count × { u16 layer | u16 expert | u8 plane | u8 pinned |
+//!             u16 reserved | u32 rank | u64 bytes | u64 checksum }
+//! } |
+//! u64 crc (fold_checksum of every preceding byte)
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cache::warmup::{apply_manifest, apply_manifest_sharded, RestoreSummary};
+use crate::cache::{ResidentEntry, ShardedSliceCache, SliceCache};
+use crate::model::descriptor::{Plane, SliceKey};
+use crate::util::bytes;
+use crate::util::rng::SplitMix64;
+
+const MAGIC: &[u8; 4] = b"SMRM";
+const VERSION: u16 = 1;
+/// Fixed per-entry record size (see the layout above).
+const ENTRY_BYTES: usize = 2 + 2 + 1 + 1 + 2 + 4 + 8 + 8;
+
+/// Order-sensitive 64-bit fold over a byte buffer (SplitMix64 per
+/// 8-byte word, length folded in) — the whole-file CRC of the SMRM and
+/// SMRJ containers. Not cryptographic; it exists to catch torn writes
+/// and bit rot, the failure modes a crash can actually produce.
+pub fn fold_checksum(buf: &[u8]) -> u64 {
+    let mut h = 0xA5A5_5A5A_D00D_FEEDu64;
+    for chunk in buf.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        h = SplitMix64::new(h ^ u64::from_le_bytes(w)).next_u64();
+    }
+    h ^ buf.len() as u64
+}
+
+/// A point-in-time residency capture of the whole sharded cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResidencyManifest {
+    /// Global cache capacity at capture time (restore compatibility
+    /// check: shard budgets must sum to this).
+    pub capacity: u64,
+    /// Per-shard (byte budget, entries MRU→LRU).
+    pub shards: Vec<(u64, Vec<ResidentEntry>)>,
+}
+
+impl ResidencyManifest {
+    /// Capture the sharded cache under its one consistent multi-shard
+    /// lock pass ([`ShardedSliceCache::export_residency`]).
+    pub fn capture(cache: &ShardedSliceCache) -> ResidencyManifest {
+        ResidencyManifest { capacity: cache.capacity(), shards: cache.export_residency() }
+    }
+
+    /// Capture a plain single-LRU cache as a one-shard manifest.
+    pub fn capture_single(cache: &SliceCache) -> ResidencyManifest {
+        ResidencyManifest {
+            capacity: cache.capacity(),
+            shards: vec![(cache.capacity(), cache.export_residency())],
+        }
+    }
+
+    /// Total resident entries across shards.
+    pub fn entries(&self) -> u64 {
+        self.shards.iter().map(|(_, es)| es.len() as u64).sum()
+    }
+
+    /// Total resident bytes across shards.
+    pub fn resident_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .flat_map(|(_, es)| es.iter())
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Rehydrate a sharded cache (PCW-from-manifest warmup). See
+    /// [`apply_manifest_sharded`] for budget compatibility and the
+    /// AMAT degradation order under a short `restore_budget`.
+    pub fn restore_into(
+        &self,
+        cache: &ShardedSliceCache,
+        restore_budget: Option<u64>,
+    ) -> RestoreSummary {
+        apply_manifest_sharded(cache, &self.shards, restore_budget)
+    }
+
+    /// Rehydrate a plain single-LRU cache (shard lists interleaved by
+    /// rank, exactly as the sharded restore reconstructs recency).
+    pub fn restore_into_single(
+        &self,
+        cache: &mut SliceCache,
+        restore_budget: Option<u64>,
+    ) -> RestoreSummary {
+        let mut global: Vec<ResidentEntry> = Vec::new();
+        for (si, (_, entries)) in self.shards.iter().enumerate() {
+            global.extend(entries.iter().copied().map(|mut e| {
+                e.rank = e.rank * self.shards.len() as u32 + si as u32;
+                e
+            }));
+        }
+        global.sort_by_key(|e| e.rank);
+        for (i, e) in global.iter_mut().enumerate() {
+            e.rank = i as u32;
+        }
+        apply_manifest(cache, &global, restore_budget)
+    }
+
+    /// Serialize to the SMRM byte layout (CRC trailer included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let n_entries: usize = self.shards.iter().map(|(_, es)| es.len()).sum();
+        let mut out = Vec::with_capacity(24 + self.shards.len() * 12 + n_entries * ENTRY_BYTES);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.capacity.to_le_bytes());
+        out.extend_from_slice(&(self.shards.len() as u32).to_le_bytes());
+        for (budget, entries) in &self.shards {
+            out.extend_from_slice(&budget.to_le_bytes());
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for e in entries {
+                out.extend_from_slice(&e.key.layer.to_le_bytes());
+                out.extend_from_slice(&e.key.expert.to_le_bytes());
+                out.push(match e.key.plane {
+                    Plane::Msb => 0,
+                    Plane::Lsb => 1,
+                });
+                out.push(u8::from(e.pinned));
+                out.extend_from_slice(&0u16.to_le_bytes());
+                out.extend_from_slice(&e.rank.to_le_bytes());
+                out.extend_from_slice(&e.bytes.to_le_bytes());
+                out.extend_from_slice(&e.checksum.to_le_bytes());
+            }
+        }
+        let crc = fold_checksum(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse an SMRM buffer, validating magic, version, CRC, and exact
+    /// length. A corrupt entry (plane flag, per-slice checksum) is an
+    /// error: restoring it would rehydrate a slice the scrubber would
+    /// immediately have to throw away.
+    pub fn parse(buf: &[u8]) -> Result<ResidencyManifest> {
+        if buf.len() < 8 {
+            bail!("truncated manifest at byte 0");
+        }
+        let (body, trailer) = buf.split_at(buf.len() - 8);
+        let crc = u64::from_le_bytes(trailer.try_into()?);
+        if crc != fold_checksum(body) {
+            bail!("manifest CRC mismatch (torn write or bit rot)");
+        }
+        let mut pos = 0usize;
+        let take =
+            |pos: &mut usize, n: usize| -> Result<&[u8]> { bytes::take(body, pos, n, "manifest") };
+        if take(&mut pos, 4)? != MAGIC {
+            bail!("bad magic (not an SMRM residency manifest)");
+        }
+        let version = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported manifest version {version} (this reader speaks {VERSION})");
+        }
+        let _reserved = take(&mut pos, 2)?;
+        let capacity = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+        let n_shards = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+        // cap pre-allocations by what the buffer could hold: a corrupt
+        // count must yield a truncation error, not a huge allocation
+        let plausible_shards = body.len().saturating_sub(pos) / 12;
+        let mut shards = Vec::with_capacity(n_shards.min(plausible_shards));
+        for _ in 0..n_shards {
+            let budget = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+            let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?) as usize;
+            let plausible = body.len().saturating_sub(pos) / ENTRY_BYTES;
+            let mut entries = Vec::with_capacity(count.min(plausible));
+            for _ in 0..count {
+                let layer = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?);
+                let expert = u16::from_le_bytes(take(&mut pos, 2)?.try_into()?);
+                let plane = match take(&mut pos, 1)?[0] {
+                    0 => Plane::Msb,
+                    1 => Plane::Lsb,
+                    p => bail!("bad plane flag {p} (manifest corrupt)"),
+                };
+                let pinned = match take(&mut pos, 1)?[0] {
+                    0 => false,
+                    1 => true,
+                    p => bail!("bad pin flag {p} (manifest corrupt)"),
+                };
+                let _entry_reserved = take(&mut pos, 2)?;
+                let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into()?);
+                let bytes_ = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                let checksum = u64::from_le_bytes(take(&mut pos, 8)?.try_into()?);
+                let key = SliceKey { layer, expert, plane };
+                if checksum != crate::cache::slice_cache::slice_checksum(key) {
+                    bail!("slice checksum mismatch for {key:?} (manifest corrupt)");
+                }
+                entries.push(ResidentEntry { key, bytes: bytes_, rank, pinned, checksum });
+            }
+            shards.push((budget, entries));
+        }
+        if pos != body.len() {
+            bail!("trailing {} bytes after last shard", body.len() - pos);
+        }
+        Ok(ResidencyManifest { capacity, shards })
+    }
+
+    /// Persist atomically (temp file + rename): a crash mid-write leaves
+    /// the previous manifest intact, never a torn one.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        bytes::atomic_write(path, &self.to_bytes())
+            .with_context(|| format!("write manifest {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ResidencyManifest> {
+        let buf = std::fs::read(path)
+            .with_context(|| format!("open manifest {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parse manifest {}", path.display()))
+    }
+}
+
+/// Periodic manifest writer for a live server: refreshes the on-disk
+/// SMRM every `every`-th completion (each write is atomic, so the disk
+/// always holds a complete manifest from at most `every` completions
+/// ago). Shared by reference between the scheduler's recv path and the
+/// drain-then-snapshot shutdown.
+#[derive(Debug)]
+pub struct SnapshotSink {
+    cache: Arc<ShardedSliceCache>,
+    path: PathBuf,
+    every: u64,
+    completions: AtomicU64,
+    written: AtomicU64,
+}
+
+impl SnapshotSink {
+    /// Conventional manifest file name inside a snapshot directory.
+    pub const FILE_NAME: &'static str = "residency.smrm";
+
+    pub fn new(cache: Arc<ShardedSliceCache>, path: PathBuf, every: u64) -> SnapshotSink {
+        SnapshotSink {
+            cache,
+            path,
+            every: every.max(1),
+            completions: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Shard count of the cache this sink snapshots.
+    pub fn shards(&self) -> usize {
+        self.cache.n_shards()
+    }
+
+    /// Count one completed request; every `every`-th refreshes the
+    /// manifest. Returns (entries, bytes) when a snapshot was written.
+    pub fn on_complete(&self) -> Result<Option<(u64, u64)>> {
+        let n = self.completions.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.every == 0 {
+            return self.snapshot_now().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Capture and persist right now (the drain-then-snapshot shutdown
+    /// arm). Returns (entries, bytes) of the written manifest.
+    pub fn snapshot_now(&self) -> Result<(u64, u64)> {
+        let m = ResidencyManifest::capture(&self.cache);
+        m.write(&self.path)?;
+        self.written.fetch_add(1, Ordering::Relaxed);
+        Ok((m.entries(), m.resident_bytes()))
+    }
+
+    /// Manifests written since construction.
+    pub fn written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ResidencyManifest {
+        let cache = ShardedSliceCache::new(1000, 2);
+        for e in 0..6usize {
+            cache.ensure(SliceKey::msb(e % 3, e), 40);
+        }
+        cache.ensure(SliceKey::lsb(0, 0), 20);
+        cache.pin(SliceKey::msb(0, 0), true);
+        ResidencyManifest::capture(&cache)
+    }
+
+    #[test]
+    fn byte_roundtrip_is_identical() {
+        let m = sample();
+        let parsed = ResidencyManifest::parse(&m.to_bytes()).unwrap();
+        assert_eq!(parsed, m);
+        assert_eq!(m.to_bytes(), parsed.to_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_magic_version_truncation_and_crc() {
+        let buf = sample().to_bytes();
+        let mut bad = buf.clone();
+        bad[0] = b'X';
+        // a flipped magic byte also breaks the CRC — both are loud
+        assert!(ResidencyManifest::parse(&bad).is_err());
+
+        for cut in [0, 3, 10, buf.len() - 1] {
+            let e = ResidencyManifest::parse(&buf[..cut]).unwrap_err();
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("CRC"),
+                "cut {cut}: {msg}"
+            );
+        }
+
+        // flip one payload byte: CRC catches it
+        let mut flipped = buf.clone();
+        flipped[9] ^= 0x40;
+        let e = ResidencyManifest::parse(&flipped).unwrap_err();
+        assert!(format!("{e:#}").contains("CRC"), "{e:#}");
+
+        // flip the trailer itself
+        let mut bad_crc = buf.clone();
+        let n = bad_crc.len();
+        bad_crc[n - 1] ^= 0xFF;
+        let e = ResidencyManifest::parse(&bad_crc).unwrap_err();
+        assert!(format!("{e:#}").contains("CRC"), "{e:#}");
+    }
+
+    #[test]
+    fn huge_counts_error_without_allocating() {
+        // corrupt the shard count to u32::MAX and re-stamp the CRC so
+        // the parser reaches the count: it must fail as truncation, not
+        // attempt the allocation the count claims
+        let mut buf = sample().to_bytes();
+        buf.truncate(buf.len() - 8);
+        buf[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        let crc = fold_checksum(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let e = ResidencyManifest::parse(&buf).unwrap_err();
+        assert!(format!("{e:#}").contains("truncated"), "{e:#}");
+    }
+
+    #[test]
+    fn file_roundtrip_via_atomic_write() {
+        let m = sample();
+        let path = std::env::temp_dir()
+            .join(format!("smrm_unit_{}.smrm", std::process::id()));
+        m.write(&path).unwrap();
+        let loaded = ResidencyManifest::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(loaded, m);
+    }
+
+    #[test]
+    fn snapshot_sink_writes_every_nth_completion() {
+        let cache = Arc::new(ShardedSliceCache::new(500, 2));
+        cache.ensure(SliceKey::msb(0, 0), 40);
+        let path = std::env::temp_dir()
+            .join(format!("smrm_sink_{}.smrm", std::process::id()));
+        let sink = SnapshotSink::new(cache, path.clone(), 2);
+        assert!(sink.on_complete().unwrap().is_none());
+        let (entries, bytes_) = sink.on_complete().unwrap().expect("2nd completion snapshots");
+        assert_eq!((entries, bytes_), (1, 40));
+        assert_eq!(sink.written(), 1);
+        assert!(ResidencyManifest::load(&path).is_ok());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -22,7 +22,8 @@
 //! With more than one lane, responses arrive in COMPLETION order; the
 //! per-response `id` and `lane` fields identify them.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
@@ -30,8 +31,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::cache::{ShardedSliceCache, SliceCache};
+use crate::cache::{RestoreSummary, ShardedSliceCache, SliceCache};
 use crate::control::{ControlSignals, Controller, LaneBeat};
+use crate::recover::{Journal, PendingRequest, ResidencyManifest, Scrubber, SnapshotSink};
 use crate::serve::{CostModelBackend, ExpertBackend, ServeConfig, ServeLoop, WaveEngine};
 use crate::sim::trace::{RoutingBias, TraceParams};
 use crate::telemetry::{Clock, RequestSpan, TelemetryHub};
@@ -115,6 +117,15 @@ pub struct Response {
     pub breaker_skips: u64,
     /// Circuit-breaker trips observed on the serving lane.
     pub breaker_trips: u64,
+    /// This response came from a journal-backed re-execution: the lane
+    /// watchdog condemned the original service attempt and re-admitted
+    /// the request from its admit record (zero served-work loss).
+    pub reexecuted: bool,
+    /// The watchdog condemned this request but re-admission was not
+    /// possible (no journal record left, or the queue refused): one
+    /// paired outcome with zero served work — the journaled analogue of
+    /// the old "request abandoned" failure.
+    pub reexec_failed: bool,
 }
 
 impl Response {
@@ -153,6 +164,8 @@ impl Response {
             retry_energy_j: lane.fault_counters.retry_energy_j,
             breaker_skips: lane.fault_counters.breaker_skips,
             breaker_trips: lane.breaker.as_ref().map_or(0, |b| b.stats().trips),
+            reexecuted: false,
+            reexec_failed: false,
         }
     }
 
@@ -182,6 +195,8 @@ impl Response {
             retry_energy_j: 0.0,
             breaker_skips: 0,
             breaker_trips: 0,
+            reexecuted: false,
+            reexec_failed: false,
         }
     }
 
@@ -192,6 +207,15 @@ impl Response {
         let mut r = Response::shed(id, 0.0);
         r.shed = false;
         r.refused = true;
+        r
+    }
+
+    /// The watchdog condemned this request and journal-backed
+    /// re-admission failed: one paired recv outcome, zero served work.
+    pub fn reexec_failed(id: u64) -> Response {
+        let mut r = Response::shed(id, 0.0);
+        r.shed = false;
+        r.reexec_failed = true;
         r
     }
 
@@ -252,6 +276,11 @@ pub struct BatchSummary {
     pub breaker_skips: u64,
     /// Circuit-breaker trips across served requests.
     pub breaker_trips: u64,
+    /// Responses produced by journal-backed watchdog re-execution.
+    pub reexecuted: u64,
+    /// Condemned requests whose re-admission failed (zero served work,
+    /// excluded from the same aggregates as `shed`).
+    pub reexec_failed: u64,
 }
 
 /// Total over empty/zero-token response sets is well-defined: every field
@@ -265,7 +294,7 @@ pub fn summarize(responses: &[Response]) -> BatchSummary {
     // percentile) and out of the token/energy totals; they still count
     // as requests
     let served: Vec<&Response> =
-        responses.iter().filter(|r| !r.shed && !r.refused).collect();
+        responses.iter().filter(|r| !r.shed && !r.refused && !r.reexec_failed).collect();
     let lat: Vec<f64> = served
         .iter()
         .map(|r| r.decode_wall_s / r.decode_tokens.max(1) as f64)
@@ -294,6 +323,8 @@ pub fn summarize(responses: &[Response]) -> BatchSummary {
         retry_energy_j: served.iter().map(|r| r.retry_energy_j).sum(),
         breaker_skips: served.iter().map(|r| r.breaker_skips).sum(),
         breaker_trips: served.iter().map(|r| r.breaker_trips).sum(),
+        reexecuted: responses.iter().filter(|r| r.reexecuted).count() as u64,
+        reexec_failed: responses.iter().filter(|r| r.reexec_failed).count() as u64,
     }
 }
 
@@ -934,6 +965,21 @@ pub struct ServerHandle {
     /// Wave mode only: the shared in-flight map, so the watchdog can
     /// answer every request wedged inside a wave step.
     wave_inflight: Option<Arc<Mutex<HashMap<u64, u64>>>>,
+    /// Crash-safety attachments (all `None` by default — every serving
+    /// path is bit-exact without them).
+    journal: Option<Arc<Journal>>,
+    scrubber: Option<Arc<Scrubber>>,
+    snapshot_sink: Option<Arc<SnapshotSink>>,
+    /// Request ids the watchdog re-admitted from the journal; their
+    /// eventual responses are stamped `reexecuted` at delivery.
+    redriven: Mutex<HashSet<u64>>,
+    /// Crash-drill arm: abort the whole process right before delivering
+    /// the Nth response (0 = disarmed, the only value outside CI kill
+    /// legs and crash tests).
+    kill_after: AtomicU64,
+    /// Responses delivered so far (counted only while the drill is
+    /// armed).
+    delivered: AtomicU64,
 }
 
 impl ServerHandle {
@@ -1025,6 +1071,12 @@ impl ServerHandle {
             respawn: Some(respawn),
             extra_workers: Mutex::new(Vec::new()),
             wave_inflight: None,
+            journal: None,
+            scrubber: None,
+            snapshot_sink: None,
+            redriven: Mutex::new(HashSet::new()),
+            kill_after: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
         }
     }
 
@@ -1141,6 +1193,12 @@ impl ServerHandle {
             respawn: Some(respawn),
             extra_workers: Mutex::new(Vec::new()),
             wave_inflight: Some(inflight),
+            journal: None,
+            scrubber: None,
+            snapshot_sink: None,
+            redriven: Mutex::new(HashSet::new()),
+            kill_after: AtomicU64::new(0),
+            delivered: AtomicU64::new(0),
         }
     }
 
@@ -1157,6 +1215,40 @@ impl ServerHandle {
     /// bit-exact (pinned by `tests/control_parity.rs`).
     pub fn attach_controller(&mut self, ctl: Arc<Controller>) {
         self.controller = Some(ctl);
+    }
+
+    /// Attach an admission [`Journal`]. From here on every accepted
+    /// submit appends an admit record, every delivered Ok response
+    /// appends a completion mark, and the lane watchdog upgrades its
+    /// condemned-lane arm from "answer with failure" to bounded
+    /// journal-backed re-admission. The journal's base seed should match
+    /// the backend's so re-driven requests derive identical per-request
+    /// seeds.
+    pub fn attach_journal(&mut self, journal: Arc<Journal>) {
+        self.journal = Some(journal);
+    }
+
+    /// Attach the online cache [`Scrubber`]; it is ticked from
+    /// submit/recv at the controller's current ladder level (level 0
+    /// when no controller is attached — an idle client is a calm one).
+    pub fn attach_scrubber(&mut self, scrubber: Arc<Scrubber>) {
+        self.scrubber = Some(scrubber);
+    }
+
+    /// Attach a periodic [`SnapshotSink`]: a residency manifest is
+    /// written every Nth delivered response and once more at shutdown
+    /// (drain-then-snapshot).
+    pub fn attach_snapshot_sink(&mut self, sink: Arc<SnapshotSink>) {
+        self.snapshot_sink = Some(sink);
+    }
+
+    /// Arm the crash drill: `std::process::abort()` fires immediately
+    /// before the `n`th response would be delivered — no unwinding, no
+    /// buffered-state flush. CI's kill-and-restart leg uses this to cut
+    /// the process mid-run and prove the journaled restart path; it is
+    /// never armed in normal serving.
+    pub fn set_kill_after(&self, n: u64) {
+        self.kill_after.store(n, Ordering::SeqCst);
     }
 
     /// Poisoned queue-lock recoveries since start (see [`BoundedQueue`]).
@@ -1196,6 +1288,78 @@ impl ServerHandle {
         }
     }
 
+    /// Tick the attached scrubber (no-op without one) at the current
+    /// overload-ladder level; the scrubber itself scans only at level 0.
+    fn scrub_tick(&self) {
+        let Some(s) = &self.scrubber else { return };
+        let level = self.controller.as_ref().map_or(0, |c| c.level());
+        let t = s.tick(level);
+        if t.scanned > 0 {
+            if let Some(hub) = &self.hub {
+                hub.on_scrub(t.scanned, t.repaired, t.repaired_bytes);
+            }
+        }
+    }
+
+    /// Append `req`'s admit record (no-op without a journal). A failed
+    /// append must not fail serving: it is reported and the request
+    /// proceeds un-journaled (it just can't be re-driven).
+    fn journal_admit(&self, req: &Request) {
+        let Some(j) = &self.journal else { return };
+        let p = PendingRequest {
+            id: req.id,
+            seed: request_seed(j.base_seed(), req.id),
+            prompt: req.prompt.clone(),
+            decode_tokens: req.decode_tokens as u32,
+            slo: req.slo,
+            bias: req.bias,
+        };
+        if let Err(e) = j.record_admit(&p) {
+            eprintln!("journal: admit record for request {} failed: {e:#}", req.id);
+        }
+    }
+
+    /// Delivery hook for every Ok response handed to the client: mark
+    /// the journal completion, stamp the `reexecuted` flag if the
+    /// watchdog re-admitted this id, and run the periodic snapshot sink.
+    fn deliver(&self, mut r: Response) -> Response {
+        let kill_at = self.kill_after.load(Ordering::SeqCst);
+        if kill_at != 0 && self.delivered.fetch_add(1, Ordering::SeqCst) + 1 >= kill_at {
+            // hard kill: no unwinding, no flushing, no Drop — exactly
+            // the failure the journal and snapshot must survive. The
+            // response in hand is never delivered and never marked
+            // complete, so the restart re-drives it.
+            eprintln!("kill-after: aborting before delivery #{kill_at} (crash drill)");
+            std::process::abort();
+        }
+        if let Some(j) = &self.journal {
+            if let Err(e) = j.record_complete(r.id) {
+                eprintln!("journal: completion mark for request {} failed: {e:#}", r.id);
+            }
+        }
+        {
+            let mut redriven = self.redriven.lock().unwrap_or_else(|p| {
+                self.redriven.clear_poison();
+                p.into_inner()
+            });
+            if redriven.remove(&r.id) {
+                r.reexecuted = true;
+            }
+        }
+        if let Some(sink) = &self.snapshot_sink {
+            match sink.on_complete() {
+                Ok(Some((entries, bytes))) => {
+                    if let Some(hub) = &self.hub {
+                        hub.on_snapshot(sink.shards() as u32, entries, bytes);
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("snapshot: periodic manifest write failed: {e:#}"),
+            }
+        }
+        r
+    }
+
     /// Client-driven lane watchdog: any lane whose in-flight request has
     /// gone `watchdog_timeout_us` without a heartbeat is declared
     /// wedged — its in-flight request(s) are answered through the
@@ -1227,15 +1391,25 @@ impl ServerHandle {
                         let mut ids: Vec<u64> = inf.keys().copied().collect();
                         ids.sort_unstable();
                         for rid in ids {
-                            pending.push_back(Err(anyhow::anyhow!(
-                                "wave worker wedged on request {id}; request {rid} abandoned"
-                            )));
+                            if self.journal.is_some() {
+                                self.redrive_or_fail(rid, now, &mut pending);
+                            } else {
+                                pending.push_back(Err(anyhow::anyhow!(
+                                    "wave worker wedged on request {id}; request {rid} abandoned"
+                                )));
+                            }
                         }
                         inf.clear();
                     }
-                    None => pending.push_back(Err(anyhow::anyhow!(
-                        "lane {lane} wedged serving request {id}; request abandoned"
-                    ))),
+                    None => {
+                        if self.journal.is_some() {
+                            self.redrive_or_fail(id, now, &mut pending);
+                        } else {
+                            pending.push_back(Err(anyhow::anyhow!(
+                                "lane {lane} wedged serving request {id}; request abandoned"
+                            )));
+                        }
+                    }
                 }
             }
             let fresh = Arc::new(LaneBeat::new());
@@ -1255,12 +1429,61 @@ impl ServerHandle {
         replaced
     }
 
+    /// The watchdog's journal-backed condemned-request arm: re-admit
+    /// `id` from its admit record (bounded to once per id by the
+    /// journal), falling back to one paired `reexec_failed` outcome
+    /// when no record is available or the queue refuses. Returns true
+    /// if the request was re-queued.
+    fn redrive_or_fail(
+        &self,
+        id: u64,
+        now: u64,
+        pending: &mut VecDeque<Result<Response>>,
+    ) -> bool {
+        let redriven = self.journal.as_ref().and_then(|j| j.take_for_redrive(id)).and_then(|p| {
+            let req = Request {
+                id: p.id,
+                prompt: p.prompt,
+                decode_tokens: p.decode_tokens as usize,
+                bias: p.bias,
+                slo: p.slo,
+            };
+            match self.queue.try_push(Queued { req, enqueue_us: now, deferred: 0 }) {
+                TryPush::Pushed => Some(()),
+                TryPush::Full(_) | TryPush::Closed(_) => None,
+            }
+        });
+        match redriven {
+            Some(()) => {
+                self.redriven
+                    .lock()
+                    .unwrap_or_else(|p| {
+                        self.redriven.clear_poison();
+                        p.into_inner()
+                    })
+                    .insert(id);
+                if let Some(hub) = &self.hub {
+                    hub.on_reexec(id, true);
+                }
+                true
+            }
+            None => {
+                if let Some(hub) = &self.hub {
+                    hub.on_reexec(id, false);
+                }
+                pending.push_back(Ok(Response::reexec_failed(id)));
+                false
+            }
+        }
+    }
+
     /// Submit a request (blocks while the queue is full — backpressure).
     /// At controller ladder level 3 the admission token bucket runs
     /// FIRST: a refused request never enters the queue and its paired
     /// outcome (a [`Response::refused`]) is delivered through `recv`.
     pub fn submit(&self, req: Request) -> Result<()> {
         self.control_tick();
+        self.scrub_tick();
         if let Some(ctl) = &self.controller {
             if !ctl.try_admit() {
                 if let Some(hub) = &self.hub {
@@ -1270,6 +1493,10 @@ impl ServerHandle {
                 return Ok(());
             }
         }
+        // journal BEFORE the push: once a worker can see the request its
+        // admit record must already be durable, or a crash between push
+        // and append would orphan an in-flight request
+        self.journal_admit(&req);
         self.queue
             .push(Queued { req, enqueue_us: self.clock.now_us(), deferred: 0 })
             .map_err(|_| anyhow::anyhow!("server closed"))
@@ -1283,6 +1510,7 @@ impl ServerHandle {
     /// with the refused outcome delivered through `recv`/`try_recv`.
     pub fn try_submit(&self, req: Request) -> Result<Option<Request>> {
         self.control_tick();
+        self.scrub_tick();
         if let Some(ctl) = &self.controller {
             if !ctl.try_admit() {
                 if let Some(hub) = &self.hub {
@@ -1292,6 +1520,9 @@ impl ServerHandle {
                 return Ok(None);
             }
         }
+        // journal before the push (see `submit`); a Full hand-back may
+        // re-journal the same id on retry — replay dedups by id
+        self.journal_admit(&req);
         let item = Queued { req, enqueue_us: self.clock.now_us(), deferred: 0 };
         match self.queue.try_push(item) {
             TryPush::Pushed => Ok(None),
@@ -1306,14 +1537,16 @@ impl ServerHandle {
     /// blocked, ticks the controller and polls the watchdog.
     pub fn recv(&self) -> Result<Response> {
         self.control_tick();
+        self.scrub_tick();
         loop {
             if let Some(out) = self.pending().pop_front() {
-                return out;
+                return out.map(|r| self.deliver(r));
             }
             match self.rx.recv_timeout(Duration::from_millis(1)) {
-                Ok(out) => return out,
+                Ok(out) => return out.map(|r| self.deliver(r)),
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     self.control_tick();
+                    self.scrub_tick();
                     if self.poll_watchdog() > 0 {
                         continue; // the watchdog pushed pending outcomes
                     }
@@ -1321,7 +1554,7 @@ impl ServerHandle {
                         // drain any straggler the channel still buffers
                         // (the respawner's sender clone keeps it open)
                         if let Ok(out) = self.rx.try_recv() {
-                            return out;
+                            return out.map(|r| self.deliver(r));
                         }
                         return Err(anyhow::anyhow!("server workers gone"));
                     }
@@ -1340,19 +1573,20 @@ impl ServerHandle {
     /// between timed submissions without parking.
     pub fn try_recv(&self) -> Result<Option<Response>> {
         self.control_tick();
+        self.scrub_tick();
         if let Some(out) = self.pending().pop_front() {
-            return out.map(Some);
+            return out.map(|r| Some(self.deliver(r)));
         }
         match self.rx.try_recv() {
-            Ok(res) => res.map(Some),
+            Ok(res) => res.map(|r| Some(self.deliver(r))),
             Err(mpsc::TryRecvError::Empty) => {
                 self.poll_watchdog();
                 if let Some(out) = self.pending().pop_front() {
-                    return out.map(Some);
+                    return out.map(|r| Some(self.deliver(r)));
                 }
                 if self.live.load(Ordering::Acquire) == 0 {
                     if let Ok(res) = self.rx.try_recv() {
-                        return res.map(Some);
+                        return res.map(|r| Some(self.deliver(r)));
                     }
                     return Err(anyhow::anyhow!("server workers gone"));
                 }
@@ -1389,7 +1623,40 @@ impl ServerHandle {
         for w in extras {
             let _ = w.join();
         }
+        // drain-then-snapshot: with every worker joined the cache is
+        // quiescent, so the shutdown manifest is the warmest possible
+        // restart image
+        if let Some(sink) = &self.snapshot_sink {
+            match sink.snapshot_now() {
+                Ok((entries, bytes)) => {
+                    if let Some(hub) = &self.hub {
+                        hub.on_snapshot(sink.shards() as u32, entries, bytes);
+                    }
+                }
+                Err(e) => eprintln!("snapshot: shutdown manifest write failed: {e:#}"),
+            }
+        }
     }
+}
+
+/// Rehydrate a shared sharded cache from the residency manifest in
+/// `snapshot_dir` — the restart half of crash-safe serving, run BEFORE
+/// starting the server so the first request already sees a warm cache.
+/// `restore_budget` caps the replayed bytes (`None` = restore all);
+/// when short, the manifest plan keeps pinned + MSB entries first (the
+/// AMAT low-bit prefix degradation). Emits a `Restore` event into `hub`.
+pub fn restore_cache_from_snapshot(
+    snapshot_dir: &Path,
+    cache: &ShardedSliceCache,
+    restore_budget: Option<u64>,
+    hub: Option<&TelemetryHub>,
+) -> Result<RestoreSummary> {
+    let manifest = ResidencyManifest::load(&snapshot_dir.join(SnapshotSink::FILE_NAME))?;
+    let summary = manifest.restore_into(cache, restore_budget);
+    if let Some(hub) = hub {
+        hub.on_restore(summary.restored, summary.restored_bytes, summary.dropped);
+    }
+    Ok(summary)
 }
 
 impl Drop for ServerHandle {
@@ -1596,6 +1863,8 @@ mod tests {
                 retry_energy_j: 0.0,
                 breaker_skips: 0,
                 breaker_trips: 0,
+                reexecuted: false,
+                reexec_failed: false,
             })
         }
     }
@@ -1895,6 +2164,8 @@ mod tests {
             retry_energy_j: 0.0,
             breaker_skips: 0,
             breaker_trips: 0,
+            reexecuted: false,
+            reexec_failed: false,
         };
         assert_eq!(zero.tokens_per_s(), 0.0);
         let s = summarize(&[zero.clone(), zero]);
@@ -2289,6 +2560,59 @@ mod tests {
         assert_eq!(served[0].id, 1, "replacement lane served the queued request");
         // the condemned lane wakes, discards its result, and retires —
         // shutdown joins both generations without hanging
+        h.shutdown();
+    }
+
+    /// Wedges past the watchdog timeout the FIRST time it serves request
+    /// 0; instant on every other call (so the re-driven attempt lands).
+    struct WedgeOnceBackend {
+        wedged: Arc<AtomicUsize>,
+    }
+
+    impl Backend for WedgeOnceBackend {
+        fn serve(&mut self, req: &Request) -> Result<Response> {
+            if req.id == 0 && self.wedged.fetch_add(1, Ordering::SeqCst) == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(400));
+            }
+            MockBackend { delay_ms: 0 }.serve(req)
+        }
+    }
+
+    #[test]
+    fn watchdog_redrives_condemned_request_from_journal() {
+        use crate::control::{ControlConfig, Controller};
+        let path = std::env::temp_dir()
+            .join(format!("smrj_redrive_{}.smrj", std::process::id()));
+        let journal = Arc::new(Journal::create(&path, 0xBA5E).unwrap());
+        let ctl = Arc::new(Controller::new(ControlConfig {
+            watchdog_timeout_us: 30_000,
+            ..ControlConfig::default()
+        }));
+        let wedged = Arc::new(AtomicUsize::new(0));
+        let w = Arc::clone(&wedged);
+        let mut h = ServerHandle::start(1, 4, move |_| {
+            Ok(WedgeOnceBackend { wedged: Arc::clone(&w) })
+        });
+        h.attach_controller(Arc::clone(&ctl));
+        h.attach_journal(Arc::clone(&journal));
+        h.submit(Request::new(0, vec![1], 1)).unwrap(); // wedges the lane once
+        h.submit(Request::new(1, vec![1], 1)).unwrap();
+        // one-response-per-submit holds ACROSS the condemn + re-drive:
+        // both outcomes are Ok — the wedged request is answered by its
+        // re-executed service, not a failure
+        let mut got = vec![h.recv().unwrap(), h.recv().unwrap()];
+        got.sort_by_key(|r| r.id);
+        let _ = std::fs::remove_file(&path);
+        assert_eq!((got[0].id, got[1].id), (0, 1));
+        assert!(got[0].reexecuted, "condemned request served via journal re-drive");
+        assert!(!got[0].reexec_failed);
+        assert_eq!(got[0].decode_tokens, 1, "re-driven request fully served");
+        assert!(!got[1].reexecuted, "unaffected request is not marked");
+        let s = summarize(&got);
+        assert_eq!((s.reexecuted, s.reexec_failed), (1, 0));
+        // every delivered response left a completion mark
+        assert_eq!(journal.open_requests(), 0);
+        assert!(wedged.load(Ordering::SeqCst) >= 2, "request 0 was served twice");
         h.shutdown();
     }
 }

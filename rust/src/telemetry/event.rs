@@ -71,6 +71,18 @@ pub enum Event {
     Refused,
     /// The overload controller's degradation ladder stepped to `level`.
     Ladder { level: u8 },
+    /// A residency manifest was written to the snapshot dir.
+    Snapshot { shards: u32, entries: u64, bytes: u64 },
+    /// A residency manifest was restored into the live cache. `dropped`
+    /// counts entries the restore budget could not admit (the AMAT
+    /// low-bit degradation path).
+    Restore { entries: u64, bytes: u64, dropped: u64 },
+    /// One calm-tick scrub pass over the cache.
+    Scrub { scanned: u32, repaired: u32, repaired_bytes: u64 },
+    /// A journaled request was re-driven (by the lane watchdog or the
+    /// restart path). `ok = false` means re-admission itself failed and
+    /// the request was answered with a failure response.
+    Reexec { request_id: u64, ok: bool },
 }
 
 /// An [`Event`] stamped with its [`Clock`](super::Clock) time.

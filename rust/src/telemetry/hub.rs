@@ -213,6 +213,38 @@ impl TelemetryHub {
         }
     }
 
+    /// Push one engine-level (requestless) event with the shared
+    /// cap-or-count policy.
+    fn push_engine_event(&self, ev: Event) {
+        let t = self.clock.now_us();
+        let mut inner = self.inner.lock().expect("telemetry hub poisoned");
+        if inner.events.len() < self.max_events {
+            inner.events.push((NO_REQUEST, Stamped { t_us: t, ev }));
+        } else {
+            inner.dropped += 1;
+        }
+    }
+
+    /// A residency manifest was written to the snapshot dir.
+    pub fn on_snapshot(&self, shards: u32, entries: u64, bytes: u64) {
+        self.push_engine_event(Event::Snapshot { shards, entries, bytes });
+    }
+
+    /// A residency manifest was restored into the live cache.
+    pub fn on_restore(&self, entries: u64, bytes: u64, dropped: u64) {
+        self.push_engine_event(Event::Restore { entries, bytes, dropped });
+    }
+
+    /// One calm-tick scrub pass completed (emitted only when it scanned).
+    pub fn on_scrub(&self, scanned: u32, repaired: u32, repaired_bytes: u64) {
+        self.push_engine_event(Event::Scrub { scanned, repaired, repaired_bytes });
+    }
+
+    /// A journaled request was re-driven (watchdog or restart path).
+    pub fn on_reexec(&self, request_id: u64, ok: bool) {
+        self.push_engine_event(Event::Reexec { request_id, ok });
+    }
+
     /// Copy the accumulated state out for export.
     pub fn snapshot(&self) -> TelemetryReport {
         let inner = self.inner.lock().expect("telemetry hub poisoned");
@@ -337,6 +369,31 @@ mod tests {
             })
             .collect();
         assert_eq!(ladder_levels, vec![1, 0]);
+    }
+
+    #[test]
+    fn recovery_events_are_streamed() {
+        let (clock, hand) = Clock::manual();
+        let hub = TelemetryHub::new(clock);
+        hub.on_snapshot(4, 32, 1 << 16);
+        hand.advance_us(1_000);
+        hub.on_restore(30, 60_000, 2);
+        hub.on_scrub(16, 1, 1024);
+        hub.on_reexec(7, true);
+        hub.on_reexec(8, false);
+        let rep = hub.snapshot();
+        let evs: Vec<Event> = rep.events.iter().map(|(_, st)| st.ev).collect();
+        assert_eq!(
+            evs,
+            vec![
+                Event::Snapshot { shards: 4, entries: 32, bytes: 1 << 16 },
+                Event::Restore { entries: 30, bytes: 60_000, dropped: 2 },
+                Event::Scrub { scanned: 16, repaired: 1, repaired_bytes: 1024 },
+                Event::Reexec { request_id: 7, ok: true },
+                Event::Reexec { request_id: 8, ok: false },
+            ]
+        );
+        assert!(rep.events.iter().all(|(id, _)| *id == NO_REQUEST));
     }
 
     #[test]

@@ -230,6 +230,50 @@ pub fn render(report: &TelemetryReport) -> Json {
             Event::Ladder { level } => {
                 events.push(instant("ladder", st.t_us, tid, obj([("level", num(level as f64))])));
             }
+            Event::Snapshot { shards, entries, bytes } => {
+                events.push(instant(
+                    "snapshot",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("shards", num(shards as f64)),
+                        ("entries", num(entries as f64)),
+                        ("bytes", num(bytes as f64)),
+                    ]),
+                ));
+            }
+            Event::Restore { entries, bytes, dropped } => {
+                events.push(instant(
+                    "restore",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("entries", num(entries as f64)),
+                        ("bytes", num(bytes as f64)),
+                        ("dropped", num(dropped as f64)),
+                    ]),
+                ));
+            }
+            Event::Scrub { scanned, repaired, repaired_bytes } => {
+                events.push(instant(
+                    "scrub",
+                    st.t_us,
+                    tid,
+                    obj([
+                        ("scanned", num(scanned as f64)),
+                        ("repaired", num(repaired as f64)),
+                        ("repaired_bytes", num(repaired_bytes as f64)),
+                    ]),
+                ));
+            }
+            Event::Reexec { request_id, ok } => {
+                events.push(instant(
+                    "reexec",
+                    st.t_us,
+                    tid,
+                    obj([("request_id", num(request_id as f64)), ("ok", Json::Bool(ok))]),
+                ));
+            }
         }
     }
 

@@ -7,7 +7,6 @@
 //! [`Reporter`] additionally collects results and emits a machine-readable
 //! `BENCH_*.json` file so the perf trajectory is tracked across PRs.
 
-use std::io::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
@@ -184,17 +183,19 @@ impl Reporter {
     /// Write `{"title": ..., "results": [...], "metrics": [...]}` to
     /// `path` (one compact object; medians/MADs in seconds).
     pub fn write_json<P: AsRef<Path>>(&self, path: P) -> std::io::Result<()> {
-        let mut f = std::fs::File::create(&path)?;
         let title = escape(&self.title);
         let rows: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
         let metric_rows: Vec<String> = self.metrics.iter().map(|m| m.to_json()).collect();
-        writeln!(
-            f,
-            "{{\"title\":\"{}\",\"results\":[{}],\"metrics\":[{}]}}",
+        let doc = format!(
+            "{{\"title\":\"{}\",\"results\":[{}],\"metrics\":[{}]}}\n",
             title,
             rows.join(","),
             metric_rows.join(",")
-        )?;
+        );
+        // atomic temp+rename: a crash mid-write must never leave a torn
+        // BENCH json for bench-diff to reject as the baseline
+        crate::util::bytes::atomic_write(path.as_ref(), doc.as_bytes())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, format!("{e:#}")))?;
         println!("bench results -> {}", path.as_ref().display());
         Ok(())
     }

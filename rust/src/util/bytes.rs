@@ -6,7 +6,9 @@
 //! cases (`model/blob.rs` and `workload/trace_file.rs` used to carry
 //! identical copies).
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 /// Take the next `n` bytes of `buf` at `*pos`, advancing the cursor.
 /// `what` names the container in the truncation error ("blob", "trace").
@@ -17,6 +19,34 @@ pub fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize, what: &str) -> Result<
     let s = &buf[*pos..*pos + n];
     *pos += n;
     Ok(s)
+}
+
+/// Write `bytes` to `path` atomically: the full payload lands in a
+/// sibling temp file first and is `rename`d into place, so a crash
+/// mid-write can never leave a truncated container behind — readers see
+/// either the old file or the complete new one, never a torn prefix.
+/// The temp name carries the pid so concurrent writers of different
+/// files in one directory cannot collide.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let stem = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "atomic".to_string());
+    let tmp = dir.join(format!(".{}.tmp.{}", stem, std::process::id()));
+    std::fs::write(&tmp, bytes)
+        .with_context(|| format!("write temp file {}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // never leave the temp file behind on a failed rename
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| {
+            format!("rename {} -> {}", tmp.display(), path.display())
+        });
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -42,5 +72,27 @@ mod tests {
         // overflow-safe even for absurd requests at a large cursor
         let mut pos = usize::MAX;
         assert!(take(&buf, &mut pos, 1, "thing").is_err());
+    }
+
+    #[test]
+    fn atomic_write_replaces_whole_file() {
+        let path = std::env::temp_dir()
+            .join(format!("atomic_write_unit_{}.bin", std::process::id()));
+        atomic_write(&path, b"first payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first payload");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // no temp residue in the directory for this stem
+        let dir = path.parent().unwrap();
+        let stem = path.file_name().unwrap().to_string_lossy().into_owned();
+        let residue = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .any(|e| {
+                let n = e.file_name().to_string_lossy().into_owned();
+                n.contains(&stem) && n.ends_with(&format!(".tmp.{}", std::process::id()))
+            });
+        assert!(!residue, "temp file left behind");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -98,7 +98,10 @@ fn value(values: &Json, key: &str) -> Option<f64> {
 /// cells may come and go freely (and chaos/control metrics measure
 /// injected damage and deliberate degradation, not regressions).
 fn is_informational(name: &str) -> bool {
-    name.ends_with("/telemetry") || name.ends_with("/chaos") || name.ends_with("/control")
+    name.ends_with("/telemetry")
+        || name.ends_with("/chaos")
+        || name.ends_with("/control")
+        || name.ends_with("/recover")
 }
 
 /// Compare two serialized `BENCH_workload.json` documents.
@@ -363,6 +366,26 @@ mod tests {
 
         // controller toggled OFF: the vanished row is not a missing cell
         let d = diff_workload_reports(&with_control, &base, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert!(d.missing.is_empty());
+        assert_eq!(d.compared, 1);
+    }
+
+    #[test]
+    fn recover_rows_are_informational_in_both_directions() {
+        let base = report(&[("steady/lanes2/sharded4", 0.1, 500.0)]);
+        let with_recover = format!(
+            "{{\"title\":\"t\",\"results\":[],\"metrics\":[{},{}]}}",
+            "{\"name\":\"steady/lanes2/sharded4\",\"values\":{\"e2e_p99_s\":0.1,\"goodput_tok_s\":500.0}}",
+            "{\"name\":\"steady/lanes2/sharded4/recover\",\"values\":{\"reexecuted\":3,\"warm_early_miss_rate\":0.1,\"cold_early_miss_rate\":0.6}}"
+        );
+        // restart measurement ON (a --restore run): new row, never gated
+        let d = diff_workload_reports(&base, &with_recover, 0.10).unwrap();
+        assert!(!d.is_regression(), "{d:?}");
+        assert_eq!(d.added, vec!["steady/lanes2/sharded4/recover".to_string()]);
+
+        // back to a normal run: the vanished row is not a missing cell
+        let d = diff_workload_reports(&with_recover, &base, 0.10).unwrap();
         assert!(!d.is_regression(), "{d:?}");
         assert!(d.missing.is_empty());
         assert_eq!(d.compared, 1);

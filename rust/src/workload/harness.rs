@@ -19,11 +19,22 @@
 //!   separately as `submit_lag_s`).
 
 use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::server::{combined_miss_rate, Response, ServerHandle};
+use crate::cache::ShardedSliceCache;
+use crate::fault::FaultPlan;
+use crate::memhier::HwSpec;
+use crate::recover::{Journal, JournalState, ResidencyManifest, ScrubConfig, Scrubber, SnapshotSink};
+use crate::serve::ServeConfig;
+use crate::server::{
+    combined_miss_rate, Backend, CostModelServerBackend, Request, Response, ServerHandle,
+    SharedCacheHandle,
+};
+use crate::sim::trace::TraceParams;
 use crate::telemetry::Clock;
 use crate::util::stats;
 
@@ -132,6 +143,12 @@ pub struct WorkloadSummary {
     pub breaker_skips: u64,
     /// Circuit-breaker trip events observed across served requests.
     pub breaker_trips: u64,
+    /// Responses served through journal-backed watchdog re-execution
+    /// (zero without an attached journal).
+    pub reexecuted: u64,
+    /// Condemned requests whose journal re-admission failed (answered
+    /// with a zero-work `reexec_failed` outcome).
+    pub reexec_failed: u64,
 }
 
 impl LoadReport {
@@ -199,6 +216,12 @@ impl LoadReport {
             retry_energy_j: self.outcomes.iter().map(|o| o.response.retry_energy_j).sum(),
             breaker_skips: self.outcomes.iter().map(|o| o.response.breaker_skips).sum(),
             breaker_trips: self.outcomes.iter().map(|o| o.response.breaker_trips).sum(),
+            reexecuted: self.outcomes.iter().filter(|o| o.response.reexecuted).count() as u64,
+            reexec_failed: self
+                .outcomes
+                .iter()
+                .filter(|o| o.response.reexec_failed)
+                .count() as u64,
         }
     }
 }
@@ -356,6 +379,150 @@ where
     Ok(report)
 }
 
+// ------------------------------------------------- kill-and-restart mode
+
+/// Outcome of one kill-and-restart recovery measurement
+/// ([`run_restart_recovery`]): the journal's un-completed requests
+/// re-driven against a manifest-warmed cache, with a cold-start control
+/// replay of the same requests for the early-decode comparison.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RecoverReport {
+    /// Admitted-but-never-completed requests found in the journal.
+    pub pending: u64,
+    /// Pending requests that re-executed cleanly on the warm path.
+    pub reexecuted: u64,
+    /// Pending requests whose warm re-execution errored (expected 0).
+    pub reexec_errors: u64,
+    /// Manifest entries admitted into the warm cache.
+    pub restored_entries: u64,
+    /// Bytes those entries re-occupy.
+    pub restored_bytes: u64,
+    /// Manifest entries the restore budget could not admit (the AMAT
+    /// low-bit degradation path).
+    pub restore_dropped: u64,
+    /// Cache misses/lookups over the FIRST re-driven request against an
+    /// empty cache — the cold-start early-decode hazard the snapshot
+    /// exists to remove.
+    pub cold_early_misses: u64,
+    pub cold_early_lookups: u64,
+    /// Same request, manifest-restored cache.
+    pub warm_early_misses: u64,
+    pub warm_early_lookups: u64,
+    /// Post-restore integrity scrub over the warm cache.
+    pub scrub_scanned: u64,
+    pub scrub_repaired: u64,
+}
+
+impl RecoverReport {
+    pub fn cold_early_miss_rate(&self) -> f64 {
+        self.cold_early_misses as f64 / self.cold_early_lookups.max(1) as f64
+    }
+
+    pub fn warm_early_miss_rate(&self) -> f64 {
+        self.warm_early_misses as f64 / self.warm_early_lookups.max(1) as f64
+    }
+}
+
+/// Replay `state.pending` serially through one cost-model backend bound
+/// to `cache`, measuring the first request's cache-stats delta (the
+/// early-decode window). The backend derives per-request seeds from the
+/// journal's base seed, so the replay is bit-exact with what the dead
+/// process would have served.
+fn replay_pending(
+    state: &JournalState,
+    template: &ServeConfig,
+    trace: TraceParams,
+    cache: &Arc<ShardedSliceCache>,
+) -> (u64, u64, u64) {
+    let mut backend = CostModelServerBackend::new(template.clone(), trace, state.base_seed);
+    backend.shared_cache = Some(SharedCacheHandle::Sharded(Arc::clone(cache)));
+    let (mut early_misses, mut early_lookups) = (0u64, 0u64);
+    let mut errors = 0u64;
+    for (i, p) in state.pending.iter().enumerate() {
+        let req = Request {
+            id: p.id,
+            prompt: p.prompt.clone(),
+            decode_tokens: p.decode_tokens as usize,
+            bias: p.bias,
+            slo: p.slo,
+        };
+        let before = cache.stats();
+        if backend.serve(&req).is_err() {
+            errors += 1;
+        }
+        if i == 0 {
+            let after = cache.stats();
+            let misses_before = before.msb_misses + before.lsb_misses;
+            let misses_after = after.msb_misses + after.lsb_misses;
+            let hits_before = before.msb_hits + before.lsb_hits;
+            let hits_after = after.msb_hits + after.lsb_hits;
+            early_misses = misses_after - misses_before;
+            early_lookups = (hits_after + misses_after) - (hits_before + misses_before);
+        }
+    }
+    (early_misses, early_lookups, errors)
+}
+
+/// Restart a killed serving cell from its snapshot directory: load the
+/// SMRJ admission journal and the SMRM residency manifest, re-drive
+/// every un-completed request twice — once against an empty cache (the
+/// cold-start control) and once against a manifest-restored cache — and
+/// run a full integrity-scrub lap over the warm cache. `fault` should
+/// be the dead run's fault plan so scrub repair fetches pay the same
+/// retry costs the live path would.
+pub fn run_restart_recovery(
+    snapshot_dir: &Path,
+    template: &ServeConfig,
+    trace: TraceParams,
+    restore_budget: Option<u64>,
+    fault: Option<FaultPlan>,
+) -> Result<RecoverReport> {
+    let state = Journal::load(&snapshot_dir.join(Journal::FILE_NAME))?;
+    let manifest = ResidencyManifest::load(&snapshot_dir.join(SnapshotSink::FILE_NAME))?;
+    let shards = manifest.shards.len().max(1);
+    let mut rec = RecoverReport { pending: state.pending.len() as u64, ..Default::default() };
+
+    // cold-start control: the same pending requests against the same
+    // topology, minus the manifest
+    let cold = CostModelServerBackend::sharded_cache_for(template, shards);
+    let (cm, cl, _) = replay_pending(&state, template, trace, &cold);
+    rec.cold_early_misses = cm;
+    rec.cold_early_lookups = cl;
+
+    // warm restart: restore the manifest, then re-drive for real
+    let warm = CostModelServerBackend::sharded_cache_for(template, shards);
+    let rs = manifest.restore_into(&warm, restore_budget);
+    rec.restored_entries = rs.restored;
+    rec.restored_bytes = rs.restored_bytes;
+    rec.restore_dropped = rs.dropped;
+    let (wm, wl, errors) = replay_pending(&state, template, trace, &warm);
+    rec.warm_early_misses = wm;
+    rec.warm_early_lookups = wl;
+    rec.reexec_errors = errors;
+    rec.reexecuted = rec.pending - errors;
+
+    // one full scrub lap over the restored cache: restart is exactly
+    // when at-rest rot has had the longest to accumulate
+    let scrubber = Scrubber::new(
+        Arc::clone(&warm),
+        ScrubConfig::default(),
+        fault.unwrap_or_else(FaultPlan::disabled),
+        HwSpec::paper(),
+    );
+    let mut resident = 0u64;
+    for (_, entries) in warm.export_residency() {
+        resident += entries.len() as u64;
+    }
+    let per_tick = u64::from(ScrubConfig::default().entries_per_tick.max(1));
+    for _ in 0..(resident / per_tick + 2) {
+        let _ = scrubber.tick(0);
+    }
+    let st = scrubber.stats();
+    rec.scrub_scanned = st.scanned;
+    rec.scrub_repaired = st.repaired;
+    Ok(rec)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -393,6 +560,8 @@ mod tests {
                 retry_energy_j: 0.0,
                 breaker_skips: 0,
                 breaker_trips: 0,
+                reexecuted: false,
+                reexec_failed: false,
             })
         }
     }
@@ -515,5 +684,6 @@ mod tests {
         assert_eq!(s.degraded_fraction, 0.0);
         assert_eq!(s.retry_energy_j, 0.0);
         assert_eq!((s.breaker_skips, s.breaker_trips), (0, 0));
+        assert_eq!((s.reexecuted, s.reexec_failed), (0, 0));
     }
 }

@@ -29,11 +29,14 @@ pub mod scenario;
 pub mod sweep;
 pub mod trace_file;
 
-pub use harness::{run_open_loop, LoadReport, OpenLoopOpts, RequestOutcome, WorkloadSummary};
+pub use harness::{
+    run_open_loop, run_restart_recovery, LoadReport, OpenLoopOpts, RecoverReport, RequestOutcome,
+    WorkloadSummary,
+};
 pub use scenario::{
     BurstyOnOff, DiurnalRamp, MultiTenantSessions, Scenario, SteadyPoisson, TraceRequest,
     WorkloadGen,
 };
 pub use diff::{diff_workload_reports, BenchDiff, Regression};
-pub use sweep::{run_sweep, CacheMode, DecodeMode, SweepCell, SweepConfig};
+pub use sweep::{run_sweep, CacheMode, DecodeMode, RecoverAxis, SweepCell, SweepConfig};
 pub use trace_file::TraceFile;

@@ -17,6 +17,8 @@ use anyhow::{Context, Result};
 
 use crate::control::{ControlConfig, ControlSignals, Controller};
 use crate::fault::{BreakerConfig, FaultPlan};
+use crate::memhier::HwSpec;
+use crate::recover::{Journal, ScrubConfig, Scrubber, SnapshotSink};
 use crate::serve::ServeConfig;
 use crate::server::{request_seed, CostModelServerBackend, ServerHandle, SharedCacheHandle};
 use crate::sim::trace::TraceParams;
@@ -24,7 +26,9 @@ use crate::sim::workload::WorkloadParams;
 use crate::telemetry::{Clock, TelemetryHub, TelemetryReport};
 use crate::util::bench::Reporter;
 
-use super::harness::{run_open_loop, OpenLoopOpts, WorkloadSummary};
+use super::harness::{
+    run_open_loop, run_restart_recovery, OpenLoopOpts, RecoverReport, WorkloadSummary,
+};
 use super::scenario::Scenario;
 use super::trace_file::TraceFile;
 
@@ -123,6 +127,33 @@ pub struct SweepConfig {
     /// metrics row (ladder residency, refused admissions, breaker
     /// activity) that `bench-diff` never gates on.
     pub controller: bool,
+    /// Crash-safety axis. `None` (the default) leaves every cell
+    /// bit-exact with a recovery-free sweep. When set, each SHARDED cell
+    /// (the only topology with a restorable residency) journals
+    /// admissions and writes periodic residency manifests under
+    /// `<snapshot_dir>/<cell>`; in [`RecoverAxis::restore`] mode the
+    /// sweep instead replays each cell directory's un-completed requests
+    /// cold vs manifest-warm and appends an informational
+    /// `{cell}/recover` metrics row that `bench-diff` never gates on.
+    pub recover: Option<RecoverAxis>,
+}
+
+/// Knobs for the crash-safety axis (see [`SweepConfig::recover`]).
+#[derive(Clone, Debug)]
+pub struct RecoverAxis {
+    /// Directory holding one `<scenario>_lanes<N>_<mode>` subdirectory
+    /// per sharded cell (journal + manifest).
+    pub snapshot_dir: PathBuf,
+    /// Restart mode: read the previous (killed) run's journal and
+    /// manifest, measure warm-vs-cold recovery, and record
+    /// `{cell}/recover` rows. No new recovery files are written — the
+    /// dead run's evidence is never clobbered.
+    pub restore: bool,
+    /// Crash drill: hard-abort the process right before the Nth
+    /// delivered response (ignored in restore mode).
+    pub kill_after: Option<u64>,
+    /// Periodic manifest cadence in delivered responses.
+    pub snapshot_every: u64,
 }
 
 impl SweepConfig {
@@ -153,6 +184,7 @@ impl SweepConfig {
             fault: None,
             slo_s: None,
             controller: false,
+            recover: None,
         }
     }
 
@@ -250,6 +282,31 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                         _ => mode,
                     };
                     let mode_label = actual_mode.label();
+                    // lane-mode cells keep their pre-wave names so
+                    // bench-diff tracks existing baselines; wave cells add
+                    // a `/wave` suffix (a NEW grid dimension the diff
+                    // tolerates as added cells)
+                    let name = match decode_mode {
+                        DecodeMode::Lanes => {
+                            format!("{}/lanes{}/{mode_label}", sc.name(), lanes)
+                        }
+                        DecodeMode::Wave => {
+                            format!("{}/lanes{}/{mode_label}/wave", sc.name(), lanes)
+                        }
+                    };
+                    // the recovery axis needs the sharded cache after the
+                    // handle's factory closure has consumed the handle
+                    // enum, and the restart replay needs the cell's final
+                    // template (fault plan and breaker included)
+                    let recover_cache = match &shared_cache {
+                        Some(SharedCacheHandle::Sharded(c)) => Some(Arc::clone(c)),
+                        _ => None,
+                    };
+                    let replay_template = cfg
+                        .recover
+                        .as_ref()
+                        .filter(|r| r.restore)
+                        .map(|_| template.clone());
                     // one clock per cell, shared by server, harness, and
                     // (when enabled) the telemetry hub — one timebase
                     let clock = Clock::default();
@@ -308,6 +365,35 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     if let Some(c) = &controller {
                         handle.attach_controller(Arc::clone(c));
                     }
+                    // crash-safety attachments (non-restore mode): only
+                    // sharded cells have a restorable residency to
+                    // manifest, so private/global-mutex cells run plain
+                    if let (Some(r), Some(cache)) = (&cfg.recover, &recover_cache) {
+                        if !r.restore {
+                            let dir = r.snapshot_dir.join(name.replace('/', "_"));
+                            std::fs::create_dir_all(&dir).with_context(|| {
+                                format!("create snapshot dir {}", dir.display())
+                            })?;
+                            handle.attach_journal(Arc::new(Journal::create(
+                                &dir.join(Journal::FILE_NAME),
+                                base_seed,
+                            )?));
+                            handle.attach_snapshot_sink(Arc::new(SnapshotSink::new(
+                                Arc::clone(cache),
+                                dir.join(SnapshotSink::FILE_NAME),
+                                r.snapshot_every.max(1),
+                            )));
+                            handle.attach_scrubber(Arc::new(Scrubber::new(
+                                Arc::clone(cache),
+                                ScrubConfig::default(),
+                                cfg.fault.unwrap_or_else(FaultPlan::disabled),
+                                HwSpec::paper(),
+                            )));
+                            if let Some(n) = r.kill_after {
+                                handle.set_kill_after(n);
+                            }
+                        }
+                    }
                     let ctl_clock = clock.clone();
                     let report = run_open_loop(
                         &handle,
@@ -336,18 +422,6 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                         }
                     }
                     let s = report.summary();
-                    // lane-mode cells keep their pre-wave names so
-                    // bench-diff tracks existing baselines; wave cells add
-                    // a `/wave` suffix (a NEW grid dimension the diff
-                    // tolerates as added cells)
-                    let name = match decode_mode {
-                        DecodeMode::Lanes => {
-                            format!("{}/lanes{}/{mode_label}", sc.name(), lanes)
-                        }
-                        DecodeMode::Wave => {
-                            format!("{}/lanes{}/{mode_label}/wave", sc.name(), lanes)
-                        }
-                    };
                     rep.record_metrics(
                         &name,
                         &[
@@ -378,6 +452,25 @@ pub fn run_sweep(cfg: &SweepConfig, rep: &mut Reporter) -> Result<Vec<SweepCell>
                     // pre-chaos row set (baseline compatibility)
                     if cfg.fault.map_or(false, |p| p.is_active()) || cfg.slo_s.is_some() {
                         record_chaos_row(rep, &name, &s);
+                    }
+                    // restart mode: replay the DEAD run's journal-pending
+                    // requests cold vs manifest-warm; a cell with no
+                    // on-disk journal (never killed, or unsharded) simply
+                    // records no recover row
+                    if let (Some(r), Some(_)) = (&cfg.recover, &recover_cache) {
+                        let dir = r.snapshot_dir.join(name.replace('/', "_"));
+                        if r.restore && dir.join(Journal::FILE_NAME).exists() {
+                            let rec = run_restart_recovery(
+                                &dir,
+                                replay_template
+                                    .as_ref()
+                                    .expect("restore mode keeps the cell template"),
+                                cfg.trace,
+                                None,
+                                cfg.fault,
+                            )?;
+                            record_recover_row(rep, &name, &rec);
+                        }
                     }
                     cells.push(SweepCell {
                         scenario: sc.name(),
@@ -440,6 +533,32 @@ fn record_control_row(
             ("breaker_skips", s.breaker_skips as f64),
             ("breaker_trips", s.breaker_trips as f64),
             ("recovered_queue", recovered_queue as f64),
+        ],
+    );
+}
+
+/// Flatten one cell's kill-and-restart recovery outcome into an
+/// informational `{cell}/recover` metrics row (recorded only in restore
+/// mode for cells with on-disk recovery evidence; `bench-diff` never
+/// gates on these rows). The warm/cold early miss rates are the PR's
+/// headline comparison: a manifest-restored cache must beat a cold
+/// start on the first re-driven request.
+fn record_recover_row(rep: &mut Reporter, cell: &str, r: &RecoverReport) {
+    rep.record_metrics(
+        &format!("{cell}/recover"),
+        &[
+            ("pending", r.pending as f64),
+            ("reexecuted", r.reexecuted as f64),
+            ("reexec_errors", r.reexec_errors as f64),
+            ("restored_entries", r.restored_entries as f64),
+            ("restored_bytes", r.restored_bytes as f64),
+            ("restore_dropped", r.restore_dropped as f64),
+            ("cold_early_miss_rate", r.cold_early_miss_rate()),
+            ("warm_early_miss_rate", r.warm_early_miss_rate()),
+            ("cold_early_lookups", r.cold_early_lookups as f64),
+            ("warm_early_lookups", r.warm_early_lookups as f64),
+            ("scrub_scanned", r.scrub_scanned as f64),
+            ("scrub_repaired", r.scrub_repaired as f64),
         ],
     );
 }
@@ -745,6 +864,83 @@ mod tests {
             assert!(get("engagements") >= get("releases"));
             assert!(get("recovered_queue") == 0.0, "no poison in a clean run");
         }
+    }
+
+    #[test]
+    fn recover_axis_is_inert_on_results_and_restore_records_rows() {
+        let shape = WorkloadParams {
+            prefill_mean: 24.0,
+            prefill_std: 4.0,
+            prefill_min: 16,
+            prefill_max: 32,
+            decode_mean: 12.0,
+            decode_std: 2.0,
+            decode_min: 8,
+            decode_max: 16,
+        };
+        let mut base = SweepConfig::smoke(tiny_template());
+        base.scenarios = vec![Scenario::Steady];
+        base.lanes = vec![1];
+        base.cache_modes = vec![CacheMode::Sharded(2)];
+        base.decode_modes = vec![DecodeMode::Lanes];
+        base.requests = 4;
+        base.span_s = 0.05;
+        base.shape = shape;
+        let dir = std::env::temp_dir().join(format!("recover_sweep_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut with_rec = base.clone();
+        with_rec.recover = Some(RecoverAxis {
+            snapshot_dir: dir.clone(),
+            restore: false,
+            kill_after: None,
+            snapshot_every: 2,
+        });
+
+        let mut rep_off = Reporter::new("sweep-rec-off");
+        let cells_off = run_sweep(&base, &mut rep_off).unwrap();
+        let mut rep_on = Reporter::new("sweep-rec-on");
+        let cells_on = run_sweep(&with_rec, &mut rep_on).unwrap();
+        // journaling + periodic manifests must not perturb simulated
+        // serving results (wall-clock metrics excluded; they are real)
+        assert_eq!(cells_off.len(), cells_on.len());
+        for (a, b) in cells_off.iter().zip(&cells_on) {
+            assert_eq!(a.summary.decode_tokens, b.summary.decode_tokens);
+            assert_eq!(a.summary.miss_rate, b.summary.miss_rate);
+            assert_eq!(a.summary.energy_per_token_j, b.summary.energy_per_token_j);
+            assert_eq!((b.summary.reexecuted, b.summary.reexec_failed), (0, 0));
+        }
+        let cell_dir = dir.join("steady_lanes1_sharded2");
+        assert!(cell_dir.join(Journal::FILE_NAME).exists(), "journal written");
+        assert!(
+            cell_dir.join(SnapshotSink::FILE_NAME).exists(),
+            "drain-then-snapshot manifest written"
+        );
+
+        // restart over the cleanly-drained evidence: nothing pending to
+        // re-drive, but the manifest restores and the row is recorded
+        let mut restore_cfg = with_rec.clone();
+        restore_cfg.recover.as_mut().unwrap().restore = true;
+        let mut rep_restore = Reporter::new("sweep-rec-restore");
+        let cells_restore = run_sweep(&restore_cfg, &mut rep_restore).unwrap();
+        assert_eq!(cells_restore[0].summary.errors, 0);
+        let row = rep_restore
+            .metrics()
+            .iter()
+            .find(|m| m.name.ends_with("/recover"))
+            .expect("one {cell}/recover row");
+        let get = |k: &str| {
+            row.values
+                .iter()
+                .find(|(n, _)| n == k)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("{}: missing key {k}", row.name))
+        };
+        assert_eq!(get("pending"), 0.0, "clean drain leaves nothing to re-drive");
+        assert!(get("restored_entries") > 0.0, "final manifest restores residency");
+        assert_eq!(get("reexec_errors"), 0.0);
+        assert_eq!(get("scrub_repaired"), 0.0, "no rot configured");
+        assert!(get("scrub_scanned") >= get("restored_entries"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

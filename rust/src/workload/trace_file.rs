@@ -137,8 +137,10 @@ impl TraceFile {
         Ok(TraceFile { scenario, seed, requests })
     }
 
+    /// Persist atomically (temp file + rename): a crash mid-write can
+    /// never leave a torn SMWT behind for the next replay to choke on.
     pub fn write(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_bytes())
+        crate::util::bytes::atomic_write(path, &self.to_bytes())
             .with_context(|| format!("write trace {}", path.display()))
     }
 

@@ -1,0 +1,298 @@
+//! Crash-safety parity (mirrors `fault_parity.rs` / `control_parity.rs`
+//! for the recovery plane).
+//!
+//! Four contracts anchor warm restarts:
+//!
+//! * **snapshot→restore identity**: an SMRM residency manifest survives
+//!   the disk roundtrip bit-identically at shards {1, 4}, restores the
+//!   exact key/byte/pin set into a fresh cache (same or different shard
+//!   count), and degrades to a pinned-first prefix under a short
+//!   restore budget;
+//! * **loud rejection**: every single-byte flip and every truncation of
+//!   a manifest fails parsing (whole-file CRC), and torn or corrupted
+//!   journals fail record-by-record — never a silent partial restore,
+//!   never an attacker-sized allocation;
+//! * **bit-exact re-execution**: a request rebuilt from its journal
+//!   admit record serves bit-identically to the uninterrupted run —
+//!   same output bytes, energy, miss rate — with fault injection off
+//!   and on;
+//! * **restart recovery**: `run_restart_recovery` re-drives the
+//!   journal's pending request, and the manifest-warmed cache strictly
+//!   beats the cold-start control on early-decode miss rate; the
+//!   scrubber's repair traffic reconciles against the Ledger.
+
+use std::sync::Arc;
+
+use slicemoe::cache::ShardedSliceCache;
+use slicemoe::fault::FaultPlan;
+use slicemoe::memhier::HwSpec;
+use slicemoe::model::{ModelDesc, SliceKey};
+use slicemoe::recover::{
+    Journal, PendingRequest, ResidencyManifest, ScrubConfig, Scrubber, SnapshotSink,
+};
+use slicemoe::serve::ServeConfig;
+use slicemoe::server::{
+    request_seed, Backend, CostModelServerBackend, Request, Response, SharedCacheHandle,
+};
+use slicemoe::sim::TraceParams;
+use slicemoe::workload::run_restart_recovery;
+
+fn tiny_cfg() -> ServeConfig {
+    let mut cfg = ServeConfig::gsm8k_default(ModelDesc::tiny());
+    cfg.cache_bytes = cfg.unit_bytes() * 8;
+    cfg
+}
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("recover_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A cache with a mixed MSB/LSB population and one pinned entry,
+/// generously sized so nothing evicts regardless of shard hashing.
+fn populated_cache(shards: usize) -> ShardedSliceCache {
+    let cache = ShardedSliceCache::new(12_000, shards);
+    for e in 0..8usize {
+        cache.ensure(SliceKey::msb(e % 4, e), 300);
+        if e % 3 == 0 {
+            cache.ensure(SliceKey::lsb(e % 4, e), 150);
+        }
+    }
+    cache.pin(SliceKey::msb(0, 0), true);
+    cache
+}
+
+#[test]
+fn snapshot_restore_roundtrip_is_identity_at_shards_1_and_4() {
+    for shards in [1usize, 4] {
+        let cache = populated_cache(shards);
+        let m = ResidencyManifest::capture(&cache);
+        assert!(m.entries() > 0);
+        let dir = tmp_dir(&format!("roundtrip{shards}"));
+        let path = dir.join(SnapshotSink::FILE_NAME);
+        m.write(&path).unwrap();
+        let loaded = ResidencyManifest::load(&path).unwrap();
+        assert_eq!(loaded, m, "disk roundtrip is identity (shards={shards})");
+
+        // same-topology restore: the exact key/byte/pin set comes back
+        let fresh = ShardedSliceCache::new(cache.capacity(), shards);
+        let rs = loaded.restore_into(&fresh, None);
+        assert_eq!(rs.restored, m.entries());
+        assert_eq!(rs.restored_bytes, m.resident_bytes());
+        assert_eq!(rs.dropped, 0);
+        for (_, entries) in &m.shards {
+            for e in entries {
+                assert!(fresh.peek(e.key), "{:?} resident after restore", e.key);
+                assert_eq!(fresh.is_pinned(e.key), e.pinned, "{:?}", e.key);
+            }
+        }
+        let recap = ResidencyManifest::capture(&fresh);
+        assert_eq!(recap.entries(), m.entries());
+        assert_eq!(recap.resident_bytes(), m.resident_bytes());
+
+        // cross-topology restore (global recency merge) loses nothing
+        let cross = ShardedSliceCache::new(cache.capacity(), 2);
+        assert_eq!(loaded.restore_into(&cross, None).restored, m.entries());
+
+        // short restore budget: degraded prefix, pinned entries first
+        let tight = ShardedSliceCache::new(cache.capacity(), shards);
+        let budget = m.resident_bytes() / 2;
+        let rs = loaded.restore_into(&tight, Some(budget));
+        assert!(rs.restored_bytes <= budget, "budget is a hard cap");
+        assert!(rs.dropped > 0, "half the bytes cannot all fit");
+        assert!(tight.is_pinned(SliceKey::msb(0, 0)), "pins restore first");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn manifest_rejects_every_single_byte_flip_and_truncation() {
+    let buf = ResidencyManifest::capture(&populated_cache(2)).to_bytes();
+    assert!(ResidencyManifest::parse(&buf).is_ok());
+    // the whole-file CRC makes every flip loud, wherever it lands
+    // (magic, counts, entry payload, or the trailer itself)
+    for i in 0..buf.len() {
+        let mut b = buf.clone();
+        b[i] ^= 0xff;
+        assert!(ResidencyManifest::parse(&b).is_err(), "byte flip at {i} must fail parsing");
+    }
+    for len in 0..buf.len() {
+        assert!(
+            ResidencyManifest::parse(&buf[..len]).is_err(),
+            "truncation to {len} bytes must fail parsing"
+        );
+    }
+}
+
+#[test]
+fn journal_rejects_bad_magic_torn_tail_and_flipped_payload() {
+    let dir = tmp_dir("corrupt");
+    let jpath = dir.join(Journal::FILE_NAME);
+    let j = Journal::create(&jpath, 0xBA5E).unwrap();
+    j.record_admit(&PendingRequest {
+        id: 7,
+        seed: 1,
+        prompt: vec![1, 2, 3],
+        decode_tokens: 4,
+        slo: None,
+        bias: None,
+    })
+    .unwrap();
+    drop(j);
+    let buf = std::fs::read(&jpath).unwrap();
+    assert_eq!(Journal::parse(&buf).unwrap().pending.len(), 1);
+
+    let mut bad_magic = buf.clone();
+    bad_magic[0] ^= 0xff;
+    assert!(Journal::parse(&bad_magic).is_err(), "bad magic");
+    assert!(
+        Journal::parse(&buf[..buf.len() - 1]).is_err(),
+        "torn record tail (crash mid-append) must fail, not half-parse"
+    );
+    // any payload byte flip breaks the record CRC (last 8 bytes of the
+    // record are the CRC trailer; len-9 is the final payload byte)
+    let mut flipped = buf.clone();
+    let i = flipped.len() - 9;
+    flipped[i] ^= 0xff;
+    assert!(Journal::parse(&flipped).is_err(), "payload flip at {i}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn serve_once(cfg: &ServeConfig, base_seed: u64, req: &Request) -> Response {
+    let mut b = CostModelServerBackend::new(cfg.clone(), TraceParams::default(), base_seed);
+    b.serve(req).unwrap()
+}
+
+#[test]
+fn journal_redriven_request_is_bit_exact_with_uninterrupted_serving() {
+    for (tag, fault) in [
+        ("off", None),
+        ("on", Some(FaultPlan { fault_rate: 0.3, ..FaultPlan::smoke() })),
+    ] {
+        let mut cfg = tiny_cfg();
+        cfg.fault = fault;
+        let base_seed = 0x0DD_5EED;
+        let req = Request::new(11, vec![7u8; 24], 16);
+        let direct = serve_once(&cfg, base_seed, &req);
+
+        // journal the admission, "crash", reload, rebuild, re-serve
+        let dir = tmp_dir(&format!("redrive_{tag}"));
+        let jpath = dir.join(Journal::FILE_NAME);
+        let j = Journal::create(&jpath, base_seed).unwrap();
+        j.record_admit(&PendingRequest {
+            id: req.id,
+            seed: request_seed(base_seed, req.id),
+            prompt: req.prompt.clone(),
+            decode_tokens: req.decode_tokens as u32,
+            slo: req.slo,
+            bias: req.bias,
+        })
+        .unwrap();
+        drop(j);
+        let state = Journal::load(&jpath).unwrap();
+        assert_eq!(state.pending.len(), 1, "faults {tag}");
+        let p = &state.pending[0];
+        let rebuilt = Request {
+            id: p.id,
+            prompt: p.prompt.clone(),
+            decode_tokens: p.decode_tokens as usize,
+            bias: p.bias,
+            slo: p.slo,
+        };
+        let redriven = serve_once(&cfg, state.base_seed, &rebuilt);
+
+        assert_eq!(direct.output, redriven.output, "faults {tag}");
+        assert_eq!(direct.decode_tokens, redriven.decode_tokens, "faults {tag}");
+        assert_eq!(direct.decode_energy_j, redriven.decode_energy_j, "faults {tag}");
+        assert_eq!(direct.miss_rate, redriven.miss_rate, "faults {tag}");
+        assert_eq!(direct.fault_retries, redriven.fault_retries, "faults {tag}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn restart_recovery_warm_beats_cold_and_reexecutes_pending() {
+    let cfg = tiny_cfg();
+    let base_seed = 0x4269;
+    let dir = tmp_dir("restart");
+    // the "dead" run: three admits journaled, two served to completion
+    // over a sharded cache, one manifest written — then nothing (the
+    // crash needs no simulation; the files ARE the evidence)
+    let cache = CostModelServerBackend::sharded_cache_for(&cfg, 4);
+    let mut b = CostModelServerBackend::new(cfg.clone(), TraceParams::default(), base_seed);
+    b.shared_cache = Some(SharedCacheHandle::Sharded(Arc::clone(&cache)));
+    let j = Journal::create(&dir.join(Journal::FILE_NAME), base_seed).unwrap();
+    for id in 0..3u64 {
+        j.record_admit(&PendingRequest {
+            id,
+            seed: request_seed(base_seed, id),
+            prompt: vec![id as u8; 24],
+            decode_tokens: 12,
+            slo: None,
+            bias: None,
+        })
+        .unwrap();
+    }
+    for id in 0..2u64 {
+        b.serve(&Request::new(id, vec![id as u8; 24], 12)).unwrap();
+        j.record_complete(id).unwrap();
+    }
+    ResidencyManifest::capture(&cache).write(&dir.join(SnapshotSink::FILE_NAME)).unwrap();
+    drop(j);
+
+    let rec = run_restart_recovery(&dir, &cfg, TraceParams::default(), None, None).unwrap();
+    assert_eq!(rec.pending, 1, "two of three admits completed");
+    assert_eq!(rec.reexecuted, 1);
+    assert_eq!(rec.reexec_errors, 0);
+    assert!(rec.restored_entries > 0, "the manifest restored residency");
+    assert!(rec.cold_early_lookups > 0 && rec.warm_early_lookups > 0);
+    assert!(
+        rec.warm_early_miss_rate() < rec.cold_early_miss_rate(),
+        "manifest warmup must beat a cold start: warm {} vs cold {}",
+        rec.warm_early_miss_rate(),
+        rec.cold_early_miss_rate()
+    );
+    assert!(rec.scrub_scanned > 0, "restart runs a full scrub lap");
+    assert_eq!(rec.scrub_repaired, 0, "no rot configured");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scrubber_repairs_forced_corruption_and_ledger_reconciles() {
+    let cfg = tiny_cfg();
+    let cache = CostModelServerBackend::sharded_cache_for(&cfg, 2);
+    let mut b = CostModelServerBackend::new(cfg.clone(), TraceParams::default(), 0x5EED);
+    b.shared_cache = Some(SharedCacheHandle::Sharded(Arc::clone(&cache)));
+    b.serve(&Request::new(0, vec![3u8; 24], 12)).unwrap();
+
+    let scrubber = Scrubber::new(
+        Arc::clone(&cache),
+        ScrubConfig::default(),
+        FaultPlan::disabled(),
+        HwSpec::paper(),
+    );
+    let victim = cache
+        .export_residency()
+        .into_iter()
+        .flat_map(|(_, es)| es)
+        .next()
+        .expect("the served request left residency behind");
+    scrubber.inject_corruption(victim.key);
+    let mut resident = 0u64;
+    for (_, v) in cache.export_residency() {
+        resident += v.len() as u64;
+    }
+    for _ in 0..(resident / 64 + 2) {
+        let _ = scrubber.tick(0);
+    }
+    let st = scrubber.stats();
+    assert_eq!(st.repaired, 1, "the corrupt slice was evicted and refetched");
+    assert_eq!(st.repaired_bytes, victim.bytes);
+    assert_eq!(st.repair_failed, 0);
+    assert!(cache.peek(victim.key), "repaired slice is resident again");
+    let ledger = scrubber.ledger();
+    assert_eq!(ledger.flash_fetches, 1);
+    assert_eq!(ledger.flash_bytes, victim.bytes, "repair bytes reconcile against the Ledger");
+}
